@@ -1,0 +1,77 @@
+"""AOT lowering: jax functions -> HLO *text* artifacts for the Rust
+runtime (`rust/src/runtime/pjrt.rs`).
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the published xla crate
+(xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+Emits:
+  matmul_tile.hlo.txt            default 64x64 tile gemm_accumulate
+  matmul_tile_<ts>.hlo.txt       per tile size in TILE_SIZES
+  stencil5_<x>x<y>.hlo.txt       stencil steps for the e2e examples
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+TILE_SIZES = (16, 32, 64, 128)
+STENCIL_SHAPES = ((32, 32), (64, 128))
+DEFAULT_TILE = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, name: str, fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    emitted = []
+    for ts in TILE_SIZES:
+        emitted.append(
+            emit(args.out_dir, f"matmul_tile_{ts}", model.gemm_accumulate,
+                 model.example_args_gemm(ts))
+        )
+    # default-name artifact used when the app doesn't pick a tile size
+    emitted.append(
+        emit(args.out_dir, "matmul_tile", model.gemm_accumulate,
+             model.example_args_gemm(DEFAULT_TILE))
+    )
+    for (x, y) in STENCIL_SHAPES:
+        emitted.append(
+            emit(args.out_dir, f"stencil5_{x}x{y}", model.stencil_step,
+                 model.example_args_stencil(x, y))
+        )
+    for p in emitted:
+        print(f"wrote {p} ({os.path.getsize(p)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

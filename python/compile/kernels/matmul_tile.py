@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: blocked tile GEMM (C = A @ B) for the leaf tasks of
+the distributed matmul algorithms.
+
+TPU-shaped even though we execute interpret=True on CPU: the grid tiles
+the output into MXU-friendly (BM, BN) blocks, the K dimension is walked
+by the innermost grid axis with a VMEM accumulator, and block shapes are
+multiples of the 128x128 systolic array where the problem allows.
+
+VMEM budget per program instance (f32):
+    BM*BK + BK*BN + BM*BN floats = (64*64)*3*4 B = 48 KiB  << 16 MiB VMEM
+so double-buffering headroom is ample; on real TPU the pipeline overlaps
+the HBM->VMEM streams of A and B with MXU work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """One (i, j, k) grid step: acc += A[i,k] @ B[k,j]; flush on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def pick_block(dim: int, preferred: int = 64) -> int:
+    """Largest block <= preferred that divides dim (halving until it does)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul_tile(a, b, *, bm: int = 0, bk: int = 0, bn: int = 0):
+    """Blocked Pallas GEMM. Block sizes default to the largest
+    power-of-two divisors (<= 64) of each dimension."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm = bm or pick_block(m)
+    bk = bk or pick_block(k)
+    bn = bn or pick_block(n)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,  # CPU-PJRT execution; Mosaic lowering is TPU-only
+    )(a, b)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int) -> int:
+    """Per-instance VMEM footprint estimate (A+B blocks, out, acc), f32.
+    Recorded in DESIGN.md's roofline notes."""
+    return 4 * (bm * bk + bk * bn + 2 * bm * bn)

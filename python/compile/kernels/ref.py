@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (pytest compares against these)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Reference GEMM in f32."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def stencil5_ref(grid, north, south, west, east, w_center=0.6, w_nbr=0.1):
+    """Reference 5-point stencil step with explicit halo rows/cols.
+
+    grid:  (X, Y) interior values
+    north: (1, Y) halo row above, south: (1, Y) below
+    west:  (X, 1) halo col left,  east:  (X, 1) right
+    """
+    up = jnp.concatenate([north, grid[:-1, :]], axis=0)
+    down = jnp.concatenate([grid[1:, :], south], axis=0)
+    left = jnp.concatenate([west, grid[:, :-1]], axis=1)
+    right = jnp.concatenate([grid[:, 1:], east], axis=1)
+    return w_center * grid + w_nbr * (up + down + left + right)

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: 5-point stencil update over a tile with explicit
+halo rows/columns (the leaf task of the Stencil benchmark).
+
+The tile plus four halo strips arrive as separate refs — mirroring the
+distributed layout, where halos are exchanged between processors and the
+interior tile never moves. Block layout keeps the whole tile in VMEM
+(tiles are sized by the mapper so tile_bytes << 16 MiB VMEM); on TPU the
+row-shifted adds vectorize onto the VPU's 8x128 lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+W_CENTER = 0.6
+W_NBR = 0.1
+
+
+def _stencil_kernel(grid_ref, north_ref, south_ref, west_ref, east_ref, o_ref):
+    grid = grid_ref[...]
+    north = north_ref[...]
+    south = south_ref[...]
+    west = west_ref[...]
+    east = east_ref[...]
+    up = jnp.concatenate([north, grid[:-1, :]], axis=0)
+    down = jnp.concatenate([grid[1:, :], south], axis=0)
+    left = jnp.concatenate([west, grid[:, :-1]], axis=1)
+    right = jnp.concatenate([grid[:, 1:], east], axis=1)
+    o_ref[...] = W_CENTER * grid + W_NBR * (up + down + left + right)
+
+
+@jax.jit
+def stencil5(grid, north, south, west, east):
+    """One 5-point stencil step on a tile with halo strips."""
+    x, y = grid.shape
+    assert north.shape == (1, y) and south.shape == (1, y), (north.shape, south.shape)
+    assert west.shape == (x, 1) and east.shape == (x, 1), (west.shape, east.shape)
+    return pl.pallas_call(
+        _stencil_kernel,
+        out_shape=jax.ShapeDtypeStruct((x, y), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; Mosaic lowering is TPU-only
+    )(grid, north, south, west, east)
+
+
+def vmem_bytes(x: int, y: int) -> int:
+    """VMEM footprint estimate for DESIGN.md's roofline notes."""
+    tile = x * y
+    halos = 2 * y + 2 * x
+    return 4 * (2 * tile + halos)  # in + out + strips, f32
+
+
+functools  # referenced for parity with matmul_tile's interface

@@ -1,0 +1,56 @@
+"""L2: the JAX compute graph for leaf tasks, calling the L1 Pallas
+kernels. These are the functions `aot.py` lowers to HLO text for the
+Rust runtime; Python never runs at request time.
+
+The distributed algorithms' leaf work:
+  * `gemm_accumulate(a, b, c)` — one systolic/broadcast step of the
+    matmul benchmarks: C += A @ B on local tiles (Pallas GEMM inside).
+  * `stencil_step(grid, n, s, w, e)` — one halo-exchange stencil update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul_tile import matmul_tile
+from .kernels.stencil5 import stencil5
+
+
+@jax.jit
+def gemm_accumulate(a, b, c):
+    """One distributed-matmul step on local tiles: returns C + A @ B.
+
+    The Pallas kernel computes the tile product; the accumulate stays in
+    the surrounding jax function so XLA fuses the add into the same
+    program (no extra HBM round-trip on real hardware).
+    """
+    return (c + matmul_tile(a, b),)
+
+
+@jax.jit
+def stencil_step(grid, north, south, west, east):
+    """One 5-point stencil timestep on a tile with halo strips."""
+    return (stencil5(grid, north, south, west, east),)
+
+
+def gemm_flops(m: int, k: int, n: int) -> float:
+    """Useful FLOPs of one gemm_accumulate call (for perf accounting)."""
+    return 2.0 * m * k * n + m * n
+
+
+def example_args_gemm(ts: int):
+    """Example (a, b, c) shapes for a tile size."""
+    spec = jax.ShapeDtypeStruct((ts, ts), jnp.float32)
+    return spec, spec, spec
+
+
+def example_args_stencil(x: int, y: int):
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((x, y), f),
+        jax.ShapeDtypeStruct((1, y), f),
+        jax.ShapeDtypeStruct((1, y), f),
+        jax.ShapeDtypeStruct((x, 1), f),
+        jax.ShapeDtypeStruct((x, 1), f),
+    )

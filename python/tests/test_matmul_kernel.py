@@ -1,0 +1,71 @@
+"""L1 correctness: Pallas tile GEMM vs the pure-jnp oracle, swept over
+shapes/blocks with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.matmul_tile import matmul_tile, pick_block, vmem_bytes
+from compile.kernels.ref import matmul_ref
+
+
+def rand(shape, seed):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 64, 32)])
+def test_matches_ref_basic(m, k, n):
+    a, b = rand((m, k), 0), rand((k, n), 1)
+    got = matmul_tile(a, b)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+dims = st.sampled_from([4, 8, 12, 16, 24, 32, 48, 64])
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_matches_ref_hypothesis(m, k, n, seed):
+    a, b = rand((m, k), seed), rand((k, n), seed + 1)
+    got = matmul_tile(a, b)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    m=st.sampled_from([16, 32, 64]),
+    bm=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 100),
+)
+def test_explicit_blocks(m, bm, seed):
+    a, b = rand((m, m), seed), rand((m, m), seed + 7)
+    got = matmul_tile(a, b, bm=bm, bk=bm, bn=bm)
+    np.testing.assert_allclose(got, matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_pick_block():
+    assert pick_block(64) == 64
+    assert pick_block(128) == 64
+    assert pick_block(48) == 48
+    assert pick_block(7) == 7
+    assert pick_block(7, preferred=4) == 1
+    for d in range(1, 130):
+        b = pick_block(d)
+        assert d % b == 0 and b <= 64
+
+
+def test_vmem_budget_within_tpu_limits():
+    # default 64-blocks: 4*(64*64*3 + 64*64) = 64 KiB << 16 MiB VMEM
+    assert vmem_bytes(64, 64, 64) <= 16 * 2**20
+    assert vmem_bytes(128, 128, 128) <= 16 * 2**20
+
+
+def test_rejects_mismatched_inner_dims():
+    with pytest.raises(AssertionError):
+        matmul_tile(rand((8, 16), 0), rand((8, 8), 1))

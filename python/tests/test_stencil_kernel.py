@@ -1,0 +1,62 @@
+"""L1 correctness: Pallas 5-point stencil vs the pure-jnp oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import stencil5_ref
+from compile.kernels.stencil5 import stencil5, vmem_bytes
+
+
+def rand(shape, seed):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def make_inputs(x, y, seed):
+    return (
+        rand((x, y), seed),
+        rand((1, y), seed + 1),
+        rand((1, y), seed + 2),
+        rand((x, 1), seed + 3),
+        rand((x, 1), seed + 4),
+    )
+
+
+@pytest.mark.parametrize("x,y", [(4, 4), (8, 16), (32, 32), (3, 7)])
+def test_matches_ref(x, y):
+    args = make_inputs(x, y, 0)
+    np.testing.assert_allclose(stencil5(*args), stencil5_ref(*args), rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    x=st.integers(2, 48), y=st.integers(2, 48), seed=st.integers(0, 2**16)
+)
+def test_matches_ref_hypothesis(x, y, seed):
+    args = make_inputs(x, y, seed)
+    np.testing.assert_allclose(stencil5(*args), stencil5_ref(*args), rtol=1e-5, atol=1e-6)
+
+
+def test_uniform_field_is_fixed_point():
+    # weights sum to 1.0 → a constant field stays constant
+    x, y = 8, 8
+    g = jnp.ones((x, y), jnp.float32) * 3.5
+    n = jnp.ones((1, y), jnp.float32) * 3.5
+    s = jnp.ones((1, y), jnp.float32) * 3.5
+    w = jnp.ones((x, 1), jnp.float32) * 3.5
+    e = jnp.ones((x, 1), jnp.float32) * 3.5
+    out = stencil5(g, n, s, w, e)
+    np.testing.assert_allclose(out, g, rtol=1e-6)
+
+
+def test_halo_shape_validation():
+    with pytest.raises(AssertionError):
+        stencil5(rand((4, 4), 0), rand((2, 4), 1), rand((1, 4), 2), rand((4, 1), 3), rand((4, 1), 4))
+
+
+def test_vmem_estimate_reasonable():
+    assert vmem_bytes(64, 128) < 16 * 2**20

@@ -1,0 +1,170 @@
+//! Figures 14–17 + Table 3 — the decompose study: end-to-end stencil
+//! performance of the decompose-chosen processor grid vs Algorithm 1's
+//! greedy grid over the full Table 3 parameter space:
+//!
+//!   aspect ratio   1:1, 1:2, 1:4, 1:8, 1:16, 1:32
+//!   area per node  1e6, 1e7, 1e8, 2e8, 4e8 elements
+//!   GPUs           4, 8, 16, 32, 64, 128
+//!
+//! = 180 configurations. Reports the improvement distribution (Fig 14)
+//! and geomean improvement vs aspect ratio (Fig 15), area per node
+//! (Fig 16), and machine size (Fig 17).
+//!
+//! Run: `cargo bench --bench fig14_decompose`
+
+use mapple::apps::{self, mappers};
+use mapple::bench::write_report;
+use mapple::decompose::{decompose, greedy_grid};
+use mapple::machine::topology::MachineDesc;
+use mapple::mapper::MappleMapper;
+use mapple::mapple::MapperSpec;
+use mapple::util::json::Json;
+use mapple::util::stats::{geomean, histogram, max as fmax, min as fmin};
+use mapple::util::table::Table;
+
+struct Config {
+    aspect: i64,
+    area_per_node: f64,
+    gpus: usize,
+}
+
+/// Round v to the closest multiple of m (at least m).
+fn round_to(v: f64, m: i64) -> i64 {
+    ((v / m as f64).round() as i64).max(1) * m
+}
+
+fn run_stencil(desc: &MachineDesc, x: i64, y: i64, gx: i64, gy: i64) -> f64 {
+    let app = apps::stencil(&apps::StencilParams { x, y, gx, gy, halo: 1, steps: 3 });
+    let spec = MapperSpec::compile(mappers::mapple_source("stencil").unwrap(), desc).unwrap();
+    let mapper = MappleMapper::new(spec);
+    let out = apps::run_app(&app, &mapper, desc).unwrap();
+    assert!(out.sim.oom.is_none());
+    out.sim.makespan
+}
+
+fn main() {
+    let aspects = [1i64, 2, 4, 8, 16, 32];
+    let areas = [1e6f64, 1e7, 1e8, 2e8, 4e8];
+    let gpu_counts = [4usize, 8, 16, 32, 64, 128];
+    println!(
+        "Figures 14-17: decompose vs Algorithm 1 over {} configurations\n",
+        aspects.len() * areas.len() * gpu_counts.len()
+    );
+
+    let mut configs = Vec::new();
+    for &aspect in &aspects {
+        for &area_per_node in &areas {
+            for &gpus in &gpu_counts {
+                configs.push(Config { aspect, area_per_node, gpus });
+            }
+        }
+    }
+
+    let mut improvements: Vec<f64> = Vec::new();
+    let mut by_aspect: Vec<(i64, Vec<f64>)> = aspects.iter().map(|&a| (a, vec![])).collect();
+    let mut by_area: Vec<(f64, Vec<f64>)> = areas.iter().map(|&a| (a, vec![])).collect();
+    let mut by_gpus: Vec<(usize, Vec<f64>)> = gpu_counts.iter().map(|&g| (g, vec![])).collect();
+    let mut rows = Vec::new();
+
+    for cfg in &configs {
+        let nodes = (cfg.gpus / 4).max(1);
+        let desc = MachineDesc::paper_testbed(nodes);
+        let total = cfg.gpus as u64;
+        // iteration space with the requested aspect ratio and area:
+        // x*y = area_per_node * nodes, y = aspect * x
+        let area_total = cfg.area_per_node * nodes as f64;
+        let x_f = (area_total / cfg.aspect as f64).sqrt();
+        // round so every candidate grid divides the space cleanly: use a
+        // multiple of 2·gpus in each dimension
+        let m = 2 * cfg.gpus as i64;
+        let x = round_to(x_f, m);
+        let y = round_to(x_f * cfg.aspect as f64, m);
+
+        let g = greedy_grid(total, 2);
+        let d = decompose(total, &[x as u64, y as u64]);
+        let (t_greedy, t_dec) = (
+            run_stencil(&desc, x, y, g[0] as i64, g[1] as i64),
+            run_stencil(&desc, x, y, d.factors[0] as i64, d.factors[1] as i64),
+        );
+        let ratio = t_greedy / t_dec; // >1 means decompose wins
+        improvements.push(ratio);
+        by_aspect.iter_mut().find(|(a, _)| *a == cfg.aspect).unwrap().1.push(ratio);
+        by_area
+            .iter_mut()
+            .find(|(a, _)| *a == cfg.area_per_node)
+            .unwrap()
+            .1
+            .push(ratio);
+        by_gpus.iter_mut().find(|(gp, _)| *gp == cfg.gpus).unwrap().1.push(ratio);
+        rows.push(Json::obj(vec![
+            ("aspect", Json::Num(cfg.aspect as f64)),
+            ("area_per_node", Json::Num(cfg.area_per_node)),
+            ("gpus", Json::Num(cfg.gpus as f64)),
+            ("greedy_s", Json::Num(t_greedy)),
+            ("decompose_s", Json::Num(t_dec)),
+            ("improvement", Json::Num(ratio)),
+        ]));
+    }
+
+    // --- Fig 14: distribution of improvement percentage -------------------
+    let pcts: Vec<f64> = improvements.iter().map(|r| (r - 1.0) * 100.0).collect();
+    println!("Fig 14 — improvement distribution over {} configs:", pcts.len());
+    let (edges, counts) = histogram(&pcts, 0.0, fmax(&pcts).max(1.0), 10);
+    for (i, c) in counts.iter().enumerate() {
+        println!(
+            "  {:>6.1}%..{:>6.1}%  {:>3}  {}",
+            edges[i],
+            edges[i + 1],
+            c,
+            "#".repeat(*c)
+        );
+    }
+    println!(
+        "  min {:.1}%  max {:.1}%  geomean {:.1}%   (paper: 0%–83%, geomean 16%)\n",
+        fmin(&pcts),
+        fmax(&pcts),
+        (geomean(&improvements) - 1.0) * 100.0
+    );
+
+    // --- Fig 15: vs aspect ratio ------------------------------------------
+    let mut t = Table::new(["aspect ratio", "geomean improvement"]);
+    for (a, v) in &by_aspect {
+        t.row([format!("1:{a}"), format!("{:.1}%", (geomean(v) - 1.0) * 100.0)]);
+    }
+    println!("Fig 15 — improvement vs aspect ratio (paper: rises 7% → 27%):");
+    print!("{}", t.render());
+
+    // --- Fig 16: vs area per node ------------------------------------------
+    let mut t = Table::new(["area / node", "geomean improvement"]);
+    for (a, v) in &by_area {
+        t.row([format!("{a:.0e}"), format!("{:.1}%", (geomean(v) - 1.0) * 100.0)]);
+    }
+    println!("\nFig 16 — improvement vs area per node (paper: falls 32% → 5%):");
+    print!("{}", t.render());
+
+    // --- Fig 17: vs machine size --------------------------------------------
+    let mut t = Table::new(["GPUs", "geomean improvement"]);
+    for (g, v) in &by_gpus {
+        t.row([format!("{g}"), format!("{:.1}%", (geomean(v) - 1.0) * 100.0)]);
+    }
+    println!("\nFig 17 — improvement vs machine size (paper: peak at 16 GPUs / 4 nodes):");
+    print!("{}", t.render());
+
+    // shape assertions (who wins, where it helps most)
+    let first_aspect = geomean(&by_aspect.first().unwrap().1);
+    let last_aspect = geomean(&by_aspect.last().unwrap().1);
+    assert!(
+        last_aspect > first_aspect,
+        "improvement must grow with aspect ratio: 1:1 {first_aspect} vs 1:32 {last_aspect}"
+    );
+    let small_area = geomean(&by_area.first().unwrap().1);
+    let big_area = geomean(&by_area.last().unwrap().1);
+    assert!(
+        small_area > big_area,
+        "improvement must shrink with area/node: {small_area} vs {big_area}"
+    );
+    let losses = improvements.iter().filter(|&&r| r < 0.97).count();
+    assert!(losses < configs.len() / 10, "decompose lost in {losses}/{} configs", configs.len());
+
+    write_report("fig14_decompose", &Json::obj(vec![("rows", Json::Arr(rows))]));
+}

@@ -1,0 +1,80 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 paths that run
+//! per task launch —
+//!   1. mapping-point evaluation: raw interpreter vs the MappleMapper's
+//!      per-(task, ispace) table cache (the §Perf optimization),
+//!   2. decompose solve: cold search vs memo hit,
+//!   3. end-to-end map+simulate for a full Cannon program.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use mapple::apps::{self, mappers};
+use mapple::bench::{mapper_for, run, Flavor};
+use mapple::decompose::{decompose_with, Objective};
+use mapple::machine::point::{Rect, Tuple};
+use mapple::machine::topology::MachineDesc;
+use mapple::mapper::api::{Mapper, TaskCtx};
+use mapple::mapper::MappleMapper;
+use mapple::mapple::MapperSpec;
+use mapple::util::bench::Bencher;
+
+fn main() {
+    let desc = MachineDesc::paper_testbed(4);
+    let b = Bencher { warmup_iters: 10, samples: 20, iters_per_sample: 100 };
+
+    println!("== 1. per-point mapping: interpreter vs table cache ==");
+    let src = mappers::mapple_source("cannon").unwrap();
+    let spec = MapperSpec::compile(src, &desc).unwrap();
+    let ispace = Tuple::from([8, 8]);
+    let dom = Rect::from_extent(&ispace);
+    let mut i = 0i64;
+    let m_interp = b.run("interpreter map_point (uncached)", || {
+        i = (i + 1) % 64;
+        spec.map_point("mm_step_0", &Tuple::from([i / 8, i % 8]), &ispace).unwrap()
+    });
+    println!("  {}", m_interp.summary());
+
+    let mapper = MappleMapper::new(MapperSpec::compile(src, &desc).unwrap());
+    let ctx = TaskCtx {
+        task_name: "mm_step_0",
+        launch_domain: &dom,
+        num_nodes: desc.nodes,
+        procs_per_node: desc.gpus_per_node,
+    };
+    let mut j = 0i64;
+    let m_cached = b.run("MappleMapper map_task (cached)", || {
+        j = (j + 1) % 64;
+        mapper.map_task(&ctx, &Tuple::from([j / 8, j % 8]), &ispace).unwrap()
+    });
+    println!("  {}", m_cached.summary());
+    println!(
+        "  cache speedup: {:.1}x\n",
+        m_interp.median() / m_cached.median()
+    );
+
+    println!("== 2. decompose solve: cold vs memoized ==");
+    let mut k = 0u64;
+    let cold = b.run("decompose cold (fresh extents)", || {
+        k += 1;
+        decompose_with(96, &[1000 + k, 2000 + k], &Objective::Isotropic)
+    });
+    println!("  {}", cold.summary());
+    let hot = b.run("decompose memo hit", || {
+        decompose_with(96, &[1000, 2000], &Objective::Isotropic)
+    });
+    println!("  {}", hot.summary());
+    println!("  memo speedup: {:.1}x\n", cold.median() / hot.median());
+
+    println!("== 3. end-to-end map+simulate (cannon, 16 GPUs, N=4096) ==");
+    let b2 = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+    let app = apps::cannon(4096, 16);
+    let m = b2.run("pipeline+sim cannon", || {
+        let mapper = mapper_for(&Flavor::Mapple, "cannon", &desc);
+        run(&app, mapper.as_ref(), &desc).unwrap()
+    });
+    println!("  {}", m.summary());
+    let points: i64 = app.launches.iter().map(|l| l.num_points()).sum();
+    println!(
+        "  {:.1} µs per point task end-to-end ({points} tasks)",
+        m.median() * 1e6 / points as f64
+    );
+}

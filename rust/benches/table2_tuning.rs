@@ -1,0 +1,62 @@
+//! Table 2 — performance tuning with Mapple: tuned Mapple mappers vs the
+//! expert baselines across all nine applications (paper: speedups 1.02×
+//! to 1.34×; scientific apps gain from memory placement, matmul apps
+//! from mapping/placement of operand tiles).
+//!
+//! Run: `cargo bench --bench table2_tuning`
+
+use mapple::bench::{build_bench_app, mapper_for, run, write_report, Flavor, APP_ORDER};
+use mapple::machine::topology::MachineDesc;
+use mapple::util::json::Json;
+use mapple::util::table::Table;
+
+fn main() {
+    let desc = MachineDesc::paper_testbed(2); // 2 nodes × 4 GPUs
+    println!(
+        "Table 2: tuned Mapple mapper vs expert baseline ({} nodes x {} GPUs)\n",
+        desc.nodes, desc.gpus_per_node
+    );
+    let mut t = Table::new([
+        "#",
+        "Application",
+        "expert makespan",
+        "tuned makespan",
+        "Mapple tuned speedup",
+    ]);
+    let mut speedups = Vec::new();
+    let mut rows = Vec::new();
+    for (i, app_name) in APP_ORDER.iter().enumerate() {
+        let app = build_bench_app(app_name, &desc);
+        let expert = mapper_for(&Flavor::Expert, app_name, &desc);
+        let tuned = mapper_for(&Flavor::Tuned, app_name, &desc);
+        let base = run(&app, expert.as_ref(), &desc).unwrap();
+        let opt = run(&app, tuned.as_ref(), &desc).unwrap();
+        assert!(base.oom.is_none() && opt.oom.is_none(), "{app_name} OOM in Table 2 config");
+        let speedup = base.makespan / opt.makespan;
+        speedups.push(speedup);
+        t.row([
+            format!("{}", i + 1),
+            app_name.to_string(),
+            format!("{:.3} ms", base.makespan * 1e3),
+            format!("{:.3} ms", opt.makespan * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("app", Json::Str(app_name.to_string())),
+            ("expert_s", Json::Num(base.makespan)),
+            ("tuned_s", Json::Num(opt.makespan)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    print!("{}", t.render());
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "\nmax speedup {max:.2}x (paper: up to 1.34x); tuned never loses: min {:.2}x",
+        speedups.iter().cloned().fold(f64::INFINITY, f64::min)
+    );
+    write_report("table2_tuning", &Json::obj(vec![("rows", Json::Arr(rows))]));
+    assert!(
+        speedups.iter().all(|&s| s > 0.95),
+        "a tuned mapper regressed badly: {speedups:?}"
+    );
+}

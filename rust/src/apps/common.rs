@@ -1,0 +1,102 @@
+//! Application abstraction: a benchmark builds a task program (launches +
+//! data environment) that mappers place and the simulator times.
+
+use crate::machine::point::Tuple;
+use crate::machine::topology::MachineDesc;
+use crate::mapper::api::{Mapper, MapperAsMapping};
+use crate::sim::engine::{simulate, SimResult};
+use crate::tasking::deps::{analyze, DataEnv};
+use crate::tasking::pipeline;
+use crate::tasking::task::IndexLaunch;
+
+/// A fully built benchmark instance.
+pub struct AppInstance {
+    pub name: String,
+    pub launches: Vec<IndexLaunch>,
+    pub env: DataEnv,
+    /// The headline iteration space (what the paper calls the iteration
+    /// space of the algorithm, used for reporting).
+    pub ispace: Tuple,
+    /// Total useful FLOPs (for throughput reporting).
+    pub total_flops: f64,
+}
+
+impl AppInstance {
+    pub fn total_points(&self) -> i64 {
+        self.launches.iter().map(|l| l.num_points()).sum()
+    }
+}
+
+/// Outcome of running an app under a mapper on a simulated machine.
+pub struct RunOutcome {
+    pub sim: SimResult,
+    pub mapper_name: String,
+}
+
+impl RunOutcome {
+    pub fn throughput_per_node(&self, nodes: usize) -> f64 {
+        self.sim.throughput_per_node(nodes)
+    }
+}
+
+/// Map + simulate an app with a low-level mapper (pipeline → sim).
+pub fn run_app(
+    app: &AppInstance,
+    mapper: &dyn Mapper,
+    desc: &MachineDesc,
+) -> Result<RunOutcome, String> {
+    let deps = analyze(&app.launches, &app.env);
+    let adapter = MapperAsMapping {
+        mapper,
+        num_nodes: desc.nodes,
+        procs_per_node: desc.gpus_per_node,
+    };
+    let run = pipeline::run(&app.launches, &deps, &adapter, desc.nodes)
+        .map_err(|e| e.to_string())?;
+    pipeline::validate(&run, &deps)?;
+    let sim = simulate(&app.launches, &app.env, &deps, &run.placements, desc, &adapter);
+    Ok(RunOutcome { sim, mapper_name: mapper.mapper_name().to_string() })
+}
+
+/// Largest p with p*p ≤ n (processor grid side for 2D algorithms).
+pub fn isqrt(n: usize) -> usize {
+    let mut p = (n as f64).sqrt() as usize;
+    while (p + 1) * (p + 1) <= n {
+        p += 1;
+    }
+    while p * p > n {
+        p -= 1;
+    }
+    p.max(1)
+}
+
+/// Largest q with q*q*q ≤ n (grid side for 3D algorithms).
+pub fn icbrt(n: usize) -> usize {
+    let mut q = (n as f64).cbrt().round() as usize;
+    while (q + 1).pow(3) <= n {
+        q += 1;
+    }
+    while q.pow(3) > n && q > 1 {
+        q -= 1;
+    }
+    q.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_roots() {
+        assert_eq!(isqrt(1), 1);
+        assert_eq!(isqrt(4), 2);
+        assert_eq!(isqrt(8), 2);
+        assert_eq!(isqrt(16), 4);
+        assert_eq!(isqrt(17), 4);
+        assert_eq!(icbrt(1), 1);
+        assert_eq!(icbrt(8), 2);
+        assert_eq!(icbrt(26), 2);
+        assert_eq!(icbrt(27), 3);
+        assert_eq!(icbrt(64), 4);
+    }
+}

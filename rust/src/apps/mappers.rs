@@ -1,0 +1,86 @@
+//! Registry of the Mapple mapper sources shipped in `mappers/*.mpl`,
+//! embedded at build time so binaries run from any directory.
+
+/// (app, baseline source, tuned source).
+pub const MAPPER_SOURCES: &[(&str, &str, &str)] = &[
+    (
+        "cannon",
+        include_str!("../../../mappers/cannon.mpl"),
+        include_str!("../../../mappers/cannon_tuned.mpl"),
+    ),
+    (
+        "summa",
+        include_str!("../../../mappers/summa.mpl"),
+        include_str!("../../../mappers/summa_tuned.mpl"),
+    ),
+    (
+        "pumma",
+        include_str!("../../../mappers/pumma.mpl"),
+        include_str!("../../../mappers/pumma_tuned.mpl"),
+    ),
+    (
+        "johnson",
+        include_str!("../../../mappers/johnson.mpl"),
+        include_str!("../../../mappers/johnson_tuned.mpl"),
+    ),
+    (
+        "solomonik",
+        include_str!("../../../mappers/solomonik.mpl"),
+        include_str!("../../../mappers/solomonik_tuned.mpl"),
+    ),
+    (
+        "cosma",
+        include_str!("../../../mappers/cosma.mpl"),
+        include_str!("../../../mappers/cosma_tuned.mpl"),
+    ),
+    (
+        "stencil",
+        include_str!("../../../mappers/stencil.mpl"),
+        include_str!("../../../mappers/stencil_tuned.mpl"),
+    ),
+    (
+        "circuit",
+        include_str!("../../../mappers/circuit.mpl"),
+        include_str!("../../../mappers/circuit_tuned.mpl"),
+    ),
+    (
+        "pennant",
+        include_str!("../../../mappers/pennant.mpl"),
+        include_str!("../../../mappers/pennant_tuned.mpl"),
+    ),
+];
+
+/// Baseline Mapple source for an app.
+pub fn mapple_source(app: &str) -> Option<&'static str> {
+    MAPPER_SOURCES.iter().find(|(a, _, _)| *a == app).map(|(_, s, _)| *s)
+}
+
+/// Tuned Mapple source for an app (Table 2).
+pub fn tuned_source(app: &str) -> Option<&'static str> {
+    MAPPER_SOURCES.iter().find(|(a, _, _)| *a == app).map(|(_, _, t)| *t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::topology::MachineDesc;
+    use crate::mapple::program::MapperSpec;
+
+    #[test]
+    fn all_sources_compile() {
+        let desc = MachineDesc::paper_testbed(4);
+        for (app, base, tuned) in MAPPER_SOURCES {
+            MapperSpec::compile(base, &desc)
+                .unwrap_or_else(|e| panic!("{app}.mpl: {e}"));
+            MapperSpec::compile(tuned, &desc)
+                .unwrap_or_else(|e| panic!("{app}_tuned.mpl: {e}"));
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(mapple_source("cannon").is_some());
+        assert!(tuned_source("pennant").unwrap().contains("TaskMap advance CPU"));
+        assert!(mapple_source("nope").is_none());
+    }
+}

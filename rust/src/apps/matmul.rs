@@ -1,0 +1,504 @@
+//! The six distributed matrix-multiplication benchmarks (paper §6):
+//! Cannon's, SUMMA, PUMMA (2D), and Johnson's, Solomonik's 2.5D, COSMA
+//! (non-2D). Each builder produces the algorithm's task graph over
+//! logical regions; mapping (who runs each tile task) is entirely the
+//! mapper's job, which is what the paper evaluates.
+//!
+//! C = A·B with square N×N f32 matrices throughout.
+
+use super::common::{icbrt, isqrt, AppInstance};
+use crate::decompose::decompose;
+use crate::machine::point::{Rect, Tuple};
+use crate::tasking::deps::DataEnv;
+use crate::tasking::region::{LogicalRegion, Partition, Privilege, RegionId};
+use crate::tasking::task::{IndexLaunch, RegionReq};
+
+const F32: u64 = 4;
+
+/// Shared setup: regions A, B, C partitioned on a (px, py[, ..]) grid.
+struct MatEnv {
+    env: DataEnv,
+    a: RegionId,
+    b: RegionId,
+    c: RegionId,
+    pa: usize,
+    pb: usize,
+    pc: usize,
+}
+
+fn mat_env(n: i64, grid_a: &Tuple, grid_b: &Tuple, grid_c: &Tuple) -> MatEnv {
+    let mut env = DataEnv::default();
+    let a = env.add_region(LogicalRegion {
+        id: RegionId(0),
+        name: "A".into(),
+        extent: Tuple::from([n, n]),
+        elem_bytes: F32,
+    });
+    let b = env.add_region(LogicalRegion {
+        id: RegionId(1),
+        name: "B".into(),
+        extent: Tuple::from([n, n]),
+        elem_bytes: F32,
+    });
+    let c = env.add_region(LogicalRegion {
+        id: RegionId(2),
+        name: "C".into(),
+        extent: Tuple::from([n, n]),
+        elem_bytes: F32,
+    });
+    let pa = env.add_partition(Partition::block(env.region(a), grid_a).unwrap());
+    let pb = env.add_partition(Partition::block(env.region(b), grid_b).unwrap());
+    let pc = env.add_partition(Partition::block(env.region(c), grid_c).unwrap());
+    MatEnv { env, a, b, c, pa, pb, pc }
+}
+
+/// GEMM FLOPs for a tile multiply of (m×k)·(k×n).
+fn gemm_flops(m: i64, k: i64, n: i64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+fn init_launches(me: &MatEnv, grid: &Tuple, next_id: &mut u32) -> Vec<IndexLaunch> {
+    let dom = Rect::from_extent(grid);
+    let mk = |id: &mut u32, name: &str, region, part| {
+        let l = IndexLaunch::new(*id, name, dom.clone())
+            .with_req(RegionReq::tiled(region, part, Privilege::WriteOnly))
+            .with_flops(1.0);
+        *id += 1;
+        l
+    };
+    vec![
+        mk(next_id, "init_a", me.a, me.pa),
+        mk(next_id, "init_b", me.b, me.pb),
+        mk(next_id, "init_c", me.c, me.pc),
+    ]
+}
+
+/// Cannon's algorithm on a p×p grid: after pre-skewing, step k has task
+/// (i,j) multiply A(i, (i+j+k) mod p) · B((i+j+k) mod p, j) into C(i,j).
+pub fn cannon(n: i64, procs: usize) -> AppInstance {
+    let p = isqrt(procs) as i64;
+    let grid = Tuple::from([p, p]);
+    let me = mat_env(n, &grid, &grid, &grid);
+    let mut id = 0u32;
+    let mut launches = init_launches(&me, &grid, &mut id);
+    let tile = n / p;
+    let flops = gemm_flops(tile, tile, tile);
+    for k in 0..p {
+        // A read: color (i, (i+j+k) mod p) — row index i kept, column
+        // shifted by the skew. Our Affine projection supports
+        // perm+offset+mod; the (i+j+k) term needs the sum, so we encode it
+        // as perm [0, 1] with offset (0, k) over a *pre-skewed* partition
+        // order — equivalently use perm[0]=0 and col = (i+j+k)%p via the
+        // dedicated skew helper below.
+        let l = IndexLaunch::new(id, &format!("mm_step_{k}"), Rect::from_extent(&grid))
+            .with_req(skewed_req(me.a, me.pa, &grid, SkewKind::RowPlusColA, k))
+            .with_req(skewed_req(me.b, me.pb, &grid, SkewKind::RowPlusColB, k))
+            .with_req(RegionReq::tiled(me.c, me.pc, Privilege::Reduce))
+            .with_flops(flops)
+            .with_kernel("matmul_tile");
+        launches.push(l);
+        id += 1;
+    }
+    AppInstance {
+        name: "cannon".into(),
+        launches,
+        env: me.env,
+        ispace: grid,
+        total_flops: gemm_flops(n, n, n),
+    }
+}
+
+/// Skew kinds used by the 2D algorithms' shifted tile accesses.
+enum SkewKind {
+    /// A tile (i, (i+j+k) mod p) — Cannon's A operand.
+    RowPlusColA,
+    /// B tile ((i+j+k) mod p, j) — Cannon's B operand.
+    RowPlusColB,
+    /// A tile (i, k) — SUMMA's broadcast column.
+    FixedColumn,
+    /// B tile (k, j) — SUMMA's broadcast row.
+    FixedRow,
+    /// A tile (i, (j+k) mod p) — PUMMA's rotating column.
+    ColShift,
+    /// B tile ((i+k) mod p, j) — PUMMA's rotating row.
+    RowShift,
+}
+
+fn skewed_req(
+    region: RegionId,
+    part: usize,
+    _grid: &Tuple,
+    kind: SkewKind,
+    k: i64,
+) -> RegionReq {
+    use crate::tasking::task::{CoordExpr, Projection};
+    let (coords, offset) = match kind {
+        // A(i, (i+j+k) mod p)
+        SkewKind::RowPlusColA => {
+            (vec![CoordExpr::Dim(0), CoordExpr::Sum(0, 1)], Tuple::from([0, k]))
+        }
+        // B((i+j+k) mod p, j)
+        SkewKind::RowPlusColB => {
+            (vec![CoordExpr::Sum(0, 1), CoordExpr::Dim(1)], Tuple::from([k, 0]))
+        }
+        // A(i, k)
+        SkewKind::FixedColumn => {
+            (vec![CoordExpr::Dim(0), CoordExpr::Const(k)], Tuple::from([0, 0]))
+        }
+        // B(k, j)
+        SkewKind::FixedRow => {
+            (vec![CoordExpr::Const(k), CoordExpr::Dim(1)], Tuple::from([0, 0]))
+        }
+        // A(i, (j+k) mod p)
+        SkewKind::ColShift => {
+            (vec![CoordExpr::Dim(0), CoordExpr::Dim(1)], Tuple::from([0, k]))
+        }
+        // B((i+k) mod p, j)
+        SkewKind::RowShift => {
+            (vec![CoordExpr::Dim(0), CoordExpr::Dim(1)], Tuple::from([k, 0]))
+        }
+    };
+    RegionReq {
+        region,
+        partition: Some(part),
+        privilege: Privilege::ReadOnly,
+        projection: Projection::General { coords, offset, modulo: true },
+    }
+}
+
+/// SUMMA: step k has task (i,j) read A(i,k) and B(k,j) (broadcasts along
+/// rows/columns), accumulating into C(i,j).
+pub fn summa(n: i64, procs: usize) -> AppInstance {
+    let p = isqrt(procs) as i64;
+    let grid = Tuple::from([p, p]);
+    let me = mat_env(n, &grid, &grid, &grid);
+    let mut id = 0u32;
+    let mut launches = init_launches(&me, &grid, &mut id);
+    let tile = n / p;
+    let flops = gemm_flops(tile, tile, tile);
+    for k in 0..p {
+        let l = IndexLaunch::new(id, &format!("mm_step_{k}"), Rect::from_extent(&grid))
+            .with_req(skewed_req(me.a, me.pa, &grid, SkewKind::FixedColumn, k))
+            .with_req(skewed_req(me.b, me.pb, &grid, SkewKind::FixedRow, k))
+            .with_req(RegionReq::tiled(me.c, me.pc, Privilege::Reduce))
+            .with_flops(flops)
+            .with_kernel("matmul_tile");
+        launches.push(l);
+        id += 1;
+    }
+    AppInstance {
+        name: "summa".into(),
+        launches,
+        env: me.env,
+        ispace: grid,
+        total_flops: gemm_flops(n, n, n),
+    }
+}
+
+/// PUMMA: like SUMMA but with rotating (block-cyclic) operand shifts.
+pub fn pumma(n: i64, procs: usize) -> AppInstance {
+    let p = isqrt(procs) as i64;
+    let grid = Tuple::from([p, p]);
+    let me = mat_env(n, &grid, &grid, &grid);
+    let mut id = 0u32;
+    let mut launches = init_launches(&me, &grid, &mut id);
+    let tile = n / p;
+    let flops = gemm_flops(tile, tile, tile);
+    for k in 0..p {
+        let l = IndexLaunch::new(id, &format!("mm_step_{k}"), Rect::from_extent(&grid))
+            .with_req(skewed_req(me.a, me.pa, &grid, SkewKind::ColShift, k))
+            .with_req(skewed_req(me.b, me.pb, &grid, SkewKind::RowShift, k))
+            .with_req(RegionReq::tiled(me.c, me.pc, Privilege::Reduce))
+            .with_flops(flops)
+            .with_kernel("matmul_tile");
+        launches.push(l);
+        id += 1;
+    }
+    AppInstance {
+        name: "pumma".into(),
+        launches,
+        env: me.env,
+        ispace: grid,
+        total_flops: gemm_flops(n, n, n),
+    }
+}
+
+/// Johnson's 3D algorithm on a q×q×q grid: task (i,j,k) computes
+/// A(i,k)·B(k,j) into a replicated C(i,j) reduction.
+pub fn johnson(n: i64, procs: usize) -> AppInstance {
+    let q = icbrt(procs) as i64;
+    let grid2 = Tuple::from([q, q]);
+    let grid3 = Tuple::from([q, q, q]);
+    let me = mat_env(n, &grid2, &grid2, &grid2);
+    let mut id = 0u32;
+    let mut launches = init_launches(&me, &grid2, &mut id);
+    let tile = n / q;
+    let flops = gemm_flops(tile, tile, tile);
+    use crate::tasking::task::Projection;
+    let mm = IndexLaunch::new(id, "mm3d", Rect::from_extent(&grid3))
+        .with_req(RegionReq {
+            region: me.a,
+            partition: Some(me.pa),
+            privilege: Privilege::ReadOnly,
+            projection: Projection::Affine {
+                perm: vec![0, 2],
+                offset: Tuple::from([0, 0]),
+                modulo: false,
+            },
+        })
+        .with_req(RegionReq {
+            region: me.b,
+            partition: Some(me.pb),
+            privilege: Privilege::ReadOnly,
+            projection: Projection::Affine {
+                perm: vec![2, 1],
+                offset: Tuple::from([0, 0]),
+                modulo: false,
+            },
+        })
+        .with_req(RegionReq {
+            region: me.c,
+            partition: Some(me.pc),
+            privilege: Privilege::Reduce,
+            projection: Projection::Affine {
+                perm: vec![0, 1],
+                offset: Tuple::from([0, 0]),
+                modulo: false,
+            },
+        })
+        .with_flops(flops)
+        .with_kernel("matmul_tile");
+    launches.push(mm);
+    AppInstance {
+        name: "johnson".into(),
+        launches,
+        env: me.env,
+        ispace: grid3,
+        total_flops: gemm_flops(n, n, n),
+    }
+}
+
+/// Solomonik's 2.5D algorithm: q×q grid with replication factor c
+/// (q·q·c = procs). Iteration space (q, q, c); each replica layer handles
+/// q/c of the inner-product steps, followed by a C reduction.
+pub fn solomonik(n: i64, procs: usize) -> AppInstance {
+    // choose c as the largest cube-balancing factor: c = procs / q^2
+    let q = isqrt(procs / 2).max(1) as i64; // leave room for c ≥ 2 when possible
+    let c = ((procs as i64) / (q * q)).max(1);
+    let grid2 = Tuple::from([q, q]);
+    let grid3 = Tuple::from([q, q, c]);
+    let me = mat_env(n, &grid2, &grid2, &grid2);
+    let mut id = 0u32;
+    let mut launches = init_launches(&me, &grid2, &mut id);
+    let tile = n / q;
+    let steps_per_layer = (q + c - 1) / c;
+    let flops = gemm_flops(tile, tile, tile) * steps_per_layer as f64;
+    use crate::tasking::task::Projection;
+    // compute phase over (q, q, c): layer l handles inner steps
+    // k = l*q/c .. (l+1)*q/c; operand tiles A(i, k0(l)), B(k0(l), j).
+    let mm = IndexLaunch::new(id, "mm25d", Rect::from_extent(&grid3))
+        .with_req(RegionReq {
+            region: me.a,
+            partition: Some(me.pa),
+            privilege: Privilege::ReadOnly,
+            projection: Projection::Affine {
+                perm: vec![0, 2],
+                offset: Tuple::from([0, 0]),
+                modulo: true,
+            },
+        })
+        .with_req(RegionReq {
+            region: me.b,
+            partition: Some(me.pb),
+            privilege: Privilege::ReadOnly,
+            projection: Projection::Affine {
+                perm: vec![2, 1],
+                offset: Tuple::from([0, 0]),
+                modulo: true,
+            },
+        })
+        .with_req(RegionReq {
+            region: me.c,
+            partition: Some(me.pc),
+            privilege: Privilege::Reduce,
+            projection: Projection::Affine {
+                perm: vec![0, 1],
+                offset: Tuple::from([0, 0]),
+                modulo: false,
+            },
+        })
+        .with_flops(flops)
+        .with_kernel("matmul_tile");
+    launches.push(mm);
+    id += 1;
+    // reduction phase over (q, q): fold replicas into C
+    let reduce = IndexLaunch::new(id, "reduce_c", Rect::from_extent(&grid2))
+        .with_req(RegionReq::tiled(me.c, me.pc, Privilege::ReadWrite))
+        .with_flops((tile * tile) as f64 * c as f64);
+    launches.push(reduce);
+    AppInstance {
+        name: "solomonik".into(),
+        launches,
+        env: me.env,
+        ispace: grid3,
+        total_flops: gemm_flops(n, n, n),
+    }
+}
+
+/// COSMA: chooses the processor grid by communication-optimal
+/// decomposition of the (M, N, K) iteration space — exactly our
+/// `decompose` solver — then runs a Johnson-style 3D multiply on it.
+pub fn cosma(n: i64, procs: usize) -> AppInstance {
+    let r = decompose(procs as u64, &[n as u64, n as u64, n as u64]);
+    let (gx, gy, gz) = (r.factors[0] as i64, r.factors[1] as i64, r.factors[2] as i64);
+    let grid3 = Tuple::from([gx, gy, gz]);
+    let ga = Tuple::from([gx, gz]);
+    let gb = Tuple::from([gz, gy]);
+    let gc = Tuple::from([gx, gy]);
+    let me = mat_env(n, &ga, &gb, &gc);
+    let mut id = 0u32;
+    // init with per-operand grids
+    let dom_a = Rect::from_extent(&ga);
+    let dom_b = Rect::from_extent(&gb);
+    let dom_c = Rect::from_extent(&gc);
+    let mut launches = vec![
+        IndexLaunch::new(id, "init_a", dom_a)
+            .with_req(RegionReq::tiled(me.a, me.pa, Privilege::WriteOnly))
+            .with_flops(1.0),
+    ];
+    id += 1;
+    launches.push(
+        IndexLaunch::new(id, "init_b", dom_b)
+            .with_req(RegionReq::tiled(me.b, me.pb, Privilege::WriteOnly))
+            .with_flops(1.0),
+    );
+    id += 1;
+    launches.push(
+        IndexLaunch::new(id, "init_c", dom_c)
+            .with_req(RegionReq::tiled(me.c, me.pc, Privilege::WriteOnly))
+            .with_flops(1.0),
+    );
+    id += 1;
+    use crate::tasking::task::Projection;
+    let flops = gemm_flops(n / gx, n / gz, n / gy);
+    let mm = IndexLaunch::new(id, "mm_cosma", Rect::from_extent(&grid3))
+        .with_req(RegionReq {
+            region: me.a,
+            partition: Some(me.pa),
+            privilege: Privilege::ReadOnly,
+            projection: Projection::Affine {
+                perm: vec![0, 2],
+                offset: Tuple::from([0, 0]),
+                modulo: false,
+            },
+        })
+        .with_req(RegionReq {
+            region: me.b,
+            partition: Some(me.pb),
+            privilege: Privilege::ReadOnly,
+            projection: Projection::Affine {
+                perm: vec![2, 1],
+                offset: Tuple::from([0, 0]),
+                modulo: false,
+            },
+        })
+        .with_req(RegionReq {
+            region: me.c,
+            partition: Some(me.pc),
+            privilege: Privilege::Reduce,
+            projection: Projection::Affine {
+                perm: vec![0, 1],
+                offset: Tuple::from([0, 0]),
+                modulo: false,
+            },
+        })
+        .with_flops(flops)
+        .with_kernel("matmul_tile");
+    launches.push(mm);
+    AppInstance {
+        name: "cosma".into(),
+        launches,
+        env: me.env,
+        ispace: grid3,
+        total_flops: gemm_flops(n, n, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasking::deps::analyze;
+
+    #[test]
+    fn cannon_structure() {
+        let app = cannon(64, 4); // p = 2
+        assert_eq!(app.ispace, Tuple::from([2, 2]));
+        // 3 inits + 2 steps
+        assert_eq!(app.launches.len(), 5);
+        assert_eq!(app.total_points(), 3 * 4 + 2 * 4);
+        assert!((app.total_flops - 2.0 * 64f64.powi(3)).abs() < 1.0);
+    }
+
+    #[test]
+    fn summa_reads_broadcast_tiles() {
+        let app = summa(64, 4);
+        let env = &app.env;
+        // step 0: task (0,1) reads A(0,0) and B(0,1)
+        let step = &app.launches[3];
+        let pt = crate::tasking::task::PointTask {
+            launch: step.id,
+            point: Tuple::from([0, 1]),
+        };
+        let ra = env.access_rect(step, 0, &pt);
+        assert_eq!(ra.lo, Tuple::from([0, 0]), "A(0, k=0)");
+        let rb = env.access_rect(step, 1, &pt);
+        assert_eq!(rb.lo, Tuple::from([0, 32]), "B(k=0, 1)");
+    }
+
+    #[test]
+    fn cannon_skew_wraps() {
+        let app = cannon(64, 4);
+        let env = &app.env;
+        let step1 = &app.launches[4]; // k = 1
+        let pt = crate::tasking::task::PointTask {
+            launch: step1.id,
+            point: Tuple::from([1, 1]),
+        };
+        // A color = (1, (1+1+1) mod 2) = (1, 1)
+        let ra = env.access_rect(step1, 0, &pt);
+        assert_eq!(ra.lo, Tuple::from([32, 32]));
+    }
+
+    #[test]
+    fn all_six_build_and_analyze() {
+        for (name, app) in [
+            ("cannon", cannon(64, 8)),
+            ("summa", summa(64, 8)),
+            ("pumma", pumma(64, 8)),
+            ("johnson", johnson(64, 8)),
+            ("solomonik", solomonik(64, 8)),
+            ("cosma", cosma(64, 8)),
+        ] {
+            assert!(!app.launches.is_empty(), "{name}");
+            let deps = analyze(&app.launches, &app.env);
+            // every app has some cross-launch dependences (init → mm)
+            assert!(deps.edge_count() > 0, "{name} has no dependences?");
+        }
+    }
+
+    #[test]
+    fn cosma_grid_is_communication_optimal() {
+        let app = cosma(64, 8);
+        // square problem, 8 procs → balanced (2,2,2)
+        assert_eq!(app.ispace, Tuple::from([2, 2, 2]));
+    }
+
+    #[test]
+    fn solomonik_has_replication() {
+        let app = solomonik(64, 8); // q = 2, c = 2
+        assert_eq!(app.ispace, Tuple::from([2, 2, 2]));
+        let names: Vec<&str> = app.launches.iter().map(|l| l.name.as_str()).collect();
+        assert!(names.contains(&"mm25d"));
+        assert!(names.contains(&"reduce_c"));
+    }
+}

@@ -1,0 +1,14 @@
+//! The nine benchmark applications (paper §6): six distributed matmul
+//! algorithms plus Stencil, Circuit, and Pennant, with a shared
+//! build-map-simulate harness.
+
+pub mod common;
+pub mod mappers;
+pub mod matmul;
+pub mod science;
+pub mod stencil;
+
+pub use common::{icbrt, isqrt, run_app, AppInstance, RunOutcome};
+pub use matmul::{cannon, cosma, johnson, pumma, solomonik, summa};
+pub use science::{circuit, pennant, CircuitParams, PennantParams};
+pub use stencil::{stencil, StencilParams};

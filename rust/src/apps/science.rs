@@ -1,0 +1,285 @@
+//! The two remaining scientific benchmarks:
+//!
+//! * **Circuit** — electrical circuit simulation over a partitioned graph
+//!   of nodes and wires (the original Legion demo app). Pieces own
+//!   private nodes; wires crossing piece boundaries touch *shared* nodes,
+//!   which is where communication happens. Memory placement of the shared
+//!   node data (FBMEM vs ZCMEM) is the mapper decision the paper tunes.
+//!
+//! * **Pennant** — unstructured-mesh Lagrangian hydrodynamics (LANL
+//!   mini-app). 1D chunks of zones/points/sides; points at chunk borders
+//!   are shared. Several small per-cycle tasks are cheaper on CPU — the
+//!   TaskMap processor-kind decision the paper's §7.1 discusses.
+
+use super::common::AppInstance;
+use crate::machine::point::{Rect, Tuple};
+use crate::tasking::deps::DataEnv;
+use crate::tasking::region::{LogicalRegion, Partition, Privilege, RegionId};
+use crate::tasking::task::{IndexLaunch, Projection, RegionReq};
+
+const F32: u64 = 4;
+const F64: u64 = 8;
+
+/// Circuit parameters.
+#[derive(Clone, Debug)]
+pub struct CircuitParams {
+    /// Number of graph pieces (≥ processor count for load balance).
+    pub pieces: i64,
+    /// Private nodes per piece.
+    pub nodes_per_piece: i64,
+    /// Wires per piece.
+    pub wires_per_piece: i64,
+    /// Fraction (%) of wires crossing piece boundaries.
+    pub pct_shared: i64,
+    /// Simulation loops.
+    pub loops: usize,
+}
+
+/// Build the circuit task graph: per loop, `calc_new_currents` (reads
+/// node voltages incl. neighbors' shared nodes, writes wire currents),
+/// then `distribute_charge` (reads wire currents, accumulates into own +
+/// neighbor shared nodes), then `update_voltages`.
+pub fn circuit(p: &CircuitParams) -> AppInstance {
+    let mut env = DataEnv::default();
+    let private = env.add_region(LogicalRegion {
+        id: RegionId(0),
+        name: "private_nodes".into(),
+        extent: Tuple::from([p.pieces * p.nodes_per_piece]),
+        elem_bytes: F64,
+    });
+    let shared_count = (p.nodes_per_piece * p.pct_shared / 100).max(1);
+    let shared = env.add_region(LogicalRegion {
+        id: RegionId(1),
+        name: "shared_nodes".into(),
+        extent: Tuple::from([p.pieces * shared_count]),
+        elem_bytes: F64,
+    });
+    let wires = env.add_region(LogicalRegion {
+        id: RegionId(2),
+        name: "wires".into(),
+        extent: Tuple::from([p.pieces * p.wires_per_piece]),
+        elem_bytes: F32 * 4, // current, in/out node ids, resistance
+    });
+    let grid = Tuple::from([p.pieces]);
+    let pp = env.add_partition(Partition::block(env.region(private), &grid).unwrap());
+    let ps = env.add_partition(Partition::block(env.region(shared), &grid).unwrap());
+    let pw = env.add_partition(Partition::block(env.region(wires), &grid).unwrap());
+
+    let dom = Rect::from_extent(&grid);
+    let mut launches = Vec::new();
+    let mut id = 0u32;
+    launches.push(
+        IndexLaunch::new(id, "init_piece", dom.clone())
+            .with_req(RegionReq::tiled(private, pp, Privilege::WriteOnly))
+            .with_req(RegionReq::tiled(shared, ps, Privilege::WriteOnly))
+            .with_req(RegionReq::tiled(wires, pw, Privilege::WriteOnly))
+            .with_flops(p.nodes_per_piece as f64),
+    );
+    id += 1;
+    let neighbor = |off: i64| Projection::Affine {
+        perm: vec![0],
+        offset: Tuple::from([off]),
+        modulo: true,
+    };
+    for l in 0..p.loops {
+        launches.push(
+            IndexLaunch::new(id, &format!("calc_new_currents_{l}"), dom.clone())
+                .with_req(RegionReq::tiled(private, pp, Privilege::ReadOnly))
+                .with_req(RegionReq::tiled(shared, ps, Privilege::ReadOnly))
+                .with_req(RegionReq {
+                    region: shared,
+                    partition: Some(ps),
+                    privilege: Privilege::ReadOnly,
+                    projection: neighbor(1),
+                })
+                .with_req(RegionReq {
+                    region: shared,
+                    partition: Some(ps),
+                    privilege: Privilege::ReadOnly,
+                    projection: neighbor(p.pieces - 1),
+                })
+                .with_req(RegionReq::tiled(wires, pw, Privilege::ReadWrite))
+                .with_flops(64.0 * p.wires_per_piece as f64),
+        );
+        id += 1;
+        launches.push(
+            IndexLaunch::new(id, &format!("distribute_charge_{l}"), dom.clone())
+                .with_req(RegionReq::tiled(wires, pw, Privilege::ReadOnly))
+                .with_req(RegionReq::tiled(private, pp, Privilege::Reduce))
+                .with_req(RegionReq {
+                    region: shared,
+                    partition: Some(ps),
+                    privilege: Privilege::Reduce,
+                    projection: neighbor(1),
+                })
+                .with_flops(8.0 * p.wires_per_piece as f64),
+        );
+        id += 1;
+        launches.push(
+            IndexLaunch::new(id, &format!("update_voltages_{l}"), dom.clone())
+                .with_req(RegionReq::tiled(private, pp, Privilege::ReadWrite))
+                .with_req(RegionReq::tiled(shared, ps, Privilege::ReadWrite))
+                .with_flops(4.0 * (p.nodes_per_piece + shared_count) as f64),
+        );
+        id += 1;
+    }
+    let total: f64 = launches.iter().map(|l| l.flops_per_point * l.num_points() as f64).sum();
+    AppInstance {
+        name: "circuit".into(),
+        launches,
+        env,
+        ispace: grid,
+        total_flops: total,
+    }
+}
+
+/// Pennant parameters.
+#[derive(Clone, Debug)]
+pub struct PennantParams {
+    pub chunks: i64,
+    pub zones_per_chunk: i64,
+    pub cycles: usize,
+}
+
+/// Build the Pennant task graph: per cycle, `calc_forces` (zones+points →
+/// sides), `sum_point_forces` (sides → points incl. border points shared
+/// with the neighbor chunk), `advance` (integrate, small task).
+pub fn pennant(p: &PennantParams) -> AppInstance {
+    let mut env = DataEnv::default();
+    let zones = env.add_region(LogicalRegion {
+        id: RegionId(0),
+        name: "zones".into(),
+        extent: Tuple::from([p.chunks * p.zones_per_chunk]),
+        elem_bytes: F64 * 4,
+    });
+    let points = env.add_region(LogicalRegion {
+        id: RegionId(1),
+        name: "points".into(),
+        extent: Tuple::from([p.chunks * (p.zones_per_chunk + 1)]),
+        elem_bytes: F64 * 2,
+    });
+    let sides = env.add_region(LogicalRegion {
+        id: RegionId(2),
+        name: "sides".into(),
+        extent: Tuple::from([p.chunks * p.zones_per_chunk * 4]),
+        elem_bytes: F64 * 2,
+    });
+    let grid = Tuple::from([p.chunks]);
+    let pz = env.add_partition(Partition::block(env.region(zones), &grid).unwrap());
+    let pp = env.add_partition(Partition::block(env.region(points), &grid).unwrap());
+    let psd = env.add_partition(Partition::block(env.region(sides), &grid).unwrap());
+    let dom = Rect::from_extent(&grid);
+    let neighbor = Projection::Affine {
+        perm: vec![0],
+        offset: Tuple::from([1]),
+        modulo: true,
+    };
+    let mut launches = Vec::new();
+    let mut id = 0u32;
+    launches.push(
+        IndexLaunch::new(id, "init_mesh", dom.clone())
+            .with_req(RegionReq::tiled(zones, pz, Privilege::WriteOnly))
+            .with_req(RegionReq::tiled(points, pp, Privilege::WriteOnly))
+            .with_req(RegionReq::tiled(sides, psd, Privilege::WriteOnly))
+            .with_flops(p.zones_per_chunk as f64),
+    );
+    id += 1;
+    for c in 0..p.cycles {
+        launches.push(
+            IndexLaunch::new(id, &format!("calc_forces_{c}"), dom.clone())
+                .with_req(RegionReq::tiled(zones, pz, Privilege::ReadOnly))
+                .with_req(RegionReq::tiled(points, pp, Privilege::ReadOnly))
+                .with_req(RegionReq::tiled(sides, psd, Privilege::ReadWrite))
+                .with_flops(96.0 * p.zones_per_chunk as f64),
+        );
+        id += 1;
+        launches.push(
+            IndexLaunch::new(id, &format!("sum_point_forces_{c}"), dom.clone())
+                .with_req(RegionReq::tiled(sides, psd, Privilege::ReadOnly))
+                .with_req(RegionReq::tiled(points, pp, Privilege::Reduce))
+                .with_req(RegionReq {
+                    region: points,
+                    partition: Some(pp),
+                    privilege: Privilege::Reduce,
+                    projection: neighbor.clone(),
+                })
+                .with_flops(16.0 * p.zones_per_chunk as f64),
+        );
+        id += 1;
+        // small integration task — the classic CPU-favoring candidate
+        launches.push(
+            IndexLaunch::new(id, &format!("advance_{c}"), dom.clone())
+                .with_req(RegionReq::tiled(zones, pz, Privilege::ReadWrite))
+                .with_req(RegionReq::tiled(points, pp, Privilege::ReadWrite))
+                .with_flops(4.0 * p.zones_per_chunk as f64),
+        );
+        id += 1;
+    }
+    let total: f64 = launches.iter().map(|l| l.flops_per_point * l.num_points() as f64).sum();
+    AppInstance {
+        name: "pennant".into(),
+        launches,
+        env,
+        ispace: grid,
+        total_flops: total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasking::deps::analyze;
+
+    #[test]
+    fn circuit_builds() {
+        let app = circuit(&CircuitParams {
+            pieces: 8,
+            nodes_per_piece: 64,
+            wires_per_piece: 128,
+            pct_shared: 10,
+            loops: 2,
+        });
+        assert_eq!(app.launches.len(), 1 + 3 * 2);
+        let deps = analyze(&app.launches, &app.env);
+        assert!(deps.edge_count() > 0);
+        // distribute_charge (0) of piece 0 reduces into piece 1's shared
+        // nodes → calc_new_currents (1) of piece 1 depends on it.
+        let calc1 = app.launches.iter().find(|l| l.name == "calc_new_currents_1").unwrap();
+        let t = crate::tasking::task::PointTask { launch: calc1.id, point: Tuple::from([1]) };
+        let preds = deps.preds_of(&t);
+        let dist0 = app.launches.iter().find(|l| l.name == "distribute_charge_0").unwrap().id;
+        assert!(
+            preds.iter().any(|p| p.launch == dist0 && p.point == Tuple::from([0])),
+            "{preds:?}"
+        );
+    }
+
+    #[test]
+    fn pennant_builds() {
+        let app = pennant(&PennantParams { chunks: 4, zones_per_chunk: 100, cycles: 3 });
+        assert_eq!(app.launches.len(), 1 + 3 * 3);
+        let deps = analyze(&app.launches, &app.env);
+        assert!(deps.edge_count() > 0);
+        assert!(app.total_flops > 0.0);
+    }
+
+    #[test]
+    fn shared_fraction_controls_shared_region() {
+        let small = circuit(&CircuitParams {
+            pieces: 2,
+            nodes_per_piece: 100,
+            wires_per_piece: 10,
+            pct_shared: 5,
+            loops: 1,
+        });
+        let big = circuit(&CircuitParams {
+            pieces: 2,
+            nodes_per_piece: 100,
+            wires_per_piece: 10,
+            pct_shared: 50,
+            loops: 1,
+        });
+        let vol = |a: &AppInstance| a.env.region(RegionId(1)).volume();
+        assert!(vol(&big) > vol(&small));
+    }
+}

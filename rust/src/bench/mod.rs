@@ -1,0 +1,96 @@
+//! Shared support for the `cargo bench` figure/table generators.
+
+use crate::apps::{self, mappers, AppInstance};
+use crate::machine::topology::MachineDesc;
+use crate::mapper::api::Mapper;
+use crate::mapper::expert::expert_for;
+use crate::mapper::{DefaultHeuristicMapper, MappleMapper};
+use crate::mapple::MapperSpec;
+use crate::sim::SimResult;
+use crate::util::json::Json;
+
+/// The nine benchmark names in the paper's app order (1–3 scientific,
+/// 4–9 matmul — matching Table 2's index convention).
+pub const APP_ORDER: &[&str] = &[
+    "circuit", "stencil", "pennant", "cannon", "summa", "pumma", "johnson", "solomonik", "cosma",
+];
+
+/// Build an app instance sized for throughput benchmarking (weak scaling
+/// with processor count).
+pub fn build_bench_app(name: &str, desc: &MachineDesc) -> AppInstance {
+    let procs = desc.nodes * desc.gpus_per_node;
+    // weak-ish scaling: matrix dim grows with sqrt(procs)
+    let n = 1024 * (procs as f64).sqrt().round() as i64;
+    match name {
+        "cannon" => apps::cannon(n, procs),
+        "summa" => apps::summa(n, procs),
+        "pumma" => apps::pumma(n, procs),
+        "johnson" => apps::johnson(n, procs),
+        "solomonik" => apps::solomonik(n, procs),
+        "cosma" => apps::cosma(n, procs),
+        "stencil" => {
+            let x = 2048;
+            let y = 2048 * procs as i64 / 4;
+            let g = crate::decompose::decompose(procs as u64, &[x as u64, y as u64]);
+            apps::stencil(&apps::StencilParams {
+                x,
+                y,
+                gx: g.factors[0] as i64,
+                gy: g.factors[1] as i64,
+                halo: 1,
+                steps: 6,
+            })
+        }
+        "circuit" => apps::circuit(&apps::CircuitParams {
+            pieces: procs as i64 * 2,
+            nodes_per_piece: 2048,
+            wires_per_piece: 8192,
+            pct_shared: 20,
+            loops: 6,
+        }),
+        "pennant" => apps::pennant(&apps::PennantParams {
+            chunks: procs as i64 * 2,
+            zones_per_chunk: 4096,
+            cycles: 6,
+        }),
+        other => panic!("unknown app {other}"),
+    }
+}
+
+/// Mapper flavors used across the benches.
+pub enum Flavor {
+    Mapple,
+    Tuned,
+    Expert,
+    Heuristic,
+}
+
+pub fn mapper_for(flavor: &Flavor, app: &str, desc: &MachineDesc) -> Box<dyn Mapper> {
+    match flavor {
+        Flavor::Mapple => Box::new(MappleMapper::new(
+            MapperSpec::compile(mappers::mapple_source(app).unwrap(), desc).unwrap(),
+        )),
+        Flavor::Tuned => Box::new(MappleMapper::new(
+            MapperSpec::compile(mappers::tuned_source(app).unwrap(), desc).unwrap(),
+        )),
+        Flavor::Expert => expert_for(app, desc.nodes, desc.gpus_per_node).unwrap(),
+        Flavor::Heuristic => Box::new(DefaultHeuristicMapper::new()),
+    }
+}
+
+/// Map + simulate, returning the sim result (OOM is returned, not fatal).
+pub fn run(app: &AppInstance, mapper: &dyn Mapper, desc: &MachineDesc) -> Result<SimResult, String> {
+    Ok(apps::run_app(app, mapper, desc)?.sim)
+}
+
+/// Write a JSON report next to the human-readable output.
+pub fn write_report(name: &str, json: &Json) {
+    let dir = std::path::Path::new("bench_reports");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, json.pretty()) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("[report written to {}]", path.display());
+    }
+}

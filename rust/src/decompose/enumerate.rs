@@ -1,0 +1,137 @@
+//! Exhaustive enumeration of ordered factorizations (paper §4.3).
+//!
+//! For `d = p_1^{a_1} · ... · p_t^{a_t}`, every way to factor `d` into `k`
+//! ordered positive factors corresponds to distributing each prime's
+//! exponent across the `k` dimensions independently: solve
+//! `z_1 + ... + z_k = a_j` for each prime (stars and bars), then take the
+//! Cartesian product. Total count is `∏_j C(a_j + k - 1, k - 1)`.
+
+use super::primes::factorize;
+
+/// All non-negative integer solutions of `z_1 + ... + z_k = total`.
+pub fn compositions(total: u32, k: usize) -> Vec<Vec<u32>> {
+    assert!(k > 0);
+    let mut out = Vec::new();
+    let mut cur = vec![0u32; k];
+    fn rec(out: &mut Vec<Vec<u32>>, cur: &mut Vec<u32>, idx: usize, remaining: u32) {
+        if idx + 1 == cur.len() {
+            cur[idx] = remaining;
+            out.push(cur.clone());
+            return;
+        }
+        for z in 0..=remaining {
+            cur[idx] = z;
+            rec(out, cur, idx + 1, remaining - z);
+        }
+    }
+    rec(&mut out, &mut cur, 0, total);
+    out
+}
+
+/// Number of compositions `C(total + k - 1, k - 1)` (for testing the
+/// complexity claim in §4.3).
+pub fn composition_count(total: u32, k: usize) -> u64 {
+    binomial(total as u64 + k as u64 - 1, k as u64 - 1)
+}
+
+fn binomial(n: u64, mut r: u64) -> u64 {
+    if r > n {
+        return 0;
+    }
+    r = r.min(n - r);
+    let mut acc = 1u64;
+    for i in 0..r {
+        acc = acc * (n - i) / (i + 1);
+    }
+    acc
+}
+
+/// Enumerate all ordered factorizations of `d` into `k` positive factors.
+/// The result contains every tuple `(f_1, ..., f_k)` with `∏ f_m = d`.
+pub fn ordered_factorizations(d: u64, k: usize) -> Vec<Vec<u64>> {
+    assert!(d > 0 && k > 0);
+    let pf = factorize(d);
+    // Start with the single all-ones factorization and refine per prime.
+    let mut acc: Vec<Vec<u64>> = vec![vec![1u64; k]];
+    for (p, a) in pf {
+        let splits = compositions(a, k);
+        let mut next = Vec::with_capacity(acc.len() * splits.len());
+        for base in &acc {
+            for split in &splits {
+                let mut f = base.clone();
+                for (i, &e) in split.iter().enumerate() {
+                    f[i] *= p.pow(e);
+                }
+                next.push(f);
+            }
+        }
+        acc = next;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn compositions_of_4_into_3() {
+        // §4.3: x1+x2+x3 = 4 has C(6,2) = 15 solutions.
+        let c = compositions(4, 3);
+        assert_eq!(c.len(), 15);
+        assert_eq!(composition_count(4, 3), 15);
+        assert!(c.iter().all(|v| v.iter().sum::<u32>() == 4));
+        let uniq: HashSet<_> = c.iter().collect();
+        assert_eq!(uniq.len(), 15, "no duplicates");
+    }
+
+    #[test]
+    fn factorizations_of_6_into_2() {
+        // §4.1: 6 procs into 2D → (6,1), (3,2), (2,3), (1,6).
+        let mut f = ordered_factorizations(6, 2);
+        f.sort();
+        assert_eq!(
+            f,
+            vec![vec![1, 6], vec![2, 3], vec![3, 2], vec![6, 1]]
+        );
+    }
+
+    #[test]
+    fn factorizations_product_and_count() {
+        // d = 48 = 2^4 · 3, k = 3: count = C(6,2) * C(3,2) = 15 * 3 = 45.
+        let f = ordered_factorizations(48, 3);
+        assert_eq!(f.len(), 45);
+        assert!(f.iter().all(|v| v.iter().product::<u64>() == 48));
+        let uniq: HashSet<_> = f.iter().collect();
+        assert_eq!(uniq.len(), 45);
+    }
+
+    #[test]
+    fn factorizations_cover_all_divisor_tuples() {
+        // Brute-force cross-check for a small d: every (a,b,c) with
+        // a*b*c = 12 must appear.
+        let f: HashSet<Vec<u64>> = ordered_factorizations(12, 3).into_iter().collect();
+        let mut brute = HashSet::new();
+        for a in 1..=12u64 {
+            for b in 1..=12u64 {
+                for c in 1..=12u64 {
+                    if a * b * c == 12 {
+                        brute.insert(vec![a, b, c]);
+                    }
+                }
+            }
+        }
+        assert_eq!(f, brute);
+    }
+
+    #[test]
+    fn k_equals_one() {
+        assert_eq!(ordered_factorizations(60, 1), vec![vec![60]]);
+    }
+
+    #[test]
+    fn d_equals_one() {
+        assert_eq!(ordered_factorizations(1, 3), vec![vec![1, 1, 1]]);
+    }
+}

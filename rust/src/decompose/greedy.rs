@@ -1,0 +1,110 @@
+//! Algorithm 1 — the suboptimal greedy processor-grid heuristic that
+//! existing systems (e.g. Chapel) use to resolve dimensionality
+//! mismatches. It balances the grid factors while ignoring the iteration
+//! space entirely; `decompose` beats it by up to 1.83× (paper §6.3).
+
+use super::primes::prime_list;
+
+/// Greedy(d, k): factor `d` processors into a `k`-dim grid with factors as
+/// balanced as possible. Assigns each prime factor (ascending) to the
+/// dimension with the smallest running product, then sorts descending.
+pub fn greedy_grid(d: u64, k: usize) -> Vec<u64> {
+    assert!(d > 0 && k > 0);
+    let primes = prime_list(d);
+    let mut factors = vec![1u64; k];
+    for p in primes {
+        // ArgMin of current products (first index on ties, like the paper's
+        // ArgMin over the running-product array).
+        let j = factors
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &f)| f)
+            .map(|(i, _)| i)
+            .unwrap();
+        factors[j] *= p;
+    }
+    factors.sort_unstable_by(|a, b| b.cmp(a)); // descending, for consistency
+    factors
+}
+
+/// The greedy *workload-balancing* variant discussed at the end of §4.3:
+/// assigns each prime factor to minimize the max/min spread of the
+/// workload vector w_m = l_m / d_m at each step. Shown by the paper to be
+/// suboptimal (e.g. d=72, l=(8,9)); used in tests as another baseline.
+pub fn greedy_workload(d: u64, l: &[u64]) -> Vec<u64> {
+    let k = l.len();
+    assert!(d > 0 && k > 0);
+    let primes = prime_list(d);
+    let mut factors = vec![1u64; k];
+    for p in primes {
+        let mut best_j = 0usize;
+        let mut best_spread = f64::INFINITY;
+        for j in 0..k {
+            let mut cand = factors.clone();
+            cand[j] *= p;
+            let w: Vec<f64> =
+                l.iter().zip(&cand).map(|(&lm, &dm)| lm as f64 / dm as f64).collect();
+            let spread = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                - w.iter().cloned().fold(f64::INFINITY, f64::min);
+            if spread < best_spread {
+                best_spread = spread;
+                best_j = j;
+            }
+        }
+        factors[best_j] *= p;
+    }
+    factors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_procs_two_dims_gives_3_2() {
+        // §4.1: Greedy(6, 2) = (3, 2) regardless of the iteration space.
+        assert_eq!(greedy_grid(6, 2), vec![3, 2]);
+    }
+
+    #[test]
+    fn product_invariant() {
+        for d in 1..200u64 {
+            for k in 1..4usize {
+                let g = greedy_grid(d, k);
+                assert_eq!(g.len(), k);
+                assert_eq!(g.iter().product::<u64>(), d, "d={d} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_for_powers_of_two() {
+        assert_eq!(greedy_grid(16, 2), vec![4, 4]);
+        assert_eq!(greedy_grid(64, 3), vec![4, 4, 4]);
+        assert_eq!(greedy_grid(8, 2), vec![4, 2]);
+    }
+
+    #[test]
+    fn sorted_descending() {
+        for d in [6u64, 12, 30, 48, 72, 128] {
+            let g = greedy_grid(d, 3);
+            let mut s = g.clone();
+            s.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(g, s);
+        }
+    }
+
+    #[test]
+    fn greedy_workload_is_suboptimal_on_paper_example() {
+        // §4.3: d = 72, l = (8, 9). The greedy workload strategy yields an
+        // imbalanced workload vector; exhaustive search finds (8, 9) with
+        // workload (1, 1).
+        let g = greedy_workload(72, &[8, 9]);
+        assert_eq!(g.iter().product::<u64>(), 72);
+        let w: Vec<f64> = [8u64, 9].iter().zip(&g).map(|(&l, &d)| l as f64 / d as f64).collect();
+        assert!(
+            (w[0] - w[1]).abs() > 1e-9,
+            "greedy should NOT find the balanced (1,1) workload, got {g:?} → {w:?}"
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! The `decompose` primitive (paper §4) and its baselines.
+//!
+//! `m.decompose(i, T)` splits the i-th processor-space dimension of extent
+//! `d` into `k = |T|` factors whose product is `d`, choosing the
+//! factorization that minimizes inter-processor communication volume for
+//! the iteration-space extents `T = (l_1, ..., l_k)`.
+//!
+//! * [`primes`] — prime factorization
+//! * [`enumerate`] — exhaustive enumeration of all factorizations of `d`
+//!   into `k` ordered factors (stars-and-bars per prime, Cartesian product)
+//! * [`objective`] — §4.2 isotropic surface objective plus the §7.2
+//!   anisotropic-halo and transpose generalizations
+//! * [`solver`] — the exact search (with memoization) + AM-GM lower bound
+//! * [`greedy`] — Algorithm 1, the suboptimal grid heuristic we compare
+//!   against (used by the paper's "default heuristics" baselines)
+
+pub mod enumerate;
+pub mod greedy;
+pub mod objective;
+pub mod primes;
+pub mod solver;
+
+pub use greedy::greedy_grid;
+pub use objective::Objective;
+pub use solver::{decompose, decompose_with, DecomposeResult};

@@ -1,0 +1,73 @@
+//! Prime factorization by trial division — processor counts are small
+//! (≤ thousands), so this is more than fast enough and has no tables.
+
+/// Return the prime factorization of `n` as sorted `(prime, exponent)`
+/// pairs. `factorize(1)` is the empty product; panics on `n == 0`.
+pub fn factorize(mut n: u64) -> Vec<(u64, u32)> {
+    assert!(n > 0, "factorize(0)");
+    let mut out: Vec<(u64, u32)> = Vec::new();
+    let mut push = |p: u64, e: u32| {
+        if e > 0 {
+            out.push((p, e));
+        }
+    };
+    let mut e2 = 0;
+    while n % 2 == 0 {
+        n /= 2;
+        e2 += 1;
+    }
+    push(2, e2);
+    let mut p = 3u64;
+    while p * p <= n {
+        let mut e = 0;
+        while n % p == 0 {
+            n /= p;
+            e += 1;
+        }
+        push(p, e);
+        p += 2;
+    }
+    if n > 1 {
+        push(n, 1);
+    }
+    out
+}
+
+/// Flat sorted list of prime factors with multiplicity, e.g. 72 → [2,2,2,3,3].
+/// This is the representation Algorithm 1 consumes.
+pub fn prime_list(n: u64) -> Vec<u64> {
+    factorize(n)
+        .into_iter()
+        .flat_map(|(p, e)| std::iter::repeat(p).take(e as usize))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_factorizations() {
+        assert_eq!(factorize(1), vec![]);
+        assert_eq!(factorize(2), vec![(2, 1)]);
+        assert_eq!(factorize(16), vec![(2, 4)]);
+        assert_eq!(factorize(48), vec![(2, 4), (3, 1)]);
+        assert_eq!(factorize(72), vec![(2, 3), (3, 2)]);
+        assert_eq!(factorize(97), vec![(97, 1)]); // prime
+        assert_eq!(factorize(2 * 3 * 5 * 7 * 11), vec![(2, 1), (3, 1), (5, 1), (7, 1), (11, 1)]);
+    }
+
+    #[test]
+    fn prime_list_matches_paper_example() {
+        // §4.3: d = 72 has prime factors (2, 2, 2, 3, 3)
+        assert_eq!(prime_list(72), vec![2, 2, 2, 3, 3]);
+    }
+
+    #[test]
+    fn factorization_reconstructs() {
+        for n in 1..2000u64 {
+            let prod: u64 = factorize(n).into_iter().map(|(p, e)| p.pow(e)).product();
+            assert_eq!(prod, n);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! The exact, search-based decompose solver (paper §4.3).
+//!
+//! Exhaustively enumerates all ordered factorizations of the processor
+//! count (via per-prime stars-and-bars) and picks the one minimizing the
+//! communication objective. The search space `∏_j C(a_j + k - 1, k - 1)`
+//! is tiny in practice (exponents < 10, k ≤ 3), and results are memoized
+//! per `(d, l, objective)` since mappers re-query the same decomposition
+//! for every task launch.
+
+use super::enumerate::ordered_factorizations;
+use super::objective::Objective;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Outcome of a decompose search.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecomposeResult {
+    /// Chosen factors `(d_1, ..., d_k)` with `∏ d_m = d`.
+    pub factors: Vec<u64>,
+    /// Objective value of the chosen factors.
+    pub objective: f64,
+    /// Number of candidate factorizations examined.
+    pub candidates: usize,
+}
+
+/// Solve with the default §4.2 isotropic objective.
+pub fn decompose(d: u64, l: &[u64]) -> DecomposeResult {
+    decompose_with(d, l, &Objective::Isotropic)
+}
+
+/// Solve with an explicit objective. Ties are broken toward the
+/// lexicographically largest factor tuple, which matches the paper's
+/// convention of preferring to split leading (outer/node) dimensions
+/// (e.g. Greedy's descending sort).
+pub fn decompose_with(d: u64, l: &[u64], obj: &Objective) -> DecomposeResult {
+    assert!(d > 0, "decompose: d must be positive");
+    assert!(!l.is_empty(), "decompose: empty iteration extents");
+    assert!(l.iter().all(|&x| x > 0), "decompose: nonpositive extent in {l:?}");
+    if let Some(hit) = cache_get(d, l, obj) {
+        return hit;
+    }
+    let k = l.len();
+    let cands = ordered_factorizations(d, k);
+    let mut best: Option<(f64, &Vec<u64>)> = None;
+    for cand in &cands {
+        let v = obj.eval(cand, l);
+        best = match best {
+            None => Some((v, cand)),
+            Some((bv, bc)) => {
+                if v < bv - 1e-12 || (v < bv + 1e-12 && cand > bc) {
+                    Some((v, cand))
+                } else {
+                    Some((bv, bc))
+                }
+            }
+        };
+    }
+    let (objective, factors) = best.map(|(v, c)| (v, c.clone())).unwrap();
+    let out = DecomposeResult { factors, objective, candidates: cands.len() };
+    cache_put(d, l, obj, out.clone());
+    out
+}
+
+// ---- memo cache -----------------------------------------------------------
+
+fn obj_key(obj: &Objective) -> String {
+    format!("{obj:?}")
+}
+
+fn cache() -> &'static Mutex<HashMap<(u64, Vec<u64>, String), DecomposeResult>> {
+    static CACHE: std::sync::OnceLock<Mutex<HashMap<(u64, Vec<u64>, String), DecomposeResult>>> =
+        std::sync::OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn cache_get(d: u64, l: &[u64], obj: &Objective) -> Option<DecomposeResult> {
+    cache().lock().unwrap().get(&(d, l.to_vec(), obj_key(obj))).cloned()
+}
+
+fn cache_put(d: u64, l: &[u64], obj: &Objective, r: DecomposeResult) {
+    cache().lock().unwrap().insert((d, l.to_vec(), obj_key(obj)), r);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::greedy::{greedy_grid, greedy_workload};
+    use crate::util::{prng::Rng, proptest};
+
+    #[test]
+    fn picks_shape_aware_grid_fig8() {
+        // §4.1: 6 procs, iteration space (12,18) → (2,3), not greedy's (3,2).
+        let r = decompose(6, &[12, 18]);
+        assert_eq!(r.factors, vec![2, 3]);
+        // and (18,12) → (3,2)
+        let r = decompose(6, &[18, 12]);
+        assert_eq!(r.factors, vec![3, 2]);
+        assert_eq!(greedy_grid(6, 2), vec![3, 2], "greedy ignores the space");
+    }
+
+    #[test]
+    fn paper_72_example_beats_greedy_workload() {
+        // §4.3: d = 72, l = (8,9): search finds (8,9) → workload (1,1).
+        let r = decompose(72, &[8, 9]);
+        assert_eq!(r.factors, vec![8, 9]);
+        let g = greedy_workload(72, &[8, 9]);
+        let obj_g = Objective::Isotropic.eval(&g, &[8, 9]);
+        assert!(r.objective < obj_g, "search {} !< greedy {}", r.objective, obj_g);
+    }
+
+    #[test]
+    fn fig9_3d() {
+        // 16 procs over (4,8,4) → (2,4,2), workload (2,2,2).
+        let r = decompose(16, &[4, 8, 4]);
+        assert_eq!(r.factors, vec![2, 4, 2]);
+    }
+
+    #[test]
+    fn candidate_count_matches_formula() {
+        // d = 48 = 2^4·3, k = 3 → C(6,2)·C(3,2) = 45 candidates.
+        let r = decompose(48, &[100, 100, 100]);
+        assert_eq!(r.candidates, 45);
+    }
+
+    #[test]
+    fn achieves_amgm_bound_when_perfectly_divisible() {
+        // l=(8,9), d=72: workload (1,1) ⇒ objective = AM-GM bound.
+        let r = decompose(72, &[8, 9]);
+        let bound = Objective::amgm_lower_bound(72, &[8, 9]);
+        assert!((r.objective - bound).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_worse_than_greedy_property() {
+        proptest::check(
+            "decompose ≤ greedy on isotropic objective",
+            200,
+            |r: &mut Rng| {
+                let d = *r.choose(&[2u64, 4, 6, 8, 12, 16, 24, 32, 48, 64, 72, 96, 128]);
+                let k = r.range(1, 3) as usize;
+                let l: Vec<u64> = (0..k).map(|_| r.range(4, 512) as u64).collect();
+                (d, l)
+            },
+            |(d, l)| {
+                let s = decompose(*d, l);
+                let g = greedy_grid(*d, l.len());
+                let got = Objective::Isotropic.eval(&s.factors, l);
+                let grd = Objective::Isotropic.eval(&g, l);
+                if got <= grd + 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("search {got} > greedy {grd}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn optimal_vs_bruteforce_property() {
+        // Exhaustive cross-check against a dumb brute force for small d.
+        proptest::check(
+            "decompose is optimal",
+            100,
+            |r: &mut Rng| {
+                let d = r.range(1, 64) as u64;
+                let l = vec![r.range(2, 64) as u64, r.range(2, 64) as u64];
+                (d, l)
+            },
+            |(d, l)| {
+                let s = decompose(*d, l);
+                let mut best = f64::INFINITY;
+                for a in 1..=*d {
+                    if d % a == 0 {
+                        let cand = [a, d / a];
+                        best = best.min(Objective::Isotropic.eval(&cand, l));
+                    }
+                }
+                if (s.objective - best).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("search {} != brute {best}", s.objective))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn cache_hit_is_identical() {
+        let a = decompose(24, &[10, 20]);
+        let b = decompose(24, &[10, 20]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn anisotropic_changes_choice() {
+        // 16 procs over a square space: isotropic → (4,4); with a heavy
+        // halo in dim 0, prefer not to cut dim 0 at all.
+        let iso = decompose(16, &[64, 64]);
+        assert_eq!(iso.factors, vec![4, 4]);
+        let aniso = decompose_with(16, &[64, 64], &Objective::AnisotropicHalo(vec![100.0, 1.0]));
+        assert_eq!(aniso.factors, vec![1, 16]);
+    }
+}

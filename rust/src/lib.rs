@@ -1,0 +1,11 @@
+pub mod apps;
+pub mod bench;
+pub mod decompose;
+pub mod mapple;
+pub mod mapper;
+pub mod runtime;
+pub mod sim;
+pub mod tasking;
+pub mod machine;
+pub mod util;
+pub fn smoke() -> &'static str { "mapple" }

@@ -1,0 +1,11 @@
+//! Machine model: processor & memory kinds, cluster topology, and the
+//! transformable processor space (`Machine(GPU)` in Mapple).
+
+pub mod point;
+pub mod space;
+pub mod topology;
+pub mod transform;
+
+pub use point::{Rect, Tuple};
+pub use space::ProcSpace;
+pub use topology::{MachineDesc, MemKind, ProcId, ProcKind};

@@ -1,0 +1,366 @@
+//! Integer tuples (points) and rectangular domains.
+//!
+//! Mapple's mapping functions are written in terms of elementwise tuple
+//! arithmetic (`ipoint * m.size / ispace`), so `Tuple` supports the full
+//! elementwise operator set plus linearization helpers used throughout the
+//! machine model, DSL interpreter, and runtime.
+
+use std::fmt;
+use std::ops::{Add, Div, Index, Mul, Rem, Sub};
+
+/// A small-dimension integer tuple (iteration point, space extent,
+/// processor coordinate). Dimensions up to 8 are supported inline.
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Tuple(pub Vec<i64>);
+
+impl Tuple {
+    pub fn new(v: Vec<i64>) -> Self {
+        Tuple(v)
+    }
+
+    pub fn zeros(dim: usize) -> Self {
+        Tuple(vec![0; dim])
+    }
+
+    pub fn ones(dim: usize) -> Self {
+        Tuple(vec![1; dim])
+    }
+
+    pub fn dim(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &i64> {
+        self.0.iter()
+    }
+
+    /// Product of components — volume of the space this tuple describes.
+    pub fn product(&self) -> i64 {
+        self.0.iter().product()
+    }
+
+    /// Row-major (C-order, last dim fastest) linearization of `self`
+    /// interpreted as a coordinate within `extent`.
+    pub fn linearize(&self, extent: &Tuple) -> i64 {
+        assert_eq!(self.dim(), extent.dim(), "linearize: dim mismatch");
+        let mut idx = 0i64;
+        for d in 0..self.dim() {
+            debug_assert!(
+                self.0[d] >= 0 && self.0[d] < extent.0[d],
+                "coordinate {:?} out of extent {:?}",
+                self,
+                extent
+            );
+            idx = idx * extent.0[d] + self.0[d];
+        }
+        idx
+    }
+
+    /// Inverse of [`linearize`]: decode row-major index into a coordinate.
+    pub fn delinearize(mut idx: i64, extent: &Tuple) -> Tuple {
+        let mut out = vec![0i64; extent.dim()];
+        for d in (0..extent.dim()).rev() {
+            out[d] = idx % extent.0[d];
+            idx /= extent.0[d];
+        }
+        Tuple(out)
+    }
+
+    /// Column-major (Fortran-order, first dim fastest) linearization.
+    pub fn linearize_f(&self, extent: &Tuple) -> i64 {
+        assert_eq!(self.dim(), extent.dim());
+        let mut idx = 0i64;
+        for d in (0..self.dim()).rev() {
+            idx = idx * extent.0[d] + self.0[d];
+        }
+        idx
+    }
+
+    /// Elementwise min / max.
+    pub fn emin(&self, other: &Tuple) -> Tuple {
+        self.zip(other, |a, b| a.min(b))
+    }
+
+    pub fn emax(&self, other: &Tuple) -> Tuple {
+        self.zip(other, |a, b| a.max(b))
+    }
+
+    fn zip(&self, other: &Tuple, f: impl Fn(i64, i64) -> i64) -> Tuple {
+        assert_eq!(self.dim(), other.dim(), "tuple arity mismatch: {self:?} vs {other:?}");
+        Tuple(self.0.iter().zip(&other.0).map(|(&a, &b)| f(a, b)).collect())
+    }
+
+    /// Concatenate two tuples.
+    pub fn concat(&self, other: &Tuple) -> Tuple {
+        let mut v = self.0.clone();
+        v.extend_from_slice(&other.0);
+        Tuple(v)
+    }
+
+    /// Python-style slice `self[lo..hi]` with negative indices allowed.
+    pub fn slice(&self, lo: isize, hi: isize) -> Tuple {
+        let n = self.dim() as isize;
+        let norm = |i: isize| -> usize {
+            let j = if i < 0 { n + i } else { i };
+            j.clamp(0, n) as usize
+        };
+        let (a, b) = (norm(lo), norm(hi));
+        Tuple(self.0[a..b.max(a)].to_vec())
+    }
+}
+
+impl fmt::Debug for Tuple {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, v) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl fmt::Display for Tuple {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl From<Vec<i64>> for Tuple {
+    fn from(v: Vec<i64>) -> Self {
+        Tuple(v)
+    }
+}
+
+impl From<&[i64]> for Tuple {
+    fn from(v: &[i64]) -> Self {
+        Tuple(v.to_vec())
+    }
+}
+
+impl<const N: usize> From<[i64; N]> for Tuple {
+    fn from(v: [i64; N]) -> Self {
+        Tuple(v.to_vec())
+    }
+}
+
+impl Index<usize> for Tuple {
+    type Output = i64;
+    fn index(&self, i: usize) -> &i64 {
+        &self.0[i]
+    }
+}
+
+macro_rules! elementwise {
+    ($trait:ident, $method:ident, $op:tt, $check:expr) => {
+        impl $trait for &Tuple {
+            type Output = Tuple;
+            fn $method(self, rhs: &Tuple) -> Tuple {
+                self.zip(rhs, |a, b| {
+                    let check: fn(i64) -> () = $check;
+                    check(b);
+                    a $op b
+                })
+            }
+        }
+        impl $trait<i64> for &Tuple {
+            type Output = Tuple;
+            fn $method(self, rhs: i64) -> Tuple {
+                let check: fn(i64) -> () = $check;
+                check(rhs);
+                Tuple(self.0.iter().map(|&a| a $op rhs).collect())
+            }
+        }
+    };
+}
+
+elementwise!(Add, add, +, |_| ());
+elementwise!(Sub, sub, -, |_| ());
+elementwise!(Mul, mul, *, |_| ());
+elementwise!(Div, div, /, |b| assert!(b != 0, "tuple division by zero"));
+elementwise!(Rem, rem, %, |b| assert!(b != 0, "tuple modulo by zero"));
+
+/// A dense rectangular domain `[lo, hi]` (inclusive bounds, Legion-style).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Rect {
+    pub lo: Tuple,
+    pub hi: Tuple,
+}
+
+impl Rect {
+    pub fn new(lo: Tuple, hi: Tuple) -> Self {
+        assert_eq!(lo.dim(), hi.dim());
+        Rect { lo, hi }
+    }
+
+    /// The rect `[0, extent)` — i.e. hi = extent - 1.
+    pub fn from_extent(extent: &Tuple) -> Self {
+        assert!(extent.0.iter().all(|&e| e > 0), "empty extent {extent:?}");
+        Rect { lo: Tuple::zeros(extent.dim()), hi: extent - 1 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lo.dim()
+    }
+
+    pub fn extent(&self) -> Tuple {
+        &(&self.hi - &self.lo) + 1
+    }
+
+    pub fn volume(&self) -> i64 {
+        self.extent().0.iter().map(|&e| e.max(0)).product()
+    }
+
+    pub fn contains(&self, p: &Tuple) -> bool {
+        p.0.iter()
+            .zip(self.lo.0.iter().zip(&self.hi.0))
+            .all(|(&x, (&lo, &hi))| x >= lo && x <= hi)
+    }
+
+    /// Iterate all points row-major.
+    pub fn points(&self) -> PointIter {
+        PointIter { rect: self.clone(), next: Some(self.lo.clone()) }
+    }
+
+    /// Intersection; None if empty.
+    pub fn intersect(&self, other: &Rect) -> Option<Rect> {
+        let lo = self.lo.emax(&other.lo);
+        let hi = self.hi.emin(&other.hi);
+        if lo.0.iter().zip(&hi.0).all(|(&l, &h)| l <= h) {
+            Some(Rect { lo, hi })
+        } else {
+            None
+        }
+    }
+}
+
+impl fmt::Debug for Rect {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{:?}..{:?}]", self.lo, self.hi)
+    }
+}
+
+/// Row-major point iterator over a [`Rect`].
+pub struct PointIter {
+    rect: Rect,
+    next: Option<Tuple>,
+}
+
+impl Iterator for PointIter {
+    type Item = Tuple;
+
+    fn next(&mut self) -> Option<Tuple> {
+        let current = self.next.take()?;
+        // advance
+        let mut nxt = current.clone();
+        for d in (0..self.rect.dim()).rev() {
+            if nxt.0[d] < self.rect.hi.0[d] {
+                nxt.0[d] += 1;
+                self.next = Some(nxt);
+                return Some(current);
+            }
+            nxt.0[d] = self.rect.lo.0[d];
+        }
+        self.next = None; // exhausted
+        Some(current)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_elementwise() {
+        let a = Tuple::from([2, 3]);
+        let b = Tuple::from([4, 6]);
+        assert_eq!(&a + &b, Tuple::from([6, 9]));
+        assert_eq!(&b - &a, Tuple::from([2, 3]));
+        assert_eq!(&a * &b, Tuple::from([8, 18]));
+        assert_eq!(&b / &a, Tuple::from([2, 2]));
+        assert_eq!(&b % &a, Tuple::from([0, 0]));
+        assert_eq!(&a * 2, Tuple::from([4, 6]));
+    }
+
+    #[test]
+    fn block2d_mapping_from_fig3() {
+        // Fig 3: iteration space (6,6), proc space (2,2); ipoint (2,3) →
+        // node 0, gpu 1 via idx = ipoint * m.size / ispace.
+        let ipoint = Tuple::from([2, 3]);
+        let ispace = Tuple::from([6, 6]);
+        let msize = Tuple::from([2, 2]);
+        let idx = &(&ipoint * &msize) / &ispace;
+        assert_eq!(idx, Tuple::from([0, 1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "division by zero")]
+    fn division_by_zero_panics() {
+        let _ = &Tuple::from([1]) / &Tuple::from([0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn arity_mismatch_panics() {
+        let _ = &Tuple::from([1, 2]) + &Tuple::from([1]);
+    }
+
+    #[test]
+    fn linearize_roundtrip() {
+        let extent = Tuple::from([3, 4, 5]);
+        for idx in 0..extent.product() {
+            let p = Tuple::delinearize(idx, &extent);
+            assert_eq!(p.linearize(&extent), idx);
+        }
+    }
+
+    #[test]
+    fn linearize_orders_differ() {
+        let extent = Tuple::from([2, 3]);
+        let p = Tuple::from([1, 2]);
+        assert_eq!(p.linearize(&extent), 5); // row-major: 1*3+2
+        assert_eq!(p.linearize_f(&extent), 5); // col-major: 2*2+1
+        let q = Tuple::from([1, 0]);
+        assert_eq!(q.linearize(&extent), 3);
+        assert_eq!(q.linearize_f(&extent), 1);
+    }
+
+    #[test]
+    fn tuple_python_slice() {
+        let t = Tuple::from([5, 6, 7, 8]);
+        assert_eq!(t.slice(0, -1), Tuple::from([5, 6, 7]));
+        assert_eq!(t.slice(1, 3), Tuple::from([6, 7]));
+        assert_eq!(t.slice(-2, 4), Tuple::from([7, 8]));
+    }
+
+    #[test]
+    fn rect_volume_points() {
+        let r = Rect::from_extent(&Tuple::from([2, 3]));
+        assert_eq!(r.volume(), 6);
+        let pts: Vec<Tuple> = r.points().collect();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0], Tuple::from([0, 0]));
+        assert_eq!(pts[1], Tuple::from([0, 1])); // row-major
+        assert_eq!(pts[5], Tuple::from([1, 2]));
+    }
+
+    #[test]
+    fn rect_intersect() {
+        let a = Rect::new(Tuple::from([0, 0]), Tuple::from([3, 3]));
+        let b = Rect::new(Tuple::from([2, 2]), Tuple::from([5, 5]));
+        let i = a.intersect(&b).unwrap();
+        assert_eq!(i.lo, Tuple::from([2, 2]));
+        assert_eq!(i.hi, Tuple::from([3, 3]));
+        let c = Rect::new(Tuple::from([7, 7]), Tuple::from([8, 8]));
+        assert!(a.intersect(&c).is_none());
+    }
+
+    #[test]
+    fn contains() {
+        let r = Rect::from_extent(&Tuple::from([4, 4]));
+        assert!(r.contains(&Tuple::from([0, 3])));
+        assert!(!r.contains(&Tuple::from([0, 4])));
+    }
+}

@@ -1,0 +1,270 @@
+//! Cluster topology description: processors, memories, and the physical
+//! parameters the simulator uses (bandwidths, latencies, capacities).
+//!
+//! Defaults model the paper's testbed: nodes with 40 Power9 CPU cores and
+//! 4 V100 GPUs (16 GB FBMEM each), NVLink 2.0 within a node and
+//! InfiniBand EDR across nodes.
+
+use crate::util::toml::Doc;
+use std::fmt;
+
+/// Processor kinds a task can target (paper §7.1 TaskMap).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProcKind {
+    Gpu,
+    Cpu,
+    Omp,
+}
+
+impl ProcKind {
+    pub fn parse(s: &str) -> Result<ProcKind, String> {
+        match s.to_ascii_uppercase().as_str() {
+            "GPU" => Ok(ProcKind::Gpu),
+            "CPU" => Ok(ProcKind::Cpu),
+            "OMP" | "OPENMP" => Ok(ProcKind::Omp),
+            _ => Err(format!("unknown processor kind '{s}' (GPU|CPU|OMP)")),
+        }
+    }
+}
+
+impl fmt::Display for ProcKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProcKind::Gpu => write!(f, "GPU"),
+            ProcKind::Cpu => write!(f, "CPU"),
+            ProcKind::Omp => write!(f, "OMP"),
+        }
+    }
+}
+
+/// Memory kinds for data placement (paper §7.1 DataMap).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemKind {
+    /// GPU framebuffer (HBM) — fast, capacity-limited.
+    FbMem,
+    /// Pinned host memory visible to both CPU and GPU.
+    ZeroCopy,
+    /// Plain host DRAM.
+    SysMem,
+    /// RDMA-registered host memory for remote transfers.
+    RdmaMem,
+}
+
+impl MemKind {
+    pub fn parse(s: &str) -> Result<MemKind, String> {
+        match s.to_ascii_uppercase().as_str() {
+            "FBMEM" | "FB" => Ok(MemKind::FbMem),
+            "ZCMEM" | "ZEROCOPY" => Ok(MemKind::ZeroCopy),
+            "SYSMEM" | "SYS" => Ok(MemKind::SysMem),
+            "RDMA" | "RDMAMEM" => Ok(MemKind::RdmaMem),
+            _ => Err(format!("unknown memory kind '{s}' (FBMEM|ZCMEM|SYSMEM|RDMA)")),
+        }
+    }
+}
+
+impl fmt::Display for MemKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MemKind::FbMem => write!(f, "FBMEM"),
+            MemKind::ZeroCopy => write!(f, "ZCMEM"),
+            MemKind::SysMem => write!(f, "SYSMEM"),
+            MemKind::RdmaMem => write!(f, "RDMA"),
+        }
+    }
+}
+
+/// A physical processor: node index + kind + local index within the node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProcId {
+    pub node: usize,
+    pub kind: ProcKind,
+    pub local: usize,
+}
+
+impl fmt::Display for ProcId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}:{}{}", self.node, self.kind, self.local)
+    }
+}
+
+/// Physical machine description with simulator parameters.
+#[derive(Clone, Debug)]
+pub struct MachineDesc {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub cpus_per_node: usize,
+    pub omp_per_node: usize,
+    /// GPU FB memory capacity, bytes (V100: 16 GiB).
+    pub fbmem_capacity: u64,
+    /// Host memory capacity, bytes.
+    pub sysmem_capacity: u64,
+    /// Zero-copy window, bytes.
+    pub zcmem_capacity: u64,
+    /// Intra-node GPU<->GPU bandwidth, bytes/s (NVLink 2.0 ~75 GB/s usable).
+    pub nvlink_bw: f64,
+    /// Inter-node bandwidth, bytes/s (IB EDR ~12.5 GB/s usable).
+    pub ib_bw: f64,
+    /// Per-message latencies, seconds.
+    pub nvlink_lat: f64,
+    pub ib_lat: f64,
+    /// GPU compute rate, FLOP/s (V100 fp32 ~14e12 sustained ~9e12).
+    pub gpu_flops: f64,
+    /// CPU core compute rate, FLOP/s.
+    pub cpu_flops: f64,
+    /// Per-task GPU kernel-launch overhead, seconds (why small tasks favor
+    /// CPUs — paper §7.1).
+    pub gpu_launch_overhead: f64,
+    /// GPU HBM bandwidth, bytes/s (V100 ~900 GB/s): memory-bound kernels
+    /// (stencils) are limited by this, not FLOPs.
+    pub hbm_bw: f64,
+    /// Host memory bandwidth, bytes/s.
+    pub host_bw: f64,
+}
+
+impl MachineDesc {
+    /// Paper testbed shape: `nodes` nodes × 4 V100s.
+    pub fn paper_testbed(nodes: usize) -> Self {
+        MachineDesc {
+            nodes,
+            gpus_per_node: 4,
+            cpus_per_node: 40,
+            omp_per_node: 2,
+            fbmem_capacity: 16 << 30,
+            sysmem_capacity: 256 << 30,
+            zcmem_capacity: 2 << 30,
+            nvlink_bw: 75e9,
+            ib_bw: 12.5e9,
+            nvlink_lat: 2e-6,
+            ib_lat: 5e-6,
+            gpu_flops: 9e12,
+            cpu_flops: 25e9,
+            gpu_launch_overhead: 10e-6,
+            hbm_bw: 900e9,
+            host_bw: 100e9,
+        }
+    }
+
+    /// Build from a TOML config document ([machine] section), falling back
+    /// to the paper testbed values for unspecified keys.
+    pub fn from_config(doc: &Doc) -> Result<Self, String> {
+        let base = MachineDesc::paper_testbed(2);
+        let err = |e: crate::util::toml::TomlError| e.to_string();
+        Ok(MachineDesc {
+            nodes: doc.int_or("machine.nodes", base.nodes as i64).map_err(err)? as usize,
+            gpus_per_node: doc
+                .int_or("machine.gpus_per_node", base.gpus_per_node as i64)
+                .map_err(err)? as usize,
+            cpus_per_node: doc
+                .int_or("machine.cpus_per_node", base.cpus_per_node as i64)
+                .map_err(err)? as usize,
+            omp_per_node: doc
+                .int_or("machine.omp_per_node", base.omp_per_node as i64)
+                .map_err(err)? as usize,
+            fbmem_capacity: (doc
+                .float_or("machine.fbmem_gb", base.fbmem_capacity as f64 / (1u64 << 30) as f64)
+                .map_err(err)?
+                * (1u64 << 30) as f64) as u64,
+            sysmem_capacity: (doc
+                .float_or("machine.sysmem_gb", base.sysmem_capacity as f64 / (1u64 << 30) as f64)
+                .map_err(err)?
+                * (1u64 << 30) as f64) as u64,
+            zcmem_capacity: (doc
+                .float_or("machine.zcmem_gb", base.zcmem_capacity as f64 / (1u64 << 30) as f64)
+                .map_err(err)?
+                * (1u64 << 30) as f64) as u64,
+            nvlink_bw: doc.float_or("machine.nvlink_gbps", base.nvlink_bw / 1e9).map_err(err)? * 1e9,
+            ib_bw: doc.float_or("machine.ib_gbps", base.ib_bw / 1e9).map_err(err)? * 1e9,
+            nvlink_lat: doc.float_or("machine.nvlink_lat_us", base.nvlink_lat * 1e6).map_err(err)?
+                * 1e-6,
+            ib_lat: doc.float_or("machine.ib_lat_us", base.ib_lat * 1e6).map_err(err)? * 1e-6,
+            gpu_flops: doc.float_or("machine.gpu_tflops", base.gpu_flops / 1e12).map_err(err)?
+                * 1e12,
+            cpu_flops: doc.float_or("machine.cpu_gflops", base.cpu_flops / 1e9).map_err(err)? * 1e9,
+            gpu_launch_overhead: doc
+                .float_or("machine.gpu_launch_overhead_us", base.gpu_launch_overhead * 1e6)
+                .map_err(err)?
+                * 1e-6,
+            hbm_bw: doc.float_or("machine.hbm_gbps", base.hbm_bw / 1e9).map_err(err)? * 1e9,
+            host_bw: doc.float_or("machine.host_gbps", base.host_bw / 1e9).map_err(err)? * 1e9,
+        })
+    }
+
+    pub fn procs_of(&self, kind: ProcKind) -> usize {
+        match kind {
+            ProcKind::Gpu => self.gpus_per_node,
+            ProcKind::Cpu => self.cpus_per_node,
+            ProcKind::Omp => self.omp_per_node,
+        }
+    }
+
+    pub fn total_procs(&self, kind: ProcKind) -> usize {
+        self.nodes * self.procs_of(kind)
+    }
+
+    pub fn flops_of(&self, kind: ProcKind) -> f64 {
+        match kind {
+            ProcKind::Gpu => self.gpu_flops,
+            ProcKind::Cpu => self.cpu_flops,
+            // OMP groups aggregate ~half the node's cores.
+            ProcKind::Omp => self.cpu_flops * (self.cpus_per_node as f64 / 2.0),
+        }
+    }
+
+    /// All processors of a kind in (node-major, local-minor) order.
+    pub fn all_procs(&self, kind: ProcKind) -> Vec<ProcId> {
+        let mut v = Vec::with_capacity(self.total_procs(kind));
+        for node in 0..self.nodes {
+            for local in 0..self.procs_of(kind) {
+                v.push(ProcId { node, kind, local });
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let m = MachineDesc::paper_testbed(8);
+        assert_eq!(m.nodes, 8);
+        assert_eq!(m.gpus_per_node, 4);
+        assert_eq!(m.total_procs(ProcKind::Gpu), 32);
+        assert_eq!(m.fbmem_capacity, 16 << 30);
+    }
+
+    #[test]
+    fn kind_and_mem_parsing() {
+        assert_eq!(ProcKind::parse("gpu").unwrap(), ProcKind::Gpu);
+        assert_eq!(MemKind::parse("FBMEM").unwrap(), MemKind::FbMem);
+        assert!(ProcKind::parse("TPU").is_err());
+        assert!(MemKind::parse("L2").is_err());
+    }
+
+    #[test]
+    fn config_overrides() {
+        let doc = Doc::parse("[machine]\nnodes = 4\nib_gbps = 10.0\nfbmem_gb = 32\n").unwrap();
+        let m = MachineDesc::from_config(&doc).unwrap();
+        assert_eq!(m.nodes, 4);
+        assert_eq!(m.ib_bw, 10.0e9);
+        assert_eq!(m.fbmem_capacity, 32 << 30);
+        assert_eq!(m.gpus_per_node, 4, "default kept");
+    }
+
+    #[test]
+    fn proc_enumeration_order() {
+        let m = MachineDesc::paper_testbed(2);
+        let procs = m.all_procs(ProcKind::Gpu);
+        assert_eq!(procs.len(), 8);
+        assert_eq!(procs[0], ProcId { node: 0, kind: ProcKind::Gpu, local: 0 });
+        assert_eq!(procs[5], ProcId { node: 1, kind: ProcKind::Gpu, local: 1 });
+    }
+
+    #[test]
+    fn display_forms() {
+        let p = ProcId { node: 1, kind: ProcKind::Gpu, local: 3 };
+        assert_eq!(p.to_string(), "n1:GPU3");
+    }
+}

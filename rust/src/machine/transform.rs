@@ -1,0 +1,261 @@
+//! Fig 6 transformation primitives over processor spaces.
+//!
+//! Each transformation maps *indices of the transformed space* back to
+//! *indices of the original space* (the direction given in the paper's
+//! Fig 6 table). A [`Chain`] composes transformations; indexing a
+//! transformed space walks the chain backwards to recover the coordinate
+//! in the base (physical) space.
+
+use super::point::Tuple;
+
+/// One primitive transformation, with enough parameters recorded to
+/// compute both the transformed shape and the index pull-back.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Transform {
+    /// `m.split(i, d)`: shape (..., s_i, ...) → (..., d, s_i/d, ...).
+    /// Index pull-back: b_i = a_i + a_{i+1} * d.
+    Split { i: usize, d: i64 },
+    /// `m.merge(p, q)` (requires p < q, as in all of the paper's uses):
+    /// fuses dims p and q into dim p of size s_p * s_q.
+    /// Pull-back: b_p = a_p mod s_p, b_q = floor(a_p / s_p).
+    Merge { p: usize, q: usize, sp: i64 },
+    /// `m.swap(p, q)`: exchanges two dimensions.
+    Swap { p: usize, q: usize },
+    /// `m.slice(i, low, high)`: restricts dim i to [low, high], applying a
+    /// constant offset. Pull-back: b_i = a_i + low.
+    Slice { i: usize, low: i64, high: i64 },
+}
+
+impl Transform {
+    /// Shape of the transformed space given the input shape.
+    pub fn out_shape(&self, shape: &Tuple) -> Result<Tuple, String> {
+        let n = shape.dim();
+        match *self {
+            Transform::Split { i, d } => {
+                if i >= n {
+                    return Err(format!("split: dim {i} out of range for {shape:?}"));
+                }
+                if d <= 0 || shape[i] % d != 0 {
+                    return Err(format!(
+                        "split: factor {d} does not divide extent {} of dim {i}",
+                        shape[i]
+                    ));
+                }
+                let mut v = shape.0.clone();
+                v[i] = d;
+                v.insert(i + 1, shape[i] / d);
+                Ok(Tuple(v))
+            }
+            Transform::Merge { p, q, sp } => {
+                if q >= n || p >= q {
+                    return Err(format!("merge: need p < q < ndim, got ({p},{q}) for {shape:?}"));
+                }
+                if sp != shape[p] {
+                    return Err("merge: recorded s_p mismatch".into());
+                }
+                // The fused dim sits at position p; dim q is removed.
+                let mut v = shape.0.clone();
+                v[p] = shape[p] * shape[q];
+                v.remove(q);
+                Ok(Tuple(v))
+            }
+            Transform::Swap { p, q } => {
+                if p >= n || q >= n {
+                    return Err(format!("swap: bad dims ({p},{q}) for {shape:?}"));
+                }
+                let mut v = shape.0.clone();
+                v.swap(p, q);
+                Ok(Tuple(v))
+            }
+            Transform::Slice { i, low, high } => {
+                if i >= n {
+                    return Err(format!("slice: dim {i} out of range for {shape:?}"));
+                }
+                if low < 0 || high >= shape[i] || low > high {
+                    return Err(format!(
+                        "slice: bounds [{low},{high}] invalid for extent {}",
+                        shape[i]
+                    ));
+                }
+                let mut v = shape.0.clone();
+                v[i] = high - low + 1;
+                Ok(Tuple(v))
+            }
+        }
+    }
+
+    /// Pull an index in the transformed space back to the original space
+    /// (the `m'[a...] := m[b...]` direction of Fig 6).
+    pub fn pull_back(&self, a: &Tuple) -> Tuple {
+        match *self {
+            Transform::Split { i, d } => {
+                // b_t = a_t (t<i); a_i + a_{i+1}*d (t=i); a_{t+1} (t>i)
+                let mut v = Vec::with_capacity(a.dim() - 1);
+                v.extend_from_slice(&a.0[..i]);
+                v.push(a[i] + a[i + 1] * d);
+                v.extend_from_slice(&a.0[i + 2..]);
+                Tuple(v)
+            }
+            Transform::Merge { p, q, sp } => {
+                // Fused dim sits at position p in the transformed space.
+                let fused_val = a[p];
+                // b_p = fused_val mod s_p ; b_q = floor(fused_val / s_p)
+                let mut v = a.0.clone();
+                v[p] = fused_val % sp;
+                v.insert(q, fused_val / sp);
+                Tuple(v)
+            }
+            Transform::Swap { p, q } => {
+                let mut v = a.0.clone();
+                v.swap(p, q);
+                Tuple(v)
+            }
+            Transform::Slice { i, low, .. } => {
+                let mut v = a.0.clone();
+                v[i] += low;
+                Tuple(v)
+            }
+        }
+    }
+}
+
+/// A composed sequence of transformations applied to a base shape.
+/// `shapes[0]` is the base shape; `shapes[k+1] = transforms[k](shapes[k])`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Chain {
+    pub base: Tuple,
+    pub transforms: Vec<Transform>,
+    pub shape: Tuple,
+}
+
+impl Chain {
+    pub fn identity(base: Tuple) -> Self {
+        Chain { shape: base.clone(), base, transforms: Vec::new() }
+    }
+
+    pub fn apply(&self, t: Transform) -> Result<Chain, String> {
+        let shape = t.out_shape(&self.shape)?;
+        let mut transforms = self.transforms.clone();
+        transforms.push(t);
+        Ok(Chain { base: self.base.clone(), transforms, shape })
+    }
+
+    /// Map a coordinate in the final transformed space back to the base
+    /// (physical) space by walking the chain in reverse.
+    pub fn to_base(&self, idx: &Tuple) -> Tuple {
+        assert_eq!(idx.dim(), self.shape.dim(), "index arity mismatch");
+        debug_assert!(
+            idx.0.iter().zip(&self.shape.0).all(|(&x, &s)| x >= 0 && x < s),
+            "index {idx:?} out of shape {:?}",
+            self.shape
+        );
+        let mut cur = idx.clone();
+        for t in self.transforms.iter().rev() {
+            cur = t.pull_back(&cur);
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(base: [i64; 2]) -> Chain {
+        Chain::identity(Tuple::from(base))
+    }
+
+    #[test]
+    fn split_shape_and_pullback() {
+        // (4, 3).split(0, 2) → (2, 2, 3); m'[a0,a1,a2] = m[a0 + a1*2, a2]
+        let c = chain([4, 3]).apply(Transform::Split { i: 0, d: 2 }).unwrap();
+        assert_eq!(c.shape, Tuple::from([2, 2, 3]));
+        assert_eq!(c.to_base(&Tuple::from([1, 1, 2])), Tuple::from([3, 2]));
+        assert_eq!(c.to_base(&Tuple::from([0, 1, 0])), Tuple::from([2, 0]));
+    }
+
+    #[test]
+    fn split_requires_divisibility() {
+        assert!(chain([4, 3]).apply(Transform::Split { i: 1, d: 2 }).is_err());
+        assert!(chain([4, 3]).apply(Transform::Split { i: 5, d: 2 }).is_err());
+    }
+
+    #[test]
+    fn merge_shape_and_pullback() {
+        // (2, 2).merge(0, 1) → (4,); m'[a] = m[a mod 2, a / 2]
+        let c = chain([2, 2]).apply(Transform::Merge { p: 0, q: 1, sp: 2 }).unwrap();
+        assert_eq!(c.shape, Tuple::from([4]));
+        assert_eq!(c.to_base(&Tuple::from([0])), Tuple::from([0, 0]));
+        assert_eq!(c.to_base(&Tuple::from([1])), Tuple::from([1, 0]));
+        assert_eq!(c.to_base(&Tuple::from([2])), Tuple::from([0, 1]));
+        assert_eq!(c.to_base(&Tuple::from([3])), Tuple::from([1, 1]));
+    }
+
+    #[test]
+    fn split_merge_inverse_identity() {
+        // Paper §3.3: m.split(0, d).merge(0, 1) is the identity.
+        let base = Tuple::from([6, 5]);
+        for d in [1, 2, 3, 6] {
+            let c = Chain::identity(base.clone())
+                .apply(Transform::Split { i: 0, d })
+                .unwrap()
+                .apply(Transform::Merge { p: 0, q: 1, sp: d })
+                .unwrap();
+            assert_eq!(c.shape, base);
+            for a0 in 0..6 {
+                for a1 in 0..5 {
+                    let idx = Tuple::from([a0, a1]);
+                    assert_eq!(c.to_base(&idx), idx, "d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swap_pullback() {
+        let c = chain([2, 3]).apply(Transform::Swap { p: 0, q: 1 }).unwrap();
+        assert_eq!(c.shape, Tuple::from([3, 2]));
+        assert_eq!(c.to_base(&Tuple::from([2, 1])), Tuple::from([1, 2]));
+    }
+
+    #[test]
+    fn slice_pullback_offset() {
+        let c = chain([8, 3]).apply(Transform::Slice { i: 0, low: 2, high: 5 }).unwrap();
+        assert_eq!(c.shape, Tuple::from([4, 3]));
+        assert_eq!(c.to_base(&Tuple::from([0, 0])), Tuple::from([2, 0]));
+        assert_eq!(c.to_base(&Tuple::from([3, 2])), Tuple::from([5, 2]));
+        assert!(chain([8, 3]).apply(Transform::Slice { i: 0, low: 4, high: 8 }).is_err());
+    }
+
+    #[test]
+    fn fig4_merge_linear_cyclic() {
+        // Fig 4: 2D (2,2) proc space merged into 1D of size 4; iteration
+        // point linearized then round-robin over 4 procs.
+        let c = chain([2, 2]).apply(Transform::Merge { p: 0, q: 1, sp: 2 }).unwrap();
+        assert_eq!(c.shape, Tuple::from([4]));
+        // all four 1D indices map to distinct physical procs
+        let phys: Vec<Tuple> = (0..4).map(|i| c.to_base(&Tuple::from([i]))).collect();
+        let mut uniq = phys.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4);
+    }
+
+    #[test]
+    fn composition_preserves_total_size() {
+        let c = chain([4, 4])
+            .apply(Transform::Split { i: 0, d: 2 }).unwrap()
+            .apply(Transform::Swap { p: 1, q: 2 }).unwrap()
+            .apply(Transform::Merge { p: 0, q: 1, sp: 2 }).unwrap();
+        assert_eq!(c.shape.product(), 16);
+        // bijectivity: every transformed index maps to a distinct base coord
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..c.shape[0] {
+            for j in 0..c.shape[1] {
+                let b = c.to_base(&Tuple::from([i, j]));
+                assert!(seen.insert(b.clone()), "collision at {b:?}");
+            }
+        }
+        assert_eq!(seen.len(), 16);
+    }
+}

@@ -1,0 +1,214 @@
+//! `mapple` CLI — the leader entrypoint: compile mappers, run benchmarks
+//! under a mapper on the simulated cluster, and query the decompose
+//! solver.
+//!
+//! Subcommands:
+//!   run        — build an app, map it (mapple | expert | heuristic |
+//!                tuned), simulate, and report throughput/comm/memory
+//!   compile    — parse + compile a .mpl file and dump its directive tables
+//!   decompose  — solve a processor-grid factorization for an iteration space
+//!   apps       — list available applications
+//!
+//! Examples:
+//!   mapple run --app cannon --nodes 2 --mapper mapple
+//!   mapple run --app stencil --nodes 4 --mapper heuristic
+//!   mapple compile mappers/cannon.mpl --nodes 2
+//!   mapple decompose --procs 48 --ispace 1024x512x64
+
+use mapple::apps::{self, mappers};
+use mapple::decompose::{decompose, greedy_grid, Objective};
+use mapple::machine::topology::MachineDesc;
+use mapple::mapper::api::Mapper;
+use mapple::mapper::expert::expert_for;
+use mapple::mapper::{DefaultHeuristicMapper, MappleMapper};
+use mapple::mapple::MapperSpec;
+use mapple::util::bench::fmt_time;
+use mapple::util::cli::Command;
+
+const APPS: &[&str] = &[
+    "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&argv[1..]),
+        Some("compile") => cmd_compile(&argv[1..]),
+        Some("decompose") => cmd_decompose(&argv[1..]),
+        Some("apps") => {
+            println!("{}", APPS.join("\n"));
+            0
+        }
+        _ => {
+            eprintln!(
+                "usage: mapple <run|compile|decompose|apps> [--help]\n\
+                 Mapple — declarative mapping for distributed heterogeneous programs."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn build_app(name: &str, desc: &MachineDesc, scale: i64) -> Option<apps::AppInstance> {
+    let procs = desc.nodes * desc.gpus_per_node;
+    Some(match name {
+        "cannon" => apps::cannon(64 * scale, procs),
+        "summa" => apps::summa(64 * scale, procs),
+        "pumma" => apps::pumma(64 * scale, procs),
+        "johnson" => apps::johnson(64 * scale, procs),
+        "solomonik" => apps::solomonik(64 * scale, procs),
+        "cosma" => apps::cosma(64 * scale, procs),
+        "stencil" => {
+            let x = 512 * scale;
+            let y = 512 * scale;
+            let g = decompose(procs as u64, &[x as u64, y as u64]);
+            apps::stencil(&apps::StencilParams {
+                x,
+                y,
+                gx: g.factors[0] as i64,
+                gy: g.factors[1] as i64,
+                halo: 1,
+                steps: 4,
+            })
+        }
+        "circuit" => apps::circuit(&apps::CircuitParams {
+            pieces: procs as i64 * 2,
+            nodes_per_piece: 512 * scale,
+            wires_per_piece: 1024 * scale,
+            pct_shared: 10,
+            loops: 4,
+        }),
+        "pennant" => apps::pennant(&apps::PennantParams {
+            chunks: procs as i64 * 2,
+            zones_per_chunk: 1024 * scale,
+            cycles: 4,
+        }),
+        _ => return None,
+    })
+}
+
+fn cmd_run(argv: &[String]) -> i32 {
+    let cmd = Command::new("mapple run", "map + simulate a benchmark")
+        .opt("app", "application name (see `mapple apps`)", Some("cannon"))
+        .opt("nodes", "cluster nodes (4 GPUs each)", Some("2"))
+        .opt("mapper", "mapple | tuned | expert | heuristic", Some("mapple"))
+        .opt("scale", "problem-size multiplier", Some("1"));
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nodes = args.usize("nodes").unwrap_or(2);
+    let scale = args.usize("scale").unwrap_or(1) as i64;
+    let app_name = args.str("app").unwrap_or("cannon").to_string();
+    let desc = MachineDesc::paper_testbed(nodes);
+    let Some(app) = build_app(&app_name, &desc, scale) else {
+        eprintln!("unknown app '{app_name}' — see `mapple apps`");
+        return 2;
+    };
+    let mapper: Box<dyn Mapper> = match args.str("mapper").unwrap_or("mapple") {
+        "mapple" => Box::new(MappleMapper::new(
+            MapperSpec::compile(mappers::mapple_source(&app_name).unwrap(), &desc).unwrap(),
+        )),
+        "tuned" => Box::new(MappleMapper::new(
+            MapperSpec::compile(mappers::tuned_source(&app_name).unwrap(), &desc).unwrap(),
+        )),
+        "expert" => expert_for(&app_name, desc.nodes, desc.gpus_per_node).unwrap(),
+        "heuristic" => Box::new(DefaultHeuristicMapper::new()),
+        other => {
+            eprintln!("unknown mapper '{other}'");
+            return 2;
+        }
+    };
+    match apps::run_app(&app, mapper.as_ref(), &desc) {
+        Ok(out) => {
+            println!(
+                "{app_name} on {nodes} nodes under {}:\n  makespan {}\n  throughput/node {:.2} GFLOP/s\n  comm intra {} MiB / inter {} MiB\n  peak FBMEM {} MiB{}",
+                out.mapper_name,
+                fmt_time(out.sim.makespan),
+                out.sim.throughput_per_node(nodes) / 1e9,
+                out.sim.intra_bytes >> 20,
+                out.sim.inter_bytes >> 20,
+                out.sim.peak_fbmem >> 20,
+                out.sim.oom.as_ref().map(|o| format!("\n  *** {o}")).unwrap_or_default(),
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_compile(argv: &[String]) -> i32 {
+    let cmd = Command::new("mapple compile", "compile a .mpl mapper and dump its tables")
+        .opt("nodes", "cluster nodes", Some("2"));
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let Some(path) = args.positional.first() else {
+        eprintln!("usage: mapple compile <file.mpl> [--nodes N]");
+        return 2;
+    };
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+    };
+    let desc = MachineDesc::paper_testbed(args.usize("nodes").unwrap_or(2));
+    match MapperSpec::compile(&src, &desc) {
+        Ok(spec) => {
+            println!("{spec:#?}");
+            0
+        }
+        Err(e) => {
+            eprintln!("compile error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_decompose(argv: &[String]) -> i32 {
+    let cmd = Command::new("mapple decompose", "solve a processor-grid factorization")
+        .opt("procs", "processor count to factor", Some("8"))
+        .opt("ispace", "iteration space, e.g. 1024x512", Some("1024x1024"));
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let procs = args.usize("procs").unwrap_or(8) as u64;
+    let ispace: Vec<u64> = args
+        .str("ispace")
+        .unwrap_or("1024x1024")
+        .split('x')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    if ispace.is_empty() {
+        eprintln!("bad --ispace");
+        return 2;
+    }
+    let r = decompose(procs, &ispace);
+    let g = greedy_grid(procs, ispace.len());
+    println!(
+        "iteration space {ispace:?}, {procs} processors\n  decompose: {:?} (objective {:.6}, {} candidates)\n  greedy:    {g:?} (objective {:.6})\n  AM-GM bound: {:.6}",
+        r.factors,
+        r.objective,
+        r.candidates,
+        Objective::Isotropic.eval(&g, &ispace),
+        Objective::amgm_lower_bound(procs, &ispace),
+    );
+    0
+}

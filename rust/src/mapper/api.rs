@@ -1,0 +1,281 @@
+//! The low-level programmatic mapping interface.
+//!
+//! Mirrors Legion's C++ mapper API (the paper's comparison target): a
+//! callback trait invoked at many points of a task's lifetime. Like
+//! Legion's interface, it has ~19 entry points, most of which any given
+//! mapper leaves at defaults — the point of the paper is that writing
+//! against this interface requires hundreds of lines of linearizer and
+//! slicing boilerplate (Fig 1b), which the Mapple DSL collapses.
+
+use crate::machine::point::{Rect, Tuple};
+use crate::machine::topology::{MemKind, ProcId, ProcKind};
+use crate::mapple::program::LayoutProps;
+use crate::sim::engine::MappingPolicies;
+use crate::tasking::pipeline::IndexMapping;
+
+/// Context describing the task being mapped.
+#[derive(Clone, Debug)]
+pub struct TaskCtx<'a> {
+    pub task_name: &'a str,
+    pub launch_domain: &'a Rect,
+    pub num_nodes: usize,
+    pub procs_per_node: usize,
+}
+
+/// Options returned from `select_task_options` (callback 1).
+#[derive(Clone, Debug)]
+pub struct TaskOptions {
+    pub inline: bool,
+    pub stealable: bool,
+    pub map_locally: bool,
+    pub priority: i32,
+}
+
+impl Default for TaskOptions {
+    fn default() -> Self {
+        TaskOptions { inline: false, stealable: false, map_locally: true, priority: 0 }
+    }
+}
+
+/// One slice of an index launch assigned to a processor (callback 3's
+/// output element, like Legion's `TaskSlice`).
+#[derive(Clone, Debug)]
+pub struct TaskSlice {
+    pub domain: Rect,
+    pub proc: ProcId,
+}
+
+/// Input to `slice_task`.
+#[derive(Clone, Debug)]
+pub struct SliceTaskInput {
+    pub domain: Rect,
+}
+
+/// Output of `slice_task`.
+#[derive(Clone, Debug, Default)]
+pub struct SliceTaskOutput {
+    pub slices: Vec<TaskSlice>,
+}
+
+/// The low-level mapper interface (19 callbacks; defaults provided for
+/// all but the two the runtime cannot guess: `shard` and `map_task`).
+#[allow(unused_variables)]
+pub trait Mapper {
+    /// Human-readable mapper name (profiling, logs).
+    fn mapper_name(&self) -> &str;
+
+    // ---- task lifetime callbacks -----------------------------------------
+
+    /// (1) Per-task execution options.
+    fn select_task_options(&self, task: &TaskCtx) -> TaskOptions {
+        TaskOptions::default()
+    }
+
+    /// (2) Which enqueued tasks to consider for mapping this cycle.
+    fn select_tasks_to_map(&self, task: &TaskCtx, candidates: usize) -> usize {
+        candidates
+    }
+
+    /// (3) Partition an index launch into per-processor slices.
+    /// Default: one slice per point via `map_task`.
+    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
+        let ispace = input.domain.extent();
+        let mut out = SliceTaskOutput::default();
+        for p in input.domain.points() {
+            let proc = self.map_task(task, &p, &ispace)?;
+            out.slices.push(TaskSlice { domain: Rect::new(p.clone(), p), proc });
+        }
+        Ok(out)
+    }
+
+    /// (4) Sharding functor id (we support one functor per mapper).
+    fn select_sharding_functor(&self, task: &TaskCtx) -> usize {
+        0
+    }
+
+    /// (5) SHARD: node for an iteration point (§5.1).
+    fn shard(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String>;
+
+    /// (6) MAP: concrete processor for an iteration point (§5.1).
+    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String>;
+
+    /// (7) Processor kind a task runs on.
+    fn select_proc_kind(&self, task: &TaskCtx) -> ProcKind {
+        ProcKind::Gpu
+    }
+
+    /// (8) Target memory for a region argument.
+    fn select_target_memory(&self, task: &TaskCtx, arg: usize) -> MemKind {
+        if self.select_proc_kind(task) == ProcKind::Gpu {
+            MemKind::FbMem
+        } else {
+            MemKind::SysMem
+        }
+    }
+
+    /// (9) Layout constraints for a region argument.
+    fn select_layout_constraints(&self, task: &TaskCtx, arg: usize) -> LayoutProps {
+        LayoutProps::default()
+    }
+
+    /// (10) Rank source instances for a copy (smaller = preferred).
+    fn select_sources(&self, task: &TaskCtx, candidates: &[ProcId]) -> Vec<usize> {
+        (0..candidates.len()).collect()
+    }
+
+    /// (11) Whether to speculate on predicated tasks.
+    fn speculate(&self, task: &TaskCtx) -> bool {
+        false
+    }
+
+    /// (12) Task priority.
+    fn select_task_priority(&self, task: &TaskCtx) -> i32 {
+        0
+    }
+
+    /// (13) Processors to attempt stealing from.
+    fn select_steal_targets(&self, task: &TaskCtx) -> Vec<ProcId> {
+        Vec::new()
+    }
+
+    /// (14) Permit another processor to steal this task.
+    fn permit_steal_request(&self, task: &TaskCtx, thief: ProcId) -> bool {
+        false
+    }
+
+    /// (15) Application-specific tunable values.
+    fn select_tunable_value(&self, task: &TaskCtx, tunable: &str) -> i64 {
+        0
+    }
+
+    /// (16) Inter-mapper message handler.
+    fn handle_message(&self, from_node: usize, message: &[u8]) {}
+
+    /// (17) Eagerly garbage-collect a region argument's instance?
+    fn garbage_collect(&self, task: &TaskCtx, arg: usize) -> bool {
+        false
+    }
+
+    /// (18) Limit on in-flight launches of this task (None = unlimited).
+    fn select_backpressure(&self, task: &TaskCtx) -> Option<usize> {
+        None
+    }
+
+    /// (19) Profiling report hook.
+    fn report_profiling(&self, task: &TaskCtx, seconds: f64) {}
+}
+
+/// Adapter: any [`Mapper`] drives the §5.1 pipeline.
+pub struct MapperAsMapping<'a> {
+    pub mapper: &'a dyn Mapper,
+    pub num_nodes: usize,
+    pub procs_per_node: usize,
+}
+
+impl IndexMapping for MapperAsMapping<'_> {
+    fn shard(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+        let rect = Rect::from_extent(ispace);
+        let ctx = TaskCtx {
+            task_name: task,
+            launch_domain: &rect,
+            num_nodes: self.num_nodes,
+            procs_per_node: self.procs_per_node,
+        };
+        self.mapper.shard(&ctx, point, ispace)
+    }
+
+    fn map(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let rect = Rect::from_extent(ispace);
+        let ctx = TaskCtx {
+            task_name: task,
+            launch_domain: &rect,
+            num_nodes: self.num_nodes,
+            procs_per_node: self.procs_per_node,
+        };
+        self.mapper.map_task(&ctx, point, ispace)
+    }
+}
+
+/// Adapter: any [`Mapper`] supplies simulator policies.
+impl MappingPolicies for MapperAsMapping<'_> {
+    fn mem_kind(&self, task: &str, arg: usize) -> MemKind {
+        let rect = Rect::from_extent(&Tuple::from([1]));
+        let ctx = TaskCtx {
+            task_name: task,
+            launch_domain: &rect,
+            num_nodes: self.num_nodes,
+            procs_per_node: self.procs_per_node,
+        };
+        self.mapper.select_target_memory(&ctx, arg)
+    }
+
+    fn should_gc(&self, task: &str, arg: usize) -> bool {
+        let rect = Rect::from_extent(&Tuple::from([1]));
+        let ctx = TaskCtx {
+            task_name: task,
+            launch_domain: &rect,
+            num_nodes: self.num_nodes,
+            procs_per_node: self.procs_per_node,
+        };
+        self.mapper.garbage_collect(&ctx, arg)
+    }
+
+    fn backpressure(&self, task: &str) -> Option<usize> {
+        let rect = Rect::from_extent(&Tuple::from([1]));
+        let ctx = TaskCtx {
+            task_name: task,
+            launch_domain: &rect,
+            num_nodes: self.num_nodes,
+            procs_per_node: self.procs_per_node,
+        };
+        self.mapper.select_backpressure(&ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Trivial;
+
+    impl Mapper for Trivial {
+        fn mapper_name(&self) -> &str {
+            "trivial"
+        }
+        fn shard(&self, _: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+            Ok((point[0] * 2 / ispace[0]) as usize)
+        }
+        fn map_task(&self, t: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+            Ok(ProcId { node: self.shard(t, point, ispace)?, kind: ProcKind::Gpu, local: 0 })
+        }
+    }
+
+    #[test]
+    fn default_slice_task_covers_domain() {
+        let dom = Rect::from_extent(&Tuple::from([4]));
+        let ctx =
+            TaskCtx { task_name: "t", launch_domain: &dom, num_nodes: 2, procs_per_node: 1 };
+        let out = Trivial.slice_task(&ctx, &SliceTaskInput { domain: dom.clone() }).unwrap();
+        assert_eq!(out.slices.len(), 4);
+        let total: i64 = out.slices.iter().map(|s| s.domain.volume()).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn adapter_drives_pipeline_interface() {
+        let adapter = MapperAsMapping { mapper: &Trivial, num_nodes: 2, procs_per_node: 1 };
+        let node =
+            IndexMapping::shard(&adapter, "t", &Tuple::from([3]), &Tuple::from([4])).unwrap();
+        assert_eq!(node, 1);
+        let p = IndexMapping::map(&adapter, "t", &Tuple::from([0]), &Tuple::from([4])).unwrap();
+        assert_eq!(p.node, 0);
+    }
+
+    #[test]
+    fn default_policies() {
+        let adapter = MapperAsMapping { mapper: &Trivial, num_nodes: 2, procs_per_node: 1 };
+        assert_eq!(MappingPolicies::mem_kind(&adapter, "t", 0), MemKind::FbMem);
+        assert!(!MappingPolicies::should_gc(&adapter, "t", 0));
+        assert_eq!(MappingPolicies::backpressure(&adapter, "t"), None);
+    }
+}

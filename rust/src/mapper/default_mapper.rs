@@ -1,0 +1,139 @@
+//! The runtime-heuristic default mapper — the baseline of Fig 13.
+//!
+//! Mirrors what task-based runtimes do when no custom mapper is supplied:
+//! shard index points to nodes by linearized block ranges, and within a
+//! node assign each point task to the *least-loaded* processor at mapping
+//! time, ignoring the algorithm's intended distribution. The paper shows
+//! this costs up to 3.5× on Cannon's/PUMMA/SUMMA and can OOM, because
+//! data materializes wherever tasks happen to land.
+
+use super::api::{Mapper, TaskCtx};
+use crate::machine::point::Tuple;
+use crate::machine::topology::{ProcId, ProcKind};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Least-loaded heuristic mapper with per-node load counters.
+pub struct DefaultHeuristicMapper {
+    /// accumulated load (task count) per (node, local proc)
+    loads: RefCell<HashMap<(usize, usize), u64>>,
+    /// memo: point tasks must map deterministically once chosen
+    chosen: RefCell<HashMap<(String, Tuple), usize>>,
+}
+
+impl DefaultHeuristicMapper {
+    pub fn new() -> Self {
+        DefaultHeuristicMapper {
+            loads: RefCell::new(HashMap::new()),
+            chosen: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn linearize(point: &Tuple, ispace: &Tuple) -> i64 {
+        point.linearize(ispace)
+    }
+}
+
+impl Default for DefaultHeuristicMapper {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Mapper for DefaultHeuristicMapper {
+    fn mapper_name(&self) -> &str {
+        "default-heuristic"
+    }
+
+    /// Linearized block sharding: point i of N goes to node i*nodes/N.
+    fn shard(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+        let n = ispace.product();
+        if n == 0 {
+            return Err("empty launch domain".into());
+        }
+        let lin = Self::linearize(point, ispace);
+        Ok((lin * task.num_nodes as i64 / n) as usize)
+    }
+
+    /// Least-loaded GPU on the sharded node, memoized per point. Ties are
+    /// broken by a hash of (task, point): at mapping time the runtime's
+    /// load estimates are all equal, so the dynamic choice is effectively
+    /// arbitrary — and in particular NOT aligned with the algorithm's
+    /// intended distribution across launches, which is precisely why the
+    /// paper's Fig 13 heuristic loses (tiles migrate between processors
+    /// step to step).
+    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let node = self.shard(task, point, ispace)?;
+        let key = (task.task_name.to_string(), point.clone());
+        if let Some(&local) = self.chosen.borrow().get(&key) {
+            return Ok(ProcId { node, kind: ProcKind::Gpu, local });
+        }
+        let mut loads = self.loads.borrow_mut();
+        let min_load = (0..task.procs_per_node)
+            .map(|l| loads.get(&(node, l)).copied().unwrap_or(0))
+            .min()
+            .ok_or("node has no processors")?;
+        let tied: Vec<usize> = (0..task.procs_per_node)
+            .filter(|&l| loads.get(&(node, l)).copied().unwrap_or(0) == min_load)
+            .collect();
+        // deterministic pseudo-random tie-break (FNV-1a over task+point)
+        let mut h = 0xcbf29ce484222325u64;
+        for b in task.task_name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        for &c in point.iter() {
+            h = (h ^ c as u64).wrapping_mul(0x100000001b3);
+        }
+        let local = tied[(h % tied.len() as u64) as usize];
+        *loads.entry((node, local)).or_insert(0) += 1;
+        self.chosen.borrow_mut().insert(key, local);
+        Ok(ProcId { node, kind: ProcKind::Gpu, local })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::point::Rect;
+
+    fn ctx(dom: &Rect, nodes: usize, ppn: usize) -> TaskCtx<'_> {
+        TaskCtx { task_name: "t", launch_domain: dom, num_nodes: nodes, procs_per_node: ppn }
+    }
+
+    #[test]
+    fn shard_blocks_linearized_order() {
+        let dom = Rect::from_extent(&Tuple::from([4, 4]));
+        let m = DefaultHeuristicMapper::new();
+        let c = ctx(&dom, 2, 4);
+        let ispace = Tuple::from([4, 4]);
+        // first half of rows → node 0, second → node 1
+        assert_eq!(m.shard(&c, &Tuple::from([0, 0]), &ispace).unwrap(), 0);
+        assert_eq!(m.shard(&c, &Tuple::from([3, 3]), &ispace).unwrap(), 1);
+    }
+
+    #[test]
+    fn least_loaded_spreads_evenly() {
+        let dom = Rect::from_extent(&Tuple::from([2, 4]));
+        let m = DefaultHeuristicMapper::new();
+        let c = ctx(&dom, 1, 4);
+        let ispace = Tuple::from([2, 4]);
+        let mut counts = HashMap::new();
+        for p in dom.points() {
+            let proc = m.map_task(&c, &p, &ispace).unwrap();
+            *counts.entry(proc.local).or_insert(0) += 1;
+        }
+        assert_eq!(counts.len(), 4);
+        assert!(counts.values().all(|&c| c == 2), "{counts:?}");
+    }
+
+    #[test]
+    fn mapping_is_memoized() {
+        let dom = Rect::from_extent(&Tuple::from([4]));
+        let m = DefaultHeuristicMapper::new();
+        let c = ctx(&dom, 1, 4);
+        let ispace = Tuple::from([4]);
+        let a = m.map_task(&c, &Tuple::from([2]), &ispace).unwrap();
+        let b = m.map_task(&c, &Tuple::from([2]), &ispace).unwrap();
+        assert_eq!(a, b);
+    }
+}

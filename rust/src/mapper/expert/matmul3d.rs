@@ -1,0 +1,362 @@
+//! Hand-written low-level mappers for the non-2D matrix-multiplication
+//! algorithms: Johnson's 3D, Solomonik's 2.5D, and COSMA. As with the 2D
+//! family, each reimplements its linearizers and block selection against
+//! the 19-callback interface and matches its Mapple counterpart's
+//! decisions exactly.
+
+use crate::machine::point::{Rect, Tuple};
+use crate::machine::topology::{MemKind, ProcId, ProcKind};
+use crate::mapper::api::{Mapper, SliceTaskInput, SliceTaskOutput, TaskCtx, TaskSlice};
+use crate::mapple::program::LayoutProps;
+
+/// Select a 3D grid (d1, d2, d3), d1·d2·d3 = count, minimizing
+/// Σ d_m / l_m with lexicographically-largest tie-breaking — the
+/// long-form equivalent of `decompose` in three dimensions.
+fn select_num_blocks_3d(count: i64, l: &Tuple) -> (i64, i64, i64) {
+    let mut best: Option<((i64, i64, i64), f64)> = None;
+    let mut d1 = 1i64;
+    while d1 <= count {
+        if count % d1 != 0 {
+            d1 += 1;
+            continue;
+        }
+        let rest = count / d1;
+        let mut d2 = 1i64;
+        while d2 <= rest {
+            if rest % d2 != 0 {
+                d2 += 1;
+                continue;
+            }
+            let d3 = rest / d2;
+            let objective =
+                d1 as f64 / l[0] as f64 + d2 as f64 / l[1] as f64 + d3 as f64 / l[2] as f64;
+            let cand = (d1, d2, d3);
+            let better = match best {
+                None => true,
+                Some((b, obj)) => {
+                    objective < obj - 1e-12 || (objective < obj + 1e-12 && cand > b)
+                }
+            };
+            if better {
+                best = Some((cand, objective));
+            }
+            d2 += 1;
+        }
+        d1 += 1;
+    }
+    best.unwrap().0
+}
+
+// ===========================================================================
+// Johnson's 3D algorithm
+// ===========================================================================
+
+/// Expert mapper for Johnson's algorithm: the conditional linearization
+/// of Fig 12 (`conditional_linearize3D`), distributing the 3D task cube
+/// cyclically over nodes, then over GPUs.
+pub struct JohnsonExpertMapper {
+    pub num_nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl JohnsonExpertMapper {
+    pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
+        JohnsonExpertMapper { num_nodes, gpus_per_node }
+    }
+
+    fn linearize(&self, point: &Tuple, ispace: &Tuple) -> i64 {
+        // grid_size = ispace[0] > ispace[2] ? ispace[0] : ispace[2]
+        let grid_size = if ispace[0] > ispace[2] { ispace[0] } else { ispace[2] };
+        point[0] + point[1] * grid_size + point[2] * grid_size * grid_size
+    }
+}
+
+impl Mapper for JohnsonExpertMapper {
+    fn mapper_name(&self) -> &str {
+        "johnson-expert"
+    }
+
+    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
+        let ispace = input.domain.extent();
+        let mut out = SliceTaskOutput::default();
+        for it in input.domain.points() {
+            let proc = self.map_task(task, &it, &ispace)?;
+            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
+        }
+        Ok(out)
+    }
+
+    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+        if point.dim() == 3 {
+            let lin = self.linearize(point, ispace);
+            Ok((lin % self.num_nodes as i64) as usize)
+        } else {
+            // 2D init launches: linearized block over the flattened
+            // (GPU-fastest) processor space
+            let lin = point.linearize(ispace);
+            let n = ispace.product();
+            let total = (self.num_nodes * self.gpus_per_node) as i64;
+            let flat = lin * total / n;
+            Ok((flat / self.gpus_per_node as i64) as usize)
+        }
+    }
+
+    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let node = self.shard(task, point, ispace)?;
+        let local = if point.dim() == 3 {
+            let lin = self.linearize(point, ispace);
+            ((lin / self.num_nodes as i64) % self.gpus_per_node as i64) as usize
+        } else {
+            let lin = point.linearize(ispace);
+            let n = ispace.product();
+            let total = (self.num_nodes * self.gpus_per_node) as i64;
+            let flat = lin * total / n;
+            (flat % self.gpus_per_node as i64) as usize
+        };
+        Ok(ProcId { node, kind: ProcKind::Gpu, local })
+    }
+
+    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
+        MemKind::FbMem
+    }
+
+    fn select_layout_constraints(&self, _task: &TaskCtx, _arg: usize) -> LayoutProps {
+        LayoutProps { fortran_order: true, soa: true, align: 128 }
+    }
+}
+
+// ===========================================================================
+// Solomonik's 2.5D algorithm
+// ===========================================================================
+
+/// Expert mapper for Solomonik's algorithm: `hierarchical_block3D` for
+/// the compute phase (Fig 5 / Fig 12 function 1) and `linearize_cyclic`
+/// for the reduction phase (Fig 12 function 2).
+pub struct SolomonikExpertMapper {
+    pub num_nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl SolomonikExpertMapper {
+    pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
+        SolomonikExpertMapper { num_nodes, gpus_per_node }
+    }
+
+    fn hierarchical_block3d(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
+        let (n1, n2, n3) = select_num_blocks_3d(self.num_nodes as i64, ispace);
+        let sub = Tuple::from([
+            (ispace[0] + n1 - 1) / n1,
+            (ispace[1] + n2 - 1) / n2,
+            (ispace[2] + n3 - 1) / n3,
+        ]);
+        let (g1, g2, g3) = select_num_blocks_3d(self.gpus_per_node as i64, &sub);
+        let u1 = point[0] * n1 / ispace[0];
+        let u2 = point[1] * n2 / ispace[1];
+        let u3 = point[2] * n3 / ispace[2];
+        let l1 = point[0] % g1;
+        let l2 = point[1] % g2;
+        let l3 = point[2] % g3;
+        // split-chain pull-back: first dim fastest
+        let node = u1 + n1 * (u2 + n2 * u3);
+        let gpu = l1 + g1 * (l2 + g2 * l3);
+        (node as usize, gpu as usize)
+    }
+
+    fn linearize_cyclic(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
+        // linearized = p0 + s0*p1 + s0*s1*p2 (2D points pad p2 = 0)
+        let p2 = if point.dim() > 2 { point[2] } else { 0 };
+        let s1 = if ispace.dim() > 1 { ispace[1] } else { 1 };
+        let linearized = point[0] + ispace[0] * point[1] + ispace[0] * s1 * p2;
+        let node = linearized % self.num_nodes as i64;
+        let gpu = (linearized / self.num_nodes as i64) % self.gpus_per_node as i64;
+        (node as usize, gpu as usize)
+    }
+}
+
+impl Mapper for SolomonikExpertMapper {
+    fn mapper_name(&self) -> &str {
+        "solomonik-expert"
+    }
+
+    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
+        let ispace = input.domain.extent();
+        let mut out = SliceTaskOutput::default();
+        for it in input.domain.points() {
+            let proc = self.map_task(task, &it, &ispace)?;
+            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
+        }
+        Ok(out)
+    }
+
+    fn shard(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+        Ok(self.indices(task, point, ispace).0)
+    }
+
+    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let (node, gpu) = self.indices(task, point, ispace);
+        Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
+    }
+
+    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
+        MemKind::FbMem
+    }
+}
+
+impl SolomonikExpertMapper {
+    fn indices(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
+        if task.task_name == "mm25d" && point.dim() == 3 {
+            self.hierarchical_block3d(point, ispace)
+        } else {
+            self.linearize_cyclic(point, ispace)
+        }
+    }
+}
+
+// ===========================================================================
+// COSMA
+// ===========================================================================
+
+/// Expert mapper for COSMA: `special_linearize3D` (Fig 12) — split the
+/// node dimension as equally as possible into a 3D grid (the `decompose`
+/// with all-ones targets), then linearize and distribute cyclically.
+pub struct CosmaExpertMapper {
+    pub num_nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl CosmaExpertMapper {
+    pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
+        CosmaExpertMapper { num_nodes, gpus_per_node }
+    }
+
+    /// Split `count` into three factors as equal as possible (the
+    /// decompose(0, (1,1,1)) of Fig 12: objective Σ d_m minimized).
+    fn equal_split_3(&self, count: i64) -> (i64, i64, i64) {
+        select_num_blocks_3d(count, &Tuple::from([1, 1, 1]))
+    }
+}
+
+impl Mapper for CosmaExpertMapper {
+    fn mapper_name(&self) -> &str {
+        "cosma-expert"
+    }
+
+    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
+        let ispace = input.domain.extent();
+        let mut out = SliceTaskOutput::default();
+        for it in input.domain.points() {
+            let proc = self.map_task(task, &it, &ispace)?;
+            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
+        }
+        Ok(out)
+    }
+
+    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+        if point.dim() == 3 {
+            let (_d1, gy, gx) = self.equal_split_3(self.num_nodes as i64);
+            let linearized = point[0] + point[1] * gx + point[2] * gx * gy;
+            Ok((linearized % self.num_nodes as i64) as usize)
+        } else {
+            let lin = point.linearize(ispace);
+            let n = ispace.product();
+            let total = (self.num_nodes * self.gpus_per_node) as i64;
+            let flat = lin * total / n;
+            Ok((flat / self.gpus_per_node as i64) as usize)
+        }
+    }
+
+    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let node = self.shard(task, point, ispace)?;
+        let local = if point.dim() == 3 {
+            let (_d1, gy, gx) = self.equal_split_3(self.num_nodes as i64);
+            let linearized = point[0] + point[1] * gx + point[2] * gx * gy;
+            ((linearized / self.num_nodes as i64) % self.gpus_per_node as i64) as usize
+        } else {
+            let lin = point.linearize(ispace);
+            let n = ispace.product();
+            let total = (self.num_nodes * self.gpus_per_node) as i64;
+            (lin * total / n % self.gpus_per_node as i64) as usize
+        };
+        Ok(ProcId { node, kind: ProcKind::Gpu, local })
+    }
+
+    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
+        MemKind::FbMem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_3d_balanced() {
+        assert_eq!(select_num_blocks_3d(8, &Tuple::from([64, 64, 64])), (2, 2, 2));
+        assert_eq!(select_num_blocks_3d(16, &Tuple::from([4, 8, 4])), (2, 4, 2));
+        // all-ones targets = most balanced split, descending tie-break
+        assert_eq!(select_num_blocks_3d(12, &Tuple::from([1, 1, 1])), (3, 2, 2));
+    }
+
+    #[test]
+    fn johnson_covers_procs() {
+        let m = JohnsonExpertMapper::new(2, 4);
+        let ispace = Tuple::from([2, 2, 2]);
+        let dom = Rect::from_extent(&ispace);
+        let ctx =
+            TaskCtx { task_name: "mm3d", launch_domain: &dom, num_nodes: 2, procs_per_node: 4 };
+        let mut seen = std::collections::HashSet::new();
+        for p in dom.points() {
+            let proc = m.map_task(&ctx, &p, &ispace).unwrap();
+            seen.insert((proc.node, proc.local));
+        }
+        assert_eq!(seen.len(), 8, "8 tasks hit all 8 GPUs");
+    }
+
+    #[test]
+    fn solomonik_phases_use_different_functions() {
+        let m = SolomonikExpertMapper::new(2, 4);
+        let ispace3 = Tuple::from([2, 2, 2]);
+        let ispace2 = Tuple::from([2, 2]);
+        let dom3 = Rect::from_extent(&ispace3);
+        let ctx_mm =
+            TaskCtx { task_name: "mm25d", launch_domain: &dom3, num_nodes: 2, procs_per_node: 4 };
+        let dom2 = Rect::from_extent(&ispace2);
+        let ctx_red = TaskCtx {
+            task_name: "reduce_c",
+            launch_domain: &dom2,
+            num_nodes: 2,
+            procs_per_node: 4,
+        };
+        // compute phase: hierarchical — all 8 procs used
+        let mut seen = std::collections::HashSet::new();
+        for p in dom3.points() {
+            let proc = m.map_task(&ctx_mm, &p, &ispace3).unwrap();
+            seen.insert((proc.node, proc.local));
+        }
+        assert_eq!(seen.len(), 8);
+        // reduction phase: linearize_cyclic over 4 points → 4 distinct procs
+        let mut seen2 = std::collections::HashSet::new();
+        for p in dom2.points() {
+            let proc = m.map_task(&ctx_red, &p, &ispace2).unwrap();
+            seen2.insert((proc.node, proc.local));
+        }
+        assert_eq!(seen2.len(), 4);
+    }
+
+    #[test]
+    fn cosma_linearization_in_range() {
+        let m = CosmaExpertMapper::new(4, 4);
+        let ispace = Tuple::from([2, 2, 4]);
+        let dom = Rect::from_extent(&ispace);
+        let ctx = TaskCtx {
+            task_name: "mm_cosma",
+            launch_domain: &dom,
+            num_nodes: 4,
+            procs_per_node: 4,
+        };
+        for p in dom.points() {
+            let proc = m.map_task(&ctx, &p, &ispace).unwrap();
+            assert!(proc.node < 4 && proc.local < 4);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! The nine expert mappers (Table 1's "C++ mapper" analogues) plus a
+//! registry for bench harnesses.
+
+pub mod matmul2d;
+pub mod matmul3d;
+pub mod science;
+
+pub use matmul2d::{CannonExpertMapper, PummaExpertMapper, SummaExpertMapper};
+pub use matmul3d::{CosmaExpertMapper, JohnsonExpertMapper, SolomonikExpertMapper};
+pub use science::{CircuitExpertMapper, PennantExpertMapper, StencilExpertMapper};
+
+use super::api::Mapper;
+
+/// Instantiate the expert mapper for an application by name.
+pub fn expert_for(app: &str, num_nodes: usize, gpus_per_node: usize) -> Option<Box<dyn Mapper>> {
+    let m: Box<dyn Mapper> = match app {
+        "cannon" => Box::new(CannonExpertMapper::new(num_nodes, gpus_per_node)),
+        "summa" => Box::new(SummaExpertMapper::new(num_nodes, gpus_per_node)),
+        "pumma" => Box::new(PummaExpertMapper::new(num_nodes, gpus_per_node)),
+        "johnson" => Box::new(JohnsonExpertMapper::new(num_nodes, gpus_per_node)),
+        "solomonik" => Box::new(SolomonikExpertMapper::new(num_nodes, gpus_per_node)),
+        "cosma" => Box::new(CosmaExpertMapper::new(num_nodes, gpus_per_node)),
+        "stencil" => Box::new(StencilExpertMapper::new(num_nodes, gpus_per_node)),
+        "circuit" => Box::new(CircuitExpertMapper::new(num_nodes, gpus_per_node)),
+        "pennant" => Box::new(PennantExpertMapper::new(num_nodes, gpus_per_node)),
+        _ => return None,
+    };
+    Some(m)
+}
+
+/// Source files of the expert mappers, for Table 1 LoC counting.
+pub const EXPERT_SOURCES: &[(&str, &str)] = &[
+    ("cannon", include_str!("matmul2d.rs")),
+    ("summa", include_str!("matmul2d.rs")),
+    ("pumma", include_str!("matmul2d.rs")),
+    ("johnson", include_str!("matmul3d.rs")),
+    ("solomonik", include_str!("matmul3d.rs")),
+    ("cosma", include_str!("matmul3d.rs")),
+    ("stencil", include_str!("science.rs")),
+    ("circuit", include_str!("science.rs")),
+    ("pennant", include_str!("science.rs")),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_nine() {
+        for app in [
+            "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit",
+            "pennant",
+        ] {
+            assert!(expert_for(app, 2, 4).is_some(), "{app}");
+        }
+        assert!(expert_for("nope", 2, 4).is_none());
+    }
+}

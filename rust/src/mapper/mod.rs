@@ -1,0 +1,16 @@
+//! Mapper implementations and the low-level programmatic interface.
+//!
+//! * [`api`] — the Legion-style 19-callback [`api::Mapper`] trait.
+//! * [`default_mapper`] — the runtime-heuristic baseline (Fig 13).
+//! * [`translate`] — Mapple → low-level translation (§5.2).
+//! * [`expert`] — hand-written low-level mappers per application, the
+//!   "C++ mapper" analogues counted in Table 1.
+
+pub mod api;
+pub mod default_mapper;
+pub mod expert;
+pub mod translate;
+
+pub use api::{Mapper, MapperAsMapping, SliceTaskInput, SliceTaskOutput, TaskCtx, TaskOptions, TaskSlice};
+pub use default_mapper::DefaultHeuristicMapper;
+pub use translate::MappleMapper;

@@ -1,0 +1,171 @@
+//! Translation of a compiled Mapple program to the low-level mapper
+//! interface (paper §5.2).
+//!
+//! The Mapple mapping function is interpreted per iteration point; its
+//! result — a coordinate in the (transformed) processor space, pulled
+//! back to the physical `(node, local)` pair — supplies both the SHARD
+//! and MAP callbacks. Directive tables supply the remaining callbacks
+//! (memories, layouts, GC, backpressure, processor kinds).
+//!
+//! A memo cache keyed by `(task, ispace)` stores the full mapping table
+//! the first time a launch shape is seen: mapping functions are pure, so
+//! re-evaluating the interpreter per point per launch would be wasted
+//! work on the hot path (see EXPERIMENTS.md §Perf).
+
+use super::api::{Mapper, TaskCtx};
+use crate::machine::point::{Rect, Tuple};
+use crate::machine::topology::{MemKind, ProcId, ProcKind};
+use crate::mapple::program::{LayoutProps, MapperSpec};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// A [`Mapper`] implementation backed by a Mapple [`MapperSpec`].
+pub struct MappleMapper {
+    pub spec: MapperSpec,
+    cache: RefCell<HashMap<(String, Tuple), HashMap<Tuple, ProcId>>>,
+}
+
+impl MappleMapper {
+    pub fn new(spec: MapperSpec) -> Self {
+        MappleMapper { spec, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Evaluate (with memoization) the mapping of a full launch domain.
+    fn lookup(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let key = (task.to_string(), ispace.clone());
+        {
+            let cache = self.cache.borrow();
+            if let Some(table) = cache.get(&key) {
+                if let Some(p) = table.get(point) {
+                    return Ok(*p);
+                }
+            }
+        }
+        // Miss: evaluate the whole domain at once (bounded by ispace) so
+        // subsequent points are O(1) hash lookups.
+        let domain = Rect::from_extent(ispace);
+        let mut table = HashMap::with_capacity(domain.volume() as usize);
+        for p in domain.points() {
+            let proc = self.spec.map_point(task, &p, ispace).map_err(|e| e.to_string())?;
+            table.insert(p, proc);
+        }
+        let out = table
+            .get(point)
+            .copied()
+            .ok_or_else(|| format!("point {point:?} outside launch domain {ispace:?}"))?;
+        self.cache.borrow_mut().insert(key, table);
+        Ok(out)
+    }
+}
+
+impl Mapper for MappleMapper {
+    fn mapper_name(&self) -> &str {
+        "mapple"
+    }
+
+    fn shard(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+        Ok(self.lookup(task.task_name, point, ispace)?.node)
+    }
+
+    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        self.lookup(task.task_name, point, ispace)
+    }
+
+    fn select_proc_kind(&self, task: &TaskCtx) -> ProcKind {
+        self.spec.proc_kind(task.task_name)
+    }
+
+    fn select_target_memory(&self, task: &TaskCtx, arg: usize) -> MemKind {
+        self.spec.memory_for(task.task_name, arg).1
+    }
+
+    fn select_layout_constraints(&self, task: &TaskCtx, arg: usize) -> LayoutProps {
+        self.spec.layout_for(task.task_name, arg)
+    }
+
+    fn garbage_collect(&self, task: &TaskCtx, arg: usize) -> bool {
+        self.spec.should_gc(task.task_name, arg)
+    }
+
+    fn select_backpressure(&self, task: &TaskCtx) -> Option<usize> {
+        self.spec.backpressure_for(task.task_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::topology::MachineDesc;
+
+    fn desc() -> MachineDesc {
+        let mut d = MachineDesc::paper_testbed(2);
+        d.gpus_per_node = 2;
+        d
+    }
+
+    const SRC: &str = "\
+m = Machine(GPU)
+def block2D(Tuple ipoint, Tuple ispace):
+    idx = ipoint * m.size / ispace
+    return m[*idx]
+IndexTaskMap matmul block2D
+Region matmul arg0 GPU FBMEM
+GarbageCollect matmul arg1
+Backpressure matmul 3
+";
+
+    fn mapper() -> MappleMapper {
+        MappleMapper::new(MapperSpec::compile(SRC, &desc()).unwrap())
+    }
+
+    fn ctx<'a>(dom: &'a Rect) -> TaskCtx<'a> {
+        TaskCtx { task_name: "matmul", launch_domain: dom, num_nodes: 2, procs_per_node: 2 }
+    }
+
+    #[test]
+    fn translates_index_mapping() {
+        let m = mapper();
+        let dom = Rect::from_extent(&Tuple::from([6, 6]));
+        let c = ctx(&dom);
+        let ispace = Tuple::from([6, 6]);
+        assert_eq!(m.shard(&c, &Tuple::from([2, 3]), &ispace).unwrap(), 0);
+        let p = m.map_task(&c, &Tuple::from([2, 3]), &ispace).unwrap();
+        assert_eq!((p.node, p.local), (0, 1));
+    }
+
+    #[test]
+    fn translates_policies() {
+        let m = mapper();
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let c = ctx(&dom);
+        assert_eq!(m.select_target_memory(&c, 0), MemKind::FbMem);
+        assert!(m.garbage_collect(&c, 1));
+        assert!(!m.garbage_collect(&c, 0));
+        assert_eq!(m.select_backpressure(&c), Some(3));
+    }
+
+    #[test]
+    fn cache_consistency() {
+        let m = mapper();
+        let dom = Rect::from_extent(&Tuple::from([8, 8]));
+        let c = ctx(&dom);
+        let ispace = Tuple::from([8, 8]);
+        // first call populates, second hits cache: same results
+        let a = m.map_task(&c, &Tuple::from([7, 7]), &ispace).unwrap();
+        let b = m.map_task(&c, &Tuple::from([7, 7]), &ispace).unwrap();
+        assert_eq!(a, b);
+        // a different ispace gets its own table
+        let ispace2 = Tuple::from([4, 4]);
+        let d = m.map_task(&c, &Tuple::from([3, 3]), &ispace2).unwrap();
+        assert_eq!((d.node, d.local), (1, 1));
+    }
+
+    #[test]
+    fn unknown_task_errors() {
+        let m = mapper();
+        let dom = Rect::from_extent(&Tuple::from([2]));
+        let mut c = ctx(&dom);
+        c.task_name = "nope";
+        assert!(m.map_task(&c, &Tuple::from([0]), &Tuple::from([2])).is_err());
+    }
+}

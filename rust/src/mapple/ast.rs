@@ -1,0 +1,167 @@
+//! Abstract syntax tree for the Mapple DSL.
+
+use std::fmt;
+
+/// A full Mapple program: top-level statements in source order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub items: Vec<Item>,
+}
+
+/// Top-level item.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    /// Global binding, e.g. `m_2d = Machine(GPU)`.
+    Assign { name: String, expr: Expr, line: usize },
+    /// Function definition.
+    Def(FuncDef),
+    /// Mapping directive (Fig 18 grammar).
+    Directive(Directive),
+}
+
+/// `def name(Type param, ...):` + body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FuncDef {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+    pub line: usize,
+}
+
+/// A typed parameter. Types are advisory (`Tuple`, `int`); the checker
+/// validates arity and the interpreter enforces kinds dynamically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Param {
+    pub ty: Option<String>,
+    pub name: String,
+}
+
+/// Statements inside function bodies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    Assign { name: String, expr: Expr, line: usize },
+    Return { expr: Expr, line: usize },
+    If { arms: Vec<(Expr, Vec<Stmt>)>, else_body: Option<Vec<Stmt>>, line: usize },
+    Expr { expr: Expr, line: usize },
+}
+
+/// Declarative mapping directives (paper §2, §7.1, Fig 18).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Directive {
+    /// `IndexTaskMap <task> <function>` — index mapping for a task's launches.
+    IndexTaskMap { task: String, func: String, line: usize },
+    /// `TaskMap <task> <PROC>` — processor-kind selection.
+    TaskMap { task: String, proc: String, line: usize },
+    /// `Region <task> <argN> <PROC> <MEM>` — memory placement per argument.
+    Region { task: String, arg: usize, proc: String, mem: String, line: usize },
+    /// `Layout <task> <argN> <PROC> <prop...>` — data layout constraints
+    /// (SOA/AOS, C_order/F_order, align<N>).
+    Layout { task: String, arg: usize, proc: String, props: Vec<String>, line: usize },
+    /// `GarbageCollect <task> <argN>` — eagerly collect the instance.
+    GarbageCollect { task: String, arg: usize, line: usize },
+    /// `Backpressure <task> <n>` — limit in-flight launches of a task.
+    Backpressure { task: String, limit: usize, line: usize },
+}
+
+/// Expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    Str(String),
+    Name(String),
+    /// Parenthesized tuple literal `(a, b, c)`; single element w/o comma
+    /// parses as grouping, not a tuple.
+    TupleLit(Vec<Expr>),
+    Unary { op: UnOp, inner: Box<Expr> },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    /// C-style ternary `cond ? a : b` (Johnson's mapper, Fig 12).
+    Ternary { cond: Box<Expr>, then: Box<Expr>, otherwise: Box<Expr> },
+    /// Function or builtin call `f(a, b)`.
+    Call { func: String, args: Vec<Arg> },
+    /// Method call `recv.name(args)` (machine transformations).
+    Method { recv: Box<Expr>, name: String, args: Vec<Arg> },
+    /// Attribute access `recv.name` (e.g. `m.size`).
+    Attr { recv: Box<Expr>, name: String },
+    /// Indexing / slicing `recv[args]` where args may include splats and
+    /// slices (`m[*upper, *lower]`, `ispace[0]`, `m_4d[:-1]`).
+    Index { recv: Box<Expr>, args: Vec<IndexArg> },
+    /// Generator call `tuple(expr for var in iterable)` (Fig 12).
+    TupleGen { elem: Box<Expr>, var: String, iter: Box<Expr> },
+}
+
+/// A call argument, possibly splatted (`*idx`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arg {
+    Plain(Expr),
+    Splat(Expr),
+}
+
+/// An index argument: plain expr, splat, or a slice with optional bounds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IndexArg {
+    Plain(Expr),
+    Splat(Expr),
+    Slice { lo: Option<Expr>, hi: Option<Expr> },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+impl fmt::Display for BinOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Mod => "%",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::And => "and",
+            BinOp::Or => "or",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl Program {
+    /// All function definitions by name.
+    pub fn funcs(&self) -> impl Iterator<Item = &FuncDef> {
+        self.items.iter().filter_map(|i| match i {
+            Item::Def(f) => Some(f),
+            _ => None,
+        })
+    }
+
+    /// All directives.
+    pub fn directives(&self) -> impl Iterator<Item = &Directive> {
+        self.items.iter().filter_map(|i| match i {
+            Item::Directive(d) => Some(d),
+            _ => None,
+        })
+    }
+}

@@ -1,0 +1,788 @@
+//! Tree-walking interpreter for Mapple mapping functions.
+//!
+//! An [`Interp`] is built once per (program, machine) pair: top-level
+//! assignments are evaluated eagerly (constructing and transforming
+//! processor spaces), and mapping functions are then invoked once per
+//! iteration point by the mapper translation layer (§5.2).
+
+use super::ast::*;
+use super::parser::parse;
+use super::value::{arith, compare, Value};
+use crate::machine::point::Tuple;
+use crate::machine::space::ProcSpace;
+use crate::machine::topology::{MachineDesc, ProcId, ProcKind};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Runtime error with call-site context.
+#[derive(Debug)]
+pub struct RtError {
+    pub msg: String,
+    pub trace: Vec<String>,
+}
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "runtime error: {}", self.msg)?;
+        for t in &self.trace {
+            write!(f, "\n  in {t}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for RtError {}
+
+type RtResult<T> = Result<T, RtError>;
+
+fn rt(msg: impl Into<String>) -> RtError {
+    RtError { msg: msg.into(), trace: Vec::new() }
+}
+
+/// Hard limits protecting against runaway mapping functions.
+const MAX_CALL_DEPTH: usize = 64;
+const MAX_STEPS: usize = 1_000_000;
+
+/// An instantiated Mapple program bound to a machine.
+pub struct Interp {
+    pub desc: MachineDesc,
+    funcs: HashMap<String, FuncDef>,
+    globals: HashMap<String, Value>,
+    steps: std::cell::Cell<usize>,
+}
+
+impl Interp {
+    /// Parse and bind a program to a machine description.
+    pub fn from_source(src: &str, desc: &MachineDesc) -> Result<Interp, String> {
+        let prog = parse(src).map_err(|e| e.to_string())?;
+        Interp::new(&prog, desc).map_err(|e| e.to_string())
+    }
+
+    /// Bind an already-parsed program.
+    pub fn new(prog: &Program, desc: &MachineDesc) -> RtResult<Interp> {
+        let mut funcs = HashMap::new();
+        for f in prog.funcs() {
+            if funcs.insert(f.name.clone(), f.clone()).is_some() {
+                return Err(rt(format!("duplicate function '{}'", f.name)));
+            }
+        }
+        let mut interp = Interp {
+            desc: desc.clone(),
+            funcs,
+            globals: HashMap::new(),
+            steps: std::cell::Cell::new(0),
+        };
+        // Evaluate top-level assignments in order.
+        for item in &prog.items {
+            if let Item::Assign { name, expr, line } = item {
+                let mut locals = HashMap::new();
+                let v = interp.eval(expr, &mut locals, 0).map_err(|mut e| {
+                    e.trace.push(format!("global '{name}' (line {line})"));
+                    e
+                })?;
+                interp.globals.insert(name.clone(), v);
+            }
+        }
+        Ok(interp)
+    }
+
+    /// Does the program define this function?
+    pub fn has_func(&self, name: &str) -> bool {
+        self.funcs.contains_key(name)
+    }
+
+    /// Invoke a mapping function with `(ipoint, ispace)` and expect a
+    /// processor result — the §5.2 translation contract.
+    pub fn map_point(&self, func: &str, ipoint: &Tuple, ispace: &Tuple) -> RtResult<ProcId> {
+        self.steps.set(0);
+        let out = self.call(
+            func,
+            vec![Value::Tuple(ipoint.clone()), Value::Tuple(ispace.clone())],
+            0,
+        )?;
+        match out {
+            Value::Proc(p) => Ok(p),
+            other => Err(rt(format!(
+                "mapping function '{func}' must return a processor, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// Call any defined function with explicit argument values.
+    pub fn call(&self, name: &str, args: Vec<Value>, depth: usize) -> RtResult<Value> {
+        if depth >= MAX_CALL_DEPTH {
+            return Err(rt(format!("call depth limit exceeded in '{name}'")));
+        }
+        let f = self
+            .funcs
+            .get(name)
+            .ok_or_else(|| rt(format!("undefined function '{name}'")))?;
+        if f.params.len() != args.len() {
+            return Err(rt(format!(
+                "'{name}' expects {} arguments, got {}",
+                f.params.len(),
+                args.len()
+            )));
+        }
+        let mut locals: HashMap<String, Value> = HashMap::new();
+        for (p, v) in f.params.iter().zip(args) {
+            // advisory type check
+            if let Some(ty) = &p.ty {
+                let ok = match ty.as_str() {
+                    "Tuple" => matches!(v, Value::Tuple(_)),
+                    "int" => matches!(v, Value::Int(_)),
+                    _ => true,
+                };
+                if !ok {
+                    return Err(rt(format!(
+                        "'{name}' parameter '{}' expects {ty}, got {}",
+                        p.name,
+                        v.kind()
+                    )));
+                }
+            }
+            locals.insert(p.name.clone(), v);
+        }
+        let out = self.exec_block(&f.body, &mut locals, depth).map_err(|mut e| {
+            e.trace.push(format!("function '{name}' (line {})", f.line));
+            e
+        })?;
+        out.ok_or_else(|| rt(format!("'{name}' finished without returning")))
+    }
+
+    fn exec_block(
+        &self,
+        body: &[Stmt],
+        locals: &mut HashMap<String, Value>,
+        depth: usize,
+    ) -> RtResult<Option<Value>> {
+        for stmt in body {
+            self.tick()?;
+            match stmt {
+                Stmt::Assign { name, expr, .. } => {
+                    let v = self.eval(expr, locals, depth)?;
+                    locals.insert(name.clone(), v);
+                }
+                Stmt::Return { expr, .. } => {
+                    return Ok(Some(self.eval(expr, locals, depth)?));
+                }
+                Stmt::Expr { expr, .. } => {
+                    self.eval(expr, locals, depth)?;
+                }
+                Stmt::If { arms, else_body, .. } => {
+                    let mut taken = false;
+                    for (cond, arm) in arms {
+                        let c = self
+                            .eval(cond, locals, depth)?
+                            .as_bool()
+                            .map_err(rt)?;
+                        if c {
+                            if let Some(v) = self.exec_block(arm, locals, depth)? {
+                                return Ok(Some(v));
+                            }
+                            taken = true;
+                            break;
+                        }
+                    }
+                    if !taken {
+                        if let Some(eb) = else_body {
+                            if let Some(v) = self.exec_block(eb, locals, depth)? {
+                                return Ok(Some(v));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    fn tick(&self) -> RtResult<()> {
+        let s = self.steps.get() + 1;
+        self.steps.set(s);
+        if s > MAX_STEPS {
+            Err(rt("step limit exceeded (runaway mapping function?)"))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn lookup(&self, name: &str, locals: &HashMap<String, Value>) -> RtResult<Value> {
+        if let Some(v) = locals.get(name) {
+            return Ok(v.clone());
+        }
+        if let Some(v) = self.globals.get(name) {
+            return Ok(v.clone());
+        }
+        // Processor-kind literals usable anywhere (Machine(GPU) arguments).
+        if ProcKind::parse(name).is_ok() {
+            return Ok(Value::Str(name.to_string()));
+        }
+        Err(rt(format!("undefined name '{name}'")))
+    }
+
+    fn eval(
+        &self,
+        expr: &Expr,
+        locals: &mut HashMap<String, Value>,
+        depth: usize,
+    ) -> RtResult<Value> {
+        self.tick()?;
+        match expr {
+            Expr::Int(v) => Ok(Value::Int(*v)),
+            Expr::Str(s) => Ok(Value::Str(s.clone())),
+            Expr::Name(n) => self.lookup(n, locals),
+            Expr::TupleLit(items) => {
+                let mut v = Vec::with_capacity(items.len());
+                for e in items {
+                    v.push(self.eval(e, locals, depth)?.as_int().map_err(rt)?);
+                }
+                Ok(Value::Tuple(Tuple(v)))
+            }
+            Expr::Unary { op, inner } => {
+                let v = self.eval(inner, locals, depth)?;
+                match op {
+                    UnOp::Neg => match v {
+                        Value::Int(i) => Ok(Value::Int(-i)),
+                        Value::Tuple(t) => {
+                            Ok(Value::Tuple(Tuple(t.0.iter().map(|&x| -x).collect())))
+                        }
+                        other => Err(rt(format!("cannot negate {}", other.kind()))),
+                    },
+                    UnOp::Not => Ok(Value::Bool(!v.as_bool().map_err(rt)?)),
+                }
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                match op {
+                    BinOp::And => {
+                        let l = self.eval(lhs, locals, depth)?.as_bool().map_err(rt)?;
+                        if !l {
+                            return Ok(Value::Bool(false));
+                        }
+                        let r = self.eval(rhs, locals, depth)?.as_bool().map_err(rt)?;
+                        return Ok(Value::Bool(r));
+                    }
+                    BinOp::Or => {
+                        let l = self.eval(lhs, locals, depth)?.as_bool().map_err(rt)?;
+                        if l {
+                            return Ok(Value::Bool(true));
+                        }
+                        let r = self.eval(rhs, locals, depth)?.as_bool().map_err(rt)?;
+                        return Ok(Value::Bool(r));
+                    }
+                    _ => {}
+                }
+                let l = self.eval(lhs, locals, depth)?;
+                let r = self.eval(rhs, locals, depth)?;
+                let sym = op.to_string();
+                match op {
+                    BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod => {
+                        arith(&sym, &l, &r).map_err(rt)
+                    }
+                    _ => compare(&sym, &l, &r).map_err(rt),
+                }
+            }
+            Expr::Ternary { cond, then, otherwise } => {
+                let c = self.eval(cond, locals, depth)?.as_bool().map_err(rt)?;
+                if c {
+                    self.eval(then, locals, depth)
+                } else {
+                    self.eval(otherwise, locals, depth)
+                }
+            }
+            Expr::Call { func, args } => self.eval_call(func, args, locals, depth),
+            Expr::Method { recv, name, args } => {
+                let r = self.eval(recv, locals, depth)?;
+                self.eval_method(&r, name, args, locals, depth)
+            }
+            Expr::Attr { recv, name } => {
+                let r = self.eval(recv, locals, depth)?;
+                match (&r, name.as_str()) {
+                    (Value::Space(s), "size") => Ok(Value::Tuple(s.size().clone())),
+                    (Value::Space(s), "dim") => Ok(Value::Int(s.dim() as i64)),
+                    (Value::Tuple(t), "dim") => Ok(Value::Int(t.dim() as i64)),
+                    _ => Err(rt(format!("no attribute '{name}' on {}", r.kind()))),
+                }
+            }
+            Expr::Index { recv, args } => {
+                let r = self.eval(recv, locals, depth)?;
+                self.eval_index(&r, args, locals, depth)
+            }
+            Expr::TupleGen { elem, var, iter } => {
+                let it = self.eval(iter, locals, depth)?;
+                let items = it.as_tuple().map_err(rt)?.clone();
+                let shadowed = locals.get(var).cloned();
+                let mut out = Vec::with_capacity(items.dim());
+                for &i in items.iter() {
+                    locals.insert(var.clone(), Value::Int(i));
+                    out.push(self.eval(elem, locals, depth)?.as_int().map_err(rt)?);
+                }
+                match shadowed {
+                    Some(v) => {
+                        locals.insert(var.clone(), v);
+                    }
+                    None => {
+                        locals.remove(var);
+                    }
+                }
+                Ok(Value::Tuple(Tuple(out)))
+            }
+        }
+    }
+
+    fn eval_args(
+        &self,
+        args: &[Arg],
+        locals: &mut HashMap<String, Value>,
+        depth: usize,
+    ) -> RtResult<Vec<Value>> {
+        let mut out = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::Plain(e) => out.push(self.eval(e, locals, depth)?),
+                Arg::Splat(e) => {
+                    let v = self.eval(e, locals, depth)?;
+                    let t = v.as_tuple().map_err(rt)?;
+                    for &x in t.iter() {
+                        out.push(Value::Int(x));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn eval_call(
+        &self,
+        func: &str,
+        args: &[Arg],
+        locals: &mut HashMap<String, Value>,
+        depth: usize,
+    ) -> RtResult<Value> {
+        let vals = self.eval_args(args, locals, depth)?;
+        match func {
+            "Machine" => {
+                if vals.len() != 1 {
+                    return Err(rt("Machine(KIND) takes one argument"));
+                }
+                let kind_name = match &vals[0] {
+                    Value::Str(s) => s.clone(),
+                    other => return Err(rt(format!("Machine() expects a kind, got {}", other.kind()))),
+                };
+                let kind = ProcKind::parse(&kind_name).map_err(rt)?;
+                Ok(Value::Space(ProcSpace::machine(&self.desc, kind)))
+            }
+            "tuple" => {
+                let mut v = Vec::with_capacity(vals.len());
+                for val in vals {
+                    match val {
+                        Value::Int(i) => v.push(i),
+                        Value::Tuple(t) => v.extend(t.0),
+                        other => {
+                            return Err(rt(format!("tuple() element must be int, got {}", other.kind())))
+                        }
+                    }
+                }
+                Ok(Value::Tuple(Tuple(v)))
+            }
+            "len" => {
+                if vals.len() != 1 {
+                    return Err(rt("len(x) takes one argument"));
+                }
+                match &vals[0] {
+                    Value::Tuple(t) => Ok(Value::Int(t.dim() as i64)),
+                    other => Err(rt(format!("len() expects Tuple, got {}", other.kind()))),
+                }
+            }
+            "abs" => {
+                if vals.len() != 1 {
+                    return Err(rt("abs(x) takes one argument"));
+                }
+                Ok(Value::Int(vals[0].as_int().map_err(rt)?.abs()))
+            }
+            "min" | "max" => {
+                if vals.is_empty() {
+                    return Err(rt(format!("{func}() needs arguments")));
+                }
+                let mut acc: Option<i64> = None;
+                let mut fold = |x: i64| {
+                    acc = Some(match acc {
+                        None => x,
+                        Some(a) => {
+                            if func == "min" {
+                                a.min(x)
+                            } else {
+                                a.max(x)
+                            }
+                        }
+                    })
+                };
+                for v in &vals {
+                    match v {
+                        Value::Int(i) => fold(*i),
+                        Value::Tuple(t) => t.0.iter().for_each(|&x| fold(x)),
+                        other => {
+                            return Err(rt(format!("{func}() expects ints/Tuples, got {}", other.kind())))
+                        }
+                    }
+                }
+                Ok(Value::Int(acc.unwrap()))
+            }
+            "prod" => {
+                if vals.len() != 1 {
+                    return Err(rt("prod(t) takes one argument"));
+                }
+                Ok(Value::Int(vals[0].as_tuple().map_err(rt)?.product()))
+            }
+            "linearize" => {
+                // linearize(point, extent): row-major helper.
+                if vals.len() != 2 {
+                    return Err(rt("linearize(point, extent) takes two arguments"));
+                }
+                let p = vals[0].as_tuple().map_err(rt)?;
+                let e = vals[1].as_tuple().map_err(rt)?;
+                if p.dim() != e.dim() {
+                    return Err(rt("linearize: arity mismatch"));
+                }
+                Ok(Value::Int(p.linearize(e)))
+            }
+            _ => self.call(func, vals, depth + 1),
+        }
+    }
+
+    fn eval_method(
+        &self,
+        recv: &Value,
+        name: &str,
+        args: &[Arg],
+        locals: &mut HashMap<String, Value>,
+        depth: usize,
+    ) -> RtResult<Value> {
+        let vals = self.eval_args(args, locals, depth)?;
+        let space = recv.as_space().map_err(|e| {
+            rt(format!("method '{name}': {e}"))
+        })?;
+        let need = |n: usize| -> RtResult<()> {
+            if vals.len() == n {
+                Ok(())
+            } else {
+                Err(rt(format!(".{name}() takes {n} arguments, got {}", vals.len())))
+            }
+        };
+        let int_at = |i: usize| -> RtResult<i64> { vals[i].as_int().map_err(rt) };
+        match name {
+            "split" => {
+                need(2)?;
+                let s = space
+                    .split(int_at(0)? as usize, int_at(1)?)
+                    .map_err(rt)?;
+                Ok(Value::Space(s))
+            }
+            "merge" => {
+                need(2)?;
+                let s = space
+                    .merge(int_at(0)? as usize, int_at(1)? as usize)
+                    .map_err(rt)?;
+                Ok(Value::Space(s))
+            }
+            "swap" => {
+                need(2)?;
+                let s = space
+                    .swap(int_at(0)? as usize, int_at(1)? as usize)
+                    .map_err(rt)?;
+                Ok(Value::Space(s))
+            }
+            "slice" => {
+                need(3)?;
+                let s = space
+                    .slice(int_at(0)? as usize, int_at(1)?, int_at(2)?)
+                    .map_err(rt)?;
+                Ok(Value::Space(s))
+            }
+            "decompose" => {
+                need(2)?;
+                let dim = int_at(0)? as usize;
+                let targets = vals[1].as_tuple().map_err(rt)?;
+                let s = space.decompose(dim, targets).map_err(rt)?;
+                Ok(Value::Space(s))
+            }
+            _ => Err(rt(format!("unknown machine method '.{name}'"))),
+        }
+    }
+
+    fn eval_index(
+        &self,
+        recv: &Value,
+        args: &[IndexArg],
+        locals: &mut HashMap<String, Value>,
+        depth: usize,
+    ) -> RtResult<Value> {
+        // Expand args: slices are only supported as a single index arg.
+        if args.len() == 1 {
+            if let IndexArg::Slice { lo, hi } = &args[0] {
+                let lo_v = match lo {
+                    Some(e) => self.eval(e, locals, depth)?.as_int().map_err(rt)? as isize,
+                    None => 0,
+                };
+                let hi_v = match hi {
+                    Some(e) => self.eval(e, locals, depth)?.as_int().map_err(rt)? as isize,
+                    None => isize::MAX,
+                };
+                return match recv {
+                    // Slicing a machine space yields the size prefix tuple
+                    // (Fig 12: `ispace / m_4d[:-1]`).
+                    Value::Space(s) => {
+                        let hi_v = if hi_v == isize::MAX { s.dim() as isize } else { hi_v };
+                        Ok(Value::Tuple(s.size().slice(lo_v, hi_v)))
+                    }
+                    Value::Tuple(t) => {
+                        let hi_v = if hi_v == isize::MAX { t.dim() as isize } else { hi_v };
+                        Ok(Value::Tuple(t.slice(lo_v, hi_v)))
+                    }
+                    other => Err(rt(format!("cannot slice {}", other.kind()))),
+                };
+            }
+        }
+        // Otherwise gather integer coordinates (splats expand).
+        let mut coords = Vec::new();
+        for a in args {
+            match a {
+                IndexArg::Plain(e) => coords.push(self.eval(e, locals, depth)?.as_int().map_err(rt)?),
+                IndexArg::Splat(e) => {
+                    let v = self.eval(e, locals, depth)?;
+                    coords.extend(v.as_tuple().map_err(rt)?.0.iter().copied());
+                }
+                IndexArg::Slice { .. } => {
+                    return Err(rt("slice must be the only index argument"))
+                }
+            }
+        }
+        match recv {
+            Value::Tuple(t) => {
+                if coords.len() != 1 {
+                    return Err(rt(format!("tuple index takes 1 coordinate, got {}", coords.len())));
+                }
+                let mut i = coords[0];
+                if i < 0 {
+                    i += t.dim() as i64;
+                }
+                if i < 0 || i as usize >= t.dim() {
+                    return Err(rt(format!("tuple index {} out of range for {t:?}", coords[0])));
+                }
+                Ok(Value::Int(t[i as usize]))
+            }
+            Value::Space(s) => {
+                let idx = Tuple(coords);
+                let p = s.index(&idx).map_err(rt)?;
+                Ok(Value::Proc(p))
+            }
+            other => Err(rt(format!("cannot index {}", other.kind()))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc(nodes: usize, gpus: usize) -> MachineDesc {
+        let mut d = MachineDesc::paper_testbed(nodes);
+        d.gpus_per_node = gpus;
+        d
+    }
+
+    fn interp(src: &str, nodes: usize, gpus: usize) -> Interp {
+        Interp::from_source(src, &desc(nodes, gpus)).unwrap()
+    }
+
+    const BLOCK2D: &str = "\
+m = Machine(GPU)
+def block2D(Tuple ipoint, Tuple ispace):
+    idx = ipoint * m.size / ispace
+    return m[*idx]
+";
+
+    #[test]
+    fn fig3_block2d_full_grid() {
+        let it = interp(BLOCK2D, 2, 2);
+        // (2,3) → node 0 gpu 1 (Fig 3)
+        let p = it.map_point("block2D", &Tuple::from([2, 3]), &Tuple::from([6, 6])).unwrap();
+        assert_eq!((p.node, p.local), (0, 1));
+        // corners
+        let p = it.map_point("block2D", &Tuple::from([0, 0]), &Tuple::from([6, 6])).unwrap();
+        assert_eq!((p.node, p.local), (0, 0));
+        let p = it.map_point("block2D", &Tuple::from([5, 5]), &Tuple::from([6, 6])).unwrap();
+        assert_eq!((p.node, p.local), (1, 1));
+    }
+
+    #[test]
+    fn fig4_linear_cyclic() {
+        let src = "\
+m = Machine(GPU)
+m1 = m.merge(0, 1)
+def linearCyclic(Tuple ipoint, Tuple ispace):
+    lin = ipoint[0] * ispace[1] + ipoint[1]
+    return m1[lin % m1.size[0]]
+";
+        let it = interp(src, 2, 2);
+        let ispace = Tuple::from([4, 4]);
+        // Linearized % 4 round-robins across all 4 processors: the points
+        // (0,0),(0,1),(0,2),(0,3) linearize to 0..3 and hit distinct procs.
+        let mut seen = std::collections::HashSet::new();
+        for y in 0..4i64 {
+            let p = it.map_point("linearCyclic", &Tuple::from([0, y]), &ispace).unwrap();
+            seen.insert((p.node, p.local));
+        }
+        assert_eq!(seen.len(), 4, "4 columns hit 4 distinct procs");
+        // and the subdiagonal (k+1, k) all maps to one processor, since
+        // lin = (k+1)*4 + k ≡ k ... actually 5k+4 ≡ k (mod 4): distinct.
+        // The paper's Fig 4 shading instead follows from its own ispace;
+        // the invariant we check is determinism + full coverage.
+        let p1 = it.map_point("linearCyclic", &Tuple::from([1, 0]), &ispace).unwrap();
+        let p2 = it.map_point("linearCyclic", &Tuple::from([1, 0]), &ispace).unwrap();
+        assert_eq!((p1.node, p1.local), (p2.node, p2.local), "deterministic");
+    }
+
+    #[test]
+    fn fig7_cyclic2d() {
+        let src = "\
+m = Machine(GPU)
+def cyclic2D(Tuple ipoint, Tuple ispace):
+    idx = ipoint % m.size
+    return m[*idx]
+";
+        let it = interp(src, 2, 2);
+        let ispace = Tuple::from([6, 6]);
+        let p00 = it.map_point("cyclic2D", &Tuple::from([0, 0]), &ispace).unwrap();
+        let p22 = it.map_point("cyclic2D", &Tuple::from([2, 2]), &ispace).unwrap();
+        assert_eq!((p00.node, p00.local), (p22.node, p22.local), "period 2");
+        let p01 = it.map_point("cyclic2D", &Tuple::from([0, 1]), &ispace).unwrap();
+        assert_ne!((p00.node, p00.local), (p01.node, p01.local));
+    }
+
+    #[test]
+    fn fig12_hierarchical_block2d() {
+        // Cannon/PUMMA/SUMMA mapper: decompose nodes over the 2D iteration
+        // space, then decompose GPUs over the per-node subspace.
+        let src = "\
+m_2d = Machine(GPU)
+def block_primitive(Tuple ipoint, Tuple ispace, Tuple pspace, int dim1, int dim2):
+    return ipoint[dim1] * pspace[dim2] / ispace[dim1]
+def cyclic_primitive(Tuple ipoint, Tuple ispace, Tuple pspace, int dim1, int dim2):
+    return ipoint[dim1] % pspace[dim2]
+def hierarchical_block2D(Tuple ipoint, Tuple ispace):
+    m_3d = m_2d.decompose(0, ispace)
+    m_4d = m_3d.decompose(2, ispace / m_3d[:-1])
+    upper = tuple(block_primitive(ipoint, ispace, m_4d.size, i, i) for i in (0, 1))
+    lower = tuple(cyclic_primitive(ipoint, ispace, m_4d.size, i, i + 2) for i in (0, 1))
+    return m_4d[*upper, *lower]
+";
+        let it = interp(src, 4, 4);
+        let ispace = Tuple::from([8, 8]);
+        // All 64 points map somewhere valid; every one of the 16 GPUs is hit.
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..8i64 {
+            for y in 0..8i64 {
+                let p = it.map_point("hierarchical_block2D", &Tuple::from([x, y]), &ispace).unwrap();
+                seen.insert((p.node, p.local));
+            }
+        }
+        assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn johnson_ternary() {
+        let src = "\
+m_2d = Machine(GPU)
+def conditional_linearize3D(Tuple ipoint, Tuple ispace):
+    grid_size = ispace[0] > ispace[2] ? ispace[0] : ispace[2]
+    linearized = ipoint[0] + ipoint[1] * grid_size + ipoint[2] * grid_size * grid_size
+    return m_2d[linearized % m_2d.size[0], 0]
+";
+        let it = interp(src, 4, 4);
+        let p = it
+            .map_point("conditional_linearize3D", &Tuple::from([1, 0, 0]), &Tuple::from([2, 2, 2]))
+            .unwrap();
+        assert_eq!((p.node, p.local), (1, 0));
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        let it = interp(BLOCK2D, 2, 2);
+        // wrong function name
+        let e = it.map_point("nope", &Tuple::from([0, 0]), &Tuple::from([2, 2])).unwrap_err();
+        assert!(e.msg.contains("undefined function"));
+        // arity mismatch ispace
+        let e = it.map_point("block2D", &Tuple::from([0]), &Tuple::from([2, 2])).unwrap_err();
+        assert!(e.to_string().contains("arity"), "{e}");
+    }
+
+    #[test]
+    fn non_proc_return_rejected() {
+        let src = "\
+m = Machine(GPU)
+def bad(Tuple p, Tuple s):
+    return 42
+";
+        let it = interp(src, 2, 2);
+        let e = it.map_point("bad", &Tuple::from([0, 0]), &Tuple::from([2, 2])).unwrap_err();
+        assert!(e.msg.contains("must return a processor"));
+    }
+
+    #[test]
+    fn negative_tuple_index() {
+        let src = "\
+m = Machine(GPU)
+def f(Tuple p, Tuple s):
+    return m[p[-1] % m.size[0], 0]
+";
+        let it = interp(src, 2, 2);
+        let p = it.map_point("f", &Tuple::from([0, 3]), &Tuple::from([4, 4])).unwrap();
+        assert_eq!(p.node, 1);
+    }
+
+    #[test]
+    fn recursion_limited() {
+        let src = "\
+m = Machine(GPU)
+def f(Tuple p, Tuple s):
+    return f(p, s)
+";
+        let it = interp(src, 2, 2);
+        let e = it.map_point("f", &Tuple::from([0, 0]), &Tuple::from([2, 2])).unwrap_err();
+        assert!(e.msg.contains("depth limit"), "{e}");
+    }
+
+    #[test]
+    fn helper_functions_and_builtins() {
+        let src = "\
+m = Machine(GPU)
+def helper(Tuple p):
+    return min(p) + max(p) + len(p) + abs(0 - 2)
+def f(Tuple p, Tuple s):
+    v = helper(p)
+    return m[v % 2, 0]
+";
+        let it = interp(src, 2, 2);
+        // p = (1,3): 1 + 3 + 2 + 2 = 8 → node 0
+        let p = it.map_point("f", &Tuple::from([1, 3]), &Tuple::from([4, 4])).unwrap();
+        assert_eq!(p.node, 0);
+    }
+
+    #[test]
+    fn global_space_transforms_are_bound_once() {
+        let src = "\
+m = Machine(GPU)
+m1 = m.merge(0, 1).split(0, 4)
+def f(Tuple p, Tuple s):
+    idx = p * m1.size / s
+    return m1[*idx]
+";
+        let it = interp(src, 2, 2);
+        assert!(it.has_func("f"));
+        let p = it.map_point("f", &Tuple::from([5, 0]), &Tuple::from([6, 6])).unwrap();
+        // row 5 of 6 on 4-row blocks → merged idx 3 → (node 1, gpu 1)
+        assert_eq!((p.node, p.local), (1, 1));
+    }
+}

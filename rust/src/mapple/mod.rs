@@ -1,0 +1,19 @@
+//! The Mapple DSL front-end (paper §2–§5).
+//!
+//! Pipeline: source text → [`token::lex`] → [`parser::parse`] →
+//! [`interp::Interp`] (bound to a [`crate::machine::MachineDesc`]) →
+//! [`program::MapperSpec`] (directive tables). The mapper translation
+//! layer (`crate::mapper::translate`) then adapts a `MapperSpec` to the
+//! low-level 19-callback mapper interface, mirroring how the paper
+//! translates Mapple into Legion's C++ mapping interface.
+
+pub mod ast;
+pub mod interp;
+pub mod parser;
+pub mod program;
+pub mod token;
+pub mod value;
+
+pub use interp::Interp;
+pub use parser::parse;
+pub use program::{LayoutProps, MapperSpec};

@@ -1,0 +1,705 @@
+//! Recursive-descent parser for the Mapple DSL.
+
+use super::ast::*;
+use super::token::{lex, Spanned, Tok};
+use std::fmt;
+
+/// Parse error with source line.
+#[derive(Debug, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+type PResult<T> = Result<T, ParseError>;
+
+/// Parse a Mapple source file into a [`Program`].
+pub fn parse(src: &str) -> PResult<Program> {
+    let toks = lex(src).map_err(|e| ParseError { line: e.line, msg: e.msg })?;
+    let mut p = Parser { toks, pos: 0 };
+    p.program()
+}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+const DIRECTIVES: &[&str] = &[
+    "IndexTaskMap",
+    "TaskMap",
+    "Region",
+    "Layout",
+    "GarbageCollect",
+    "Backpressure",
+];
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+
+    fn line(&self) -> usize {
+        self.toks[self.pos].line
+    }
+
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok) -> PResult<()> {
+        if self.peek() == want {
+            self.next();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{want}', found '{}'", self.peek())))
+        }
+    }
+
+    fn err(&self, msg: String) -> ParseError {
+        ParseError { line: self.line(), msg }
+    }
+
+    fn ident(&mut self) -> PResult<String> {
+        match self.peek().clone() {
+            Tok::Ident(s) => {
+                self.next();
+                Ok(s)
+            }
+            other => Err(self.err(format!("expected identifier, found '{other}'"))),
+        }
+    }
+
+    fn int(&mut self) -> PResult<i64> {
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.next();
+                Ok(v)
+            }
+            other => Err(self.err(format!("expected integer, found '{other}'"))),
+        }
+    }
+
+    fn skip_newlines(&mut self) {
+        while matches!(self.peek(), Tok::Newline) {
+            self.next();
+        }
+    }
+
+    // ---- top level --------------------------------------------------------
+
+    fn program(&mut self) -> PResult<Program> {
+        let mut items = Vec::new();
+        loop {
+            self.skip_newlines();
+            match self.peek().clone() {
+                Tok::Eof => break,
+                Tok::Def => items.push(Item::Def(self.funcdef()?)),
+                Tok::Ident(name) if DIRECTIVES.contains(&name.as_str()) => {
+                    items.push(Item::Directive(self.directive(&name)?));
+                }
+                Tok::Ident(name) if *self.peek2() == Tok::Assign => {
+                    let line = self.line();
+                    self.next(); // name
+                    self.next(); // '='
+                    let expr = self.expr()?;
+                    self.expect(&Tok::Newline)?;
+                    items.push(Item::Assign { name, expr, line });
+                }
+                other => {
+                    return Err(self.err(format!(
+                        "expected definition, directive, or assignment; found '{other}'"
+                    )))
+                }
+            }
+        }
+        Ok(Program { items })
+    }
+
+    fn directive(&mut self, name: &str) -> PResult<Directive> {
+        let line = self.line();
+        self.next(); // directive keyword
+        let d = match name {
+            "IndexTaskMap" => {
+                let task = self.ident()?;
+                let func = self.ident()?;
+                Directive::IndexTaskMap { task, func, line }
+            }
+            "TaskMap" => {
+                let task = self.ident()?;
+                let proc = self.ident()?;
+                Directive::TaskMap { task, proc, line }
+            }
+            "Region" => {
+                let task = self.ident()?;
+                let arg = self.arg_index()?;
+                let proc = self.ident()?;
+                let mem = self.ident()?;
+                Directive::Region { task, arg, proc, mem, line }
+            }
+            "Layout" => {
+                let task = self.ident()?;
+                let arg = self.arg_index()?;
+                let proc = self.ident()?;
+                let mut props = Vec::new();
+                while let Tok::Ident(p) = self.peek().clone() {
+                    self.next();
+                    props.push(p);
+                }
+                if props.is_empty() {
+                    return Err(self.err("Layout needs at least one property".into()));
+                }
+                Directive::Layout { task, arg, proc, props, line }
+            }
+            "GarbageCollect" => {
+                let task = self.ident()?;
+                let arg = self.arg_index()?;
+                Directive::GarbageCollect { task, arg, line }
+            }
+            "Backpressure" => {
+                let task = self.ident()?;
+                let limit = self.int()? as usize;
+                Directive::Backpressure { task, limit, line }
+            }
+            _ => unreachable!(),
+        };
+        self.expect(&Tok::Newline)?;
+        Ok(d)
+    }
+
+    /// Argument designator: `arg0`, `arg1`, ... or a bare integer.
+    fn arg_index(&mut self) -> PResult<usize> {
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.next();
+                Ok(v as usize)
+            }
+            Tok::Ident(s) if s.starts_with("arg") => {
+                let n: usize = s[3..]
+                    .parse()
+                    .map_err(|_| self.err(format!("bad argument designator '{s}'")))?;
+                self.next();
+                Ok(n)
+            }
+            other => Err(self.err(format!("expected argN or integer, found '{other}'"))),
+        }
+    }
+
+    fn funcdef(&mut self) -> PResult<FuncDef> {
+        let line = self.line();
+        self.expect(&Tok::Def)?;
+        let name = self.ident()?;
+        self.expect(&Tok::LParen)?;
+        let mut params = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                // `Tuple point` or `int dim` or bare `point`
+                let first = self.ident()?;
+                let param = if let Tok::Ident(_) = self.peek() {
+                    let pname = self.ident()?;
+                    Param { ty: Some(first), name: pname }
+                } else {
+                    Param { ty: None, name: first }
+                };
+                params.push(param);
+                if *self.peek() == Tok::Comma {
+                    self.next();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(&Tok::RParen)?;
+        let body = self.suite()?;
+        Ok(FuncDef { name, params, body, line })
+    }
+
+    /// `':' NEWLINE INDENT stmt+ DEDENT`
+    fn suite(&mut self) -> PResult<Vec<Stmt>> {
+        self.expect(&Tok::Colon)?;
+        self.expect(&Tok::Newline)?;
+        self.expect(&Tok::Indent)?;
+        let mut body = Vec::new();
+        loop {
+            self.skip_newlines();
+            if *self.peek() == Tok::Dedent {
+                self.next();
+                break;
+            }
+            if *self.peek() == Tok::Eof {
+                break;
+            }
+            body.push(self.stmt()?);
+        }
+        if body.is_empty() {
+            return Err(self.err("empty block".into()));
+        }
+        Ok(body)
+    }
+
+    fn stmt(&mut self) -> PResult<Stmt> {
+        let line = self.line();
+        match self.peek().clone() {
+            Tok::Return => {
+                self.next();
+                let expr = self.expr()?;
+                self.expect(&Tok::Newline)?;
+                Ok(Stmt::Return { expr, line })
+            }
+            Tok::If => {
+                self.next();
+                let mut arms = Vec::new();
+                let cond = self.expr()?;
+                let body = self.suite()?;
+                arms.push((cond, body));
+                let mut else_body = None;
+                loop {
+                    // `elif` / `else` arrive after the suite's DEDENT.
+                    match self.peek().clone() {
+                        Tok::Elif => {
+                            self.next();
+                            let c = self.expr()?;
+                            let b = self.suite()?;
+                            arms.push((c, b));
+                        }
+                        Tok::Else => {
+                            self.next();
+                            else_body = Some(self.suite()?);
+                            break;
+                        }
+                        _ => break,
+                    }
+                }
+                Ok(Stmt::If { arms, else_body, line })
+            }
+            Tok::Ident(name) if *self.peek2() == Tok::Assign => {
+                self.next();
+                self.next();
+                let expr = self.expr()?;
+                self.expect(&Tok::Newline)?;
+                Ok(Stmt::Assign { name, expr, line })
+            }
+            _ => {
+                let expr = self.expr()?;
+                self.expect(&Tok::Newline)?;
+                Ok(Stmt::Expr { expr, line })
+            }
+        }
+    }
+
+    // ---- expressions -------------------------------------------------------
+
+    fn expr(&mut self) -> PResult<Expr> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> PResult<Expr> {
+        let cond = self.or_expr()?;
+        if *self.peek() == Tok::Question {
+            self.next();
+            let then = self.expr()?;
+            self.expect(&Tok::Colon)?;
+            let otherwise = self.expr()?;
+            Ok(Expr::Ternary { cond: Box::new(cond), then: Box::new(then), otherwise: Box::new(otherwise) })
+        } else {
+            Ok(cond)
+        }
+    }
+
+    fn or_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.and_expr()?;
+        while *self.peek() == Tok::Or {
+            self.next();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary { op: BinOp::Or, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while *self.peek() == Tok::And {
+            self.next();
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Binary { op: BinOp::And, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> PResult<Expr> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Eq => BinOp::Eq,
+            Tok::Ne => BinOp::Ne,
+            Tok::Lt => BinOp::Lt,
+            Tok::Le => BinOp::Le,
+            Tok::Gt => BinOp::Gt,
+            Tok::Ge => BinOp::Ge,
+            _ => return Ok(lhs),
+        };
+        self.next();
+        let rhs = self.add_expr()?;
+        Ok(Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) })
+    }
+
+    fn add_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> PResult<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> PResult<Expr> {
+        match self.peek() {
+            Tok::Minus => {
+                self.next();
+                let inner = self.unary_expr()?;
+                Ok(Expr::Unary { op: UnOp::Neg, inner: Box::new(inner) })
+            }
+            Tok::Not => {
+                self.next();
+                let inner = self.unary_expr()?;
+                Ok(Expr::Unary { op: UnOp::Not, inner: Box::new(inner) })
+            }
+            _ => self.postfix_expr(),
+        }
+    }
+
+    fn postfix_expr(&mut self) -> PResult<Expr> {
+        let mut e = self.atom()?;
+        loop {
+            match self.peek().clone() {
+                Tok::Dot => {
+                    self.next();
+                    let name = self.ident()?;
+                    if *self.peek() == Tok::LParen {
+                        let args = self.call_args()?;
+                        e = Expr::Method { recv: Box::new(e), name, args };
+                    } else {
+                        e = Expr::Attr { recv: Box::new(e), name };
+                    }
+                }
+                Tok::LBracket => {
+                    self.next();
+                    let mut args = Vec::new();
+                    if *self.peek() != Tok::RBracket {
+                        loop {
+                            args.push(self.index_arg()?);
+                            if *self.peek() == Tok::Comma {
+                                self.next();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(&Tok::RBracket)?;
+                    if args.is_empty() {
+                        return Err(self.err("empty index".into()));
+                    }
+                    e = Expr::Index { recv: Box::new(e), args };
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn index_arg(&mut self) -> PResult<IndexArg> {
+        if *self.peek() == Tok::Star {
+            self.next();
+            return Ok(IndexArg::Splat(self.expr()?));
+        }
+        if *self.peek() == Tok::Colon {
+            self.next();
+            let hi = if matches!(self.peek(), Tok::RBracket | Tok::Comma) {
+                None
+            } else {
+                Some(self.expr()?)
+            };
+            return Ok(IndexArg::Slice { lo: None, hi });
+        }
+        let first = self.expr()?;
+        if *self.peek() == Tok::Colon {
+            self.next();
+            let hi = if matches!(self.peek(), Tok::RBracket | Tok::Comma) {
+                None
+            } else {
+                Some(self.expr()?)
+            };
+            Ok(IndexArg::Slice { lo: Some(first), hi })
+        } else {
+            Ok(IndexArg::Plain(first))
+        }
+    }
+
+    fn call_args(&mut self) -> PResult<Vec<Arg>> {
+        self.expect(&Tok::LParen)?;
+        let mut args = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                if *self.peek() == Tok::Star {
+                    self.next();
+                    args.push(Arg::Splat(self.expr()?));
+                } else {
+                    args.push(Arg::Plain(self.expr()?));
+                }
+                if *self.peek() == Tok::Comma {
+                    self.next();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(&Tok::RParen)?;
+        Ok(args)
+    }
+
+    fn atom(&mut self) -> PResult<Expr> {
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.next();
+                Ok(Expr::Int(v))
+            }
+            Tok::Str(s) => {
+                self.next();
+                Ok(Expr::Str(s))
+            }
+            Tok::Ident(name) => {
+                self.next();
+                if *self.peek() == Tok::LParen {
+                    // Special-case the `tuple( expr for v in iter )` builder.
+                    if name == "tuple" {
+                        self.expect(&Tok::LParen)?;
+                        let elem = self.expr()?;
+                        if *self.peek() == Tok::For {
+                            self.next();
+                            let var = self.ident()?;
+                            self.expect(&Tok::In)?;
+                            let iter = self.expr()?;
+                            self.expect(&Tok::RParen)?;
+                            return Ok(Expr::TupleGen {
+                                elem: Box::new(elem),
+                                var,
+                                iter: Box::new(iter),
+                            });
+                        }
+                        // plain call: tuple(x), tuple(x, y) — collect rest
+                        let mut args = vec![Arg::Plain(elem)];
+                        while *self.peek() == Tok::Comma {
+                            self.next();
+                            args.push(Arg::Plain(self.expr()?));
+                        }
+                        self.expect(&Tok::RParen)?;
+                        return Ok(Expr::Call { func: name, args });
+                    }
+                    let args = self.call_args()?;
+                    Ok(Expr::Call { func: name, args })
+                } else {
+                    Ok(Expr::Name(name))
+                }
+            }
+            Tok::LParen => {
+                self.next();
+                let first = self.expr()?;
+                if *self.peek() == Tok::Comma {
+                    let mut items = vec![first];
+                    while *self.peek() == Tok::Comma {
+                        self.next();
+                        if *self.peek() == Tok::RParen {
+                            break; // trailing comma
+                        }
+                        items.push(self.expr()?);
+                    }
+                    self.expect(&Tok::RParen)?;
+                    Ok(Expr::TupleLit(items))
+                } else {
+                    self.expect(&Tok::RParen)?;
+                    Ok(first) // grouping
+                }
+            }
+            other => Err(self.err(format!("unexpected token '{other}' in expression"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fig1_mapper() {
+        let src = "\
+m = Machine(GPU)
+def block2d(Tuple point, Tuple space):
+    idx = point * m.size / space
+    return m[*idx]
+IndexTaskMap loop0 block2d
+Region task_init arg0 GPU FBMEM
+Layout task_finish arg1 CPU C_order
+GarbageCollect systolic arg2
+Backpressure systolic 1
+";
+        let p = parse(src).unwrap();
+        assert_eq!(p.items.len(), 7);
+        assert_eq!(p.funcs().count(), 1);
+        assert_eq!(p.directives().count(), 5);
+        let f = p.funcs().next().unwrap();
+        assert_eq!(f.name, "block2d");
+        assert_eq!(f.params.len(), 2);
+        assert_eq!(f.params[0].ty.as_deref(), Some("Tuple"));
+        assert_eq!(f.body.len(), 2);
+    }
+
+    #[test]
+    fn parses_method_chains_and_splats() {
+        let src = "\
+def f(Tuple p, Tuple s):
+    m1 = m.merge(0, 1).split(0, 4)
+    idx = p % m1.size
+    return m1[*idx]
+";
+        let p = parse(src).unwrap();
+        let f = p.funcs().next().unwrap();
+        match &f.body[0] {
+            Stmt::Assign { expr: Expr::Method { name, .. }, .. } => assert_eq!(name, "split"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_tuple_generator() {
+        let src = "\
+def f(Tuple p, Tuple s):
+    upper = tuple(block(p, s, m, i, i) for i in (0, 1, 2))
+    return m[*upper]
+";
+        let p = parse(src).unwrap();
+        let f = p.funcs().next().unwrap();
+        match &f.body[0] {
+            Stmt::Assign { expr: Expr::TupleGen { var, .. }, .. } => assert_eq!(var, "i"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_ternary_johnson() {
+        let src = "\
+def f(Tuple p, Tuple s):
+    g = s[0] > s[2] ? s[0] : s[2]
+    return m[g % 2, 0]
+";
+        let p = parse(src).unwrap();
+        let f = p.funcs().next().unwrap();
+        assert!(matches!(&f.body[0], Stmt::Assign { expr: Expr::Ternary { .. }, .. }));
+    }
+
+    #[test]
+    fn parses_slice_index() {
+        let src = "\
+def f(Tuple p, Tuple s):
+    sub = s / m[:-1]
+    return m[0, 0]
+";
+        let p = parse(src).unwrap();
+        let f = p.funcs().next().unwrap();
+        match &f.body[0] {
+            Stmt::Assign { expr: Expr::Binary { rhs, .. }, .. } => match rhs.as_ref() {
+                Expr::Index { args, .. } => {
+                    assert!(matches!(&args[0], IndexArg::Slice { lo: None, hi: Some(_) }))
+                }
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_if_elif_else() {
+        let src = "\
+def f(Tuple p, Tuple s):
+    if p[0] == 0:
+        return m[0, 0]
+    elif p[0] == 1:
+        return m[0, 1]
+    else:
+        return m[1, 0]
+";
+        let p = parse(src).unwrap();
+        let f = p.funcs().next().unwrap();
+        match &f.body[0] {
+            Stmt::If { arms, else_body, .. } => {
+                assert_eq!(arms.len(), 2);
+                assert!(else_body.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn directive_arg_forms() {
+        let p = parse("Region t 0 GPU FBMEM\nRegion t arg1 CPU SYSMEM\n").unwrap();
+        let ds: Vec<_> = p.directives().collect();
+        assert!(matches!(ds[0], Directive::Region { arg: 0, .. }));
+        assert!(matches!(ds[1], Directive::Region { arg: 1, .. }));
+    }
+
+    #[test]
+    fn errors_have_lines() {
+        let e = parse("x = 1\ny = = 2\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("def f():\n").is_err(), "missing body");
+        assert!(parse("Backpressure t notanint\n").is_err());
+    }
+
+    #[test]
+    fn precedence() {
+        // 1 + 2 * 3 parses as 1 + (2*3)
+        let p = parse("x = 1 + 2 * 3\n").unwrap();
+        match &p.items[0] {
+            Item::Assign { expr: Expr::Binary { op: BinOp::Add, rhs, .. }, .. } => {
+                assert!(matches!(rhs.as_ref(), Expr::Binary { op: BinOp::Mul, .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Compiled Mapple mapper: directive tables + bound interpreter.
+//!
+//! This is the artifact the §5.2 translation consumes: a queryable object
+//! answering, for each task, *which processor* each iteration point maps
+//! to (IndexTaskMap), *which processor kind* runs it (TaskMap), *where*
+//! each region argument lives (Region/DataMap), *how* it is laid out
+//! (Layout), and the GC / backpressure policies.
+
+use super::ast::{Directive, Program};
+use super::interp::{Interp, RtError};
+use super::parser::parse;
+use crate::machine::point::Tuple;
+use crate::machine::topology::{MachineDesc, MemKind, ProcId, ProcKind};
+use std::collections::{HashMap, HashSet};
+
+/// Data layout constraints (paper §7.1).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayoutProps {
+    /// C (row-major) vs Fortran (column-major) ordering.
+    pub fortran_order: bool,
+    /// Struct-of-arrays vs array-of-structs.
+    pub soa: bool,
+    /// Alignment requirement in bytes (0 = unconstrained).
+    pub align: usize,
+}
+
+impl Default for LayoutProps {
+    fn default() -> Self {
+        LayoutProps { fortran_order: false, soa: true, align: 0 }
+    }
+}
+
+impl LayoutProps {
+    fn parse(props: &[String]) -> Result<LayoutProps, String> {
+        let mut out = LayoutProps::default();
+        for p in props {
+            match p.as_str() {
+                "C_order" | "C" => out.fortran_order = false,
+                "F_order" | "F" | "Fortran" => out.fortran_order = true,
+                "SOA" => out.soa = true,
+                "AOS" => out.soa = false,
+                s if s.starts_with("align") => {
+                    out.align = s[5..]
+                        .parse()
+                        .map_err(|_| format!("bad alignment property '{s}'"))?;
+                }
+                other => return Err(format!("unknown layout property '{other}'")),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A fully compiled mapper bound to a machine.
+pub struct MapperSpec {
+    pub interp: Interp,
+    /// task → mapping function name.
+    pub index_task_maps: HashMap<String, String>,
+    /// task → processor kind.
+    pub task_maps: HashMap<String, ProcKind>,
+    /// (task, arg) → (processor kind scope, memory kind).
+    pub regions: HashMap<(String, usize), (ProcKind, MemKind)>,
+    /// (task, arg) → layout constraints.
+    pub layouts: HashMap<(String, usize), (ProcKind, LayoutProps)>,
+    /// (task, arg) pairs to eagerly garbage-collect.
+    pub gc: HashSet<(String, usize)>,
+    /// task → max in-flight launches.
+    pub backpressure: HashMap<String, usize>,
+}
+
+impl std::fmt::Debug for MapperSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MapperSpec")
+            .field("index_task_maps", &self.index_task_maps)
+            .field("task_maps", &self.task_maps)
+            .field("regions", &self.regions)
+            .field("gc", &self.gc)
+            .field("backpressure", &self.backpressure)
+            .finish_non_exhaustive()
+    }
+}
+
+impl MapperSpec {
+    /// Parse + bind + table-build in one step.
+    pub fn compile(src: &str, desc: &MachineDesc) -> Result<MapperSpec, String> {
+        let prog = parse(src).map_err(|e| e.to_string())?;
+        Self::from_program(&prog, desc)
+    }
+
+    pub fn from_program(prog: &Program, desc: &MachineDesc) -> Result<MapperSpec, String> {
+        let interp = Interp::new(prog, desc).map_err(|e| e.to_string())?;
+        let mut spec = MapperSpec {
+            interp,
+            index_task_maps: HashMap::new(),
+            task_maps: HashMap::new(),
+            regions: HashMap::new(),
+            layouts: HashMap::new(),
+            gc: HashSet::new(),
+            backpressure: HashMap::new(),
+        };
+        for d in prog.directives() {
+            match d {
+                Directive::IndexTaskMap { task, func, line } => {
+                    if !spec.interp.has_func(func) {
+                        return Err(format!(
+                            "line {line}: IndexTaskMap references undefined function '{func}'"
+                        ));
+                    }
+                    if spec.index_task_maps.insert(task.clone(), func.clone()).is_some() {
+                        return Err(format!("line {line}: duplicate IndexTaskMap for '{task}'"));
+                    }
+                }
+                Directive::TaskMap { task, proc, line } => {
+                    let kind =
+                        ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?;
+                    spec.task_maps.insert(task.clone(), kind);
+                }
+                Directive::Region { task, arg, proc, mem, line } => {
+                    let pk = ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?;
+                    let mk = MemKind::parse(mem).map_err(|e| format!("line {line}: {e}"))?;
+                    spec.regions.insert((task.clone(), *arg), (pk, mk));
+                }
+                Directive::Layout { task, arg, proc, props, line } => {
+                    let pk = ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?;
+                    let lp = LayoutProps::parse(props).map_err(|e| format!("line {line}: {e}"))?;
+                    spec.layouts.insert((task.clone(), *arg), (pk, lp));
+                }
+                Directive::GarbageCollect { task, arg, .. } => {
+                    spec.gc.insert((task.clone(), *arg));
+                }
+                Directive::Backpressure { task, limit, .. } => {
+                    spec.backpressure.insert(task.clone(), *limit);
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The mapping-function name for a task. Lookup order: exact task
+    /// name, then its family name (trailing `_<number>` stripped, so
+    /// `mm_step` covers `mm_step_0..k`), then `default`.
+    pub fn mapping_fn(&self, task: &str) -> Option<&str> {
+        self.index_task_maps
+            .get(task)
+            .or_else(|| self.index_task_maps.get(&base_name(task)))
+            .or_else(|| self.index_task_maps.get("default"))
+            .map(|s| s.as_str())
+    }
+
+    /// Map one iteration point of a task launch (the SHARD∘MAP composite).
+    pub fn map_point(&self, task: &str, ipoint: &Tuple, ispace: &Tuple) -> Result<ProcId, RtError> {
+        let func = self.mapping_fn(task).ok_or_else(|| RtError {
+            msg: format!("no IndexTaskMap directive for task '{task}'"),
+            trace: Vec::new(),
+        })?;
+        self.interp.map_point(func, ipoint, ispace)
+    }
+
+    /// Processor kind for a task (default GPU).
+    pub fn proc_kind(&self, task: &str) -> ProcKind {
+        self.task_maps
+            .get(task)
+            .or_else(|| self.task_maps.get(&base_name(task)))
+            .copied()
+            .unwrap_or(ProcKind::Gpu)
+    }
+
+    /// Memory placement for (task, arg): defaults to FBMEM on GPU tasks,
+    /// SYSMEM otherwise (Legion default-mapper behaviour).
+    pub fn memory_for(&self, task: &str, arg: usize) -> (ProcKind, MemKind) {
+        self.regions
+            .get(&(task.to_string(), arg))
+            .or_else(|| self.regions.get(&(base_name(task), arg)))
+            .copied()
+            .unwrap_or_else(|| {
+                let pk = self.proc_kind(task);
+                let mk = if pk == ProcKind::Gpu { MemKind::FbMem } else { MemKind::SysMem };
+                (pk, mk)
+            })
+    }
+
+    /// Layout for (task, arg).
+    pub fn layout_for(&self, task: &str, arg: usize) -> LayoutProps {
+        self.layouts
+            .get(&(task.to_string(), arg))
+            .or_else(|| self.layouts.get(&(base_name(task), arg)))
+            .map(|(_, l)| l.clone())
+            .unwrap_or_default()
+    }
+
+    /// Should (task, arg) be eagerly collected?
+    pub fn should_gc(&self, task: &str, arg: usize) -> bool {
+        self.gc.contains(&(task.to_string(), arg)) || self.gc.contains(&(base_name(task), arg))
+    }
+
+    /// In-flight launch limit for a task (None = unlimited).
+    pub fn backpressure_for(&self, task: &str) -> Option<usize> {
+        self.backpressure
+            .get(task)
+            .or_else(|| self.backpressure.get(&base_name(task)))
+            .copied()
+    }
+}
+
+/// Strip a trailing `_<number>` segment: `mm_step_3` → `mm_step`. Tasks
+/// instantiated per loop iteration share one directive family.
+pub fn base_name(task: &str) -> String {
+    match task.rfind('_') {
+        Some(i) if task[i + 1..].chars().all(|c| c.is_ascii_digit()) && i + 1 < task.len() => {
+            task[..i].to_string()
+        }
+        _ => task.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc() -> MachineDesc {
+        let mut d = MachineDesc::paper_testbed(2);
+        d.gpus_per_node = 2;
+        d
+    }
+
+    const FULL: &str = "\
+m = Machine(GPU)
+def block2D(Tuple ipoint, Tuple ispace):
+    idx = ipoint * m.size / ispace
+    return m[*idx]
+IndexTaskMap matmul block2D
+TaskMap init_cpu CPU
+Region matmul arg0 GPU FBMEM
+Region matmul arg1 GPU ZCMEM
+Layout matmul arg0 GPU F_order SOA align128
+GarbageCollect matmul arg2
+Backpressure matmul 2
+";
+
+    #[test]
+    fn tables_populated() {
+        let spec = MapperSpec::compile(FULL, &desc()).unwrap();
+        assert_eq!(spec.mapping_fn("matmul"), Some("block2D"));
+        assert_eq!(spec.proc_kind("init_cpu"), ProcKind::Cpu);
+        assert_eq!(spec.proc_kind("matmul"), ProcKind::Gpu, "default");
+        assert_eq!(spec.memory_for("matmul", 0), (ProcKind::Gpu, MemKind::FbMem));
+        assert_eq!(spec.memory_for("matmul", 1), (ProcKind::Gpu, MemKind::ZeroCopy));
+        // unspecified arg falls back to FBMEM-on-GPU
+        assert_eq!(spec.memory_for("matmul", 5), (ProcKind::Gpu, MemKind::FbMem));
+        let l = spec.layout_for("matmul", 0);
+        assert!(l.fortran_order && l.soa);
+        assert_eq!(l.align, 128);
+        assert!(spec.should_gc("matmul", 2));
+        assert!(!spec.should_gc("matmul", 0));
+        assert_eq!(spec.backpressure_for("matmul"), Some(2));
+        assert_eq!(spec.backpressure_for("other"), None);
+    }
+
+    #[test]
+    fn map_point_via_directive() {
+        let spec = MapperSpec::compile(FULL, &desc()).unwrap();
+        let p = spec.map_point("matmul", &Tuple::from([5, 5]), &Tuple::from([6, 6])).unwrap();
+        assert_eq!((p.node, p.local), (1, 1));
+        assert!(spec.map_point("unmapped", &Tuple::from([0]), &Tuple::from([1])).is_err());
+    }
+
+    #[test]
+    fn default_task_fallback() {
+        let src = "\
+m = Machine(GPU)
+def f(Tuple p, Tuple s):
+    return m[0, 0]
+IndexTaskMap default f
+";
+        let spec = MapperSpec::compile(src, &desc()).unwrap();
+        assert_eq!(spec.mapping_fn("anything"), Some("f"));
+    }
+
+    #[test]
+    fn compile_errors() {
+        // undefined mapping function
+        let e = MapperSpec::compile("IndexTaskMap t nosuch\n", &desc()).unwrap_err();
+        assert!(e.contains("undefined function"));
+        // duplicate IndexTaskMap
+        let src = "\
+m = Machine(GPU)
+def f(Tuple p, Tuple s):
+    return m[0, 0]
+IndexTaskMap t f
+IndexTaskMap t f
+";
+        assert!(MapperSpec::compile(src, &desc()).unwrap_err().contains("duplicate"));
+        // bad layout property
+        let e = MapperSpec::compile("Layout t arg0 GPU Q_order\n", &desc()).unwrap_err();
+        assert!(e.contains("unknown layout property"));
+        // bad proc kind
+        assert!(MapperSpec::compile("TaskMap t FPGA\n", &desc()).is_err());
+    }
+}

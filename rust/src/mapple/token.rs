@@ -1,0 +1,445 @@
+//! Tokens and lexer for the Mapple DSL (grammar of paper Fig 18, with the
+//! Python-like surface syntax used in Figs 1, 4, 5, 7, 12).
+//!
+//! The language is line- and indentation-structured: the lexer emits
+//! `Newline`, `Indent`, and `Dedent` tokens Python-style. Comments start
+//! with `#`. Continuation inside unclosed brackets suppresses newline
+//! tokens, so long expressions can wrap.
+
+use std::fmt;
+
+/// One lexical token, tagged with its source line for diagnostics.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    // literals & names
+    Ident(String),
+    Int(i64),
+    Str(String),
+    // structure
+    Newline,
+    Indent,
+    Dedent,
+    Eof,
+    // punctuation
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Colon,
+    Dot,
+    Star,
+    Plus,
+    Minus,
+    Slash,
+    Percent,
+    Assign,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Question,
+    // keywords
+    Def,
+    Return,
+    If,
+    Elif,
+    Else,
+    For,
+    In,
+    And,
+    Or,
+    Not,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "{s}"),
+            Tok::Int(i) => write!(f, "{i}"),
+            Tok::Str(s) => write!(f, "\"{s}\""),
+            Tok::Newline => write!(f, "NEWLINE"),
+            Tok::Indent => write!(f, "INDENT"),
+            Tok::Dedent => write!(f, "DEDENT"),
+            Tok::Eof => write!(f, "EOF"),
+            other => {
+                let s = match other {
+                    Tok::LParen => "(",
+                    Tok::RParen => ")",
+                    Tok::LBracket => "[",
+                    Tok::RBracket => "]",
+                    Tok::Comma => ",",
+                    Tok::Colon => ":",
+                    Tok::Dot => ".",
+                    Tok::Star => "*",
+                    Tok::Plus => "+",
+                    Tok::Minus => "-",
+                    Tok::Slash => "/",
+                    Tok::Percent => "%",
+                    Tok::Assign => "=",
+                    Tok::Eq => "==",
+                    Tok::Ne => "!=",
+                    Tok::Lt => "<",
+                    Tok::Le => "<=",
+                    Tok::Gt => ">",
+                    Tok::Ge => ">=",
+                    Tok::Question => "?",
+                    Tok::Def => "def",
+                    Tok::Return => "return",
+                    Tok::If => "if",
+                    Tok::Elif => "elif",
+                    Tok::Else => "else",
+                    Tok::For => "for",
+                    Tok::In => "in",
+                    Tok::And => "and",
+                    Tok::Or => "or",
+                    Tok::Not => "not",
+                    _ => unreachable!(),
+                };
+                write!(f, "{s}")
+            }
+        }
+    }
+}
+
+/// A token with its 1-based source line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// Lexer error with location.
+#[derive(Debug, PartialEq)]
+pub struct LexError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at line {}: {}", self.line, self.msg)
+    }
+}
+
+fn keyword(s: &str) -> Option<Tok> {
+    Some(match s {
+        "def" => Tok::Def,
+        "return" => Tok::Return,
+        "if" => Tok::If,
+        "elif" => Tok::Elif,
+        "else" => Tok::Else,
+        "for" => Tok::For,
+        "in" => Tok::In,
+        "and" => Tok::And,
+        "or" => Tok::Or,
+        "not" => Tok::Not,
+        _ => return None,
+    })
+}
+
+/// Tokenize a whole source file.
+pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {
+    let mut out: Vec<Spanned> = Vec::new();
+    let mut indents: Vec<usize> = vec![0];
+    let mut bracket_depth = 0usize;
+
+    for (lineno0, raw_line) in src.lines().enumerate() {
+        let line = lineno0 + 1;
+        // Strip comments (respecting strings).
+        let code = strip_comment(raw_line);
+        let trimmed = code.trim_end();
+        if bracket_depth == 0 {
+            let stripped = trimmed.trim_start();
+            if stripped.is_empty() {
+                continue; // blank or comment-only line
+            }
+            // indentation
+            let indent = leading_spaces(trimmed, line)?;
+            let current = *indents.last().unwrap();
+            if indent > current {
+                indents.push(indent);
+                out.push(Spanned { tok: Tok::Indent, line });
+            } else if indent < current {
+                while *indents.last().unwrap() > indent {
+                    indents.pop();
+                    out.push(Spanned { tok: Tok::Dedent, line });
+                }
+                if *indents.last().unwrap() != indent {
+                    return Err(LexError { line, msg: "inconsistent dedent".into() });
+                }
+            }
+        }
+        lex_line(trimmed.trim_start(), line, &mut out, &mut bracket_depth)?;
+        if bracket_depth == 0 {
+            out.push(Spanned { tok: Tok::Newline, line });
+        }
+    }
+    if bracket_depth != 0 {
+        return Err(LexError { line: src.lines().count(), msg: "unclosed bracket at EOF".into() });
+    }
+    let last = src.lines().count().max(1);
+    while indents.len() > 1 {
+        indents.pop();
+        out.push(Spanned { tok: Tok::Dedent, line: last });
+    }
+    out.push(Spanned { tok: Tok::Eof, line: last });
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn leading_spaces(line: &str, lineno: usize) -> Result<usize, LexError> {
+    let mut n = 0;
+    for c in line.chars() {
+        match c {
+            ' ' => n += 1,
+            '\t' => {
+                return Err(LexError { line: lineno, msg: "tabs not allowed in indentation".into() })
+            }
+            _ => break,
+        }
+    }
+    Ok(n)
+}
+
+fn lex_line(
+    s: &str,
+    line: usize,
+    out: &mut Vec<Spanned>,
+    bracket_depth: &mut usize,
+) -> Result<(), LexError> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    let push = |out: &mut Vec<Spanned>, tok: Tok| out.push(Spanned { tok, line });
+    while i < b.len() {
+        let c = b[i] as char;
+        match c {
+            ' ' | '\t' => i += 1,
+            '(' | '[' => {
+                *bracket_depth += 1;
+                push(out, if c == '(' { Tok::LParen } else { Tok::LBracket });
+                i += 1;
+            }
+            ')' | ']' => {
+                *bracket_depth = bracket_depth.saturating_sub(1);
+                push(out, if c == ')' { Tok::RParen } else { Tok::RBracket });
+                i += 1;
+            }
+            ',' => {
+                push(out, Tok::Comma);
+                i += 1;
+            }
+            ':' => {
+                push(out, Tok::Colon);
+                i += 1;
+            }
+            '.' => {
+                push(out, Tok::Dot);
+                i += 1;
+            }
+            '*' => {
+                push(out, Tok::Star);
+                i += 1;
+            }
+            '+' => {
+                push(out, Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                push(out, Tok::Minus);
+                i += 1;
+            }
+            '/' => {
+                push(out, Tok::Slash);
+                i += 1;
+            }
+            '%' => {
+                push(out, Tok::Percent);
+                i += 1;
+            }
+            '?' => {
+                push(out, Tok::Question);
+                i += 1;
+            }
+            '=' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    push(out, Tok::Eq);
+                    i += 2;
+                } else {
+                    push(out, Tok::Assign);
+                    i += 1;
+                }
+            }
+            '!' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    push(out, Tok::Ne);
+                    i += 2;
+                } else {
+                    return Err(LexError { line, msg: "stray '!'".into() });
+                }
+            }
+            '<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    push(out, Tok::Le);
+                    i += 2;
+                } else {
+                    push(out, Tok::Lt);
+                    i += 1;
+                }
+            }
+            '>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    push(out, Tok::Ge);
+                    i += 2;
+                } else {
+                    push(out, Tok::Gt);
+                    i += 1;
+                }
+            }
+            '"' => {
+                let mut j = i + 1;
+                while j < b.len() && b[j] != b'"' {
+                    j += 1;
+                }
+                if j >= b.len() {
+                    return Err(LexError { line, msg: "unterminated string".into() });
+                }
+                push(out, Tok::Str(s[i + 1..j].to_string()));
+                i = j + 1;
+            }
+            c if c.is_ascii_digit() => {
+                let mut j = i;
+                while j < b.len() && (b[j] as char).is_ascii_digit() {
+                    j += 1;
+                }
+                let text = &s[i..j];
+                let v: i64 = text
+                    .parse()
+                    .map_err(|e| LexError { line, msg: format!("bad integer '{text}': {e}") })?;
+                push(out, Tok::Int(v));
+                i = j;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let mut j = i;
+                while j < b.len() && ((b[j] as char).is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                let word = &s[i..j];
+                match keyword(word) {
+                    Some(k) => push(out, k),
+                    None => push(out, Tok::Ident(word.to_string())),
+                }
+                i = j;
+            }
+            other => {
+                return Err(LexError { line, msg: format!("unexpected character '{other}'") })
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn simple_assignment() {
+        assert_eq!(
+            toks("m = Machine(GPU)"),
+            vec![
+                Tok::Ident("m".into()),
+                Tok::Assign,
+                Tok::Ident("Machine".into()),
+                Tok::LParen,
+                Tok::Ident("GPU".into()),
+                Tok::RParen,
+                Tok::Newline,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn indentation_blocks() {
+        let src = "def f(x):\n    y = 1\n    return y\nz = 2\n";
+        let t = toks(src);
+        let indents = t.iter().filter(|t| **t == Tok::Indent).count();
+        let dedents = t.iter().filter(|t| **t == Tok::Dedent).count();
+        assert_eq!(indents, 1);
+        assert_eq!(dedents, 1);
+    }
+
+    #[test]
+    fn dedent_at_eof() {
+        let t = toks("def f(x):\n    return x");
+        assert_eq!(t[t.len() - 2], Tok::Dedent);
+        assert_eq!(t[t.len() - 1], Tok::Eof);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let t = toks("# header\n\nx = 1  # trailing\n");
+        assert_eq!(t.iter().filter(|t| **t == Tok::Newline).count(), 1);
+    }
+
+    #[test]
+    fn operators_two_char() {
+        assert_eq!(
+            toks("a <= b != c == d >= e"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Le,
+                Tok::Ident("b".into()),
+                Tok::Ne,
+                Tok::Ident("c".into()),
+                Tok::Eq,
+                Tok::Ident("d".into()),
+                Tok::Ge,
+                Tok::Ident("e".into()),
+                Tok::Newline,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn bracket_continuation_suppresses_newline() {
+        let t = toks("x = f(1,\n      2)\ny = 3\n");
+        // only two logical lines
+        assert_eq!(t.iter().filter(|t| **t == Tok::Newline).count(), 2);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(lex("x = $").is_err());
+        assert!(lex("x = \"unterminated").is_err());
+        assert!(lex("x = (1,").is_err(), "unclosed bracket at EOF");
+        assert!(lex("def f():\n\ty = 1").is_err(), "tab indent rejected");
+        assert!(lex("if x:\n   y\n  z").is_err(), "inconsistent dedent");
+    }
+
+    #[test]
+    fn splat_and_slice_tokens() {
+        let t = toks("return m[*idx, :-1]");
+        assert!(t.contains(&Tok::Star));
+        assert!(t.contains(&Tok::Colon));
+    }
+}

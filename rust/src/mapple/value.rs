@@ -1,0 +1,196 @@
+//! Runtime values for the Mapple interpreter and their operator semantics.
+
+use crate::machine::point::Tuple;
+use crate::machine::space::ProcSpace;
+use crate::machine::topology::ProcId;
+use std::fmt;
+
+/// A value produced while evaluating a Mapple mapping function.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Int(i64),
+    Bool(bool),
+    Str(String),
+    Tuple(Tuple),
+    Space(ProcSpace),
+    Proc(ProcId),
+}
+
+impl Value {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Int(_) => "int",
+            Value::Bool(_) => "bool",
+            Value::Str(_) => "string",
+            Value::Tuple(_) => "Tuple",
+            Value::Space(_) => "Machine",
+            Value::Proc(_) => "Processor",
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64, String> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => Err(format!("expected int, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_tuple(&self) -> Result<&Tuple, String> {
+        match self {
+            Value::Tuple(t) => Ok(t),
+            other => Err(format!("expected Tuple, got {}", other.kind())),
+        }
+    }
+
+    pub fn as_space(&self) -> Result<&ProcSpace, String> {
+        match self {
+            Value::Space(s) => Ok(s),
+            other => Err(format!("expected Machine space, got {}", other.kind())),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Tuple(t) => write!(f, "{t:?}"),
+            Value::Space(s) => write!(f, "Machine{:?}", s.size()),
+            Value::Proc(p) => write!(f, "{p}"),
+        }
+    }
+}
+
+/// Integer floor division (Python semantics — the DSL follows the paper's
+/// Python-like examples, and mapping arithmetic must round toward -inf to
+/// stay within bounds for zero-based indices).
+pub fn floor_div(a: i64, b: i64) -> Result<i64, String> {
+    if b == 0 {
+        return Err("division by zero".into());
+    }
+    Ok(a.div_euclid(b))
+}
+
+/// Python-style modulo (result has the sign of the divisor).
+pub fn floor_mod(a: i64, b: i64) -> Result<i64, String> {
+    if b == 0 {
+        return Err("modulo by zero".into());
+    }
+    Ok(a.rem_euclid(b))
+}
+
+/// Apply an arithmetic op elementwise with broadcasting between ints and
+/// tuples (the paper's `ipoint * m.size / ispace` idiom).
+pub fn arith(op: &str, lhs: &Value, rhs: &Value) -> Result<Value, String> {
+    let scalar = |a: i64, b: i64| -> Result<i64, String> {
+        Ok(match op {
+            "+" => a.checked_add(b).ok_or("integer overflow in +")?,
+            "-" => a.checked_sub(b).ok_or("integer overflow in -")?,
+            "*" => a.checked_mul(b).ok_or("integer overflow in *")?,
+            "/" => floor_div(a, b)?,
+            "%" => floor_mod(a, b)?,
+            _ => return Err(format!("unknown arithmetic op '{op}'")),
+        })
+    };
+    match (lhs, rhs) {
+        (Value::Int(a), Value::Int(b)) => Ok(Value::Int(scalar(*a, *b)?)),
+        (Value::Tuple(a), Value::Tuple(b)) => {
+            if a.dim() != b.dim() {
+                return Err(format!(
+                    "tuple arity mismatch in '{op}': {a:?} ({}d) vs {b:?} ({}d)",
+                    a.dim(),
+                    b.dim()
+                ));
+            }
+            let v: Result<Vec<i64>, String> =
+                a.0.iter().zip(&b.0).map(|(&x, &y)| scalar(x, y)).collect();
+            Ok(Value::Tuple(Tuple(v?)))
+        }
+        (Value::Tuple(a), Value::Int(b)) => {
+            let v: Result<Vec<i64>, String> = a.0.iter().map(|&x| scalar(x, *b)).collect();
+            Ok(Value::Tuple(Tuple(v?)))
+        }
+        (Value::Int(a), Value::Tuple(b)) => {
+            let v: Result<Vec<i64>, String> = b.0.iter().map(|&y| scalar(*a, y)).collect();
+            Ok(Value::Tuple(Tuple(v?)))
+        }
+        (a, b) => Err(format!("cannot apply '{op}' to {} and {}", a.kind(), b.kind())),
+    }
+}
+
+/// Comparison ops. Ints compare numerically; tuples support ==/!= only.
+pub fn compare(op: &str, lhs: &Value, rhs: &Value) -> Result<Value, String> {
+    match (lhs, rhs) {
+        (Value::Int(a), Value::Int(b)) => {
+            let r = match op {
+                "==" => a == b,
+                "!=" => a != b,
+                "<" => a < b,
+                "<=" => a <= b,
+                ">" => a > b,
+                ">=" => a >= b,
+                _ => return Err(format!("unknown comparison '{op}'")),
+            };
+            Ok(Value::Bool(r))
+        }
+        (Value::Tuple(a), Value::Tuple(b)) => match op {
+            "==" => Ok(Value::Bool(a == b)),
+            "!=" => Ok(Value::Bool(a != b)),
+            _ => Err(format!("ordering comparison '{op}' not defined on tuples")),
+        },
+        (a, b) => Err(format!("cannot compare {} and {}", a.kind(), b.kind())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_semantics() {
+        assert_eq!(floor_div(7, 2).unwrap(), 3);
+        assert_eq!(floor_div(-1, 2).unwrap(), -1); // toward -inf
+        assert_eq!(floor_mod(-1, 4).unwrap(), 3);
+        assert!(floor_div(1, 0).is_err());
+    }
+
+    #[test]
+    fn broadcasting() {
+        let t = Value::Tuple(Tuple::from([4, 6]));
+        let r = arith("*", &t, &Value::Int(2)).unwrap();
+        assert_eq!(r.as_tuple().unwrap(), &Tuple::from([8, 12]));
+        let r = arith("/", &Value::Int(12), &t).unwrap();
+        assert_eq!(r.as_tuple().unwrap(), &Tuple::from([3, 2]));
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let a = Value::Tuple(Tuple::from([1, 2]));
+        let b = Value::Tuple(Tuple::from([1, 2, 3]));
+        assert!(arith("+", &a, &b).is_err());
+    }
+
+    #[test]
+    fn comparisons() {
+        assert!(compare("<", &Value::Int(1), &Value::Int(2)).unwrap().as_bool().unwrap());
+        let a = Value::Tuple(Tuple::from([1, 2]));
+        let b = Value::Tuple(Tuple::from([1, 2]));
+        assert!(compare("==", &a, &b).unwrap().as_bool().unwrap());
+        assert!(compare("<", &a, &b).is_err());
+        assert!(compare("==", &a, &Value::Int(1)).is_err());
+    }
+
+    #[test]
+    fn overflow_detected() {
+        assert!(arith("*", &Value::Int(i64::MAX), &Value::Int(2)).is_err());
+    }
+}

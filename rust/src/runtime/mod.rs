@@ -1,0 +1,5 @@
+//! Runtime bridge to AOT-compiled XLA executables (PJRT CPU client).
+
+pub mod pjrt;
+
+pub use pjrt::{KernelRegistry, LoadedKernel};

@@ -1,0 +1,124 @@
+//! PJRT execution bridge: load AOT-compiled HLO artifacts and run them.
+//!
+//! This is the only place Rust touches XLA. Artifacts are HLO *text*
+//! produced by `python/compile/aot.py` (text, not serialized proto — see
+//! DESIGN.md and /opt/xla-example/README.md: jax ≥ 0.5 emits 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns them).
+//! Python never runs at request time: the Rust binary loads
+//! `artifacts/*.hlo.txt`, compiles once per executable on the PJRT CPU
+//! client, and executes with concrete buffers.
+
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled executable plus its expected input shapes.
+pub struct LoadedKernel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedKernel {
+    /// Execute with f32 inputs given as (data, shape) pairs; returns the
+    /// flattened f32 outputs of the (single-tuple) result.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let expect: usize = shape.iter().product::<i64>() as usize;
+            if expect != data.len() {
+                return Err(anyhow!(
+                    "kernel '{}': input length {} != shape {:?} volume {}",
+                    self.name,
+                    data.len(),
+                    shape,
+                    expect
+                ));
+            }
+            let lit = xla::Literal::vec1(data).reshape(shape)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack tuple elements.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Registry of AOT artifacts: lazily compiles `<dir>/<name>.hlo.txt`.
+pub struct KernelRegistry {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<LoadedKernel>>>,
+}
+
+impl KernelRegistry {
+    /// Create a registry over an artifacts directory with a CPU client.
+    pub fn cpu(dir: impl AsRef<Path>) -> Result<KernelRegistry> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(KernelRegistry {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Path an artifact is expected at.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Does the artifact exist on disk?
+    pub fn available(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load (compile-once, cached) a kernel by artifact name.
+    pub fn load(&self, name: &str) -> Result<std::rc::Rc<LoadedKernel>> {
+        if let Some(k) = self.cache.borrow().get(name) {
+            return Ok(k.clone());
+        }
+        let path = self.artifact_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let kernel = std::rc::Rc::new(LoadedKernel { name: name.to_string(), exe });
+        self.cache.borrow_mut().insert(name.to_string(), kernel.clone());
+        Ok(kernel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests need built artifacts; they are exercised by
+    // `rust/tests/pjrt_roundtrip.rs` (integration) after `make artifacts`.
+    #[test]
+    fn missing_artifact_is_reported() {
+        let reg = KernelRegistry::cpu("/nonexistent-artifacts").unwrap();
+        assert!(!reg.available("nope"));
+        let e = reg.load("nope").err().expect("must fail");
+        assert!(format!("{e:#}").contains("nope"), "{e:#}");
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let reg = KernelRegistry::cpu("artifacts").unwrap();
+        assert!(!reg.platform().is_empty());
+    }
+}

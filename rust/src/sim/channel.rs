@@ -1,0 +1,147 @@
+//! Network model: NVLink (intra-node) and InfiniBand (inter-node)
+//! channels with bandwidth + latency and serialization per channel.
+//!
+//! Each node has one aggregate NVLink channel (GPU↔GPU within the node)
+//! and one IB NIC (node↔node). A transfer occupies its channel(s) for
+//! `latency + bytes/bandwidth`; concurrent transfers on the same channel
+//! serialize — this is what makes poor mappings (more traffic over the
+//! slow inter-node links) cost wallclock time in the simulation.
+
+use crate::machine::topology::{MachineDesc, ProcId};
+
+/// A serializing transfer channel.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    pub bandwidth: f64, // bytes/s
+    pub latency: f64,   // s
+    next_free: f64,
+}
+
+impl Channel {
+    pub fn new(bandwidth: f64, latency: f64) -> Self {
+        assert!(bandwidth > 0.0);
+        Channel { bandwidth, latency, next_free: 0.0 }
+    }
+
+    /// Schedule a transfer that becomes eligible at `ready`; returns its
+    /// completion time and advances the channel clock.
+    pub fn transfer(&mut self, ready: f64, bytes: u64) -> f64 {
+        let start = ready.max(self.next_free);
+        let end = start + self.latency + bytes as f64 / self.bandwidth;
+        self.next_free = end;
+        end
+    }
+
+    /// Pure duration of a transfer of `bytes` (no queueing).
+    pub fn duration(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+
+    pub fn busy_until(&self) -> f64 {
+        self.next_free
+    }
+}
+
+/// All channels of the simulated cluster.
+#[derive(Debug)]
+pub struct Network {
+    /// Per-node aggregate NVLink channel.
+    nvlink: Vec<Channel>,
+    /// Per-node IB NIC (models both directions through one queue, a
+    /// reasonable simplification for EDR's full-duplex shared engine).
+    ib: Vec<Channel>,
+    /// Bytes moved, for stats: (intra-node, inter-node).
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+}
+
+impl Network {
+    pub fn new(desc: &MachineDesc) -> Network {
+        Network {
+            nvlink: (0..desc.nodes).map(|_| Channel::new(desc.nvlink_bw, desc.nvlink_lat)).collect(),
+            ib: (0..desc.nodes).map(|_| Channel::new(desc.ib_bw, desc.ib_lat)).collect(),
+            intra_bytes: 0,
+            inter_bytes: 0,
+        }
+    }
+
+    /// Move `bytes` from `src` to `dst`, eligible at time `ready`.
+    /// Returns arrival time. Same-proc moves are free.
+    pub fn move_bytes(&mut self, src: ProcId, dst: ProcId, bytes: u64, ready: f64) -> f64 {
+        if src == dst || bytes == 0 {
+            return ready;
+        }
+        if src.node == dst.node {
+            self.intra_bytes += bytes;
+            self.nvlink[src.node].transfer(ready, bytes)
+        } else {
+            self.inter_bytes += bytes;
+            // source NIC, then destination NIC (store-and-forward at the
+            // granularity of whole messages; wire latency inside each leg).
+            let sent = self.ib[src.node].transfer(ready, bytes);
+            let recv_ready = (sent - self.ib[dst.node].latency).max(0.0);
+            self.ib[dst.node].transfer(recv_ready, 0).max(sent)
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.intra_bytes + self.inter_bytes
+    }
+
+    /// Device→host staging hop on the source node's NVLink channel,
+    /// charged before an inter-node send when the source instance lives
+    /// in framebuffer memory (no GPUDirect). Returns staging completion.
+    pub fn stage_to_host(&mut self, src: ProcId, bytes: u64, ready: f64) -> f64 {
+        self.intra_bytes += bytes;
+        self.nvlink[src.node].transfer(ready, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::topology::ProcKind;
+
+    fn pid(node: usize, local: usize) -> ProcId {
+        ProcId { node, kind: ProcKind::Gpu, local }
+    }
+
+    #[test]
+    fn channel_serializes() {
+        let mut c = Channel::new(1e9, 1e-6);
+        let t1 = c.transfer(0.0, 1_000_000_000); // 1 GB at 1 GB/s ≈ 1 s
+        assert!((t1 - 1.000001).abs() < 1e-9);
+        let t2 = c.transfer(0.0, 1_000_000_000); // queued behind the first
+        assert!(t2 > 2.0);
+    }
+
+    #[test]
+    fn same_proc_free() {
+        let desc = MachineDesc::paper_testbed(2);
+        let mut n = Network::new(&desc);
+        let t = n.move_bytes(pid(0, 0), pid(0, 0), 1 << 30, 5.0);
+        assert_eq!(t, 5.0);
+        assert_eq!(n.total_bytes(), 0);
+    }
+
+    #[test]
+    fn intra_faster_than_inter() {
+        let desc = MachineDesc::paper_testbed(2);
+        let mut n = Network::new(&desc);
+        let intra = n.move_bytes(pid(0, 0), pid(0, 1), 1 << 30, 0.0);
+        let mut n2 = Network::new(&desc);
+        let inter = n2.move_bytes(pid(0, 0), pid(1, 0), 1 << 30, 0.0);
+        assert!(intra < inter, "NVLink {intra} should beat IB {inter}");
+        assert_eq!(n.intra_bytes, 1 << 30);
+        assert_eq!(n2.inter_bytes, 1 << 30);
+    }
+
+    #[test]
+    fn contention_on_shared_nic() {
+        let desc = MachineDesc::paper_testbed(2);
+        let mut n = Network::new(&desc);
+        let a = n.move_bytes(pid(0, 0), pid(1, 0), 1 << 28, 0.0);
+        let b = n.move_bytes(pid(0, 1), pid(1, 1), 1 << 28, 0.0);
+        assert!(b > a, "second transfer queues behind the first on node 0's NIC");
+    }
+}

@@ -1,0 +1,494 @@
+//! Discrete-event cluster simulation of a mapped task program.
+//!
+//! Consumes the placements produced by the §5.1 pipeline plus the
+//! dependence relation, and models what the paper measures on its
+//! Power9/V100 testbed: compute time per point task, NVLink/IB transfer
+//! time for every tile that moves, per-processor serialization, instance
+//! materialization in capacity-limited memories (→ OOM), and the effect
+//! of GC / backpressure policies on peak memory.
+
+use super::channel::Network;
+use super::memory::{MemId, MemoryPool, OomError};
+use crate::machine::point::Rect;
+use crate::machine::topology::{MachineDesc, MemKind, ProcId, ProcKind};
+use crate::tasking::deps::{DataEnv, Dependences};
+use crate::tasking::region::RegionId;
+use crate::tasking::task::{IndexLaunch, PointTask};
+use std::collections::HashMap;
+
+/// Mapping policies the simulator needs beyond placements (memory
+/// selection, GC, backpressure). Implemented by Mapple's `MapperSpec` and
+/// by the low-level expert mappers.
+pub trait MappingPolicies {
+    fn mem_kind(&self, task: &str, arg: usize) -> MemKind {
+        let _ = (task, arg);
+        MemKind::FbMem
+    }
+    fn should_gc(&self, task: &str, arg: usize) -> bool {
+        let _ = (task, arg);
+        false
+    }
+    fn backpressure(&self, task: &str) -> Option<usize> {
+        let _ = task;
+        None
+    }
+}
+
+/// Default policies: everything in FBMEM, no GC, no backpressure.
+pub struct DefaultPolicies;
+
+impl MappingPolicies for DefaultPolicies {}
+
+/// Simulation outcome.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Wallclock seconds of the simulated run (None if OOM aborted it).
+    pub makespan: f64,
+    /// Total FLOPs executed.
+    pub total_flops: f64,
+    /// Bytes moved intra-node (NVLink) and inter-node (IB).
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+    /// Peak per-GPU framebuffer usage.
+    pub peak_fbmem: u64,
+    /// Per-processor busy seconds.
+    pub proc_busy: HashMap<ProcId, f64>,
+    /// Set when the run aborted with out-of-memory.
+    pub oom: Option<OomError>,
+}
+
+impl SimResult {
+    /// FLOP/s per node — the y-axis of Fig 13.
+    pub fn throughput_per_node(&self, nodes: usize) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.total_flops / self.makespan / nodes as f64
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.intra_bytes + self.inter_bytes
+    }
+}
+
+/// One materialized copy of a region rect.
+#[derive(Clone, Debug)]
+struct Instance {
+    mem: MemId,
+    proc: ProcId,
+    ready: f64,
+    bytes: u64,
+}
+
+/// Coherence state per (region, rect): the set of valid copies.
+#[derive(Default, Debug)]
+struct CopyState {
+    copies: Vec<Instance>,
+}
+
+/// Simulate the program. Tasks are processed in program order (which is
+/// topological for the ≼ relation produced by `analyze`).
+pub fn simulate(
+    launches: &[IndexLaunch],
+    env: &DataEnv,
+    deps: &Dependences,
+    placements: &HashMap<PointTask, ProcId>,
+    desc: &MachineDesc,
+    policies: &dyn MappingPolicies,
+) -> SimResult {
+    let mut net = Network::new(desc);
+    let mut pool = MemoryPool::new(desc);
+    let mut proc_free: HashMap<ProcId, f64> = HashMap::new();
+    let mut proc_busy: HashMap<ProcId, f64> = HashMap::new();
+    let mut finish: HashMap<PointTask, f64> = HashMap::new();
+    let mut state: HashMap<(RegionId, Rect), CopyState> = HashMap::new();
+    let mut total_flops = 0.0;
+    let mut makespan: f64 = 0.0;
+    // Ring of recent finish times per task name, for backpressure.
+    let mut recent: HashMap<String, Vec<f64>> = HashMap::new();
+    let mut oom: Option<OomError> = None;
+
+    'outer: for launch in launches {
+        for pt in launch.points() {
+            let proc = *placements
+                .get(&pt)
+                .unwrap_or_else(|| panic!("no placement for {pt:?} — pipeline incomplete"));
+
+            // 1. dependence readiness
+            let mut ready = 0.0f64;
+            for p in deps.preds_of(&pt) {
+                ready = ready.max(*finish.get(p).unwrap_or(&0.0));
+            }
+
+            // backpressure: the (i - limit)-th previous launch of this task
+            // must have finished before this one starts.
+            if let Some(limit) = policies.backpressure(&launch.name) {
+                if limit > 0 {
+                    if let Some(window) = recent.get(&launch.name) {
+                        if window.len() >= limit {
+                            ready = ready.max(window[window.len() - limit]);
+                        }
+                    }
+                }
+            }
+
+            // 2. gather inputs: for each requirement, make a local copy.
+            for (ri, req) in launch.reqs.iter().enumerate() {
+                let rect = env.access_rect(launch, ri, &pt);
+                let region = env.region(req.region);
+                let bytes = rect.volume() as u64 * region.elem_bytes;
+                let mem_kind = policies.mem_kind(&launch.name, ri);
+                let dst_mem = MemId::for_proc(proc, mem_kind);
+                let key = (req.region, rect.clone());
+
+                // does a valid copy already exist at the destination?
+                let have_local = state
+                    .get(&key)
+                    .map(|cs| cs.copies.iter().any(|c| c.mem == dst_mem))
+                    .unwrap_or(false);
+
+                if !have_local {
+                    // find source: nearest valid overlapping copy
+                    let mut arrive = ready;
+                    let mut transferred = false;
+                    // exact-rect copy first
+                    let src = state.get(&key).and_then(|cs| {
+                        cs.copies
+                            .iter()
+                            .min_by_key(|c| if c.proc.node == proc.node { 0 } else { 1 })
+                            .cloned()
+                    });
+                    if let Some(src) = src {
+                        // Inter-node pulls from framebuffer memory pay an
+                        // extra device→host staging hop on the source
+                        // node's NVLink; zero-copy / host instances go
+                        // straight to the NIC (GPUDirect-less V100 node).
+                        let mut t0 = ready.max(src.ready);
+                        if src.proc.node != proc.node && src.mem.kind == MemKind::FbMem {
+                            t0 = net.stage_to_host(src.proc, bytes, t0);
+                        }
+                        arrive = net.move_bytes(src.proc, proc, bytes, t0);
+                        transferred = true;
+                    } else {
+                        // overlapping rect copies (e.g. whole-region read
+                        // over tiled writes): pull each overlap.
+                        let overlaps: Vec<(Instance, u64)> = state
+                            .iter()
+                            .filter(|((rid, r), _)| *rid == req.region && r.intersect(&rect).is_some())
+                            .filter_map(|((_, r), cs)| {
+                                cs.copies.first().map(|c| {
+                                    let ov = r.intersect(&rect).unwrap().volume() as u64
+                                        * region.elem_bytes;
+                                    (c.clone(), ov)
+                                })
+                            })
+                            .collect();
+                        for (src, ov_bytes) in overlaps {
+                            arrive = arrive
+                                .max(net.move_bytes(src.proc, proc, ov_bytes, ready.max(src.ready)));
+                            transferred = true;
+                        }
+                        if !transferred && req.privilege == crate::tasking::region::Privilege::ReadOnly
+                        {
+                            // cold read of never-written data: staged from
+                            // node-0 host memory.
+                            let host = ProcId { node: 0, kind: ProcKind::Cpu, local: 0 };
+                            arrive = net.move_bytes(host, proc, bytes, ready);
+                        }
+                    }
+                    // allocate the destination instance; under pressure,
+                    // evict replicated read copies first (Legion collects
+                    // unreferenced instances on demand). OOM only when the
+                    // *live* working set — sole copies of valid data —
+                    // cannot fit, which is the paper's Fig 13 failure mode.
+                    if pool.alloc(dst_mem, bytes).is_err() {
+                        let mut freed = 0u64;
+                        for cs in state.values_mut() {
+                            if cs.copies.len() < 2 {
+                                continue; // sole copy: live data, not evictable
+                            }
+                            while cs.copies.len() > 1 {
+                                if let Some(pos) =
+                                    cs.copies.iter().position(|c| c.mem == dst_mem)
+                                {
+                                    let victim = cs.copies.remove(pos);
+                                    pool.free(victim.mem, victim.bytes);
+                                    freed += victim.bytes;
+                                } else {
+                                    break;
+                                }
+                            }
+                            if pool.in_use(dst_mem) + bytes <= pool.capacity(dst_mem) {
+                                break;
+                            }
+                        }
+                        let _ = freed;
+                        if let Err(e) = pool.alloc(dst_mem, bytes) {
+                            oom = Some(e);
+                            break 'outer;
+                        }
+                    }
+                    let cs = state.entry(key.clone()).or_default();
+                    cs.copies.push(Instance { mem: dst_mem, proc, ready: arrive, bytes });
+                    ready = ready.max(arrive);
+                } else {
+                    // local copy valid: ready when it was produced
+                    let cs = &state[&key];
+                    let c = cs.copies.iter().find(|c| c.mem == dst_mem).unwrap();
+                    ready = ready.max(c.ready);
+                }
+            }
+
+            // 3. compute: roofline of FLOP rate vs local memory bandwidth
+            // (memory-bound kernels like stencils are limited by HBM, not
+            // the ALUs), plus the GPU kernel-launch overhead (§7.1's
+            // reason small tasks favor CPUs)
+            let rate = desc.flops_of(proc.kind);
+            let overhead =
+                if proc.kind == ProcKind::Gpu { desc.gpu_launch_overhead } else { 0.0 };
+            let local_bw =
+                if proc.kind == ProcKind::Gpu { desc.hbm_bw } else { desc.host_bw };
+            let touched: u64 = (0..launch.reqs.len())
+                .map(|ri| env.access_bytes(launch, ri, &pt))
+                .sum();
+            let compute =
+                (launch.flops_per_point / rate).max(touched as f64 / local_bw) + overhead;
+            let free = proc_free.get(&proc).copied().unwrap_or(0.0);
+            let start = ready.max(free);
+            let end = start + compute;
+            proc_free.insert(proc, end);
+            *proc_busy.entry(proc).or_insert(0.0) += compute;
+            total_flops += launch.flops_per_point;
+            finish.insert(pt.clone(), end);
+            makespan = makespan.max(end);
+            recent.entry(launch.name.clone()).or_default().push(end);
+
+            // 4. write-back: writers invalidate other copies & stamp new
+            // version; GC frees instances the mapper marked collectable.
+            for (ri, req) in launch.reqs.iter().enumerate() {
+                let rect = env.access_rect(launch, ri, &pt);
+                let key = (req.region, rect.clone());
+                let mem_kind = policies.mem_kind(&launch.name, ri);
+                let dst_mem = MemId::for_proc(proc, mem_kind);
+                if req.privilege.writes() {
+                    if let Some(cs) = state.get_mut(&key) {
+                        // free every other copy
+                        for c in cs.copies.iter().filter(|c| c.mem != dst_mem) {
+                            pool.free(c.mem, c.bytes);
+                        }
+                        cs.copies.retain(|c| c.mem == dst_mem);
+                        for c in cs.copies.iter_mut() {
+                            c.ready = end;
+                        }
+                    }
+                }
+                if policies.should_gc(&launch.name, ri) {
+                    if let Some(cs) = state.get_mut(&key) {
+                        for c in cs.copies.iter().filter(|c| c.mem == dst_mem) {
+                            pool.free(c.mem, c.bytes);
+                        }
+                        cs.copies.retain(|c| c.mem != dst_mem);
+                    }
+                }
+            }
+        }
+    }
+
+    SimResult {
+        makespan,
+        total_flops,
+        intra_bytes: net.intra_bytes,
+        inter_bytes: net.inter_bytes,
+        peak_fbmem: pool.peak_fbmem(),
+        proc_busy,
+        oom,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::point::Tuple;
+    use crate::tasking::deps::analyze;
+    use crate::tasking::region::{LogicalRegion, Partition, Privilege};
+    use crate::tasking::task::RegionReq;
+
+    fn desc(nodes: usize) -> MachineDesc {
+        MachineDesc::paper_testbed(nodes)
+    }
+
+    /// Fixed placement: everything on node 0 GPU 0.
+    fn all_on_one(launches: &[IndexLaunch]) -> HashMap<PointTask, ProcId> {
+        let mut m = HashMap::new();
+        for l in launches {
+            for pt in l.points() {
+                m.insert(pt, ProcId { node: 0, kind: ProcKind::Gpu, local: 0 });
+            }
+        }
+        m
+    }
+
+    /// Block placement over (nodes × gpus).
+    fn block_place(
+        launches: &[IndexLaunch],
+        nodes: usize,
+        gpus: usize,
+    ) -> HashMap<PointTask, ProcId> {
+        let mut m = HashMap::new();
+        for l in launches {
+            let ext = l.domain.extent();
+            for pt in l.points() {
+                let node = (pt.point[0] * nodes as i64 / ext[0]) as usize;
+                let local = if pt.point.dim() > 1 {
+                    (pt.point[1] * gpus as i64 / ext[1]) as usize
+                } else {
+                    0
+                };
+                m.insert(pt, ProcId { node, kind: ProcKind::Gpu, local });
+            }
+        }
+        m
+    }
+
+    fn program(n: i64, tile_grid: i64) -> (Vec<IndexLaunch>, DataEnv) {
+        let mut env = DataEnv::default();
+        let rid = env.add_region(LogicalRegion {
+            id: RegionId(0),
+            name: "A".into(),
+            extent: Tuple::from([n, n]),
+            elem_bytes: 8,
+        });
+        let part =
+            Partition::block(env.region(rid), &Tuple::from([tile_grid, tile_grid])).unwrap();
+        let pidx = env.add_partition(part);
+        let dom = Rect::from_extent(&Tuple::from([tile_grid, tile_grid]));
+        let init = IndexLaunch::new(0, "init", dom.clone())
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::WriteOnly))
+            .with_flops(1e6);
+        let step = IndexLaunch::new(1, "step", dom)
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::ReadWrite))
+            .with_flops(1e9);
+        (vec![init, step], env)
+    }
+
+    #[test]
+    fn parallel_beats_serial() {
+        let (launches, env) = program(1024, 4);
+        let deps = analyze(&launches, &env);
+        let d = desc(4);
+        let serial = simulate(&launches, &env, &deps, &all_on_one(&launches), &d, &DefaultPolicies);
+        let parallel =
+            simulate(&launches, &env, &deps, &block_place(&launches, 4, 4), &d, &DefaultPolicies);
+        assert!(parallel.oom.is_none() && serial.oom.is_none());
+        assert!(
+            parallel.makespan < serial.makespan / 4.0,
+            "parallel {} vs serial {}",
+            parallel.makespan,
+            serial.makespan
+        );
+    }
+
+    #[test]
+    fn locality_reduces_traffic() {
+        // Same data, read twice by the same placement → second read hits
+        // the local cached copy, no extra bytes.
+        let (launches, env) = program(512, 2);
+        let deps = analyze(&launches, &env);
+        let d = desc(2);
+        let placements = block_place(&launches, 2, 2);
+        let r = simulate(&launches, &env, &deps, &placements, &d, &DefaultPolicies);
+        // init writes locally, step reads the same tile on the same proc:
+        // zero inter-node traffic.
+        assert_eq!(r.inter_bytes, 0, "{r:?}");
+    }
+
+    #[test]
+    fn misaligned_placement_moves_data() {
+        let (launches, env) = program(512, 2);
+        let deps = analyze(&launches, &env);
+        let d = desc(2);
+        // init on block placement, step deliberately scrambled: swap nodes
+        let mut placements = block_place(&launches, 2, 2);
+        for l in &launches[1..] {
+            for pt in l.points() {
+                let p = placements.get_mut(&pt).unwrap();
+                p.node = 1 - p.node;
+            }
+        }
+        let r = simulate(&launches, &env, &deps, &placements, &d, &DefaultPolicies);
+        assert!(r.inter_bytes > 0, "cross-node step must move tiles");
+    }
+
+    #[test]
+    fn oom_on_overcommit() {
+        // Single GPU materializing > 16 GB of tiles.
+        let mut env = DataEnv::default();
+        let rid = env.add_region(LogicalRegion {
+            id: RegionId(0),
+            name: "big".into(),
+            extent: Tuple::from([48 * 1024, 48 * 1024]), // 48Ki×48Ki×8B = 18 GB
+            elem_bytes: 8,
+        });
+        let part = Partition::block(env.region(rid), &Tuple::from([2, 2])).unwrap();
+        let pidx = env.add_partition(part);
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let init = IndexLaunch::new(0, "init", dom)
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::WriteOnly));
+        let launches = vec![init];
+        let deps = analyze(&launches, &env);
+        let d = desc(1);
+        let r = simulate(&launches, &env, &deps, &all_on_one(&launches), &d, &DefaultPolicies);
+        assert!(r.oom.is_some(), "18 GB on one 16 GB GPU must OOM");
+        // spread over 4 GPUs: fits
+        let r2 = simulate(&launches, &env, &deps, &block_place(&launches, 1, 4), &d, &DefaultPolicies);
+        assert!(r2.oom.is_none());
+    }
+
+    #[test]
+    fn gc_reduces_peak_memory() {
+        struct GcAll;
+        impl MappingPolicies for GcAll {
+            fn should_gc(&self, task: &str, _arg: usize) -> bool {
+                task == "step"
+            }
+        }
+        let (launches, env) = program(2048, 2);
+        let deps = analyze(&launches, &env);
+        let d = desc(1);
+        let pl = all_on_one(&launches);
+        let keep = simulate(&launches, &env, &deps, &pl, &d, &DefaultPolicies);
+        let gc = simulate(&launches, &env, &deps, &pl, &d, &GcAll);
+        assert!(gc.peak_fbmem <= keep.peak_fbmem);
+    }
+
+    #[test]
+    fn backpressure_serializes() {
+        struct Bp;
+        impl MappingPolicies for Bp {
+            fn backpressure(&self, task: &str) -> Option<usize> {
+                if task == "step" {
+                    Some(1)
+                } else {
+                    None
+                }
+            }
+        }
+        let (launches, env) = program(1024, 4);
+        let deps = analyze(&launches, &env);
+        let d = desc(4);
+        let pl = block_place(&launches, 4, 4);
+        let free = simulate(&launches, &env, &deps, &pl, &d, &DefaultPolicies);
+        let bp = simulate(&launches, &env, &deps, &pl, &d, &Bp);
+        assert!(bp.makespan >= free.makespan, "bp {} vs free {}", bp.makespan, free.makespan);
+    }
+
+    #[test]
+    fn throughput_accounting() {
+        let (launches, env) = program(1024, 4);
+        let deps = analyze(&launches, &env);
+        let d = desc(4);
+        let r = simulate(&launches, &env, &deps, &block_place(&launches, 4, 4), &d, &DefaultPolicies);
+        assert!((r.total_flops - (16.0 * 1e6 + 16.0 * 1e9)).abs() < 1.0);
+        assert!(r.throughput_per_node(4) > 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Physical memory tracking: instance allocation with capacities → OOM.
+//!
+//! Each copy of a region tile materialized in a memory is an *instance*
+//! occupying bytes there. Framebuffer memories have hard capacities
+//! (16 GB on the paper's V100s); when a mapping materializes more
+//! instances than fit, allocation fails — exactly the OOM effect Fig 13
+//! reports for the runtime-heuristic mapper on PUMMA/SUMMA at 32 GPUs.
+
+use crate::machine::topology::{MachineDesc, MemKind, ProcId};
+use std::collections::HashMap;
+
+/// A physical memory: (node, kind, local index). FBMEM is per-GPU; other
+/// kinds are per-node (local = 0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MemId {
+    pub node: usize,
+    pub kind: MemKind,
+    pub local: usize,
+}
+
+impl MemId {
+    /// The memory a processor's instances live in for a given kind.
+    pub fn for_proc(proc: ProcId, kind: MemKind) -> MemId {
+        match kind {
+            MemKind::FbMem => MemId { node: proc.node, kind, local: proc.local },
+            _ => MemId { node: proc.node, kind, local: 0 },
+        }
+    }
+}
+
+/// Out-of-memory failure description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OomError {
+    pub mem: MemId,
+    pub requested: u64,
+    pub in_use: u64,
+    pub capacity: u64,
+}
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OOM: {:?} cannot fit {} B ({} B in use of {} B)",
+            self.mem, self.requested, self.in_use, self.capacity
+        )
+    }
+}
+
+/// Allocation tracker for all memories in the cluster.
+#[derive(Debug)]
+pub struct MemoryPool {
+    in_use: HashMap<MemId, u64>,
+    high_water: HashMap<MemId, u64>,
+    desc: MachineDesc,
+}
+
+impl MemoryPool {
+    pub fn new(desc: &MachineDesc) -> MemoryPool {
+        MemoryPool { in_use: HashMap::new(), high_water: HashMap::new(), desc: desc.clone() }
+    }
+
+    pub fn capacity(&self, mem: MemId) -> u64 {
+        match mem.kind {
+            MemKind::FbMem => self.desc.fbmem_capacity,
+            MemKind::SysMem => self.desc.sysmem_capacity,
+            MemKind::ZeroCopy => self.desc.zcmem_capacity,
+            MemKind::RdmaMem => self.desc.sysmem_capacity / 4,
+        }
+    }
+
+    pub fn in_use(&self, mem: MemId) -> u64 {
+        self.in_use.get(&mem).copied().unwrap_or(0)
+    }
+
+    pub fn high_water(&self, mem: MemId) -> u64 {
+        self.high_water.get(&mem).copied().unwrap_or(0)
+    }
+
+    /// Allocate `bytes` in `mem`, failing with OOM when over capacity.
+    pub fn alloc(&mut self, mem: MemId, bytes: u64) -> Result<(), OomError> {
+        let used = self.in_use(mem);
+        let cap = self.capacity(mem);
+        if used + bytes > cap {
+            return Err(OomError { mem, requested: bytes, in_use: used, capacity: cap });
+        }
+        let new = used + bytes;
+        self.in_use.insert(mem, new);
+        let hw = self.high_water.entry(mem).or_insert(0);
+        *hw = (*hw).max(new);
+        Ok(())
+    }
+
+    /// Free `bytes` (panics on underflow — indicates an accounting bug).
+    pub fn free(&mut self, mem: MemId, bytes: u64) {
+        let used = self.in_use.get_mut(&mem).expect("free from untouched memory");
+        assert!(*used >= bytes, "free underflow: {used} < {bytes} in {mem:?}");
+        *used -= bytes;
+    }
+
+    /// Peak FBMEM usage across all GPUs (reported in experiment logs).
+    pub fn peak_fbmem(&self) -> u64 {
+        self.high_water
+            .iter()
+            .filter(|(m, _)| m.kind == MemKind::FbMem)
+            .map(|(_, &b)| b)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::topology::ProcKind;
+
+    fn fb(node: usize, gpu: usize) -> MemId {
+        MemId { node, kind: MemKind::FbMem, local: gpu }
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let desc = MachineDesc::paper_testbed(1);
+        let mut pool = MemoryPool::new(&desc);
+        pool.alloc(fb(0, 0), 1 << 30).unwrap();
+        assert_eq!(pool.in_use(fb(0, 0)), 1 << 30);
+        pool.free(fb(0, 0), 1 << 30);
+        assert_eq!(pool.in_use(fb(0, 0)), 0);
+        assert_eq!(pool.high_water(fb(0, 0)), 1 << 30, "high-water persists");
+    }
+
+    #[test]
+    fn oom_at_capacity() {
+        let desc = MachineDesc::paper_testbed(1); // 16 GB FB
+        let mut pool = MemoryPool::new(&desc);
+        pool.alloc(fb(0, 0), 10 << 30).unwrap();
+        let e = pool.alloc(fb(0, 0), 8 << 30).unwrap_err();
+        assert_eq!(e.in_use, 10 << 30);
+        assert_eq!(e.capacity, 16 << 30);
+        // other GPUs unaffected
+        pool.alloc(fb(0, 1), 8 << 30).unwrap();
+    }
+
+    #[test]
+    fn per_proc_fbmem_vs_per_node_sysmem() {
+        let p0 = ProcId { node: 0, kind: ProcKind::Gpu, local: 0 };
+        let p1 = ProcId { node: 0, kind: ProcKind::Gpu, local: 1 };
+        assert_ne!(MemId::for_proc(p0, MemKind::FbMem), MemId::for_proc(p1, MemKind::FbMem));
+        assert_eq!(MemId::for_proc(p0, MemKind::SysMem), MemId::for_proc(p1, MemKind::SysMem));
+    }
+
+    #[test]
+    #[should_panic(expected = "free underflow")]
+    fn underflow_detected() {
+        let desc = MachineDesc::paper_testbed(1);
+        let mut pool = MemoryPool::new(&desc);
+        pool.alloc(fb(0, 0), 100).unwrap();
+        pool.free(fb(0, 0), 200);
+    }
+}

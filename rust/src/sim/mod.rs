@@ -1,0 +1,13 @@
+//! Cluster simulator — the testbed substitute (see DESIGN.md
+//! §Hardware-Adaptation). Models the paper's Power9 + 4×V100 nodes:
+//! NVLink/IB channels with contention, per-GPU framebuffer capacities
+//! with OOM, compute rates, and the memory/GC/backpressure policies the
+//! mapper controls.
+
+pub mod channel;
+pub mod engine;
+pub mod memory;
+
+pub use channel::{Channel, Network};
+pub use engine::{simulate, DefaultPolicies, MappingPolicies, SimResult};
+pub use memory::{MemId, MemoryPool, OomError};

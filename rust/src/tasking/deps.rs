@@ -1,0 +1,226 @@
+//! Dependence analysis (the ≼ relation of §5.1).
+//!
+//! Two point tasks depend on each other if an earlier launch (program
+//! order) touches overlapping data with a conflicting privilege pair.
+//! Overlap is computed on the actual rects each point task accesses
+//! (partition tile or whole region), so independent tiles of the same
+//! region do not serialize.
+
+use super::region::{LogicalRegion, Partition, RegionId};
+use super::task::{IndexLaunch, PointTask};
+use crate::machine::point::Rect;
+use std::collections::{BTreeMap, HashMap};
+
+/// The data environment launches run against: regions + their partitions.
+#[derive(Default, Debug)]
+pub struct DataEnv {
+    pub regions: BTreeMap<RegionId, LogicalRegion>,
+    /// partitions[region][k] = k-th partition registered for the region.
+    pub partitions: BTreeMap<RegionId, Vec<Partition>>,
+}
+
+impl DataEnv {
+    pub fn add_region(&mut self, r: LogicalRegion) -> RegionId {
+        let id = r.id;
+        assert!(self.regions.insert(id, r).is_none(), "duplicate region id {id:?}");
+        id
+    }
+
+    pub fn add_partition(&mut self, p: Partition) -> usize {
+        let list = self.partitions.entry(p.region).or_default();
+        list.push(p);
+        list.len() - 1
+    }
+
+    pub fn region(&self, id: RegionId) -> &LogicalRegion {
+        &self.regions[&id]
+    }
+
+    pub fn partition(&self, region: RegionId, idx: usize) -> &Partition {
+        &self.partitions[&region][idx]
+    }
+
+    /// The rect a point task's requirement touches.
+    pub fn access_rect(&self, launch: &IndexLaunch, req_idx: usize, pt: &PointTask) -> Rect {
+        let req = &launch.reqs[req_idx];
+        match req.partition {
+            None => self.region(req.region).bounds(),
+            Some(pidx) => {
+                let part = self.partition(req.region, pidx);
+                let color = req.projection.color(&pt.point, &part.colors);
+                part.tile(&color)
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "projection produced color {color:?} outside partition {:?} \
+                             (launch '{}', point {:?})",
+                            part.colors, launch.name, pt.point
+                        )
+                    })
+                    .clone()
+            }
+        }
+    }
+
+    /// Bytes a point task's requirement touches.
+    pub fn access_bytes(&self, launch: &IndexLaunch, req_idx: usize, pt: &PointTask) -> u64 {
+        let rect = self.access_rect(launch, req_idx, pt);
+        rect.volume() as u64 * self.region(launch.reqs[req_idx].region).elem_bytes
+    }
+}
+
+/// Point-task dependence edges: for each task, the list of *predecessor*
+/// point tasks it must wait for.
+#[derive(Debug, Default)]
+pub struct Dependences {
+    pub preds: HashMap<PointTask, Vec<PointTask>>,
+}
+
+impl Dependences {
+    pub fn preds_of(&self, t: &PointTask) -> &[PointTask] {
+        self.preds.get(t).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.preds.values().map(|v| v.len()).sum()
+    }
+}
+
+/// Compute point-level dependences across a program-ordered launch list.
+///
+/// For scalability this compares each launch only against the most recent
+/// *conflicting* writer/readers per region (sufficient for the chain
+/// structure of the paper's apps, and transitively complete because
+/// conflicts serialize).
+pub fn analyze(launches: &[IndexLaunch], env: &DataEnv) -> Dependences {
+    let mut deps = Dependences::default();
+    // For each region, remember every (launch index, req index) touching it.
+    let mut touches: HashMap<RegionId, Vec<(usize, usize)>> = HashMap::new();
+    for (li, launch) in launches.iter().enumerate() {
+        for (ri, req) in launch.reqs.iter().enumerate() {
+            // find conflicting earlier accesses
+            let earlier = touches.get(&req.region).cloned().unwrap_or_default();
+            for (elii, erii) in earlier {
+                let earlier_launch = &launches[elii];
+                let earlier_req = &earlier_launch.reqs[erii];
+                if !earlier_req.privilege.conflicts(req.privilege) {
+                    continue;
+                }
+                // point-by-point rect intersection
+                for pt in launch.points() {
+                    let my_rect = env.access_rect(launch, ri, &pt);
+                    for ept in earlier_launch.points() {
+                        let their_rect = env.access_rect(earlier_launch, erii, &ept);
+                        if my_rect.intersect(&their_rect).is_some() {
+                            let entry = deps.preds.entry(pt.clone()).or_default();
+                            if !entry.contains(&ept) {
+                                entry.push(ept);
+                            }
+                        }
+                    }
+                }
+            }
+            touches.entry(req.region).or_default().push((li, ri));
+        }
+    }
+    deps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::point::Tuple;
+    use crate::tasking::region::{Privilege, RegionId};
+    use crate::tasking::task::RegionReq;
+
+    fn setup() -> (DataEnv, RegionId, usize) {
+        let mut env = DataEnv::default();
+        let r = LogicalRegion {
+            id: RegionId(0),
+            name: "A".into(),
+            extent: Tuple::from([4, 4]),
+            elem_bytes: 8,
+        };
+        let rid = env.add_region(r);
+        let part = Partition::block(env.region(rid), &Tuple::from([2, 2])).unwrap();
+        let pidx = env.add_partition(part);
+        (env, rid, pidx)
+    }
+
+    #[test]
+    fn disjoint_tiles_do_not_conflict() {
+        let (env, rid, pidx) = setup();
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let w = IndexLaunch::new(0, "w", dom.clone())
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::WriteOnly));
+        let r = IndexLaunch::new(1, "r", dom)
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::ReadOnly));
+        let deps = analyze(&[w, r], &env);
+        // each reader depends only on the writer of ITS tile
+        for pt in Rect::from_extent(&Tuple::from([2, 2])).points() {
+            let t = PointTask { launch: LaunchId(1), point: pt.clone() };
+            let p = deps.preds_of(&t);
+            assert_eq!(p.len(), 1, "{pt:?}: {p:?}");
+            assert_eq!(p[0].point, pt);
+        }
+    }
+
+    use crate::tasking::task::LaunchId;
+
+    #[test]
+    fn whole_region_read_depends_on_all_writers() {
+        let (env, rid, pidx) = setup();
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let w = IndexLaunch::new(0, "w", dom)
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::WriteOnly));
+        let sum = IndexLaunch::new(1, "sum", Rect::from_extent(&Tuple::from([1])))
+            .with_req(RegionReq::whole(rid, Privilege::ReadOnly));
+        let deps = analyze(&[w, sum], &env);
+        let t = PointTask { launch: LaunchId(1), point: Tuple::from([0]) };
+        assert_eq!(deps.preds_of(&t).len(), 4);
+    }
+
+    #[test]
+    fn readers_do_not_serialize() {
+        let (env, rid, _) = setup();
+        let dom = Rect::from_extent(&Tuple::from([2]));
+        let r1 = IndexLaunch::new(0, "r1", dom.clone())
+            .with_req(RegionReq::whole(rid, Privilege::ReadOnly));
+        let r2 = IndexLaunch::new(1, "r2", dom)
+            .with_req(RegionReq::whole(rid, Privilege::ReadOnly));
+        let deps = analyze(&[r1, r2], &env);
+        assert_eq!(deps.edge_count(), 0);
+    }
+
+    #[test]
+    fn reductions_commute() {
+        let (env, rid, pidx) = setup();
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let a = IndexLaunch::new(0, "a", dom.clone())
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::Reduce));
+        let b = IndexLaunch::new(1, "b", dom)
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::Reduce));
+        let deps = analyze(&[a, b], &env);
+        assert_eq!(deps.edge_count(), 0);
+    }
+
+    #[test]
+    fn shifted_projection_crosses_tiles() {
+        let (env, rid, pidx) = setup();
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let w = IndexLaunch::new(0, "w", dom.clone())
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::WriteOnly));
+        // read with column shift +1 (mod 2): task (i,j) reads tile (i,j+1)
+        let r = IndexLaunch::new(1, "r", dom).with_req(RegionReq::shifted(
+            rid,
+            pidx,
+            Privilege::ReadOnly,
+            vec![0, 1],
+            Tuple::from([0, 1]),
+        ));
+        let deps = analyze(&[w, r], &env);
+        let t = PointTask { launch: LaunchId(1), point: Tuple::from([0, 0]) };
+        let p = deps.preds_of(&t);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].point, Tuple::from([0, 1]), "depends on the writer of the shifted tile");
+    }
+}

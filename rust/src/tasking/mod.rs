@@ -1,0 +1,14 @@
+//! Legion-like task runtime implementing the paper's §5 execution model:
+//! logical regions & partitions, index-task launches, dependence analysis
+//! (the ≼ relation), and the four-stage mapping pipeline with SHARD/MAP
+//! callbacks formalized in Figs 10–11.
+
+pub mod deps;
+pub mod pipeline;
+pub mod region;
+pub mod task;
+
+pub use deps::{analyze, DataEnv, Dependences};
+pub use pipeline::{run, validate, IndexMapping, LogEntry, PipelineRun};
+pub use region::{LogicalRegion, Partition, Privilege, RegionId};
+pub use task::{IndexLaunch, LaunchId, PointTask, Projection, RegionReq};

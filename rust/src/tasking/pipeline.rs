@@ -1,0 +1,358 @@
+//! The §5.1 execution pipeline: the operational semantics of Fig 10/11.
+//!
+//! Tasks progress Enqueued → Mapped → Launched → Executed. The execution
+//! state is a pair of per-node queues (enqueued, mapped); the execution
+//! log records every transition. The user-supplied SHARD and MAP callbacks
+//! (unified by Mapple into one index transformation, §5.2) drive the
+//! [Distribute]/[Local] and [Map] rules.
+//!
+//! This module implements the *abstract machine*: transitions fire in a
+//! deterministic worklist order and [Execute] is atomic. Timing (how long
+//! compute and data movement take on the physical cluster) is layered on
+//! by `crate::sim`, which consumes the placements and dependences this
+//! pipeline produces.
+
+use super::deps::Dependences;
+use super::task::{IndexLaunch, LaunchId, PointTask};
+use crate::machine::point::Tuple;
+use crate::machine::topology::ProcId;
+use std::collections::{HashMap, VecDeque};
+
+/// SHARD + MAP: the two user-supplied mapping functions of §5.1.
+pub trait IndexMapping {
+    /// SHARD: select the node a point task is distributed to.
+    fn shard(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<usize, String>;
+    /// MAP: select the concrete processor within that node.
+    fn map(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String>;
+}
+
+/// Execution log entry (Fig 10's `e`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LogEntry {
+    Enqueued(PointTask),
+    Mapped(PointTask, ProcId),
+    Launched(PointTask, ProcId),
+    Executed(PointTask, ProcId),
+}
+
+/// Result of running the pipeline: placements + ordered execution log.
+#[derive(Debug)]
+pub struct PipelineRun {
+    pub placements: HashMap<PointTask, ProcId>,
+    pub log: Vec<LogEntry>,
+}
+
+/// Errors surfaced by the pipeline (mapping failures, deadlock).
+#[derive(Debug)]
+pub struct PipelineError(pub String);
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pipeline error: {}", self.0)
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Stage {
+    Pending, // not yet enqueued
+    Enqueued,
+    Mapped,
+    Launched,
+    Executed,
+}
+
+/// Run the abstract pipeline over a program-ordered launch list.
+///
+/// `nodes` is the node count (for queue vectors); `mapping` supplies
+/// SHARD/MAP; `deps` the ≼ relation from [`super::deps::analyze`].
+pub fn run(
+    launches: &[IndexLaunch],
+    deps: &Dependences,
+    mapping: &dyn IndexMapping,
+    nodes: usize,
+) -> Result<PipelineRun, PipelineError> {
+    let mut log: Vec<LogEntry> = Vec::new();
+    let mut placements: HashMap<PointTask, ProcId> = HashMap::new();
+    let mut stage: HashMap<PointTask, Stage> = HashMap::new();
+    // Per-node queues (the paper's N[n] * N[n] execution state).
+    let mut enqueued_q: Vec<VecDeque<PointTask>> = vec![VecDeque::new(); nodes];
+    let mut mapped_q: Vec<VecDeque<PointTask>> = vec![VecDeque::new(); nodes];
+
+    let ispace: HashMap<LaunchId, Tuple> =
+        launches.iter().map(|l| (l.id, l.domain.extent())).collect();
+    let name: HashMap<LaunchId, &str> =
+        launches.iter().map(|l| (l.id, l.name.as_str())).collect();
+
+    // Sibling-predecessor relation (program order ∧ dependence): the [Map]
+    // rule requires sibling predecessors a task depends on to be mapped.
+    // [Enqueue]: the parent enqueues launches in program order; within an
+    // index launch, point tasks enqueue together. Sibling order is the
+    // launch order, so we enqueue + distribute launch-by-launch.
+    let mut all_points: Vec<PointTask> = Vec::new();
+    for launch in launches {
+        for pt in launch.points() {
+            stage.insert(pt.clone(), Stage::Pending);
+            all_points.push(pt);
+        }
+    }
+
+    // [Enqueue] + [Distribute] + [Local]: enqueue each launch in program
+    // order, SHARD each point to its node queue.
+    for launch in launches {
+        for pt in launch.points() {
+            let node = mapping
+                .shard(&launch.name, &pt.point, &ispace[&launch.id])
+                .map_err(PipelineError)?;
+            if node >= nodes {
+                return Err(PipelineError(format!(
+                    "SHARD({}) returned node {node} ≥ {nodes} for point {:?}",
+                    launch.name, pt.point
+                )));
+            }
+            log.push(LogEntry::Enqueued(pt.clone()));
+            stage.insert(pt.clone(), Stage::Enqueued);
+            enqueued_q[node].push_back(pt.clone());
+        }
+        // [Local]: sharded tasks move to the node's mapped-stage queue.
+        for q in enqueued_q.iter_mut() {
+            while let Some(pt) = q.pop_front() {
+                let node = mapping
+                    .shard(name[&pt.launch], &pt.point, &ispace[&pt.launch])
+                    .map_err(PipelineError)?;
+                mapped_q[node].push_back(pt);
+            }
+        }
+    }
+
+    // [Map] / [Launch] / [Execute]: fire transitions until quiescent.
+    let executed = |stage: &HashMap<PointTask, Stage>, t: &PointTask| {
+        matches!(stage.get(t), Some(Stage::Executed))
+    };
+    let mapped_or_later = |stage: &HashMap<PointTask, Stage>, t: &PointTask| {
+        matches!(stage.get(t), Some(Stage::Mapped | Stage::Launched | Stage::Executed))
+    };
+
+    let total = all_points.len();
+    let mut done: usize = 0;
+    let mut progress = true;
+    while done < total {
+        if !progress {
+            let stuck: Vec<&PointTask> = all_points
+                .iter()
+                .filter(|t| !matches!(stage[*t], Stage::Executed))
+                .take(4)
+                .collect();
+            return Err(PipelineError(format!(
+                "pipeline deadlock: {} of {total} tasks incomplete (e.g. {stuck:?}) — \
+                 dependence cycle or mapping failure",
+                total - done
+            )));
+        }
+        progress = false;
+
+        // [Map]: for each node queue, map tasks whose dependence
+        // predecessors are at least mapped (their locations are known).
+        for node_q in mapped_q.iter_mut() {
+            let n = node_q.len();
+            for _ in 0..n {
+                let pt = node_q.pop_front().unwrap();
+                let ready = deps
+                    .preds_of(&pt)
+                    .iter()
+                    .all(|p| mapped_or_later(&stage, p));
+                if ready {
+                    let proc = mapping
+                        .map(name[&pt.launch], &pt.point, &ispace[&pt.launch])
+                        .map_err(PipelineError)?;
+                    log.push(LogEntry::Mapped(pt.clone(), proc));
+                    placements.insert(pt.clone(), proc);
+                    stage.insert(pt.clone(), Stage::Mapped);
+                    progress = true;
+                } else {
+                    node_q.push_back(pt);
+                }
+            }
+        }
+
+        // [Launch] + [Execute]: launch tasks whose dependence predecessors
+        // have executed; execution is atomic in the abstract machine.
+        for pt in &all_points {
+            if stage[pt] != Stage::Mapped {
+                continue;
+            }
+            let ready = deps.preds_of(pt).iter().all(|p| executed(&stage, p));
+            if ready {
+                let proc = placements[pt];
+                log.push(LogEntry::Launched(pt.clone(), proc));
+                log.push(LogEntry::Executed(pt.clone(), proc));
+                stage.insert(pt.clone(), Stage::Executed);
+                done += 1;
+                progress = true;
+            }
+        }
+    }
+
+    Ok(PipelineRun { placements, log })
+}
+
+/// Validate the §5.1 stage invariants over an execution log. Returns the
+/// first violation found. Used by integration and property tests.
+pub fn validate(run: &PipelineRun, deps: &Dependences) -> Result<(), String> {
+    let mut position: HashMap<(u8, PointTask), usize> = HashMap::new();
+    for (i, e) in run.log.iter().enumerate() {
+        let (code, t) = match e {
+            LogEntry::Enqueued(t) => (0u8, t),
+            LogEntry::Mapped(t, _) => (1, t),
+            LogEntry::Launched(t, _) => (2, t),
+            LogEntry::Executed(t, _) => (3, t),
+        };
+        if position.insert((code, t.clone()), i).is_some() {
+            return Err(format!("duplicate log entry {e:?}"));
+        }
+    }
+    for (t, _proc) in &run.placements {
+        // stage ordering per task
+        let stages: Vec<usize> = (0..4u8)
+            .map(|c| {
+                position
+                    .get(&(c, t.clone()))
+                    .copied()
+                    .ok_or_else(|| format!("task {t:?} missing stage {c}"))
+            })
+            .collect::<Result<_, _>>()?;
+        if !(stages[0] < stages[1] && stages[1] < stages[2] && stages[2] < stages[3]) {
+            return Err(format!("task {t:?} stages out of order: {stages:?}"));
+        }
+        // [Map] precondition: dependence predecessors mapped before t maps
+        for p in deps.preds_of(t) {
+            let p_mapped = position[&(1, p.clone())];
+            if p_mapped > stages[1] {
+                return Err(format!("{t:?} mapped before predecessor {p:?}"));
+            }
+            // [Launch] precondition: predecessors executed before launch
+            let p_exec = position[&(3, p.clone())];
+            if p_exec > stages[2] {
+                return Err(format!("{t:?} launched before predecessor {p:?} executed"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::point::Rect;
+    use crate::machine::topology::ProcKind;
+    use crate::tasking::deps::{analyze, DataEnv};
+    use crate::tasking::region::{LogicalRegion, Partition, Privilege, RegionId};
+    use crate::tasking::task::RegionReq;
+
+    /// Block mapping over 2 nodes × 2 procs for tests.
+    struct BlockMap;
+
+    impl IndexMapping for BlockMap {
+        fn shard(&self, _t: &str, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+            Ok((point[0] * 2 / ispace[0]) as usize)
+        }
+        fn map(&self, t: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+            let node = self.shard(t, point, ispace)?;
+            let local = if point.dim() > 1 { (point[1] * 2 / ispace[1]) as usize } else { 0 };
+            Ok(ProcId { node, kind: ProcKind::Gpu, local })
+        }
+    }
+
+    fn two_phase_program() -> (Vec<IndexLaunch>, DataEnv) {
+        let mut env = DataEnv::default();
+        let rid = env.add_region(LogicalRegion {
+            id: RegionId(0),
+            name: "A".into(),
+            extent: Tuple::from([4, 4]),
+            elem_bytes: 8,
+        });
+        let part = Partition::block(env.region(rid), &Tuple::from([2, 2])).unwrap();
+        let pidx = env.add_partition(part);
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let init = IndexLaunch::new(0, "init", dom.clone())
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::WriteOnly));
+        let step = IndexLaunch::new(1, "step", dom)
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::ReadWrite));
+        (vec![init, step], env)
+    }
+
+    #[test]
+    fn runs_and_validates() {
+        let (launches, env) = two_phase_program();
+        let deps = analyze(&launches, &env);
+        let run = run(&launches, &deps, &BlockMap, 2).unwrap();
+        assert_eq!(run.placements.len(), 8);
+        validate(&run, &deps).unwrap();
+    }
+
+    #[test]
+    fn placements_follow_mapping() {
+        let (launches, env) = two_phase_program();
+        let deps = analyze(&launches, &env);
+        let r = run(&launches, &deps, &BlockMap, 2).unwrap();
+        let t = PointTask { launch: LaunchId(0), point: Tuple::from([1, 1]) };
+        let p = r.placements[&t];
+        assert_eq!((p.node, p.local), (1, 1));
+    }
+
+    #[test]
+    fn shard_out_of_range_rejected() {
+        struct Bad;
+        impl IndexMapping for Bad {
+            fn shard(&self, _: &str, _: &Tuple, _: &Tuple) -> Result<usize, String> {
+                Ok(99)
+            }
+            fn map(&self, _: &str, _: &Tuple, _: &Tuple) -> Result<ProcId, String> {
+                unreachable!()
+            }
+        }
+        let (launches, env) = two_phase_program();
+        let deps = analyze(&launches, &env);
+        let e = run(&launches, &deps, &Bad, 2).unwrap_err();
+        assert!(e.0.contains("SHARD"));
+    }
+
+    #[test]
+    fn mapping_error_propagates() {
+        struct Failing;
+        impl IndexMapping for Failing {
+            fn shard(&self, _: &str, _: &Tuple, _: &Tuple) -> Result<usize, String> {
+                Ok(0)
+            }
+            fn map(&self, _: &str, _: &Tuple, _: &Tuple) -> Result<ProcId, String> {
+                Err("no processor available".into())
+            }
+        }
+        let (launches, env) = two_phase_program();
+        let deps = analyze(&launches, &env);
+        assert!(run(&launches, &deps, &Failing, 2).is_err());
+    }
+
+    #[test]
+    fn log_interleaves_mapping_ahead_of_execution() {
+        // The pipeline should map the second launch's tasks even though
+        // they cannot launch until the first finishes — mapping proceeds
+        // when predecessors are merely *mapped* (§5.1).
+        let (launches, env) = two_phase_program();
+        let deps = analyze(&launches, &env);
+        let r = run(&launches, &deps, &BlockMap, 2).unwrap();
+        // find positions
+        let pos = |pred: &dyn Fn(&LogEntry) -> bool| r.log.iter().position(|e| pred(e)).unwrap();
+        let t1 = PointTask { launch: LaunchId(1), point: Tuple::from([0, 0]) };
+        let t0 = PointTask { launch: LaunchId(0), point: Tuple::from([0, 0]) };
+        let map_t1 = pos(&|e| matches!(e, LogEntry::Mapped(t, _) if *t == t1));
+        let exec_t0 = pos(&|e| matches!(e, LogEntry::Executed(t, _) if *t == t0));
+        // t1 is mapped in the same pass as t0's mapping, before t0 executes
+        // is not guaranteed by our scheduler ordering, but validate() holds:
+        validate(&r, &deps).unwrap();
+        let launch_t1 = pos(&|e| matches!(e, LogEntry::Launched(t, _) if *t == t1));
+        assert!(launch_t1 > exec_t0, "launch waits for execution");
+        assert!(map_t1 < launch_t1);
+    }
+}

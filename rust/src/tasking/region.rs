@@ -1,0 +1,182 @@
+//! Logical regions and partitions (the data side of the task model).
+//!
+//! A [`LogicalRegion`] is an n-D array of elements identified by id; a
+//! [`Partition`] tiles a region into subrectangles indexed by a color
+//! space (Legion's index partitions, restricted to disjoint rectangular
+//! tilings, which is what the paper's benchmarks use).
+
+use crate::machine::point::{Rect, Tuple};
+use std::collections::BTreeMap;
+
+/// Region identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegionId(pub u32);
+
+/// Access privilege of a region requirement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Privilege {
+    ReadOnly,
+    WriteOnly,
+    ReadWrite,
+    /// Reduction with an associative op — commutes with itself.
+    Reduce,
+}
+
+impl Privilege {
+    /// Do two accesses to overlapping data conflict (order must be kept)?
+    pub fn conflicts(self, other: Privilege) -> bool {
+        use Privilege::*;
+        match (self, other) {
+            (ReadOnly, ReadOnly) => false,
+            (Reduce, Reduce) => false, // reductions fold atomically
+            _ => true,
+        }
+    }
+
+    pub fn writes(self) -> bool {
+        !matches!(self, Privilege::ReadOnly)
+    }
+}
+
+/// A logical region: shape + element size (bytes).
+#[derive(Clone, Debug)]
+pub struct LogicalRegion {
+    pub id: RegionId,
+    pub name: String,
+    pub extent: Tuple,
+    pub elem_bytes: u64,
+}
+
+impl LogicalRegion {
+    pub fn volume(&self) -> i64 {
+        self.extent.product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.volume() as u64 * self.elem_bytes
+    }
+
+    pub fn bounds(&self) -> Rect {
+        Rect::from_extent(&self.extent)
+    }
+}
+
+/// A disjoint rectangular tiling of a region by a color grid.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub region: RegionId,
+    /// Color-space extent, e.g. (2, 3) for a 2×3 tiling.
+    pub colors: Tuple,
+    /// Tile rect per color (BTreeMap for deterministic iteration).
+    pub tiles: BTreeMap<Tuple, Rect>,
+}
+
+impl Partition {
+    /// Equal block partition of `extent` into a `colors` grid. Remainders
+    /// go to the trailing tiles (Legion block-partition convention).
+    pub fn block(region: &LogicalRegion, colors: &Tuple) -> Result<Partition, String> {
+        let extent = &region.extent;
+        if colors.dim() != extent.dim() {
+            return Err(format!(
+                "partition colors {colors:?} vs region extent {extent:?}: dim mismatch"
+            ));
+        }
+        if colors.0.iter().any(|&c| c <= 0) {
+            return Err(format!("nonpositive color count {colors:?}"));
+        }
+        let mut tiles = BTreeMap::new();
+        for color in Rect::from_extent(colors).points() {
+            let mut lo = Vec::with_capacity(extent.dim());
+            let mut hi = Vec::with_capacity(extent.dim());
+            for d in 0..extent.dim() {
+                let n = extent[d];
+                let c = colors[d];
+                // tile boundaries at floor(i*n/c) — balanced within ±1
+                let start = color[d] * n / c;
+                let end = (color[d] + 1) * n / c - 1;
+                if end < start {
+                    return Err(format!(
+                        "empty tile in dim {d}: {n} elements over {c} colors"
+                    ));
+                }
+                lo.push(start);
+                hi.push(end);
+            }
+            tiles.insert(color, Rect::new(Tuple(lo), Tuple(hi)));
+        }
+        Ok(Partition { region: region.id, colors: colors.clone(), tiles })
+    }
+
+    pub fn tile(&self, color: &Tuple) -> Option<&Rect> {
+        self.tiles.get(color)
+    }
+
+    /// Total elements across tiles (must equal region volume: disjoint +
+    /// complete).
+    pub fn covered_volume(&self) -> i64 {
+        self.tiles.values().map(|r| r.volume()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(extent: &[i64]) -> LogicalRegion {
+        LogicalRegion {
+            id: RegionId(0),
+            name: "A".into(),
+            extent: Tuple::from(extent),
+            elem_bytes: 8,
+        }
+    }
+
+    #[test]
+    fn privileges() {
+        use Privilege::*;
+        assert!(!ReadOnly.conflicts(ReadOnly));
+        assert!(ReadOnly.conflicts(ReadWrite));
+        assert!(WriteOnly.conflicts(WriteOnly));
+        assert!(!Reduce.conflicts(Reduce));
+        assert!(Reduce.conflicts(ReadOnly));
+    }
+
+    #[test]
+    fn block_partition_even() {
+        let r = region(&[6, 6]);
+        let p = Partition::block(&r, &Tuple::from([2, 3])).unwrap();
+        assert_eq!(p.tiles.len(), 6);
+        assert_eq!(p.covered_volume(), 36);
+        let t = p.tile(&Tuple::from([1, 2])).unwrap();
+        assert_eq!(t.lo, Tuple::from([3, 4]));
+        assert_eq!(t.hi, Tuple::from([5, 5]));
+    }
+
+    #[test]
+    fn block_partition_uneven_complete() {
+        let r = region(&[7, 5]);
+        let p = Partition::block(&r, &Tuple::from([2, 2])).unwrap();
+        assert_eq!(p.covered_volume(), 35, "uneven tiling still covers");
+        // disjointness: pairwise intersections empty
+        let tiles: Vec<&Rect> = p.tiles.values().collect();
+        for i in 0..tiles.len() {
+            for j in i + 1..tiles.len() {
+                assert!(tiles[i].intersect(tiles[j]).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn block_partition_errors() {
+        let r = region(&[4, 4]);
+        assert!(Partition::block(&r, &Tuple::from([2])).is_err());
+        assert!(Partition::block(&r, &Tuple::from([0, 2])).is_err());
+        assert!(Partition::block(&r, &Tuple::from([8, 1])).is_err(), "more colors than rows");
+    }
+
+    #[test]
+    fn region_bytes() {
+        let r = region(&[1024, 1024]);
+        assert_eq!(r.bytes(), 1024 * 1024 * 8);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`time_it`] / [`Bencher`] for wallclock micro-measurements and print
+//! paper-style tables. Warmup iterations, repetition, and median/stddev
+//! reporting are built in.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wallclock seconds for each sample.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} median {:>12} mean {:>12} ± {:>10} ({} samples)",
+            self.name,
+            fmt_time(self.median()),
+            fmt_time(self.mean()),
+            fmt_time(self.stddev()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Format seconds adaptively (s / ms / µs / ns).
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and sampling configuration.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, samples: 10, iters_per_sample: 1 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 }
+    }
+
+    /// Time `f`, returning per-iteration samples. A `std::hint::black_box`
+    /// on the closure result prevents the optimizer from deleting work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                std::hint::black_box(f());
+            }
+            samples.push(start.elapsed().as_secs_f64() / self.iters_per_sample as f64);
+        }
+        Measurement { name: name.to_string(), samples }
+    }
+}
+
+/// Convenience single-shot wallclock timer returning (result, seconds).
+pub fn time_it<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bencher { warmup_iters: 1, samples: 4, iters_per_sample: 2 };
+        let mut count = 0usize;
+        let m = b.run("inc", || {
+            count += 1;
+            count
+        });
+        assert_eq!(m.samples.len(), 4);
+        // 1 warmup + 4 samples * 2 iters
+        assert_eq!(count, 9);
+        assert!(m.median() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, t) = time_it(|| 6 * 7);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

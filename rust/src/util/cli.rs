@@ -1,0 +1,190 @@
+//! Hand-rolled command-line parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with typed accessors and defaults, positional arguments, and generated
+//! `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Declarative spec for one option.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// A command parser: name, description, options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, specs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let arg = if spec.takes_value { format!("--{} <v>", spec.name) } else { format!("--{}", spec.name) };
+            let def = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {:<24} {}{}\n", arg, spec.help, def));
+        }
+        s
+    }
+
+    /// Parse raw argv (not including program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if body == "help" {
+                    return Err(CliError(self.usage()));
+                }
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("option --{key} needs a value")))?
+                        }
+                    };
+                    args.opts.insert(key.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("flag --{key} takes no value")));
+                    }
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, CliError> {
+        self.opts
+            .get(key)
+            .ok_or_else(|| CliError(format!("missing --{key}")))?
+            .parse()
+            .map_err(|e| CliError(format!("--{key}: {e}")))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, CliError> {
+        self.opts
+            .get(key)
+            .ok_or_else(|| CliError(format!("missing --{key}")))?
+            .parse()
+            .map_err(|e| CliError(format!("--{key}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run an app")
+            .opt("nodes", "node count", Some("2"))
+            .opt("app", "application name", None)
+            .flag("verbose", "chatty output")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&sv(&["--app", "cannon"])).unwrap();
+        assert_eq!(a.usize("nodes").unwrap(), 2);
+        assert_eq!(a.str("app"), Some("cannon"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = cmd().parse(&sv(&["--nodes=8", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.usize("nodes").unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&sv(&["--bogus"])).is_err());
+        assert!(cmd().parse(&sv(&["--app"])).is_err());
+        assert!(cmd().parse(&sv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let err = cmd().parse(&sv(&["--help"])).unwrap_err();
+        assert!(err.0.contains("--nodes"));
+        assert!(err.0.contains("default: 2"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Non-blank, non-comment lines-of-code counter (Table 1 methodology).
+//!
+//! The paper counts "non-blank, non-comment lines of code" for both the
+//! Mapple mappers and the C++ mappers. We apply the same rule to our
+//! `.mpl` DSL sources (`#` comments) and the Rust expert mappers
+//! (`//` line comments and `/* */` block comments).
+
+/// Count non-blank non-comment lines in DSL (`#`-comment) source.
+pub fn count_dsl(src: &str) -> usize {
+    src.lines()
+        .map(|l| strip_hash_comment(l).trim())
+        .filter(|l| !l.is_empty())
+        .count()
+}
+
+fn strip_hash_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Count non-blank non-comment lines in Rust/C-family source
+/// (handles `//` line comments and `/* ... */` block comments; string
+/// literals containing comment markers are respected).
+pub fn count_c_like(src: &str) -> usize {
+    let mut count = 0usize;
+    let mut in_block = false;
+    for line in src.lines() {
+        let mut has_code = false;
+        let bytes = line.as_bytes();
+        let mut i = 0;
+        let mut in_str = false;
+        while i < bytes.len() {
+            if in_block {
+                if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    in_block = false;
+                    i += 2;
+                    continue;
+                }
+                i += 1;
+                continue;
+            }
+            let c = bytes[i];
+            if in_str {
+                if c == b'\\' {
+                    i += 2;
+                    continue;
+                }
+                if c == b'"' {
+                    in_str = false;
+                }
+                i += 1;
+                continue;
+            }
+            match c {
+                b'"' => {
+                    in_str = true;
+                    has_code = true;
+                    i += 1;
+                }
+                b'/' if bytes.get(i + 1) == Some(&b'/') => break,
+                b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                    in_block = true;
+                    i += 2;
+                }
+                c if (c as char).is_whitespace() => i += 1,
+                _ => {
+                    has_code = true;
+                    i += 1;
+                }
+            }
+        }
+        if has_code {
+            count += 1;
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsl_counting() {
+        let src = "\n# header comment\nm = Machine(GPU)  # trailing\n\nIndexTaskMap loop0 block2d\n";
+        assert_eq!(count_dsl(src), 2);
+    }
+
+    #[test]
+    fn dsl_hash_in_string_kept() {
+        assert_eq!(count_dsl("x = \"#notcomment\""), 1);
+        assert_eq!(count_dsl("# only comment"), 0);
+    }
+
+    #[test]
+    fn c_like_counting() {
+        let src = r#"
+// comment only
+int x = 1; // trailing
+/* block
+   spanning lines */
+int y = 2; /* inline */ int z = 3;
+"#;
+        assert_eq!(count_c_like(src), 2);
+    }
+
+    #[test]
+    fn c_like_string_with_slashes() {
+        assert_eq!(count_c_like("let s = \"http://x\";"), 1);
+        assert_eq!(count_c_like("let s = \"/* not a comment */\"; let t = 1;"), 1);
+    }
+
+    #[test]
+    fn block_comment_code_after_close() {
+        assert_eq!(count_c_like("/* a */ x"), 1);
+        assert_eq!(count_c_like("/* a */"), 0);
+    }
+}

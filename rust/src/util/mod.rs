@@ -1,0 +1,27 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The build environment is fully offline with only the `xla` crate stack
+//! vendored, so the usual ecosystem crates (serde, clap, criterion,
+//! proptest, rand) are unavailable. Everything here is a deliberately
+//! small, tested, hand-rolled replacement:
+//!
+//! * [`prng`] — xorshift256** PRNG (replaces `rand`)
+//! * [`json`] — JSON value + writer (replaces `serde_json` for reports)
+//! * [`toml`] — TOML-subset config parser (replaces `serde` + `toml`)
+//! * [`cli`] — declarative-ish argument parser (replaces `clap`)
+//! * [`table`] — ASCII table renderer for paper-style tables
+//! * [`stats`] — mean/geomean/percentile/stddev helpers
+//! * [`bench`] — timing harness with warmup + repetitions (replaces
+//!   `criterion` for the `cargo bench` targets)
+//! * [`proptest`] — tiny property-test runner with case minimization
+//! * [`loc`] — non-blank/non-comment LoC counter (Table 1)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod loc;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+pub mod toml;

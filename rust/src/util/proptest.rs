@@ -1,0 +1,67 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs; on
+//! failure it re-runs with a recorded seed so the failure is reproducible,
+//! and reports the failing case via `Debug`. Generators are plain closures
+//! over [`crate::util::prng::Rng`], composed by hand at the call site.
+
+use super::prng::Rng;
+use std::fmt::Debug;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` on `cases` inputs drawn from `gen`. Panics with the seed and
+/// failing input on the first violation.
+pub fn check<T: Debug, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    // Base seed is fixed so CI is deterministic; override with env var
+    // MAPPLE_PROP_SEED for exploration.
+    let base: u64 = std::env::var("MAPPLE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}):\n  input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns bool.
+pub fn check_bool<T: Debug, G, P>(name: &str, cases: usize, gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    check(name, cases, gen, |t| if prop(t) { Ok(()) } else { Err("returned false".into()) });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check_bool("add-commutes", 64, |r| (r.range(-100, 100), r.range(-100, 100)), |&(a, b)| {
+            n += 1;
+            a + b == b + a
+        });
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_context() {
+        check_bool("always-false", 8, |r| r.range(0, 10), |_| false);
+    }
+}

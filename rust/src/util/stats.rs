@@ -1,0 +1,121 @@
+//! Statistics helpers used by the bench harness and figure generators.
+
+/// Arithmetic mean. Returns 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean of positive values (the paper reports geomean
+/// improvement percentages as geomean of the ratios).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    assert!(xs.iter().all(|&x| x > 0.0), "geomean needs positive inputs");
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Median (50th percentile).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Min / max helpers that ignore NaN-free assumption violations loudly.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Histogram of values into `nbins` equal-width bins over [lo, hi].
+/// Returns (bin_edges, counts). Used for Figure 14's distribution.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, nbins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(nbins > 0 && hi > lo);
+    let width = (hi - lo) / nbins as f64;
+    let mut counts = vec![0usize; nbins];
+    for &x in xs {
+        let mut b = ((x - lo) / width) as isize;
+        if b < 0 {
+            b = 0;
+        }
+        if b as usize >= nbins {
+            b = nbins as isize - 1;
+        }
+        counts[b as usize] += 1;
+    }
+    let edges = (0..=nbins).map(|i| lo + i as f64 * width).collect();
+    (edges, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_means() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_matches_paper_usage() {
+        // geomean of improvement ratios 1.07 and 1.27 lies between them
+        let g = geomean(&[1.07, 1.27]);
+        assert!(g > 1.07 && g < 1.27);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+    }
+
+    #[test]
+    fn stddev_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let xs = [0.0, 0.1, 0.5, 0.99, 1.0];
+        let (edges, counts) = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(edges, vec![0.0, 0.5, 1.0]);
+        assert_eq!(counts, vec![2, 3]);
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+}

@@ -1,0 +1,319 @@
+//! TOML-subset parser powering the config system.
+//!
+//! Supports the subset our configs need: `[section]` and `[section.sub]`
+//! headers, `key = value` with string / integer / float / boolean /
+//! homogeneous array values, `#` comments, and bare or quoted keys.
+//! Values are exposed through a typed accessor API with helpful errors
+//! (unknown key, wrong type) so experiment configs fail loudly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Array(_) => "array",
+        }
+    }
+}
+
+/// A parsed TOML document: dotted-path key → value.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+/// Error raised by parsing or typed access.
+#[derive(Debug, PartialEq)]
+pub struct TomlError(pub String);
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+type Result<T> = std::result::Result<T, TomlError>;
+
+impl Doc {
+    /// Parse a document from source text.
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| TomlError(format!("line {}: unterminated section", lineno + 1)))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(TomlError(format!("line {}: empty section name", lineno + 1)));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| TomlError(format!("line {}: expected 'key = value'", lineno + 1)))?;
+            let key = line[..eq].trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                return Err(TomlError(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| TomlError(format!("line {}: {}", lineno + 1, e.0)))?;
+            let path = if section.is_empty() { key } else { format!("{section}.{key}") };
+            map.insert(path, value);
+        }
+        Ok(Doc { map })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.map.get(path)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// Keys under a section prefix, with the prefix stripped.
+    pub fn section_keys<'a>(&'a self, section: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let prefix = format!("{section}.");
+        self.map.keys().filter_map(move |k| k.strip_prefix(prefix.as_str()))
+    }
+
+    pub fn str(&self, path: &str) -> Result<&str> {
+        match self.get(path) {
+            Some(Value::Str(s)) => Ok(s),
+            Some(v) => Err(TomlError(format!("'{path}' is {}, expected string", v.type_name()))),
+            None => Err(TomlError(format!("missing key '{path}'"))),
+        }
+    }
+
+    pub fn int(&self, path: &str) -> Result<i64> {
+        match self.get(path) {
+            Some(Value::Int(i)) => Ok(*i),
+            Some(v) => Err(TomlError(format!("'{path}' is {}, expected integer", v.type_name()))),
+            None => Err(TomlError(format!("missing key '{path}'"))),
+        }
+    }
+
+    pub fn float(&self, path: &str) -> Result<f64> {
+        match self.get(path) {
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(v) => Err(TomlError(format!("'{path}' is {}, expected float", v.type_name()))),
+            None => Err(TomlError(format!("missing key '{path}'"))),
+        }
+    }
+
+    pub fn bool(&self, path: &str) -> Result<bool> {
+        match self.get(path) {
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(v) => Err(TomlError(format!("'{path}' is {}, expected boolean", v.type_name()))),
+            None => Err(TomlError(format!("missing key '{path}'"))),
+        }
+    }
+
+    pub fn int_array(&self, path: &str) -> Result<Vec<i64>> {
+        match self.get(path) {
+            Some(Value::Array(xs)) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Int(i) => Ok(*i),
+                    other => Err(TomlError(format!(
+                        "'{path}' element is {}, expected integer",
+                        other.type_name()
+                    ))),
+                })
+                .collect(),
+            Some(v) => Err(TomlError(format!("'{path}' is {}, expected array", v.type_name()))),
+            None => Err(TomlError(format!("missing key '{path}'"))),
+        }
+    }
+
+    /// Typed access with default when the key is absent.
+    pub fn int_or(&self, path: &str, default: i64) -> Result<i64> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(_) => self.int(path),
+        }
+    }
+
+    pub fn float_or(&self, path: &str, default: f64) -> Result<f64> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(_) => self.float(path),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> Result<&'a str> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(_) => self.str(path),
+        }
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> Result<bool> {
+        match self.get(path) {
+            None => Ok(default),
+            Some(_) => self.bool(path),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        return Err(TomlError("empty value".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| TomlError(format!("unterminated string: {s}")))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| TomlError(format!("unterminated array: {s}")))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = split_top_level(inner)
+            .into_iter()
+            .map(|part| parse_value(part.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(TomlError(format!("cannot parse value: {s}")))
+}
+
+/// Split an array body on commas that are not inside strings or brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig13"         # inline comment
+[machine]
+nodes = 4
+gpus_per_node = 4
+nvlink_gbps = 75.0
+fbmem_gb = 16
+[sweep]
+gpu_counts = [4, 8, 16, 32]
+enabled = true
+ratio = 1.5e0
+label = "a#b"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str("name").unwrap(), "fig13");
+        assert_eq!(d.int("machine.nodes").unwrap(), 4);
+        assert_eq!(d.float("machine.nvlink_gbps").unwrap(), 75.0);
+        assert_eq!(d.float("machine.fbmem_gb").unwrap(), 16.0); // int widens
+        assert_eq!(d.int_array("sweep.gpu_counts").unwrap(), vec![4, 8, 16, 32]);
+        assert!(d.bool("sweep.enabled").unwrap());
+        assert_eq!(d.float("sweep.ratio").unwrap(), 1.5);
+        assert_eq!(d.str("sweep.label").unwrap(), "a#b", "hash inside string kept");
+    }
+
+    #[test]
+    fn missing_and_wrong_type_errors() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert!(d.int("nope").is_err());
+        let e = d.int("name").unwrap_err();
+        assert!(e.0.contains("expected integer"), "{e}");
+    }
+
+    #[test]
+    fn defaults() {
+        let d = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(d.int_or("machine.nodes", 1).unwrap(), 4);
+        assert_eq!(d.int_or("machine.racks", 1).unwrap(), 1);
+        assert!(d.int_or("name", 1).is_err(), "present-but-wrong-type still errors");
+    }
+
+    #[test]
+    fn bad_syntax() {
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("key").is_err());
+        assert!(Doc::parse("k = ").is_err());
+        assert!(Doc::parse("k = [1, 2").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let d = Doc::parse("n = 1_000_000").unwrap();
+        assert_eq!(d.int("n").unwrap(), 1_000_000);
+    }
+}

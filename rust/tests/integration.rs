@@ -1,0 +1,186 @@
+//! Cross-module integration tests:
+//!   1. Mapple ↔ expert mapper decision equivalence (the §6.1 fidelity
+//!      check: "we manually verify that both approaches make identical
+//!      mapping decisions"), here automated over every app and machine.
+//!   2. Full pipeline runs (DSL → pipeline → simulator) for all nine apps.
+//!   3. Pipeline-invariant validation on real app programs.
+
+use mapple::apps::{self, mappers};
+use mapple::machine::topology::MachineDesc;
+use mapple::mapper::api::{Mapper, TaskCtx};
+use mapple::mapper::expert::expert_for;
+use mapple::mapper::MappleMapper;
+use mapple::mapple::MapperSpec;
+use mapple::tasking::{analyze, pipeline};
+
+fn desc(nodes: usize) -> MachineDesc {
+    MachineDesc::paper_testbed(nodes)
+}
+
+fn build_app(name: &str, procs: usize) -> apps::AppInstance {
+    match name {
+        "cannon" => apps::cannon(64, procs),
+        "summa" => apps::summa(64, procs),
+        "pumma" => apps::pumma(64, procs),
+        "johnson" => apps::johnson(64, procs),
+        "solomonik" => apps::solomonik(64, procs),
+        "cosma" => apps::cosma(64, procs),
+        "stencil" => {
+            // tile grid matching the proc count (2D)
+            let g = mapple::decompose::decompose(procs as u64, &[256, 256]);
+            apps::stencil(&apps::StencilParams {
+                x: 256,
+                y: 256,
+                gx: g.factors[0] as i64,
+                gy: g.factors[1] as i64,
+                halo: 1,
+                steps: 2,
+            })
+        }
+        "circuit" => apps::circuit(&apps::CircuitParams {
+            pieces: procs as i64,
+            nodes_per_piece: 64,
+            wires_per_piece: 128,
+            pct_shared: 10,
+            loops: 2,
+        }),
+        "pennant" => apps::pennant(&apps::PennantParams {
+            chunks: procs as i64,
+            zones_per_chunk: 128,
+            cycles: 2,
+        }),
+        other => panic!("unknown app {other}"),
+    }
+}
+
+const APPS: &[&str] = &[
+    "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
+];
+
+#[test]
+fn mapple_matches_expert_decisions() {
+    // The Table 1 fidelity property: for every app, the Mapple mapper and
+    // the hand-written low-level mapper place every point task of every
+    // launch identically.
+    for nodes in [1usize, 2, 4] {
+        let d = desc(nodes);
+        for app_name in APPS {
+            let app = build_app(app_name, d.nodes * d.gpus_per_node);
+            let spec =
+                MapperSpec::compile(mappers::mapple_source(app_name).unwrap(), &d).unwrap();
+            let mapple = MappleMapper::new(spec);
+            let expert = expert_for(app_name, d.nodes, d.gpus_per_node).unwrap();
+            for launch in &app.launches {
+                let ispace = launch.domain.extent();
+                let ctx = TaskCtx {
+                    task_name: &launch.name,
+                    launch_domain: &launch.domain,
+                    num_nodes: d.nodes,
+                    procs_per_node: d.gpus_per_node,
+                };
+                for pt in launch.domain.points() {
+                    let a = mapple.map_task(&ctx, &pt, &ispace).unwrap_or_else(|e| {
+                        panic!("{app_name}/{} mapple failed: {e}", launch.name)
+                    });
+                    let b = expert.map_task(&ctx, &pt, &ispace).unwrap_or_else(|e| {
+                        panic!("{app_name}/{} expert failed: {e}", launch.name)
+                    });
+                    assert_eq!(
+                        a, b,
+                        "{app_name}/{} point {pt:?} (nodes={nodes}): mapple {a:?} vs expert {b:?}",
+                        launch.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_apps_run_under_both_mappers() {
+    let d = desc(2);
+    for app_name in APPS {
+        let app = build_app(app_name, d.nodes * d.gpus_per_node);
+        let expert = expert_for(app_name, d.nodes, d.gpus_per_node).unwrap();
+        let out = apps::run_app(&app, expert.as_ref(), &d)
+            .unwrap_or_else(|e| panic!("{app_name} expert: {e}"));
+        assert!(out.sim.oom.is_none(), "{app_name} expert OOM: {:?}", out.sim.oom);
+        assert!(out.sim.makespan > 0.0, "{app_name}");
+
+        let spec = MapperSpec::compile(mappers::mapple_source(app_name).unwrap(), &d).unwrap();
+        let mapple = MappleMapper::new(spec);
+        let out2 = apps::run_app(&app, &mapple, &d)
+            .unwrap_or_else(|e| panic!("{app_name} mapple: {e}"));
+        // identical decisions → identical simulated time (§6.1 "matching
+        // performance ... any overhead introduced by Mapple is negligible")
+        let rel = (out.sim.makespan - out2.sim.makespan).abs() / out.sim.makespan;
+        assert!(
+            rel < 1e-9,
+            "{app_name}: expert {} vs mapple {}",
+            out.sim.makespan,
+            out2.sim.makespan
+        );
+    }
+}
+
+#[test]
+fn tuned_mappers_compile_and_run() {
+    let d = desc(2);
+    for app_name in APPS {
+        let app = build_app(app_name, d.nodes * d.gpus_per_node);
+        let spec = MapperSpec::compile(mappers::tuned_source(app_name).unwrap(), &d).unwrap();
+        let tuned = MappleMapper::new(spec);
+        let out = apps::run_app(&app, &tuned, &d)
+            .unwrap_or_else(|e| panic!("{app_name} tuned: {e}"));
+        assert!(out.sim.oom.is_none(), "{app_name} tuned OOM");
+    }
+}
+
+#[test]
+fn pipeline_invariants_hold_on_real_apps() {
+    let d = desc(2);
+    for app_name in ["cannon", "stencil", "circuit"] {
+        let app = build_app(app_name, d.nodes * d.gpus_per_node);
+        let deps = analyze(&app.launches, &app.env);
+        let expert = expert_for(app_name, d.nodes, d.gpus_per_node).unwrap();
+        let adapter = mapple::mapper::MapperAsMapping {
+            mapper: expert.as_ref(),
+            num_nodes: d.nodes,
+            procs_per_node: d.gpus_per_node,
+        };
+        let run = pipeline::run(&app.launches, &deps, &adapter, d.nodes).unwrap();
+        pipeline::validate(&run, &deps).unwrap_or_else(|e| panic!("{app_name}: {e}"));
+        // every point task of every launch got a placement
+        let total: i64 = app.launches.iter().map(|l| l.num_points()).sum();
+        assert_eq!(run.placements.len() as i64, total, "{app_name}");
+    }
+}
+
+#[test]
+fn slice_task_agrees_with_map_task() {
+    // The default slice_task must distribute exactly like per-point
+    // map_task calls (Legion's slice/point duality).
+    let d = desc(2);
+    let app = build_app("cannon", 8);
+    let expert = expert_for("cannon", d.nodes, d.gpus_per_node).unwrap();
+    for launch in &app.launches {
+        let ispace = launch.domain.extent();
+        let ctx = TaskCtx {
+            task_name: &launch.name,
+            launch_domain: &launch.domain,
+            num_nodes: d.nodes,
+            procs_per_node: d.gpus_per_node,
+        };
+        let out = expert
+            .slice_task(&ctx, &mapple::mapper::SliceTaskInput { domain: launch.domain.clone() })
+            .unwrap();
+        let covered: i64 = out.slices.iter().map(|s| s.domain.volume()).sum();
+        assert_eq!(covered, launch.num_points());
+        for slice in &out.slices {
+            for pt in slice.domain.points() {
+                let direct = expert.map_task(&ctx, &pt, &ispace).unwrap();
+                assert_eq!(direct, slice.proc);
+            }
+        }
+    }
+}

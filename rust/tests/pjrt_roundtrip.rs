@@ -1,0 +1,89 @@
+//! Integration test: the full AOT bridge — HLO text artifacts produced by
+//! python/compile/aot.py load, compile, and execute with correct numerics
+//! through the Rust PJRT runtime. Requires `make artifacts` first; tests
+//! are skipped (pass trivially) when artifacts are absent so plain
+//! `cargo test` works pre-build.
+
+use mapple::runtime::KernelRegistry;
+
+fn registry() -> Option<KernelRegistry> {
+    let reg = KernelRegistry::cpu("artifacts").expect("PJRT CPU client");
+    if reg.available("matmul_tile_16") {
+        Some(reg)
+    } else {
+        eprintln!("artifacts/ not built — skipping PJRT round-trip tests");
+        None
+    }
+}
+
+fn cpu_gemm_acc(a: &[f32], b: &[f32], c: &[f32], n: usize) -> Vec<f32> {
+    let mut out = c.to_vec();
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for k in 0..n {
+                acc += a[i * n + k] * b[k * n + j];
+            }
+            out[i * n + j] += acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn gemm_artifact_matches_reference() {
+    let Some(reg) = registry() else { return };
+    let kernel = reg.load("matmul_tile_16").expect("load+compile");
+    let n = 16usize;
+    let a: Vec<f32> = (0..n * n).map(|i| (i % 7) as f32 * 0.5 - 1.0).collect();
+    let b: Vec<f32> = (0..n * n).map(|i| (i % 5) as f32 * 0.25).collect();
+    let c: Vec<f32> = (0..n * n).map(|i| (i % 3) as f32).collect();
+    let shape = [n as i64, n as i64];
+    let out = kernel
+        .run_f32(&[(&a, &shape), (&b, &shape), (&c, &shape)])
+        .expect("execute");
+    assert_eq!(out.len(), 1);
+    let want = cpu_gemm_acc(&a, &b, &c, n);
+    for (i, (&g, &w)) in out[0].iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-3, "idx {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn stencil_artifact_fixed_point() {
+    let Some(reg) = registry() else { return };
+    let kernel = reg.load("stencil5_32x32").expect("load+compile");
+    let (x, y) = (32usize, 32usize);
+    let grid = vec![2.5f32; x * y];
+    let ns = vec![2.5f32; y];
+    let we = vec![2.5f32; x];
+    let out = kernel
+        .run_f32(&[
+            (&grid, &[x as i64, y as i64]),
+            (&ns, &[1, y as i64]),
+            (&ns, &[1, y as i64]),
+            (&we, &[x as i64, 1]),
+            (&we, &[x as i64, 1]),
+        ])
+        .expect("execute");
+    // weights sum to 1 → constant field is a fixed point
+    for &v in &out[0] {
+        assert!((v - 2.5).abs() < 1e-5, "{v}");
+    }
+}
+
+#[test]
+fn kernel_input_validation() {
+    let Some(reg) = registry() else { return };
+    let kernel = reg.load("matmul_tile_16").expect("load");
+    let bad = vec![0f32; 10];
+    assert!(kernel.run_f32(&[(&bad, &[16, 16])]).is_err());
+}
+
+#[test]
+fn registry_caches_compiles() {
+    let Some(reg) = registry() else { return };
+    let a = reg.load("matmul_tile_32").unwrap();
+    let b = reg.load("matmul_tile_32").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b), "second load must hit the cache");
+}

@@ -1,0 +1,180 @@
+//! Cross-module property tests (randomized via the in-house harness).
+
+use mapple::decompose::{decompose, greedy_grid, Objective};
+use mapple::machine::point::Tuple;
+use mapple::machine::space::ProcSpace;
+use mapple::machine::topology::{MachineDesc, ProcKind};
+use mapple::util::prng::Rng;
+use mapple::util::proptest::check;
+use std::collections::HashSet;
+
+/// Any random chain of valid transformations remains a bijection from the
+/// transformed space onto the physical processors.
+#[test]
+fn random_transform_chains_are_bijections() {
+    check(
+        "transform chains bijective",
+        120,
+        |r: &mut Rng| {
+            let nodes = *r.choose(&[1usize, 2, 4]);
+            let gpus = *r.choose(&[2usize, 4]);
+            (nodes, gpus, r.next_u64())
+        },
+        |&(nodes, gpus, seed)| {
+            let mut desc = MachineDesc::paper_testbed(nodes);
+            desc.gpus_per_node = gpus;
+            let mut space = ProcSpace::machine(&desc, ProcKind::Gpu);
+            let mut r = Rng::new(seed);
+            for _ in 0..r.range(0, 5) {
+                let dims = space.dim();
+                let choice = r.range(0, 3);
+                space = match choice {
+                    0 => {
+                        let i = r.range(0, dims as i64 - 1) as usize;
+                        let extent = space.size()[i];
+                        let divisors: Vec<i64> = (1..=extent).filter(|d| extent % d == 0).collect();
+                        let d = *r.choose(&divisors);
+                        match space.split(i, d) {
+                            Ok(s) => s,
+                            Err(_) => space,
+                        }
+                    }
+                    1 if dims >= 2 => {
+                        let p = r.range(0, dims as i64 - 2) as usize;
+                        match space.merge(p, p + 1) {
+                            Ok(s) => s,
+                            Err(_) => space,
+                        }
+                    }
+                    _ if dims >= 2 => {
+                        let p = r.range(0, dims as i64 - 1) as usize;
+                        let q = r.range(0, dims as i64 - 1) as usize;
+                        if p == q {
+                            space
+                        } else {
+                            let (a, b) = (p.min(q), p.max(q));
+                            match space.swap(a, b) {
+                                Ok(s) => s,
+                                Err(_) => space,
+                            }
+                        }
+                    }
+                    _ => space,
+                };
+            }
+            // enumerate every coordinate; image must be exactly the
+            // physical processor set
+            let shape = space.size().clone();
+            let rect = mapple::machine::point::Rect::from_extent(&shape);
+            let mut seen = HashSet::new();
+            for p in rect.points() {
+                let proc = space.index(&p).map_err(|e| e)?;
+                if proc.node >= nodes || proc.local >= gpus {
+                    return Err(format!("out of range: {proc:?}"));
+                }
+                if !seen.insert((proc.node, proc.local)) {
+                    return Err(format!("collision at {proc:?}"));
+                }
+            }
+            if seen.len() != nodes * gpus {
+                return Err(format!("image size {} != {}", seen.len(), nodes * gpus));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// decompose is bounded below by AM-GM and above by greedy.
+#[test]
+fn decompose_sandwich_property() {
+    check(
+        "amgm <= decompose <= greedy",
+        300,
+        |r: &mut Rng| {
+            let d = r.range(1, 256) as u64;
+            let k = r.range(1, 3) as usize;
+            let l: Vec<u64> = (0..k).map(|_| r.range(2, 4096) as u64).collect();
+            (d, l)
+        },
+        |(d, l)| {
+            let s = decompose(*d, l);
+            let bound = Objective::amgm_lower_bound(*d, l);
+            if s.objective < bound - 1e-9 {
+                return Err(format!("beats AM-GM bound?! {} < {bound}", s.objective));
+            }
+            let g = Objective::Isotropic.eval(&greedy_grid(*d, l.len()), l);
+            if s.objective > g + 1e-9 {
+                return Err(format!("worse than greedy: {} > {g}", s.objective));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The DSL rejects malformed programs with diagnostics, never panics.
+#[test]
+fn malformed_programs_fail_gracefully() {
+    let desc = MachineDesc::paper_testbed(2);
+    let cases = [
+        "def f(:",                                   // parse error
+        "m = Machine(TPU)\n",                        // bad proc kind
+        "x = unknown_name\n",                        // undefined global
+        "m = Machine(GPU)\nx = m.split(0, 3)\n",     // non-dividing split
+        "m = Machine(GPU)\nx = m.merge(1, 0)\n",     // merge needs p < q
+        "m = Machine(GPU)\nx = m[9, 9]\n",           // index out of bounds
+        "Backpressure t 1\nBackpressure t 1 1\n",    // trailing tokens
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return m[p[0] / 0, 0]\nIndexTaskMap f f\n",
+    ];
+    for src in cases {
+        let r = mapple::mapple::MapperSpec::compile(src, &desc);
+        if src.contains("p[0] / 0") {
+            // body errors surface at call time, not compile time
+            let spec = r.expect("compiles");
+            let e = spec
+                .map_point("f", &Tuple::from([1, 2]), &Tuple::from([4, 4]))
+                .expect_err("division by zero must error");
+            assert!(e.to_string().contains("division by zero"), "{e}");
+        } else {
+            assert!(r.is_err(), "should reject: {src}");
+        }
+    }
+}
+
+/// Simulated makespan is monotone in network bandwidth (more bandwidth
+/// never hurts a fixed mapping).
+#[test]
+fn makespan_monotone_in_bandwidth() {
+    use mapple::apps;
+    use mapple::bench::{mapper_for, run, Flavor};
+    check(
+        "bandwidth monotonicity",
+        20,
+        |r: &mut Rng| (r.range(1, 4) as i64, r.range(1, 3) as usize),
+        |&(aspect, nodes)| {
+            let gpus = nodes * 4;
+            let make = |ib_mult: f64| {
+                let mut desc = MachineDesc::paper_testbed(nodes);
+                desc.ib_bw *= ib_mult;
+                desc.nvlink_bw *= ib_mult;
+                let g = decompose(gpus as u64, &[512, (512 * aspect) as u64]);
+                let app = apps::stencil(&apps::StencilParams {
+                    x: 512,
+                    y: 512 * aspect,
+                    gx: g.factors[0] as i64,
+                    gy: g.factors[1] as i64,
+                    halo: 1,
+                    steps: 2,
+                });
+                let m = mapper_for(&Flavor::Mapple, "stencil", &desc);
+                run(&app, m.as_ref(), &desc).unwrap().makespan
+            };
+            let slow = make(0.5);
+            let fast = make(2.0);
+            if fast <= slow + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("more bandwidth made it slower: {fast} > {slow}"))
+            }
+        },
+    );
+}
