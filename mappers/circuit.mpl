@@ -1,0 +1,10 @@
+# Circuit: pieces block-distributed over the GPU-fastest flattened
+# processor space (neighboring pieces share nodes, where the shared-node
+# traffic is).
+m = Machine(GPU)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+
+def block_linear1D(Tuple ipoint, Tuple ispace):
+    return m_gpu_flat[ipoint[0] * m_gpu_flat.size[0] / ispace[0]]
+
+IndexTaskMap default block_linear1D

@@ -1,0 +1,15 @@
+# Circuit, tuned (Table 2): same block mapping; shared-node data moves to
+# zero-copy memory so inter-node pulls skip the device-to-host staging hop
+# (the paper's headline tuning for Circuit).
+m = Machine(GPU)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+
+def block_linear1D(Tuple ipoint, Tuple ispace):
+    return m_gpu_flat[ipoint[0] * m_gpu_flat.size[0] / ispace[0]]
+
+IndexTaskMap default block_linear1D
+Region calc_new_currents arg1 GPU ZCMEM
+Region calc_new_currents arg2 GPU ZCMEM
+Region calc_new_currents arg3 GPU ZCMEM
+Region distribute_charge arg2 GPU ZCMEM
+Region update_voltages arg1 GPU ZCMEM

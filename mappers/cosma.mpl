@@ -1,0 +1,22 @@
+# COSMA (Fig 12): split the node dimension as equally as possible into a
+# 3D grid (decompose with all-ones targets), linearize the task cube over
+# it, and distribute cyclically over the merged processor space. 2D init
+# launches use the linearized block distribution.
+m = Machine(GPU)
+m_flat = m.merge(0, 1)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+m_grid = m.decompose(0, (1, 1, 1))
+
+def special_linearize3D(Tuple ipoint, Tuple ispace):
+    gx = m_grid.size[2]
+    gy = m_grid.size[1]
+    linearized = ipoint[0] + ipoint[1] * gx + ipoint[2] * gx * gy
+    return m_flat[linearized % m_flat.size[0]]
+
+def block_linear2D(Tuple ipoint, Tuple ispace):
+    linearized = ipoint[0] * ispace[1] + ipoint[1]
+    flat = linearized * m_gpu_flat.size[0] / prod(ispace)
+    return m_gpu_flat[flat]
+
+IndexTaskMap mm_cosma special_linearize3D
+IndexTaskMap default block_linear2D

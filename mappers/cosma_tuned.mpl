@@ -1,0 +1,22 @@
+# COSMA, tuned (Table 2): same communication-optimal grid; GEMM layouts
+# pinned to Fortran order with 128-byte alignment.
+m = Machine(GPU)
+m_flat = m.merge(0, 1)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+m_grid = m.decompose(0, (1, 1, 1))
+
+def special_linearize3D(Tuple ipoint, Tuple ispace):
+    gx = m_grid.size[2]
+    gy = m_grid.size[1]
+    linearized = ipoint[0] + ipoint[1] * gx + ipoint[2] * gx * gy
+    return m_flat[linearized % m_flat.size[0]]
+
+def block_linear2D(Tuple ipoint, Tuple ispace):
+    linearized = ipoint[0] * ispace[1] + ipoint[1]
+    flat = linearized * m_gpu_flat.size[0] / prod(ispace)
+    return m_gpu_flat[flat]
+
+IndexTaskMap mm_cosma special_linearize3D
+IndexTaskMap default block_linear2D
+Layout mm_cosma arg0 GPU F_order SOA align128
+Layout mm_cosma arg1 GPU F_order SOA align128

@@ -1,0 +1,22 @@
+# Johnson's 3D, tuned (Table 2): same conditional linearization; operand
+# layouts pinned to the GEMM-friendly Fortran order with 128-byte
+# alignment.
+m = Machine(GPU)
+m_flat = m.merge(0, 1)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+
+def conditional_linearize3D(Tuple ipoint, Tuple ispace):
+    grid_size = ispace[0] > ispace[2] ? ispace[0] : ispace[2]
+    linearized = ipoint[0] + ipoint[1] * grid_size + ipoint[2] * grid_size * grid_size
+    return m_flat[linearized % m_flat.size[0]]
+
+def block_linear2D(Tuple ipoint, Tuple ispace):
+    linearized = ipoint[0] * ispace[1] + ipoint[1]
+    flat = linearized * m_gpu_flat.size[0] / prod(ispace)
+    return m_gpu_flat[flat]
+
+IndexTaskMap mm3d conditional_linearize3D
+IndexTaskMap default block_linear2D
+Layout mm3d arg0 GPU F_order SOA align128
+Layout mm3d arg1 GPU F_order SOA align128
+Layout mm3d arg2 GPU F_order SOA align128

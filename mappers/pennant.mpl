@@ -1,0 +1,10 @@
+# Pennant: 1D chunks block-distributed over the GPU-fastest flattened
+# processor space; border points shared with the neighboring chunk stay
+# node-local for most chunk pairs.
+m = Machine(GPU)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+
+def block_linear1D(Tuple ipoint, Tuple ispace):
+    return m_gpu_flat[ipoint[0] * m_gpu_flat.size[0] / ispace[0]]
+
+IndexTaskMap default block_linear1D

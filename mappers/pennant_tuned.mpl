@@ -1,0 +1,12 @@
+# Pennant, tuned (Table 2 / §7.1): same block mapping; the tiny per-cycle
+# `advance` integration runs on CPU (kernel-launch overhead dominates it
+# on GPU), and the shared border points live in zero-copy memory.
+m = Machine(GPU)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+
+def block_linear1D(Tuple ipoint, Tuple ispace):
+    return m_gpu_flat[ipoint[0] * m_gpu_flat.size[0] / ispace[0]]
+
+IndexTaskMap default block_linear1D
+TaskMap advance CPU
+Region sum_point_forces arg2 GPU ZCMEM

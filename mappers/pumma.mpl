@@ -1,0 +1,20 @@
+# PUMMA: block-cyclic rotating variant; same hierarchical block
+# distribution as Cannon's and SUMMA (Fig 12), operand rotation is
+# expressed in the task graph, not the mapper.
+m_2d = Machine(GPU)
+
+def block_primitive(Tuple ipoint, Tuple ispace, Tuple pspace, int dim1, int dim2):
+    return ipoint[dim1] * pspace[dim2] / ispace[dim1]
+
+def cyclic_primitive(Tuple ipoint, Tuple ispace, Tuple pspace, int dim1, int dim2):
+    return ipoint[dim1] % pspace[dim2]
+
+def hierarchical_block2D(Tuple ipoint, Tuple ispace):
+    m_3d = m_2d.decompose(0, ispace)
+    sub = (ispace + m_3d[:-1] - 1) / m_3d[:-1]
+    m_4d = m_3d.decompose(2, sub)
+    upper = tuple(block_primitive(ipoint, ispace, m_4d.size, i, i) for i in (0, 1))
+    lower = tuple(cyclic_primitive(ipoint, ispace, m_4d.size, i, i + 2) for i in (0, 1))
+    return m_4d[*upper, *lower]
+
+IndexTaskMap default hierarchical_block2D

@@ -1,0 +1,26 @@
+# Solomonik's 2.5D algorithm (Fig 12): hierarchical block over the 3D
+# (q, q, c) compute space for the mm25d phase, linearize-cyclic over the
+# merged processor space for init and the C reduction.
+m_2d = Machine(GPU)
+m_flat = m_2d.merge(0, 1)
+
+def block_primitive(Tuple ipoint, Tuple ispace, Tuple pspace, int dim1, int dim2):
+    return ipoint[dim1] * pspace[dim2] / ispace[dim1]
+
+def cyclic_primitive(Tuple ipoint, Tuple ispace, Tuple pspace, int dim1, int dim2):
+    return ipoint[dim1] % pspace[dim2]
+
+def hierarchical_block3D(Tuple ipoint, Tuple ispace):
+    m_4d = m_2d.decompose(0, ispace)
+    sub = (ispace + m_4d[:-1] - 1) / m_4d[:-1]
+    m_6d = m_4d.decompose(3, sub)
+    upper = tuple(block_primitive(ipoint, ispace, m_6d.size, i, i) for i in (0, 1, 2))
+    lower = tuple(cyclic_primitive(ipoint, ispace, m_6d.size, i, i + 3) for i in (0, 1, 2))
+    return m_6d[*upper, *lower]
+
+def linearize_cyclic(Tuple ipoint, Tuple ispace):
+    linearized = ipoint[0] + ispace[0] * ipoint[1]
+    return m_flat[linearized % m_flat.size[0]]
+
+IndexTaskMap mm25d hierarchical_block3D
+IndexTaskMap default linearize_cyclic

@@ -1,0 +1,12 @@
+# Stencil: linearized block distribution of the (gx, gy) tile grid over
+# the GPU-fastest flattened processor space, so row-adjacent tiles share a
+# node (minimizes inter-node halo edges).
+m = Machine(GPU)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+
+def block_linear2D(Tuple ipoint, Tuple ispace):
+    linearized = ipoint[0] * ispace[1] + ipoint[1]
+    flat = linearized * m_gpu_flat.size[0] / prod(ispace)
+    return m_gpu_flat[flat]
+
+IndexTaskMap default block_linear2D

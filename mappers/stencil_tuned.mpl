@@ -1,0 +1,18 @@
+# Stencil, tuned (Table 2): same linearized block mapping; neighbor halo
+# strips are collected right after each step consumes them (the next
+# fill_halo rewrites them anyway), so halo copies never occupy FBMEM
+# between steps.
+m = Machine(GPU)
+m_gpu_flat = m.swap(0, 1).merge(0, 1)
+
+def block_linear2D(Tuple ipoint, Tuple ispace):
+    linearized = ipoint[0] * ispace[1] + ipoint[1]
+    flat = linearized * m_gpu_flat.size[0] / prod(ispace)
+    return m_gpu_flat[flat]
+
+IndexTaskMap default block_linear2D
+Layout step arg0 GPU C_order SOA
+GarbageCollect step arg1
+GarbageCollect step arg2
+GarbageCollect step arg3
+GarbageCollect step arg4

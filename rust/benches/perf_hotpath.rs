@@ -1,9 +1,13 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 paths that run
 //! per task launch —
-//!   1. mapping-point evaluation: raw interpreter vs the MappleMapper's
-//!      per-(task, ispace) table cache (the §Perf optimization),
-//!   2. decompose solve: cold search vs memo hit,
-//!   3. end-to-end map+simulate for a full Cannon program.
+//!   1. launch-domain mapping: per-point tree-walking interpreter vs the
+//!      batched MappingPlan VM (prelude hoisting + register bytecode),
+//!   2. per-point lookup through the MappleMapper's cached tables,
+//!   3. decompose solve: cold search vs memo hit,
+//!   4. end-to-end map+simulate for a full Cannon program.
+//!
+//! The acceptance bar for the MappingPlan IR is ≥2x over the tree walker
+//! on a 1024-point launch; the bench checks and reports it.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
@@ -19,20 +23,42 @@ use mapple::util::bench::Bencher;
 
 fn main() {
     let desc = MachineDesc::paper_testbed(4);
-    let b = Bencher { warmup_iters: 10, samples: 20, iters_per_sample: 100 };
 
-    println!("== 1. per-point mapping: interpreter vs table cache ==");
+    println!("== 1. launch-domain mapping: tree-walker vs batched MappingPlan VM ==");
     let src = mappers::mapple_source("cannon").unwrap();
     let spec = MapperSpec::compile(src, &desc).unwrap();
-    let ispace = Tuple::from([8, 8]);
+    assert!(
+        spec.plan.supports("hierarchical_block2D"),
+        "cannon mapper must compile to bytecode"
+    );
+    let ispace = Tuple::from([32, 32]); // 1024-point launch
     let dom = Rect::from_extent(&ispace);
-    let mut i = 0i64;
-    let m_interp = b.run("interpreter map_point (uncached)", || {
-        i = (i + 1) % 64;
-        spec.map_point("mm_step_0", &Tuple::from([i / 8, i % 8]), &ispace).unwrap()
+    let points: Vec<Tuple> = dom.points().collect();
+    let b1 = Bencher { warmup_iters: 2, samples: 15, iters_per_sample: 2 };
+    let m_interp = b1.run("tree-walker, 1024 points (per-point)", || {
+        let mut last = None;
+        for p in &points {
+            last = Some(spec.map_point("mm_step_0", p, &ispace).unwrap());
+        }
+        last
     });
     println!("  {}", m_interp.summary());
+    let m_vm = b1.run("MappingPlan VM, 1024 points (batched)", || {
+        spec.plan_domain("mm_step_0", &dom).unwrap()
+    });
+    println!("  {}", m_vm.summary());
+    let speedup = m_interp.median() / m_vm.median();
+    println!(
+        "  batched VM speedup over tree-walker: {speedup:.1}x  [{}]\n",
+        if speedup >= 2.0 { "PASS ≥2x" } else { "FAIL <2x" }
+    );
+    assert!(
+        speedup >= 2.0,
+        "MappingPlan VM must be ≥2x the per-point tree-walker (got {speedup:.2}x)"
+    );
 
+    println!("== 2. per-point lookup through the cached placement table ==");
+    let b = Bencher { warmup_iters: 10, samples: 20, iters_per_sample: 100 };
     let mapper = MappleMapper::new(MapperSpec::compile(src, &desc).unwrap());
     let ctx = TaskCtx {
         task_name: "mm_step_0",
@@ -41,17 +67,17 @@ fn main() {
         procs_per_node: desc.gpus_per_node,
     };
     let mut j = 0i64;
-    let m_cached = b.run("MappleMapper map_task (cached)", || {
-        j = (j + 1) % 64;
-        mapper.map_task(&ctx, &Tuple::from([j / 8, j % 8]), &ispace).unwrap()
+    let m_cached = b.run("MappleMapper map_task (cached plan)", || {
+        j = (j + 1) % 1024;
+        mapper.map_task(&ctx, &Tuple::from([j / 32, j % 32]), &ispace).unwrap()
     });
     println!("  {}", m_cached.summary());
     println!(
-        "  cache speedup: {:.1}x\n",
-        m_interp.median() / m_cached.median()
+        "  cached point lookup vs tree-walker point: {:.1}x\n",
+        (m_interp.median() / 1024.0) / m_cached.median()
     );
 
-    println!("== 2. decompose solve: cold vs memoized ==");
+    println!("== 3. decompose solve: cold vs memoized ==");
     let mut k = 0u64;
     let cold = b.run("decompose cold (fresh extents)", || {
         k += 1;
@@ -64,7 +90,7 @@ fn main() {
     println!("  {}", hot.summary());
     println!("  memo speedup: {:.1}x\n", cold.median() / hot.median());
 
-    println!("== 3. end-to-end map+simulate (cannon, 16 GPUs, N=4096) ==");
+    println!("== 4. end-to-end map+simulate (cannon, 16 GPUs, N=4096) ==");
     let b2 = Bencher { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
     let app = apps::cannon(4096, 16);
     let m = b2.run("pipeline+sim cannon", || {

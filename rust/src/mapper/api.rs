@@ -10,8 +10,10 @@
 use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::{MemKind, ProcId, ProcKind};
 use crate::mapple::program::LayoutProps;
+use crate::mapple::vm::PlacementTable;
 use crate::sim::engine::MappingPolicies;
-use crate::tasking::pipeline::IndexMapping;
+use crate::tasking::pipeline::{IndexMapping, LaunchPlan};
+use std::rc::Rc;
 
 /// Context describing the task being mapped.
 #[derive(Clone, Debug)]
@@ -77,12 +79,11 @@ pub trait Mapper {
     }
 
     /// (3) Partition an index launch into per-processor slices.
-    /// Default: one slice per point via `map_task`.
+    /// Default: one slice per point, from the batched placement plan.
     fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
+        let table = self.build_plan(task, &input.domain)?;
         let mut out = SliceTaskOutput::default();
-        for p in input.domain.points() {
-            let proc = self.map_task(task, &p, &ispace)?;
+        for (p, &proc) in input.domain.points().zip(table.procs()) {
             out.slices.push(TaskSlice { domain: Rect::new(p.clone(), p), proc });
         }
         Ok(out)
@@ -98,6 +99,26 @@ pub trait Mapper {
 
     /// (6) MAP: concrete processor for an iteration point (§5.1).
     fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String>;
+
+    /// (6b) Batched MAP: the placement table for an **entire launch
+    /// domain** — the `MappingPlan` execution path every mapper family
+    /// shares. The runtime calls this once per launch instead of
+    /// `map_task` once per point; `map_task(point).node` must equal
+    /// `shard(point)` (MAP refines SHARD, §5.1), so the table answers
+    /// both callbacks. Default: derive the table from per-point
+    /// `map_task`. Mappers with launch-invariant setup (grid selection,
+    /// space transforms) override this to hoist it out of the loop.
+    fn build_plan(&self, task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        if domain.volume() <= 0 {
+            return Err("empty launch domain".into());
+        }
+        let ispace = domain.extent();
+        let mut procs = Vec::with_capacity(domain.volume() as usize);
+        for p in domain.points() {
+            procs.push(self.map_task(task, &p, &ispace)?);
+        }
+        Ok(Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
+    }
 
     /// (7) Processor kind a task runs on.
     fn select_proc_kind(&self, task: &TaskCtx) -> ProcKind {
@@ -194,6 +215,20 @@ impl IndexMapping for MapperAsMapping<'_> {
         };
         self.mapper.map_task(&ctx, point, ispace)
     }
+
+    /// Batched path: one `build_plan` call per launch; SHARD values are
+    /// the node components of the MAP table (§5.1: MAP refines SHARD).
+    fn plan(&self, task: &str, domain: &Rect, nodes: usize) -> Result<LaunchPlan, String> {
+        let ctx = TaskCtx {
+            task_name: task,
+            launch_domain: domain,
+            num_nodes: self.num_nodes,
+            procs_per_node: self.procs_per_node,
+        };
+        let table = self.mapper.build_plan(&ctx, domain)?;
+        let _ = nodes; // the pipeline bounds-checks shard values itself
+        Ok(LaunchPlan::from_table(table))
+    }
 }
 
 /// Adapter: any [`Mapper`] supplies simulator policies.
@@ -269,6 +304,33 @@ mod tests {
         assert_eq!(node, 1);
         let p = IndexMapping::map(&adapter, "t", &Tuple::from([0]), &Tuple::from([4])).unwrap();
         assert_eq!(p.node, 0);
+    }
+
+    #[test]
+    fn batched_plan_agrees_with_per_point_callbacks() {
+        let adapter = MapperAsMapping { mapper: &Trivial, num_nodes: 2, procs_per_node: 1 };
+        let ispace = Tuple::from([4]);
+        let dom = Rect::from_extent(&ispace);
+        let plan = IndexMapping::plan(&adapter, "t", &dom, 2).unwrap();
+        for (i, p) in dom.points().enumerate() {
+            let node = IndexMapping::shard(&adapter, "t", &p, &ispace).unwrap();
+            let proc = IndexMapping::map(&adapter, "t", &p, &ispace).unwrap();
+            assert_eq!(plan.shards[i], node, "{p:?}");
+            assert_eq!(plan.proc_of(&p), Some(proc), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn default_build_plan_derives_from_map_task() {
+        let dom = Rect::from_extent(&Tuple::from([4]));
+        let ctx =
+            TaskCtx { task_name: "t", launch_domain: &dom, num_nodes: 2, procs_per_node: 1 };
+        let table = Trivial.build_plan(&ctx, &dom).unwrap();
+        assert_eq!(table.len(), 4);
+        for p in dom.points() {
+            let want = Trivial.map_task(&ctx, &p, &Tuple::from([4])).unwrap();
+            assert_eq!(table.get(&p), Some(want));
+        }
     }
 
     #[test]

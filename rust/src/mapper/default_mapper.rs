@@ -89,6 +89,11 @@ impl Mapper for DefaultHeuristicMapper {
         self.chosen.borrow_mut().insert(key, local);
         Ok(ProcId { node, kind: ProcKind::Gpu, local })
     }
+
+    // The batched `build_plan` path uses the trait default: it runs this
+    // stateful heuristic in row-major domain order (the canonical order
+    // all plan-based mappers use), so the emitted MappingPlan table is
+    // deterministic and identical to per-point calls in that order.
 }
 
 #[cfg(test)]

@@ -11,6 +11,8 @@ use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::{MemKind, ProcId, ProcKind};
 use crate::mapper::api::{Mapper, SliceTaskInput, SliceTaskOutput, TaskCtx, TaskOptions, TaskSlice};
 use crate::mapple::program::LayoutProps;
+use crate::mapple::vm::PlacementTable;
+use std::rc::Rc;
 
 /// Exhaustively select a 2D processor grid (d1, d2) with d1*d2 = count
 /// minimizing the communication objective d1/l1 + d2/l2, breaking ties
@@ -48,6 +50,42 @@ fn linearize_block_2d(point: &Tuple, blocks: (i64, i64)) -> i64 {
     let (b1, _b2) = blocks;
     // first dimension fastest, matching the split-chain pull-back
     point[0] + point[1] * b1
+}
+
+/// Batched MappingPlan emission shared by the three 2D expert mappers:
+/// the block-grid selection (the expensive divisor scan) runs **once per
+/// launch**, then the per-point index transformation fills the table.
+/// Decisions are identical to the per-point `map_task` path.
+fn hierarchical_block_table(
+    who: &str,
+    num_nodes: usize,
+    gpus_per_node: usize,
+    domain: &Rect,
+) -> Result<Rc<PlacementTable>, String> {
+    if domain.volume() <= 0 {
+        return Err("empty launch domain".into());
+    }
+    let ispace = domain.extent();
+    if ispace.dim() != 2 {
+        return Err(format!("{who} mapper expects 2D launches, got {ispace:?}"));
+    }
+    let (n1, n2) = select_num_blocks_2d(num_nodes as i64, &ispace);
+    let sub = Tuple::from([(ispace[0] + n1 - 1) / n1, (ispace[1] + n2 - 1) / n2]);
+    let (g1, g2) = select_num_blocks_2d(gpus_per_node as i64, &sub);
+    let mut procs = Vec::with_capacity(domain.volume().max(0) as usize);
+    for p in domain.points() {
+        let u1 = p[0] * n1 / ispace[0];
+        let u2 = p[1] * n2 / ispace[1];
+        let l1 = p[0] % g1;
+        let l2 = p[1] % g2;
+        let node = (u1 + u2 * n1) as usize;
+        let gpu = (l1 + l2 * g1) as usize;
+        if gpu >= gpus_per_node {
+            return Err(format!("gpu index {gpu} out of range"));
+        }
+        procs.push(ProcId { node, kind: ProcKind::Gpu, local: gpu });
+    }
+    Ok(Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
 }
 
 // ===========================================================================
@@ -136,6 +174,10 @@ impl Mapper for CannonExpertMapper {
             return Err(format!("gpu index {gpu} out of range"));
         }
         Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
+    }
+
+    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        hierarchical_block_table("cannon", self.num_nodes, self.gpus_per_node, domain)
     }
 
     fn select_proc_kind(&self, _task: &TaskCtx) -> ProcKind {
@@ -230,6 +272,10 @@ impl Mapper for SummaExpertMapper {
         Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
     }
 
+    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        hierarchical_block_table("summa", self.num_nodes, self.gpus_per_node, domain)
+    }
+
     fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
         MemKind::FbMem
     }
@@ -297,6 +343,10 @@ impl Mapper for PummaExpertMapper {
         Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
     }
 
+    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        hierarchical_block_table("pumma", self.num_nodes, self.gpus_per_node, domain)
+    }
+
     fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
         MemKind::FbMem
     }
@@ -354,6 +404,28 @@ mod tests {
         let ctx =
             TaskCtx { task_name: "t", launch_domain: &dom, num_nodes: 2, procs_per_node: 2 };
         assert!(m.shard(&ctx, &Tuple::from([1]), &Tuple::from([4])).is_err());
+    }
+
+    #[test]
+    fn batched_plan_matches_per_point_map_task() {
+        let c = CannonExpertMapper::new(2, 4);
+        let s = SummaExpertMapper::new(2, 4);
+        let p = PummaExpertMapper::new(2, 4);
+        let ispace = Tuple::from([6, 6]);
+        let dom = Rect::from_extent(&ispace);
+        let ctx = TaskCtx {
+            task_name: "mm_step_0",
+            launch_domain: &dom,
+            num_nodes: 2,
+            procs_per_node: 4,
+        };
+        for m in [&c as &dyn Mapper, &s, &p] {
+            let table = m.build_plan(&ctx, &dom).unwrap();
+            for pt in dom.points() {
+                let want = m.map_task(&ctx, &pt, &ispace).unwrap();
+                assert_eq!(table.get(&pt), Some(want), "{pt:?}");
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,25 @@ use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::{MemKind, ProcId, ProcKind};
 use crate::mapper::api::{Mapper, SliceTaskInput, SliceTaskOutput, TaskCtx, TaskSlice};
 use crate::mapple::program::LayoutProps;
+use crate::mapple::vm::PlacementTable;
+use std::rc::Rc;
+
+/// Batched table emission from a per-point closed form; callers hoist
+/// their launch-invariant grid selection into the closure's captures.
+fn table_from<F>(domain: &Rect, f: F) -> Result<Rc<PlacementTable>, String>
+where
+    F: Fn(&Tuple) -> Result<ProcId, String>,
+{
+    if domain.volume() <= 0 {
+        return Err("empty launch domain".into());
+    }
+    let ispace = domain.extent();
+    let mut procs = Vec::with_capacity(domain.volume() as usize);
+    for p in domain.points() {
+        procs.push(f(&p)?);
+    }
+    Ok(Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
+}
 
 /// Select a 3D grid (d1, d2, d3), d1·d2·d3 = count, minimizing
 /// Σ d_m / l_m with lexicographically-largest tie-breaking — the
@@ -197,6 +216,34 @@ impl Mapper for SolomonikExpertMapper {
         Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
     }
 
+    fn build_plan(&self, task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        let ispace = domain.extent();
+        if task.task_name == "mm25d" && ispace.dim() == 3 {
+            // Hoist the two 3D grid selections out of the per-point loop.
+            let (n1, n2, n3) = select_num_blocks_3d(self.num_nodes as i64, &ispace);
+            let sub = Tuple::from([
+                (ispace[0] + n1 - 1) / n1,
+                (ispace[1] + n2 - 1) / n2,
+                (ispace[2] + n3 - 1) / n3,
+            ]);
+            let (g1, g2, g3) = select_num_blocks_3d(self.gpus_per_node as i64, &sub);
+            return table_from(domain, |p| {
+                let u1 = p[0] * n1 / ispace[0];
+                let u2 = p[1] * n2 / ispace[1];
+                let u3 = p[2] * n3 / ispace[2];
+                let l1 = p[0] % g1;
+                let l2 = p[1] % g2;
+                let l3 = p[2] % g3;
+                Ok(ProcId {
+                    node: (u1 + n1 * (u2 + n2 * u3)) as usize,
+                    kind: ProcKind::Gpu,
+                    local: (l1 + g1 * (l2 + g2 * l3)) as usize,
+                })
+            });
+        }
+        table_from(domain, |p| self.map_task(task, p, &ispace))
+    }
+
     fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
         MemKind::FbMem
     }
@@ -341,6 +388,34 @@ mod tests {
             seen2.insert((proc.node, proc.local));
         }
         assert_eq!(seen2.len(), 4);
+    }
+
+    #[test]
+    fn batched_plans_match_per_point_map_task() {
+        let j = JohnsonExpertMapper::new(2, 4);
+        let s = SolomonikExpertMapper::new(2, 4);
+        let c = CosmaExpertMapper::new(4, 4);
+        for (m, task, ispace) in [
+            (&j as &dyn Mapper, "mm3d", Tuple::from([2, 2, 2])),
+            (&j, "init_a", Tuple::from([2, 2])),
+            (&s, "mm25d", Tuple::from([2, 2, 2])),
+            (&s, "reduce_c", Tuple::from([2, 2])),
+            (&c, "mm_cosma", Tuple::from([2, 2, 4])),
+            (&c, "init_b", Tuple::from([2, 4])),
+        ] {
+            let dom = Rect::from_extent(&ispace);
+            let ctx = TaskCtx {
+                task_name: task,
+                launch_domain: &dom,
+                num_nodes: 2,
+                procs_per_node: 4,
+            };
+            let table = m.build_plan(&ctx, &dom).unwrap();
+            for pt in dom.points() {
+                let want = m.map_task(&ctx, &pt, &ispace).unwrap();
+                assert_eq!(table.get(&pt), Some(want), "{task} {pt:?}");
+            }
+        }
     }
 
     #[test]

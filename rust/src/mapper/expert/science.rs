@@ -9,6 +9,36 @@ use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::{MemKind, ProcId, ProcKind};
 use crate::mapper::api::{Mapper, SliceTaskInput, SliceTaskOutput, TaskCtx, TaskSlice};
 use crate::mapple::program::LayoutProps;
+use crate::mapple::vm::PlacementTable;
+use std::rc::Rc;
+
+/// Batched MappingPlan emission for the linearized block family: one
+/// table per launch from the closed-form flat index (identical decisions
+/// to per-point `map_task`).
+fn block_linear_table(
+    num_nodes: usize,
+    gpus_per_node: usize,
+    domain: &Rect,
+    row_major_2d: bool,
+) -> Result<Rc<PlacementTable>, String> {
+    if domain.volume() <= 0 {
+        return Err("empty launch domain".into());
+    }
+    let ispace = domain.extent();
+    let total = (num_nodes * gpus_per_node) as i64;
+    let n = ispace.product();
+    let mut procs = Vec::with_capacity(domain.volume() as usize);
+    for p in domain.points() {
+        let lin = if row_major_2d { p[0] * ispace[1] + p[1] } else { p[0] };
+        let flat = lin * total / n;
+        procs.push(ProcId {
+            node: (flat / gpus_per_node as i64) as usize,
+            kind: ProcKind::Gpu,
+            local: (flat % gpus_per_node as i64) as usize,
+        });
+    }
+    Ok(Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
+}
 
 // ===========================================================================
 // Stencil
@@ -75,6 +105,13 @@ impl Mapper for StencilExpertMapper {
         Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
     }
 
+    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        if domain.dim() != 2 {
+            return Err("stencil mapper expects 2D tile launches".into());
+        }
+        block_linear_table(self.num_nodes, self.gpus_per_node, domain, true)
+    }
+
     fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
         MemKind::FbMem
     }
@@ -135,6 +172,13 @@ impl Mapper for CircuitExpertMapper {
         Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
     }
 
+    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        if domain.dim() != 1 {
+            return Err("circuit mapper expects 1D piece launches".into());
+        }
+        block_linear_table(self.num_nodes, self.gpus_per_node, domain, false)
+    }
+
     fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
         // conventional: everything in framebuffer
         MemKind::FbMem
@@ -192,6 +236,13 @@ impl Mapper for PennantExpertMapper {
         Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
     }
 
+    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        if domain.dim() != 1 {
+            return Err("pennant mapper expects 1D chunk launches".into());
+        }
+        block_linear_table(self.num_nodes, self.gpus_per_node, domain, false)
+    }
+
     fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
         MemKind::FbMem
     }
@@ -242,6 +293,31 @@ mod tests {
             .map(|i| m.map_task(&ctx, &Tuple::from([i]), &ispace).unwrap().node)
             .collect();
         assert_eq!(nodes, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn batched_plans_match_per_point_map_task() {
+        let st = StencilExpertMapper::new(2, 4);
+        let ci = CircuitExpertMapper::new(2, 2);
+        let pe = PennantExpertMapper::new(2, 4);
+        for (m, ispace) in [
+            (&st as &dyn Mapper, Tuple::from([4, 2])),
+            (&ci, Tuple::from([8])),
+            (&pe, Tuple::from([8])),
+        ] {
+            let dom = Rect::from_extent(&ispace);
+            let ctx = TaskCtx {
+                task_name: "t_0",
+                launch_domain: &dom,
+                num_nodes: 2,
+                procs_per_node: 4,
+            };
+            let table = m.build_plan(&ctx, &dom).unwrap();
+            for pt in dom.points() {
+                let want = m.map_task(&ctx, &pt, &ispace).unwrap();
+                assert_eq!(table.get(&pt), Some(want), "{} {pt:?}", m.mapper_name());
+            }
+        }
     }
 
     #[test]

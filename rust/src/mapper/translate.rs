@@ -1,60 +1,65 @@
 //! Translation of a compiled Mapple program to the low-level mapper
 //! interface (paper §5.2).
 //!
-//! The Mapple mapping function is interpreted per iteration point; its
-//! result — a coordinate in the (transformed) processor space, pulled
-//! back to the physical `(node, local)` pair — supplies both the SHARD
-//! and MAP callbacks. Directive tables supply the remaining callbacks
-//! (memories, layouts, GC, backpressure, processor kinds).
+//! A Mapple mapping function is compiled (via `mapple::lower`) into a
+//! `MappingPlan` whose VM evaluates an **entire launch domain in one
+//! batched pass**: loop-invariant machine-space transforms run once per
+//! launch, the per-point bytecode runs over the whole `Rect`, and the
+//! result is a dense [`PlacementTable`]. That table supplies both the
+//! SHARD and MAP callbacks; directive tables supply the remaining
+//! callbacks (memories, layouts, GC, backpressure, processor kinds).
 //!
-//! A memo cache keyed by `(task, ispace)` stores the full mapping table
-//! the first time a launch shape is seen: mapping functions are pure, so
-//! re-evaluating the interpreter per point per launch would be wasted
-//! work on the hot path (see EXPERIMENTS.md §Perf).
+//! Tables are cached per `(task, ispace)`. The cache probe is borrow
+//! based — nested `task → ispace → table` maps — so the per-point hot
+//! path allocates nothing: keys are built (two small allocations) only on
+//! the one miss per launch shape.
 
 use super::api::{Mapper, TaskCtx};
 use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::{MemKind, ProcId, ProcKind};
 use crate::mapple::program::{LayoutProps, MapperSpec};
+use crate::mapple::vm::PlacementTable;
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 /// A [`Mapper`] implementation backed by a Mapple [`MapperSpec`].
 pub struct MappleMapper {
     pub spec: MapperSpec,
-    cache: RefCell<HashMap<(String, Tuple), HashMap<Tuple, ProcId>>>,
+    /// task → launch ispace → placement table (computed once per shape).
+    plans: RefCell<HashMap<String, HashMap<Tuple, Rc<PlacementTable>>>>,
 }
 
 impl MappleMapper {
     pub fn new(spec: MapperSpec) -> Self {
-        MappleMapper { spec, cache: RefCell::new(HashMap::new()) }
+        MappleMapper { spec, plans: RefCell::new(HashMap::new()) }
     }
 
-    /// Evaluate (with memoization) the mapping of a full launch domain.
-    fn lookup(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let key = (task.to_string(), ispace.clone());
+    /// The placement table for a launch shape: cache probe without
+    /// allocating, evaluate the whole domain on miss.
+    fn plan(&self, task: &str, ispace: &Tuple) -> Result<Rc<PlacementTable>, String> {
         {
-            let cache = self.cache.borrow();
-            if let Some(table) = cache.get(&key) {
-                if let Some(p) = table.get(point) {
-                    return Ok(*p);
-                }
+            let plans = self.plans.borrow();
+            if let Some(table) = plans.get(task).and_then(|by_shape| by_shape.get(ispace)) {
+                return Ok(table.clone());
             }
         }
-        // Miss: evaluate the whole domain at once (bounded by ispace) so
-        // subsequent points are O(1) hash lookups.
         let domain = Rect::from_extent(ispace);
-        let mut table = HashMap::with_capacity(domain.volume() as usize);
-        for p in domain.points() {
-            let proc = self.spec.map_point(task, &p, ispace).map_err(|e| e.to_string())?;
-            table.insert(p, proc);
-        }
-        let out = table
+        let table = Rc::new(self.spec.plan_domain(task, &domain)?);
+        self.plans
+            .borrow_mut()
+            .entry(task.to_string())
+            .or_default()
+            .insert(ispace.clone(), table.clone());
+        Ok(table)
+    }
+
+    /// One point of a launch, via the cached plan.
+    fn lookup(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let table = self.plan(task, ispace)?;
+        table
             .get(point)
-            .copied()
-            .ok_or_else(|| format!("point {point:?} outside launch domain {ispace:?}"))?;
-        self.cache.borrow_mut().insert(key, table);
-        Ok(out)
+            .ok_or_else(|| format!("point {point:?} outside launch domain {ispace:?}"))
     }
 }
 
@@ -69,6 +74,16 @@ impl Mapper for MappleMapper {
 
     fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
         self.lookup(task.task_name, point, ispace)
+    }
+
+    /// Batched path: hand the pipeline the whole launch's table at once.
+    fn build_plan(&self, task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+        let ispace = domain.extent();
+        if domain.lo == Tuple::zeros(domain.dim()) {
+            // Cacheable: launch domains are zero-based.
+            return self.plan(task.task_name, &ispace);
+        }
+        Ok(Rc::new(self.spec.plan_domain(task.task_name, domain)?))
     }
 
     fn select_proc_kind(&self, task: &TaskCtx) -> ProcKind {
@@ -145,19 +160,45 @@ Backpressure matmul 3
     }
 
     #[test]
-    fn cache_consistency() {
+    fn plan_is_cached_per_launch_shape() {
         let m = mapper();
         let dom = Rect::from_extent(&Tuple::from([8, 8]));
         let c = ctx(&dom);
         let ispace = Tuple::from([8, 8]);
-        // first call populates, second hits cache: same results
-        let a = m.map_task(&c, &Tuple::from([7, 7]), &ispace).unwrap();
-        let b = m.map_task(&c, &Tuple::from([7, 7]), &ispace).unwrap();
-        assert_eq!(a, b);
+        // first call populates, second hits cache: same table object
+        let a = m.build_plan(&c, &dom).unwrap();
+        let b = m.build_plan(&c, &dom).unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "second plan must be the cached table");
+        // per-point lookups resolve through the same cache
+        let p1 = m.map_task(&c, &Tuple::from([7, 7]), &ispace).unwrap();
+        let p2 = m.map_task(&c, &Tuple::from([7, 7]), &ispace).unwrap();
+        assert_eq!(p1, p2);
         // a different ispace gets its own table
         let ispace2 = Tuple::from([4, 4]);
         let d = m.map_task(&c, &Tuple::from([3, 3]), &ispace2).unwrap();
         assert_eq!((d.node, d.local), (1, 1));
+    }
+
+    #[test]
+    fn plan_agrees_with_per_point_interp() {
+        let m = mapper();
+        let ispace = Tuple::from([6, 6]);
+        let dom = Rect::from_extent(&ispace);
+        let c = ctx(&dom);
+        let table = m.build_plan(&c, &dom).unwrap();
+        for p in dom.points() {
+            let oracle = m.spec.map_point("matmul", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(oracle), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn out_of_domain_point_rejected() {
+        let m = mapper();
+        let dom = Rect::from_extent(&Tuple::from([4, 4]));
+        let c = ctx(&dom);
+        let e = m.map_task(&c, &Tuple::from([9, 9]), &Tuple::from([4, 4])).unwrap_err();
+        assert!(e.contains("outside launch domain"), "{e}");
     }
 
     #[test]

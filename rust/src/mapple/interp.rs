@@ -91,6 +91,12 @@ impl Interp {
         self.funcs.contains_key(name)
     }
 
+    /// Value of an evaluated top-level binding (used by the lowering pass
+    /// to fold globals into the `MappingPlan` constant pool).
+    pub fn global_value(&self, name: &str) -> Option<&Value> {
+        self.globals.get(name)
+    }
+
     /// Invoke a mapping function with `(ipoint, ispace)` and expect a
     /// processor result — the §5.2 translation contract.
     pub fn map_point(&self, func: &str, ipoint: &Tuple, ispace: &Tuple) -> RtResult<ProcId> {

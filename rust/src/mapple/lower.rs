@@ -1,0 +1,1088 @@
+//! Lowering pass: Mapple mapping functions → `MappingPlan` bytecode.
+//!
+//! The tree-walking [`super::interp::Interp`] is the reference semantics;
+//! this pass compiles each function body into a compact register-based
+//! instruction sequence (one [`FuncCode`] per function) that the VM in
+//! [`super::vm`] evaluates without re-entering the AST. Three properties
+//! make the compiled form fast on the per-launch hot path:
+//!
+//! 1. **Loop-invariant prelude.** A mapping function is invoked once per
+//!    iteration point with `(ipoint, ispace)`; within one launch `ispace`
+//!    is fixed. The maximal prefix of body statements that does not read
+//!    `ipoint` (directly or through locally assigned names) is split into
+//!    a `prelude` the VM runs once per launch — this hoists the expensive
+//!    machine-space transforms (`decompose`, `split`, `merge`) out of the
+//!    per-point loop.
+//! 2. **Register file instead of name maps.** Variables resolve to fixed
+//!    register slots at lowering time; the per-point loop never hashes a
+//!    string or clones an environment.
+//! 3. **Constant preloading and folding.** Globals (machine spaces),
+//!    literals, and trivially constant subexpressions (`m.size`,
+//!    `m_flat.size[0]`) are materialized once into pinned registers, so
+//!    per-point code never re-clones a processor space.
+//!
+//! Lowering is *best-effort*: any construct outside the supported subset
+//! (e.g. a `tuple(... for v in xs)` generator over a non-literal
+//! iterable, or a read of a conditionally assigned variable) fails with
+//! [`LowerError::Unsupported`], and the caller falls back to the tree
+//! walker for that function. Every shipped mapper in `mappers/*.mpl`
+//! lowers fully; `rust/tests/differential.rs` proves bytecode ≡ tree
+//! walker placements point-for-point.
+
+use super::ast::{Arg, BinOp, Expr, FuncDef, IndexArg, Program, Stmt, UnOp};
+use super::interp::Interp;
+use super::value::{arith, Value};
+use crate::machine::topology::{MachineDesc, ProcKind};
+use std::collections::{HashMap, HashSet};
+
+/// Why a function could not be lowered.
+#[derive(Debug, Clone)]
+pub enum LowerError {
+    /// The construct is outside the compiled subset; fall back to the
+    /// tree-walking interpreter for this function.
+    Unsupported(String),
+    /// Structurally invalid program (also rejected by the interpreter).
+    Invalid(String),
+}
+
+impl std::fmt::Display for LowerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LowerError::Unsupported(m) => write!(f, "unsupported for lowering: {m}"),
+            LowerError::Invalid(m) => write!(f, "invalid program: {m}"),
+        }
+    }
+}
+
+type LResult<T> = Result<T, LowerError>;
+
+fn unsupported<T>(msg: impl Into<String>) -> LResult<T> {
+    Err(LowerError::Unsupported(msg.into()))
+}
+
+/// Attribute reads supported on values (`m.size`, `m.dim`, `t.dim`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttrName {
+    Size,
+    Dim,
+}
+
+/// Machine-space transformation methods (Fig 6 + decompose).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpaceMethod {
+    Split,
+    Merge,
+    Swap,
+    Slice,
+    Decompose,
+}
+
+/// Built-in functions of the DSL.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Builtin {
+    Machine,
+    TupleOf,
+    Len,
+    Abs,
+    Min,
+    Max,
+    Prod,
+    Linearize,
+}
+
+/// One indexing operand: a plain coordinate register or a splatted tuple.
+#[derive(Clone, Debug)]
+pub enum IndexSrc {
+    Reg(u16),
+    Splat(u16),
+}
+
+/// A bytecode instruction. Registers are frame-local slots; `Const`
+/// indexes the module constant pool (globals, processor-kind literals,
+/// string literals, folded values).
+#[derive(Clone, Debug)]
+pub enum Op {
+    IConst { dst: u16, v: i64 },
+    BConst { dst: u16, v: bool },
+    Const { dst: u16, idx: u16 },
+    Move { dst: u16, src: u16 },
+    Neg { dst: u16, src: u16 },
+    Not { dst: u16, src: u16 },
+    /// Coerce to bool (errors on non-bool, like the interpreter).
+    AsBool { dst: u16, src: u16 },
+    Bin { op: BinOp, dst: u16, lhs: u16, rhs: u16 },
+    Jump { to: u32 },
+    /// Branch when the register is false; errors on non-bool.
+    BranchFalse { cond: u16, to: u32 },
+    /// Build a tuple from integer registers (errors on non-int elements).
+    TupleNew { dst: u16, elems: Vec<u16> },
+    Attr { dst: u16, src: u16, name: AttrName },
+    /// Single-slice indexing `recv[lo:hi]` on tuples and spaces.
+    SliceIdx { dst: u16, recv: u16, lo: Option<u16>, hi: Option<u16> },
+    /// General indexing `recv[a, *b, ...]` on tuples and spaces.
+    Index { dst: u16, recv: u16, args: Vec<IndexSrc> },
+    Method { dst: u16, recv: u16, which: SpaceMethod, args: Vec<u16> },
+    Builtin { dst: u16, which: Builtin, args: Vec<u16> },
+    /// Call a user function by module index.
+    Call { dst: u16, func: u16, args: Vec<u16> },
+    Ret { src: u16 },
+    /// Function body fell through without `return` (runtime error).
+    FellOff,
+}
+
+impl Op {
+    /// Destination register written by this op, if any.
+    fn dst(&self) -> Option<u16> {
+        match *self {
+            Op::IConst { dst, .. }
+            | Op::BConst { dst, .. }
+            | Op::Const { dst, .. }
+            | Op::Move { dst, .. }
+            | Op::Neg { dst, .. }
+            | Op::Not { dst, .. }
+            | Op::AsBool { dst, .. }
+            | Op::Bin { dst, .. }
+            | Op::TupleNew { dst, .. }
+            | Op::Attr { dst, .. }
+            | Op::SliceIdx { dst, .. }
+            | Op::Index { dst, .. }
+            | Op::Method { dst, .. }
+            | Op::Builtin { dst, .. }
+            | Op::Call { dst, .. } => Some(dst),
+            Op::Jump { .. } | Op::BranchFalse { .. } | Op::Ret { .. } | Op::FellOff => None,
+        }
+    }
+}
+
+/// Advisory parameter type tags (mirrors the interpreter's checks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TypeTag {
+    Tuple,
+    Int,
+}
+
+/// Compiled code for one function.
+#[derive(Clone, Debug)]
+pub struct FuncCode {
+    pub name: String,
+    pub param_types: Vec<Option<TypeTag>>,
+    pub nregs: u16,
+    /// Point-invariant prefix: constant preloads, then hoisted statements.
+    /// Reads only `ispace`, globals, and constants; runs once per launch.
+    pub prelude: Vec<Op>,
+    /// Per-point code; jump targets are relative to this segment.
+    pub body: Vec<Op>,
+    /// Registers the body writes — restored from the post-prelude
+    /// snapshot before each point so per-point state never leaks.
+    pub restore: Vec<u16>,
+    /// Module indices of user functions this code calls.
+    pub calls: Vec<usize>,
+}
+
+/// A lowered Mapple program: the executable side of a `MappingPlan`.
+#[derive(Clone, Debug)]
+pub struct Module {
+    pub desc: MachineDesc,
+    pub consts: Vec<Value>,
+    /// One slot per defined function; `None` = not lowerable (interp
+    /// fallback). Call indices always refer to this vec.
+    pub funcs: Vec<Option<FuncCode>>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Module {
+    /// Index of a fully lowered function (transitively: every function it
+    /// calls is lowered too — guaranteed by the fixpoint in [`lower`]).
+    pub fn func_index(&self, name: &str) -> Option<usize> {
+        let idx = *self.by_name.get(name)?;
+        if self.funcs[idx].is_some() {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    /// Is this function available in compiled form?
+    pub fn has(&self, name: &str) -> bool {
+        self.func_index(name).is_some()
+    }
+
+    /// Names of all fully lowered functions.
+    pub fn lowered_names(&self) -> impl Iterator<Item = &str> {
+        self.by_name
+            .iter()
+            .filter(|(_, &i)| self.funcs[i].is_some())
+            .map(|(n, _)| n.as_str())
+    }
+}
+
+/// Lower every function of a parsed program. Globals must already be
+/// evaluated — they are read from the bound interpreter, which is also
+/// the reference the VM is differentially tested against.
+pub fn lower(prog: &Program, interp: &Interp) -> Module {
+    let defs: Vec<&FuncDef> = prog.funcs().collect();
+    let mut by_name = HashMap::new();
+    for (i, f) in defs.iter().enumerate() {
+        by_name.insert(f.name.clone(), i);
+    }
+    let mut ctx = Ctx { interp, func_ids: &by_name, consts: Vec::new() };
+    let mut funcs: Vec<Option<FuncCode>> = Vec::with_capacity(defs.len());
+    for f in &defs {
+        funcs.push(lower_func(f, &mut ctx).ok());
+    }
+    // Fixpoint: a function calling an unlowered function is unlowered.
+    loop {
+        let mut changed = false;
+        for i in 0..funcs.len() {
+            let bad_call = funcs[i]
+                .as_ref()
+                .map(|c| c.calls.iter().any(|&j| funcs[j].is_none()))
+                .unwrap_or(false);
+            if bad_call {
+                funcs[i] = None;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    Module { desc: interp.desc.clone(), consts: ctx.consts, funcs, by_name }
+}
+
+// ---------------------------------------------------------------------------
+// lowering context
+// ---------------------------------------------------------------------------
+
+struct Ctx<'a> {
+    interp: &'a Interp,
+    func_ids: &'a HashMap<String, usize>,
+    consts: Vec<Value>,
+}
+
+impl Ctx<'_> {
+    fn push_const(&mut self, v: Value) -> LResult<u16> {
+        if self.consts.len() >= u16::MAX as usize {
+            return unsupported("constant pool overflow");
+        }
+        self.consts.push(v);
+        Ok((self.consts.len() - 1) as u16)
+    }
+
+    /// Value of a global binding or proc-kind literal, if `name` is one.
+    fn named_value(&self, name: &str) -> Option<Value> {
+        if let Some(v) = self.interp.global_value(name) {
+            Some(v.clone())
+        } else if ProcKind::parse(name).is_ok() {
+            Some(Value::Str(name.to_string()))
+        } else {
+            None
+        }
+    }
+}
+
+fn lower_func(f: &FuncDef, ctx: &mut Ctx<'_>) -> LResult<FuncCode> {
+    let mut fl = FnLowerer {
+        ctx,
+        vars: HashMap::new(),
+        next: 0,
+        ops: Vec::new(),
+        const_ops: Vec::new(),
+        known: HashMap::new(),
+        int_regs: HashMap::new(),
+        pool_regs: HashMap::new(),
+        calls: Vec::new(),
+    };
+    let mut param_types = Vec::with_capacity(f.params.len());
+    for p in &f.params {
+        let reg = fl.alloc()?;
+        fl.vars.insert(p.name.clone(), Var { reg, definite: true });
+        param_types.push(match p.ty.as_deref() {
+            Some("Tuple") => Some(TypeTag::Tuple),
+            Some("int") => Some(TypeTag::Int),
+            _ => None,
+        });
+    }
+    // Split the body: the maximal prefix of assignments that never read
+    // the first parameter (the iteration point) is hoisted into the
+    // per-launch prelude.
+    let mut split = 0usize;
+    if let Some(point) = f.params.first() {
+        let mut tainted: HashSet<String> = HashSet::new();
+        tainted.insert(point.name.clone());
+        for stmt in &f.body {
+            match stmt {
+                Stmt::Assign { name, expr, .. } => {
+                    // Reassigning the point parameter cannot be hoisted:
+                    // the per-point driver rewrites its register.
+                    if name == &point.name {
+                        break;
+                    }
+                    let mut reads = HashSet::new();
+                    expr_reads(expr, &mut reads);
+                    if reads.iter().any(|r| tainted.contains(r)) {
+                        break;
+                    }
+                    split += 1;
+                }
+                _ => break,
+            }
+        }
+    }
+    for stmt in &f.body[..split] {
+        fl.lower_stmt(stmt)?;
+    }
+    let hoisted = std::mem::take(&mut fl.ops);
+    for stmt in &f.body[split..] {
+        fl.lower_stmt(stmt)?;
+    }
+    fl.ops.push(Op::FellOff);
+    let body = std::mem::take(&mut fl.ops);
+    // Constant preloads run before the hoisted statements (which may read
+    // them); together they form the once-per-launch prelude.
+    let mut prelude = std::mem::take(&mut fl.const_ops);
+    prelude.extend(hoisted);
+    let mut restore: Vec<u16> = body.iter().filter_map(|op| op.dst()).collect();
+    restore.sort_unstable();
+    restore.dedup();
+    let nregs = fl.next;
+    let calls = std::mem::take(&mut fl.calls);
+    Ok(FuncCode {
+        name: f.name.clone(),
+        param_types,
+        nregs,
+        prelude,
+        body,
+        restore,
+        calls,
+    })
+}
+
+#[derive(Clone, Copy)]
+struct Var {
+    reg: u16,
+    /// Assigned on every path reaching here? Reads of indefinite vars are
+    /// rejected (the interpreter would error dynamically; compiled code
+    /// would read a stale register instead — so we refuse to compile).
+    definite: bool,
+}
+
+struct FnLowerer<'l, 'a> {
+    ctx: &'l mut Ctx<'a>,
+    vars: HashMap<String, Var>,
+    next: u16,
+    ops: Vec<Op>,
+    /// Constant-preload ops, prepended to the prelude at assembly time.
+    /// The registers they write are never written by any other op.
+    const_ops: Vec<Op>,
+    /// Registers holding known compile-time constants (for folding).
+    known: HashMap<u16, Value>,
+    /// Dedup caches for preloaded constants.
+    int_regs: HashMap<i64, u16>,
+    pool_regs: HashMap<u16, u16>,
+    calls: Vec<usize>,
+}
+
+impl FnLowerer<'_, '_> {
+    fn alloc(&mut self) -> LResult<u16> {
+        if self.next == u16::MAX {
+            return unsupported("register file overflow");
+        }
+        let r = self.next;
+        self.next += 1;
+        Ok(r)
+    }
+
+    fn emit(&mut self, op: Op) {
+        self.ops.push(op);
+    }
+
+    fn here(&self) -> usize {
+        self.ops.len()
+    }
+
+    fn patch_jump(&mut self, at: usize) {
+        let to = self.ops.len() as u32;
+        match &mut self.ops[at] {
+            Op::Jump { to: t } | Op::BranchFalse { to: t, .. } => *t = to,
+            other => panic!("patch_jump on non-jump {other:?}"),
+        }
+    }
+
+    /// Pin an integer constant into a preloaded register.
+    fn int_const(&mut self, v: i64) -> LResult<u16> {
+        if let Some(&r) = self.int_regs.get(&v) {
+            return Ok(r);
+        }
+        let dst = self.alloc()?;
+        self.const_ops.push(Op::IConst { dst, v });
+        self.known.insert(dst, Value::Int(v));
+        self.int_regs.insert(v, dst);
+        Ok(dst)
+    }
+
+    /// Pin an arbitrary constant value into a preloaded register.
+    fn value_const(&mut self, v: Value) -> LResult<u16> {
+        if let Value::Int(i) = v {
+            return self.int_const(i);
+        }
+        let idx = self.ctx.push_const(v.clone())?;
+        if let Some(&r) = self.pool_regs.get(&idx) {
+            return Ok(r);
+        }
+        let dst = self.alloc()?;
+        self.const_ops.push(Op::Const { dst, idx });
+        self.known.insert(dst, v);
+        self.pool_regs.insert(idx, dst);
+        Ok(dst)
+    }
+
+    // ---- statements -------------------------------------------------------
+
+    fn lower_stmt(&mut self, stmt: &Stmt) -> LResult<()> {
+        match stmt {
+            Stmt::Assign { name, expr, .. } => {
+                let src = self.lower_expr(expr)?;
+                match self.vars.get(name).copied() {
+                    Some(v) => {
+                        self.emit(Op::Move { dst: v.reg, src });
+                        self.vars.insert(name.clone(), Var { reg: v.reg, definite: true });
+                    }
+                    None => {
+                        let reg = self.alloc()?;
+                        self.emit(Op::Move { dst: reg, src });
+                        self.vars.insert(name.clone(), Var { reg, definite: true });
+                    }
+                }
+                Ok(())
+            }
+            Stmt::Return { expr, .. } => {
+                let src = self.lower_expr(expr)?;
+                self.emit(Op::Ret { src });
+                Ok(())
+            }
+            Stmt::Expr { expr, .. } => {
+                let _ = self.lower_expr(expr)?;
+                Ok(())
+            }
+            Stmt::If { arms, else_body, .. } => {
+                let before: HashMap<String, Var> = self.vars.clone();
+                let mut arm_defs: Vec<HashMap<String, Var>> = Vec::new();
+                let mut end_jumps: Vec<usize> = Vec::new();
+                let mut next_arm_jump: Option<usize> = None;
+                for (cond, body) in arms {
+                    if let Some(at) = next_arm_jump.take() {
+                        self.patch_jump(at);
+                    }
+                    self.restore_definiteness(&before);
+                    let c = self.lower_expr(cond)?;
+                    let br = self.here();
+                    self.emit(Op::BranchFalse { cond: c, to: 0 });
+                    next_arm_jump = Some(br);
+                    for s in body {
+                        self.lower_stmt(s)?;
+                    }
+                    arm_defs.push(self.vars.clone());
+                    let j = self.here();
+                    self.emit(Op::Jump { to: 0 });
+                    end_jumps.push(j);
+                }
+                if let Some(at) = next_arm_jump.take() {
+                    self.patch_jump(at);
+                }
+                let else_defs = if let Some(eb) = else_body {
+                    self.restore_definiteness(&before);
+                    for s in eb {
+                        self.lower_stmt(s)?;
+                    }
+                    Some(self.vars.clone())
+                } else {
+                    None
+                };
+                for j in end_jumps {
+                    self.patch_jump(j);
+                }
+                // Merge definiteness: a var is definite after the If only
+                // if it was definite before, or assigned on every arm AND
+                // an else exists.
+                let names: Vec<String> = self.vars.keys().cloned().collect();
+                for name in names {
+                    let was = before.get(&name).map(|v| v.definite).unwrap_or(false);
+                    let all_arms = arm_defs
+                        .iter()
+                        .all(|d| d.get(&name).map(|v| v.definite).unwrap_or(false));
+                    let in_else = else_defs
+                        .as_ref()
+                        .map(|d| d.get(&name).map(|v| v.definite).unwrap_or(false))
+                        .unwrap_or(false);
+                    let definite = was || (all_arms && in_else);
+                    if let Some(v) = self.vars.get_mut(&name) {
+                        v.definite = definite;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn restore_definiteness(&mut self, snapshot: &HashMap<String, Var>) {
+        for (name, var) in self.vars.iter_mut() {
+            var.definite = snapshot.get(name).map(|v| v.definite).unwrap_or(false);
+        }
+    }
+
+    // ---- expressions ------------------------------------------------------
+
+    fn lower_expr(&mut self, e: &Expr) -> LResult<u16> {
+        match e {
+            Expr::Int(v) => self.int_const(*v),
+            Expr::Str(s) => self.value_const(Value::Str(s.clone())),
+            Expr::Name(n) => self.lower_name(n),
+            Expr::TupleLit(items) => {
+                let mut elems = Vec::with_capacity(items.len());
+                for it in items {
+                    elems.push(self.lower_expr(it)?);
+                }
+                // Fold all-constant tuple literals.
+                if let Some(vals) = self.all_known_ints(&elems) {
+                    return self.value_const(Value::Tuple(crate::machine::point::Tuple(vals)));
+                }
+                let dst = self.alloc()?;
+                self.emit(Op::TupleNew { dst, elems });
+                Ok(dst)
+            }
+            Expr::Unary { op, inner } => {
+                let src = self.lower_expr(inner)?;
+                let known_int = match self.known.get(&src) {
+                    Some(Value::Int(v)) => Some(*v),
+                    _ => None,
+                };
+                if let (UnOp::Neg, Some(v)) = (op, known_int) {
+                    return self.int_const(-v);
+                }
+                let dst = self.alloc()?;
+                match op {
+                    UnOp::Neg => self.emit(Op::Neg { dst, src }),
+                    UnOp::Not => self.emit(Op::Not { dst, src }),
+                }
+                Ok(dst)
+            }
+            Expr::Binary { op, lhs, rhs } => match op {
+                BinOp::And | BinOp::Or => self.lower_shortcircuit(*op, lhs, rhs),
+                _ => {
+                    let l = self.lower_expr(lhs)?;
+                    let r = self.lower_expr(rhs)?;
+                    // Fold int∘int arithmetic (leave errors to runtime).
+                    let folded = match (self.known.get(&l), self.known.get(&r), op) {
+                        (
+                            Some(Value::Int(a)),
+                            Some(Value::Int(b)),
+                            BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod,
+                        ) => match arith(&op.to_string(), &Value::Int(*a), &Value::Int(*b)) {
+                            Ok(Value::Int(v)) => Some(v),
+                            _ => None,
+                        },
+                        _ => None,
+                    };
+                    if let Some(v) = folded {
+                        return self.int_const(v);
+                    }
+                    let dst = self.alloc()?;
+                    self.emit(Op::Bin { op: *op, dst, lhs: l, rhs: r });
+                    Ok(dst)
+                }
+            },
+            Expr::Ternary { cond, then, otherwise } => {
+                let c = self.lower_expr(cond)?;
+                let dst = self.alloc()?;
+                let br = self.here();
+                self.emit(Op::BranchFalse { cond: c, to: 0 });
+                let t = self.lower_expr(then)?;
+                self.emit(Op::Move { dst, src: t });
+                let jend = self.here();
+                self.emit(Op::Jump { to: 0 });
+                self.patch_jump(br);
+                let o = self.lower_expr(otherwise)?;
+                self.emit(Op::Move { dst, src: o });
+                self.patch_jump(jend);
+                Ok(dst)
+            }
+            Expr::Call { func, args } => self.lower_call(func, args),
+            Expr::Method { recv, name, args } => {
+                let r = self.lower_expr(recv)?;
+                let which = match name.as_str() {
+                    "split" => SpaceMethod::Split,
+                    "merge" => SpaceMethod::Merge,
+                    "swap" => SpaceMethod::Swap,
+                    "slice" => SpaceMethod::Slice,
+                    "decompose" => SpaceMethod::Decompose,
+                    other => return unsupported(format!("machine method '.{other}'")),
+                };
+                let mut regs = Vec::with_capacity(args.len());
+                for a in args {
+                    match a {
+                        Arg::Plain(e) => regs.push(self.lower_expr(e)?),
+                        Arg::Splat(_) => return unsupported("splat in method call"),
+                    }
+                }
+                let dst = self.alloc()?;
+                self.emit(Op::Method { dst, recv: r, which, args: regs });
+                Ok(dst)
+            }
+            Expr::Attr { recv, name } => {
+                let r = self.lower_expr(recv)?;
+                let attr = match name.as_str() {
+                    "size" => AttrName::Size,
+                    "dim" => AttrName::Dim,
+                    other => return unsupported(format!("attribute '.{other}'")),
+                };
+                // Fold attributes of known constants (`m.size`).
+                let folded = self.known.get(&r).and_then(|v| eval_attr(v, attr).ok());
+                if let Some(f) = folded {
+                    return self.value_const(f);
+                }
+                let dst = self.alloc()?;
+                self.emit(Op::Attr { dst, src: r, name: attr });
+                Ok(dst)
+            }
+            Expr::Index { recv, args } => {
+                let r = self.lower_expr(recv)?;
+                if args.len() == 1 {
+                    if let IndexArg::Slice { lo, hi } = &args[0] {
+                        let lo_r = match lo {
+                            Some(e) => Some(self.lower_expr(e)?),
+                            None => None,
+                        };
+                        let hi_r = match hi {
+                            Some(e) => Some(self.lower_expr(e)?),
+                            None => None,
+                        };
+                        let dst = self.alloc()?;
+                        self.emit(Op::SliceIdx { dst, recv: r, lo: lo_r, hi: hi_r });
+                        return Ok(dst);
+                    }
+                }
+                let mut srcs = Vec::with_capacity(args.len());
+                for a in args {
+                    match a {
+                        IndexArg::Plain(e) => srcs.push(IndexSrc::Reg(self.lower_expr(e)?)),
+                        IndexArg::Splat(e) => srcs.push(IndexSrc::Splat(self.lower_expr(e)?)),
+                        IndexArg::Slice { .. } => {
+                            return unsupported("slice mixed with other index args")
+                        }
+                    }
+                }
+                // Fold constant-tuple[constant-int] (`m_flat.size[0]`).
+                let folded: Option<i64> = match &srcs[..] {
+                    [IndexSrc::Reg(a)] => {
+                        match (self.known.get(&r), self.known.get(a)) {
+                            (Some(Value::Tuple(t)), Some(Value::Int(i))) => {
+                                let mut i = *i;
+                                if i < 0 {
+                                    i += t.dim() as i64;
+                                }
+                                if i >= 0 && (i as usize) < t.dim() {
+                                    Some(t[i as usize])
+                                } else {
+                                    None
+                                }
+                            }
+                            _ => None,
+                        }
+                    }
+                    _ => None,
+                };
+                if let Some(v) = folded {
+                    return self.int_const(v);
+                }
+                let dst = self.alloc()?;
+                self.emit(Op::Index { dst, recv: r, args: srcs });
+                Ok(dst)
+            }
+            Expr::TupleGen { elem, var, iter } => {
+                // Unrolled only over compile-time integer tuple literals
+                // ((0, 1), (0, 1, 2), ...) — which is the Fig 12 idiom.
+                let values = const_int_tuple(iter)
+                    .ok_or_else(|| LowerError::Unsupported("generator over non-literal".into()))?;
+                let var_reg = self.alloc()?;
+                let shadowed = self.vars.insert(var.clone(), Var { reg: var_reg, definite: true });
+                let mut elems = Vec::with_capacity(values.len());
+                let mut result = Ok(());
+                for v in values {
+                    self.emit(Op::IConst { dst: var_reg, v });
+                    match self.lower_expr(elem) {
+                        Ok(r) => elems.push(r),
+                        Err(e) => {
+                            result = Err(e);
+                            break;
+                        }
+                    }
+                }
+                match shadowed {
+                    Some(prev) => {
+                        self.vars.insert(var.clone(), prev);
+                    }
+                    None => {
+                        self.vars.remove(var);
+                    }
+                }
+                result?;
+                let dst = self.alloc()?;
+                self.emit(Op::TupleNew { dst, elems });
+                Ok(dst)
+            }
+        }
+    }
+
+    /// If every register holds a known integer constant, their values.
+    fn all_known_ints(&self, regs: &[u16]) -> Option<Vec<i64>> {
+        regs.iter()
+            .map(|r| match self.known.get(r) {
+                Some(Value::Int(v)) => Some(*v),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn lower_name(&mut self, n: &str) -> LResult<u16> {
+        if let Some(v) = self.vars.get(n).copied() {
+            if !v.definite {
+                return unsupported(format!("read of conditionally assigned '{n}'"));
+            }
+            return Ok(v.reg);
+        }
+        match self.ctx.named_value(n) {
+            Some(v) => self.value_const(v),
+            None => Err(LowerError::Invalid(format!("undefined name '{n}'"))),
+        }
+    }
+
+    fn lower_shortcircuit(&mut self, op: BinOp, lhs: &Expr, rhs: &Expr) -> LResult<u16> {
+        let dst = self.alloc()?;
+        let l = self.lower_expr(lhs)?;
+        match op {
+            BinOp::And => {
+                let br = self.here();
+                self.emit(Op::BranchFalse { cond: l, to: 0 });
+                let r = self.lower_expr(rhs)?;
+                self.emit(Op::AsBool { dst, src: r });
+                let jend = self.here();
+                self.emit(Op::Jump { to: 0 });
+                self.patch_jump(br);
+                self.emit(Op::BConst { dst, v: false });
+                self.patch_jump(jend);
+            }
+            BinOp::Or => {
+                let br = self.here();
+                self.emit(Op::BranchFalse { cond: l, to: 0 });
+                self.emit(Op::BConst { dst, v: true });
+                let jend = self.here();
+                self.emit(Op::Jump { to: 0 });
+                self.patch_jump(br);
+                let r = self.lower_expr(rhs)?;
+                self.emit(Op::AsBool { dst, src: r });
+                self.patch_jump(jend);
+            }
+            _ => unreachable!("shortcircuit called on {op:?}"),
+        }
+        Ok(dst)
+    }
+
+    fn lower_call(&mut self, func: &str, args: &[Arg]) -> LResult<u16> {
+        let builtin = match func {
+            "Machine" => Some(Builtin::Machine),
+            "tuple" => Some(Builtin::TupleOf),
+            "len" => Some(Builtin::Len),
+            "abs" => Some(Builtin::Abs),
+            "min" => Some(Builtin::Min),
+            "max" => Some(Builtin::Max),
+            "prod" => Some(Builtin::Prod),
+            "linearize" => Some(Builtin::Linearize),
+            _ => None,
+        };
+        let mut regs = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::Plain(e) => regs.push(self.lower_expr(e)?),
+                Arg::Splat(_) => return unsupported("splat in call arguments"),
+            }
+        }
+        let dst = self.alloc()?;
+        if let Some(which) = builtin {
+            self.emit(Op::Builtin { dst, which, args: regs });
+            return Ok(dst);
+        }
+        let idx = match self.ctx.func_ids.get(func) {
+            Some(&i) => i,
+            None => return Err(LowerError::Invalid(format!("undefined function '{func}'"))),
+        };
+        if !self.calls.contains(&idx) {
+            self.calls.push(idx);
+        }
+        self.emit(Op::Call { dst, func: idx as u16, args: regs });
+        Ok(dst)
+    }
+}
+
+fn eval_attr(v: &Value, attr: AttrName) -> Result<Value, String> {
+    match (v, attr) {
+        (Value::Space(s), AttrName::Size) => Ok(Value::Tuple(s.size().clone())),
+        (Value::Space(s), AttrName::Dim) => Ok(Value::Int(s.dim() as i64)),
+        (Value::Tuple(t), AttrName::Dim) => Ok(Value::Int(t.dim() as i64)),
+        (other, AttrName::Size) => Err(format!("no attribute 'size' on {}", other.kind())),
+        (other, AttrName::Dim) => Err(format!("no attribute 'dim' on {}", other.kind())),
+    }
+}
+
+/// Extract the integer values of a literal tuple expression, if it is one.
+fn const_int_tuple(e: &Expr) -> Option<Vec<i64>> {
+    let items = match e {
+        Expr::TupleLit(items) => items,
+        _ => return None,
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for it in items {
+        match it {
+            Expr::Int(v) => out.push(*v),
+            Expr::Unary { op: UnOp::Neg, inner } => match inner.as_ref() {
+                Expr::Int(v) => out.push(-v),
+                _ => return None,
+            },
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+/// Collect variable names an expression reads (generator vars excluded
+/// within their element expression).
+fn expr_reads(e: &Expr, out: &mut HashSet<String>) {
+    match e {
+        Expr::Int(_) | Expr::Str(_) => {}
+        Expr::Name(n) => {
+            out.insert(n.clone());
+        }
+        Expr::TupleLit(items) => {
+            for it in items {
+                expr_reads(it, out);
+            }
+        }
+        Expr::Unary { inner, .. } => expr_reads(inner, out),
+        Expr::Binary { lhs, rhs, .. } => {
+            expr_reads(lhs, out);
+            expr_reads(rhs, out);
+        }
+        Expr::Ternary { cond, then, otherwise } => {
+            expr_reads(cond, out);
+            expr_reads(then, out);
+            expr_reads(otherwise, out);
+        }
+        Expr::Call { args, .. } => {
+            for a in args {
+                match a {
+                    Arg::Plain(x) | Arg::Splat(x) => expr_reads(x, out),
+                }
+            }
+        }
+        Expr::Method { recv, args, .. } => {
+            expr_reads(recv, out);
+            for a in args {
+                match a {
+                    Arg::Plain(x) | Arg::Splat(x) => expr_reads(x, out),
+                }
+            }
+        }
+        Expr::Attr { recv, .. } => expr_reads(recv, out),
+        Expr::Index { recv, args } => {
+            expr_reads(recv, out);
+            for a in args {
+                match a {
+                    IndexArg::Plain(x) | IndexArg::Splat(x) => expr_reads(x, out),
+                    IndexArg::Slice { lo, hi } => {
+                        if let Some(x) = lo {
+                            expr_reads(x, out);
+                        }
+                        if let Some(x) = hi {
+                            expr_reads(x, out);
+                        }
+                    }
+                }
+            }
+        }
+        Expr::TupleGen { elem, var, iter } => {
+            expr_reads(iter, out);
+            let mut inner = HashSet::new();
+            expr_reads(elem, &mut inner);
+            inner.remove(var);
+            out.extend(inner);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::topology::MachineDesc;
+    use crate::mapple::parser::parse;
+
+    fn lower_src(src: &str) -> (Module, Interp) {
+        let prog = parse(src).unwrap();
+        let desc = {
+            let mut d = MachineDesc::paper_testbed(2);
+            d.gpus_per_node = 2;
+            d
+        };
+        let interp = Interp::new(&prog, &desc).unwrap();
+        let module = lower(&prog, &interp);
+        (module, interp)
+    }
+
+    #[test]
+    fn block2d_lowers_with_const_only_prelude() {
+        let (m, _) = lower_src(
+            "m = Machine(GPU)\n\
+             def block2D(Tuple ipoint, Tuple ispace):\n    \
+                 idx = ipoint * m.size / ispace\n    \
+                 return m[*idx]\n",
+        );
+        let idx = m.func_index("block2D").expect("lowered");
+        let code = m.funcs[idx].as_ref().unwrap();
+        // prelude only preloads constants (m, m.size); the statement
+        // itself reads ipoint and stays in the body
+        assert!(
+            code.prelude.iter().all(|op| matches!(op, Op::Const { .. } | Op::IConst { .. })),
+            "{:?}",
+            code.prelude
+        );
+        assert!(matches!(code.body.last(), Some(Op::FellOff)));
+        assert!(code.body.iter().any(|op| matches!(op, Op::Ret { .. })));
+        // m.size folded into a constant: no per-point Attr
+        assert!(!code.body.iter().any(|op| matches!(op, Op::Attr { .. })));
+    }
+
+    #[test]
+    fn invariant_transforms_are_hoisted() {
+        let (m, _) = lower_src(
+            "m = Machine(GPU)\n\
+             def f(Tuple p, Tuple s):\n    \
+                 m2 = m.decompose(0, s)\n    \
+                 sub = (s + m2[:-1] - 1) / m2[:-1]\n    \
+                 idx = p % m2.size[0]\n    \
+                 return m2[idx, 0, 0]\n",
+        );
+        let idx = m.func_index("f").expect("lowered");
+        let code = m.funcs[idx].as_ref().unwrap();
+        // decompose + the sub computation live in the prelude
+        assert!(
+            code.prelude.iter().any(|op| matches!(
+                op,
+                Op::Method { which: SpaceMethod::Decompose, .. }
+            )),
+            "{:?}",
+            code.prelude
+        );
+        assert!(
+            !code.body.iter().any(|op| matches!(op, Op::Method { .. })),
+            "no space transforms per point"
+        );
+    }
+
+    #[test]
+    fn generator_unrolls_and_callee_links() {
+        let (m, _) = lower_src(
+            "m = Machine(GPU)\n\
+             def prim(Tuple p, Tuple s, Tuple g, int i):\n    \
+                 return p[i] * g[i] / s[i]\n\
+             def f(Tuple p, Tuple s):\n    \
+                 u = tuple(prim(p, s, m.size, i) for i in (0, 1))\n    \
+                 return m[*u]\n",
+        );
+        assert!(m.has("f"));
+        assert!(m.has("prim"));
+        let code = m.funcs[m.func_index("f").unwrap()].as_ref().unwrap();
+        let ncalls = code.body.iter().filter(|op| matches!(op, Op::Call { .. })).count();
+        assert_eq!(ncalls, 2, "generator over (0, 1) unrolls to two calls");
+    }
+
+    #[test]
+    fn unlowerable_callee_poisons_caller() {
+        // generator over a runtime iterable is outside the subset
+        let (m, _) = lower_src(
+            "m = Machine(GPU)\n\
+             def weird(Tuple p, Tuple s):\n    \
+                 u = tuple(p[i] for i in s)\n    \
+                 return m[0, 0]\n\
+             def f(Tuple p, Tuple s):\n    \
+                 q = weird(p, s)\n    \
+                 return m[0, 0]\n",
+        );
+        assert!(!m.has("weird"));
+        assert!(!m.has("f"), "caller of an unlowered function is unlowered");
+    }
+
+    #[test]
+    fn conditional_assignment_read_rejected() {
+        let (m, _) = lower_src(
+            "m = Machine(GPU)\n\
+             def f(Tuple p, Tuple s):\n    \
+                 if p[0] == 0:\n        \
+                     x = 1\n    \
+                 return m[x, 0]\n",
+        );
+        assert!(!m.has("f"));
+    }
+
+    #[test]
+    fn branchy_returns_lower() {
+        let (m, _) = lower_src(
+            "m = Machine(GPU)\n\
+             def f(Tuple p, Tuple s):\n    \
+                 if p[0] == 0:\n        \
+                     return m[0, 0]\n    \
+                 elif p[0] == 1:\n        \
+                     return m[0, 1]\n    \
+                 else:\n        \
+                     return m[1, 0]\n",
+        );
+        assert!(m.has("f"));
+    }
+
+    #[test]
+    fn restore_covers_body_writes() {
+        let (m, _) = lower_src(
+            "m = Machine(GPU)\n\
+             def f(Tuple p, Tuple s):\n    \
+                 x = s[0]\n    \
+                 x = x + p[0]\n    \
+                 return m[x % 2, 0]\n",
+        );
+        let code = m.funcs[m.func_index("f").unwrap()].as_ref().unwrap();
+        // x = s[0] hoisted; x's register is rewritten by the body, so it
+        // must be restored between points
+        let x_reg = code.prelude.iter().find_map(|op| match op {
+            Op::Move { dst, .. } => Some(*dst),
+            _ => None,
+        });
+        let x_reg = x_reg.expect("prelude assigns x");
+        assert!(code.restore.contains(&x_reg), "{:?}", code.restore);
+    }
+
+    #[test]
+    fn shipped_mapper_sources_all_lower() {
+        let desc = MachineDesc::paper_testbed(4);
+        for (app, base, tuned) in crate::apps::mappers::MAPPER_SOURCES {
+            for (flavor, src) in [("base", base), ("tuned", tuned)] {
+                let prog = parse(src).unwrap_or_else(|e| panic!("{app} {flavor}: {e}"));
+                let interp = Interp::new(&prog, &desc).unwrap();
+                let module = lower(&prog, &interp);
+                for f in prog.funcs() {
+                    assert!(
+                        module.has(&f.name),
+                        "{app} {flavor}: '{}' fell back to the tree walker",
+                        f.name
+                    );
+                }
+            }
+        }
+    }
+}

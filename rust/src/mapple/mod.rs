@@ -1,19 +1,31 @@
 //! The Mapple DSL front-end (paper §2–§5).
 //!
 //! Pipeline: source text → [`token::lex`] → [`parser::parse`] →
-//! [`interp::Interp`] (bound to a [`crate::machine::MachineDesc`]) →
-//! [`program::MapperSpec`] (directive tables). The mapper translation
-//! layer (`crate::mapper::translate`) then adapts a `MapperSpec` to the
-//! low-level 19-callback mapper interface, mirroring how the paper
-//! translates Mapple into Legion's C++ mapping interface.
+//! [`lower::lower`] (bytecode, bound to a [`crate::machine::MachineDesc`])
+//! → [`vm::MappingPlan`] (batched per-launch evaluation) →
+//! [`program::MapperSpec`] (directive tables + plan). The mapper
+//! translation layer (`crate::mapper::translate`) then adapts a
+//! `MapperSpec` to the low-level 19-callback mapper interface, mirroring
+//! how the paper translates Mapple into Legion's C++ mapping interface —
+//! but batched: one [`vm::PlacementTable`] per launch domain instead of a
+//! tree-walk per iteration point.
+//!
+//! The tree-walking [`interp::Interp`] remains as the reference oracle:
+//! functions outside the compiled subset fall back to it, and
+//! `rust/tests/differential.rs` checks VM ≡ interpreter placements for
+//! every shipped mapper.
 
 pub mod ast;
 pub mod interp;
+pub mod lower;
 pub mod parser;
 pub mod program;
 pub mod token;
 pub mod value;
+pub mod vm;
 
 pub use interp::Interp;
+pub use lower::{lower, Module};
 pub use parser::parse;
 pub use program::{LayoutProps, MapperSpec};
+pub use vm::{MappingPlan, PlacementTable};

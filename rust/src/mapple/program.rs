@@ -8,8 +8,10 @@
 
 use super::ast::{Directive, Program};
 use super::interp::{Interp, RtError};
+use super::lower;
 use super::parser::parse;
-use crate::machine::point::Tuple;
+use super::vm::{MappingPlan, PlacementTable};
+use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::{MachineDesc, MemKind, ProcId, ProcKind};
 use std::collections::{HashMap, HashSet};
 
@@ -53,7 +55,11 @@ impl LayoutProps {
 
 /// A fully compiled mapper bound to a machine.
 pub struct MapperSpec {
+    /// Tree-walking reference interpreter (oracle + fallback).
     pub interp: Interp,
+    /// Compiled `MappingPlan`: lowered bytecode for every function in the
+    /// supported subset (all shipped mappers lower fully).
+    pub plan: MappingPlan,
     /// task → mapping function name.
     pub index_task_maps: HashMap<String, String>,
     /// task → processor kind.
@@ -89,8 +95,10 @@ impl MapperSpec {
 
     pub fn from_program(prog: &Program, desc: &MachineDesc) -> Result<MapperSpec, String> {
         let interp = Interp::new(prog, desc).map_err(|e| e.to_string())?;
+        let plan = MappingPlan::new(lower::lower(prog, &interp));
         let mut spec = MapperSpec {
             interp,
+            plan,
             index_task_maps: HashMap::new(),
             task_maps: HashMap::new(),
             regions: HashMap::new(),
@@ -147,13 +155,37 @@ impl MapperSpec {
             .map(|s| s.as_str())
     }
 
-    /// Map one iteration point of a task launch (the SHARD∘MAP composite).
+    /// Map one iteration point of a task launch (the SHARD∘MAP composite)
+    /// through the tree-walking reference interpreter. This is the oracle
+    /// path; the hot path is [`MapperSpec::plan_domain`].
     pub fn map_point(&self, task: &str, ipoint: &Tuple, ispace: &Tuple) -> Result<ProcId, RtError> {
         let func = self.mapping_fn(task).ok_or_else(|| RtError {
             msg: format!("no IndexTaskMap directive for task '{task}'"),
             trace: Vec::new(),
         })?;
         self.interp.map_point(func, ipoint, ispace)
+    }
+
+    /// Batched §5.2 evaluation: placements for an entire launch domain in
+    /// one pass. Uses the compiled `MappingPlan` VM when the task's
+    /// mapping function lowered; falls back to the tree walker otherwise
+    /// (identical placements either way — see tests/differential.rs).
+    pub fn plan_domain(&self, task: &str, domain: &Rect) -> Result<PlacementTable, String> {
+        if domain.volume() <= 0 {
+            return Err("empty launch domain".into());
+        }
+        let func = self
+            .mapping_fn(task)
+            .ok_or_else(|| format!("no IndexTaskMap directive for task '{task}'"))?;
+        if self.plan.supports(func) {
+            return self.plan.eval_domain(func, domain);
+        }
+        let ispace = domain.extent();
+        let mut procs = Vec::with_capacity(domain.volume().max(0) as usize);
+        for p in domain.points() {
+            procs.push(self.interp.map_point(func, &p, &ispace).map_err(|e| e.to_string())?);
+        }
+        Ok(PlacementTable::new(domain.lo.clone(), ispace, procs))
     }
 
     /// Processor kind for a task (default GPU).
@@ -254,6 +286,20 @@ Backpressure matmul 2
         assert!(!spec.should_gc("matmul", 0));
         assert_eq!(spec.backpressure_for("matmul"), Some(2));
         assert_eq!(spec.backpressure_for("other"), None);
+    }
+
+    #[test]
+    fn plan_domain_matches_map_point_oracle() {
+        let spec = MapperSpec::compile(FULL, &desc()).unwrap();
+        assert!(spec.plan.supports("block2D"), "mapper compiles to bytecode");
+        let ispace = Tuple::from([6, 6]);
+        let dom = Rect::from_extent(&ispace);
+        let table = spec.plan_domain("matmul", &dom).unwrap();
+        for p in dom.points() {
+            let want = spec.map_point("matmul", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(want), "{p:?}");
+        }
+        assert!(spec.plan_domain("unmapped", &dom).is_err());
     }
 
     #[test]

@@ -1,0 +1,777 @@
+//! The `MappingPlan` VM: batched evaluation of lowered mapping bytecode.
+//!
+//! Where the tree-walking interpreter re-enters the AST once per
+//! iteration point (hashing variable names, cloning environments, and
+//! re-running every machine-space transform), the VM evaluates an entire
+//! launch domain in one pass:
+//!
+//! * the function's `prelude` (constant preloads + hoisted
+//!   point-invariant statements, e.g. `decompose`) runs **once** per
+//!   launch,
+//! * the per-point `body` runs over the whole [`Rect`] against a flat
+//!   register file, restoring only the registers the body writes between
+//!   points.
+//!
+//! The result is a [`PlacementTable`] — the dense per-launch placement
+//! artifact that the mapper translation layer, the §5.1 pipeline, and the
+//! simulator consume. Expert and heuristic mappers emit the same table
+//! type (via `Mapper::build_plan`), so every mapper family reaches the
+//! runtime through one execution path.
+//!
+//! Semantics are differentially tested against the interpreter in
+//! `rust/tests/differential.rs`: for every shipped mapper, every app
+//! launch shape, and several machine shapes, VM placements must equal
+//! tree-walker placements exactly.
+
+use super::lower::{AttrName, Builtin, FuncCode, IndexSrc, Module, Op, SpaceMethod, TypeTag};
+use super::value::{arith, compare, Value};
+use crate::machine::point::{Rect, Tuple};
+use crate::machine::space::ProcSpace;
+use crate::machine::topology::{ProcId, ProcKind};
+
+/// Hard recursion limit, matching the interpreter's.
+const MAX_CALL_DEPTH: usize = 64;
+
+/// Dense row-major placement table for one launch domain: the output of
+/// a `MappingPlan` (and of `Mapper::build_plan` for every mapper family).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementTable {
+    lo: Tuple,
+    extent: Tuple,
+    procs: Vec<ProcId>,
+}
+
+impl PlacementTable {
+    /// Build from a domain origin, extent, and row-major processor list.
+    pub fn new(lo: Tuple, extent: Tuple, procs: Vec<ProcId>) -> PlacementTable {
+        assert_eq!(lo.dim(), extent.dim(), "placement table arity mismatch");
+        let volume: i64 = extent.iter().map(|&e| e.max(0)).product();
+        assert_eq!(
+            procs.len() as i64,
+            volume,
+            "placement table holds {} procs for volume {volume}",
+            procs.len()
+        );
+        PlacementTable { lo, extent, procs }
+    }
+
+    /// Table over `[0, extent)`.
+    pub fn from_extent(extent: Tuple, procs: Vec<ProcId>) -> PlacementTable {
+        let lo = Tuple::zeros(extent.dim());
+        PlacementTable::new(lo, extent, procs)
+    }
+
+    pub fn lo(&self) -> &Tuple {
+        &self.lo
+    }
+
+    pub fn extent(&self) -> &Tuple {
+        &self.extent
+    }
+
+    pub fn len(&self) -> usize {
+        self.procs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.procs.is_empty()
+    }
+
+    /// Row-major processor list (same order as `Rect::points()`).
+    pub fn procs(&self) -> &[ProcId] {
+        &self.procs
+    }
+
+    /// Row-major slot of a point, `None` when outside the domain.
+    pub fn index_of(&self, point: &Tuple) -> Option<usize> {
+        if point.dim() != self.extent.dim() {
+            return None;
+        }
+        let mut idx = 0i64;
+        for d in 0..point.dim() {
+            let c = point[d] - self.lo[d];
+            if c < 0 || c >= self.extent[d] {
+                return None;
+            }
+            idx = idx * self.extent[d] + c;
+        }
+        Some(idx as usize)
+    }
+
+    /// Processor for a point (MAP), `None` outside the domain.
+    pub fn get(&self, point: &Tuple) -> Option<ProcId> {
+        self.index_of(point).map(|i| self.procs[i])
+    }
+
+    /// Node for a point (SHARD), `None` outside the domain.
+    pub fn node(&self, point: &Tuple) -> Option<usize> {
+        self.get(point).map(|p| p.node)
+    }
+}
+
+/// A compiled mapping plan: the lowered [`Module`] plus its evaluator.
+#[derive(Clone, Debug)]
+pub struct MappingPlan {
+    module: Module,
+}
+
+impl MappingPlan {
+    pub fn new(module: Module) -> MappingPlan {
+        MappingPlan { module }
+    }
+
+    pub fn module(&self) -> &Module {
+        &self.module
+    }
+
+    /// Is this function available in compiled form (else: interp fallback)?
+    pub fn supports(&self, func: &str) -> bool {
+        self.module.has(func)
+    }
+
+    /// Evaluate a mapping function over an entire launch domain: prelude
+    /// once, body per point.
+    pub fn eval_domain(&self, func: &str, domain: &Rect) -> Result<PlacementTable, String> {
+        if domain.volume() <= 0 {
+            return Err("empty launch domain".into());
+        }
+        let code = self.entry(func)?;
+        let ispace = domain.extent();
+        let mut regs = new_frame(code.nregs);
+        regs[1] = Value::Tuple(ispace.clone());
+        let vm = Vm { module: &self.module };
+        if let Some(v) = vm.exec(code, &code.prelude, &mut regs, 0)? {
+            // A prelude never contains Ret; defensive all the same.
+            return constant_table(func, domain, ispace, v);
+        }
+        let snapshot: Vec<(usize, Value)> = code
+            .restore
+            .iter()
+            .map(|&r| (r as usize, regs[r as usize].clone()))
+            .collect();
+        let mut procs = Vec::with_capacity(domain.volume().max(0) as usize);
+        for p in domain.points() {
+            for (r, v) in &snapshot {
+                regs[*r] = v.clone();
+            }
+            regs[0] = Value::Tuple(p);
+            let out = vm
+                .exec(code, &code.body, &mut regs, 0)?
+                .ok_or_else(|| format!("'{func}' finished without returning"))?;
+            match out {
+                Value::Proc(pid) => procs.push(pid),
+                other => {
+                    return Err(format!(
+                        "mapping function '{func}' must return a processor, got {}",
+                        other.kind()
+                    ))
+                }
+            }
+        }
+        Ok(PlacementTable::new(domain.lo.clone(), ispace, procs))
+    }
+
+    /// Evaluate one point (the §5.2 per-point contract; used by tests and
+    /// the oracle comparison). `ispace` need not equal any domain extent.
+    pub fn eval_point(&self, func: &str, ipoint: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let code = self.entry(func)?;
+        let mut regs = new_frame(code.nregs);
+        regs[0] = Value::Tuple(ipoint.clone());
+        regs[1] = Value::Tuple(ispace.clone());
+        let vm = Vm { module: &self.module };
+        let out = match vm.exec(code, &code.prelude, &mut regs, 0)? {
+            Some(v) => v,
+            None => vm
+                .exec(code, &code.body, &mut regs, 0)?
+                .ok_or_else(|| format!("'{func}' finished without returning"))?,
+        };
+        match out {
+            Value::Proc(p) => Ok(p),
+            other => Err(format!(
+                "mapping function '{func}' must return a processor, got {}",
+                other.kind()
+            )),
+        }
+    }
+
+    fn entry(&self, func: &str) -> Result<&FuncCode, String> {
+        let idx = self
+            .module
+            .func_index(func)
+            .ok_or_else(|| format!("function '{func}' is not compiled (interp fallback)"))?;
+        let code = self.module.funcs[idx].as_ref().unwrap();
+        if code.param_types.len() != 2 {
+            return Err(format!(
+                "'{func}' expects {} arguments, got 2",
+                code.param_types.len()
+            ));
+        }
+        Ok(code)
+    }
+}
+
+/// Degenerate case: a prelude that returns makes the mapping constant.
+fn constant_table(
+    func: &str,
+    domain: &Rect,
+    ispace: Tuple,
+    v: Value,
+) -> Result<PlacementTable, String> {
+    match v {
+        Value::Proc(p) => Ok(PlacementTable::new(
+            domain.lo.clone(),
+            ispace,
+            vec![p; domain.volume().max(0) as usize],
+        )),
+        other => Err(format!(
+            "mapping function '{func}' must return a processor, got {}",
+            other.kind()
+        )),
+    }
+}
+
+fn new_frame(nregs: u16) -> Vec<Value> {
+    vec![Value::Int(0); nregs as usize]
+}
+
+struct Vm<'m> {
+    module: &'m Module,
+}
+
+impl Vm<'_> {
+    fn call_fn(&self, idx: usize, args: Vec<Value>, depth: usize) -> Result<Value, String> {
+        let code = self.module.funcs[idx]
+            .as_ref()
+            .expect("lower() fixpoint keeps callees of lowered functions lowered");
+        if depth >= MAX_CALL_DEPTH {
+            return Err(format!("call depth limit exceeded in '{}'", code.name));
+        }
+        if code.param_types.len() != args.len() {
+            return Err(format!(
+                "'{}' expects {} arguments, got {}",
+                code.name,
+                code.param_types.len(),
+                args.len()
+            ));
+        }
+        for (tag, v) in code.param_types.iter().zip(&args) {
+            let ok = match tag {
+                Some(TypeTag::Tuple) => matches!(v, Value::Tuple(_)),
+                Some(TypeTag::Int) => matches!(v, Value::Int(_)),
+                None => true,
+            };
+            if !ok {
+                return Err(format!(
+                    "'{}' parameter type mismatch: got {}",
+                    code.name,
+                    v.kind()
+                ));
+            }
+        }
+        let mut regs = new_frame(code.nregs);
+        for (i, v) in args.into_iter().enumerate() {
+            regs[i] = v;
+        }
+        if let Some(v) = self.exec(code, &code.prelude, &mut regs, depth)? {
+            return Ok(v);
+        }
+        self.exec(code, &code.body, &mut regs, depth)?
+            .ok_or_else(|| format!("'{}' finished without returning", code.name))
+    }
+
+    /// Execute one code segment. Returns `Some(value)` on `Ret`, `None`
+    /// when the segment falls through (prelude case).
+    fn exec(
+        &self,
+        code: &FuncCode,
+        ops: &[Op],
+        regs: &mut Vec<Value>,
+        depth: usize,
+    ) -> Result<Option<Value>, String> {
+        let mut pc = 0usize;
+        while pc < ops.len() {
+            match &ops[pc] {
+                Op::IConst { dst, v } => regs[*dst as usize] = Value::Int(*v),
+                Op::BConst { dst, v } => regs[*dst as usize] = Value::Bool(*v),
+                Op::Const { dst, idx } => {
+                    regs[*dst as usize] = self.module.consts[*idx as usize].clone()
+                }
+                Op::Move { dst, src } => regs[*dst as usize] = regs[*src as usize].clone(),
+                Op::Neg { dst, src } => {
+                    let v = match &regs[*src as usize] {
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Tuple(t) => Value::Tuple(Tuple(t.0.iter().map(|&x| -x).collect())),
+                        other => return Err(format!("cannot negate {}", other.kind())),
+                    };
+                    regs[*dst as usize] = v;
+                }
+                Op::Not { dst, src } => {
+                    let b = regs[*src as usize].as_bool()?;
+                    regs[*dst as usize] = Value::Bool(!b);
+                }
+                Op::AsBool { dst, src } => {
+                    let b = regs[*src as usize].as_bool()?;
+                    regs[*dst as usize] = Value::Bool(b);
+                }
+                Op::Bin { op, dst, lhs, rhs } => {
+                    use super::ast::BinOp;
+                    let l = &regs[*lhs as usize];
+                    let r = &regs[*rhs as usize];
+                    let sym = op.to_string();
+                    let v = match op {
+                        BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod => {
+                            arith(&sym, l, r)?
+                        }
+                        BinOp::And | BinOp::Or => {
+                            return Err("internal: short-circuit op reached Bin".into())
+                        }
+                        _ => compare(&sym, l, r)?,
+                    };
+                    regs[*dst as usize] = v;
+                }
+                Op::Jump { to } => {
+                    pc = *to as usize;
+                    continue;
+                }
+                Op::BranchFalse { cond, to } => {
+                    if !regs[*cond as usize].as_bool()? {
+                        pc = *to as usize;
+                        continue;
+                    }
+                }
+                Op::TupleNew { dst, elems } => {
+                    let mut v = Vec::with_capacity(elems.len());
+                    for &e in elems {
+                        v.push(regs[e as usize].as_int()?);
+                    }
+                    regs[*dst as usize] = Value::Tuple(Tuple(v));
+                }
+                Op::Attr { dst, src, name } => {
+                    let v = match (&regs[*src as usize], name) {
+                        (Value::Space(s), AttrName::Size) => Value::Tuple(s.size().clone()),
+                        (Value::Space(s), AttrName::Dim) => Value::Int(s.dim() as i64),
+                        (Value::Tuple(t), AttrName::Dim) => Value::Int(t.dim() as i64),
+                        (other, AttrName::Size) => {
+                            return Err(format!("no attribute 'size' on {}", other.kind()))
+                        }
+                        (other, AttrName::Dim) => {
+                            return Err(format!("no attribute 'dim' on {}", other.kind()))
+                        }
+                    };
+                    regs[*dst as usize] = v;
+                }
+                Op::SliceIdx { dst, recv, lo, hi } => {
+                    let lo_v = match lo {
+                        Some(r) => regs[*r as usize].as_int()? as isize,
+                        None => 0,
+                    };
+                    let hi_v = match hi {
+                        Some(r) => regs[*r as usize].as_int()? as isize,
+                        None => isize::MAX,
+                    };
+                    let v = match &regs[*recv as usize] {
+                        Value::Space(s) => {
+                            let hi_v = if hi_v == isize::MAX { s.dim() as isize } else { hi_v };
+                            Value::Tuple(s.size().slice(lo_v, hi_v))
+                        }
+                        Value::Tuple(t) => {
+                            let hi_v = if hi_v == isize::MAX { t.dim() as isize } else { hi_v };
+                            Value::Tuple(t.slice(lo_v, hi_v))
+                        }
+                        other => return Err(format!("cannot slice {}", other.kind())),
+                    };
+                    regs[*dst as usize] = v;
+                }
+                Op::Index { dst, recv, args } => {
+                    let mut coords = Vec::with_capacity(args.len());
+                    for a in args {
+                        match a {
+                            IndexSrc::Reg(r) => coords.push(regs[*r as usize].as_int()?),
+                            IndexSrc::Splat(r) => {
+                                coords.extend(regs[*r as usize].as_tuple()?.0.iter().copied())
+                            }
+                        }
+                    }
+                    let v = match &regs[*recv as usize] {
+                        Value::Tuple(t) => {
+                            if coords.len() != 1 {
+                                return Err(format!(
+                                    "tuple index takes 1 coordinate, got {}",
+                                    coords.len()
+                                ));
+                            }
+                            let mut i = coords[0];
+                            if i < 0 {
+                                i += t.dim() as i64;
+                            }
+                            if i < 0 || i as usize >= t.dim() {
+                                return Err(format!(
+                                    "tuple index {} out of range for {t:?}",
+                                    coords[0]
+                                ));
+                            }
+                            Value::Int(t[i as usize])
+                        }
+                        Value::Space(s) => Value::Proc(s.index(&Tuple(coords))?),
+                        other => return Err(format!("cannot index {}", other.kind())),
+                    };
+                    regs[*dst as usize] = v;
+                }
+                Op::Method { dst, recv, which, args } => {
+                    let v = self.exec_method(regs, *recv, *which, args)?;
+                    regs[*dst as usize] = v;
+                }
+                Op::Builtin { dst, which, args } => {
+                    let v = self.exec_builtin(regs, *which, args)?;
+                    regs[*dst as usize] = v;
+                }
+                Op::Call { dst, func, args } => {
+                    let vals: Vec<Value> =
+                        args.iter().map(|&a| regs[a as usize].clone()).collect();
+                    let v = self.call_fn(*func as usize, vals, depth + 1)?;
+                    regs[*dst as usize] = v;
+                }
+                Op::Ret { src } => return Ok(Some(regs[*src as usize].clone())),
+                Op::FellOff => {
+                    return Err(format!("'{}' finished without returning", code.name))
+                }
+            }
+            pc += 1;
+        }
+        Ok(None)
+    }
+
+    fn exec_method(
+        &self,
+        regs: &[Value],
+        recv: u16,
+        which: SpaceMethod,
+        args: &[u16],
+    ) -> Result<Value, String> {
+        let name = match which {
+            SpaceMethod::Split => "split",
+            SpaceMethod::Merge => "merge",
+            SpaceMethod::Swap => "swap",
+            SpaceMethod::Slice => "slice",
+            SpaceMethod::Decompose => "decompose",
+        };
+        let space: &ProcSpace = match &regs[recv as usize] {
+            Value::Space(s) => s,
+            other => {
+                return Err(format!("method '{name}': expected Machine space, got {}", other.kind()))
+            }
+        };
+        let need = |n: usize| -> Result<(), String> {
+            if args.len() == n {
+                Ok(())
+            } else {
+                Err(format!(".{name}() takes {n} arguments, got {}", args.len()))
+            }
+        };
+        let int_at = |i: usize| -> Result<i64, String> { regs[args[i] as usize].as_int() };
+        let s = match which {
+            SpaceMethod::Split => {
+                need(2)?;
+                space.split(int_at(0)? as usize, int_at(1)?)?
+            }
+            SpaceMethod::Merge => {
+                need(2)?;
+                space.merge(int_at(0)? as usize, int_at(1)? as usize)?
+            }
+            SpaceMethod::Swap => {
+                need(2)?;
+                space.swap(int_at(0)? as usize, int_at(1)? as usize)?
+            }
+            SpaceMethod::Slice => {
+                need(3)?;
+                space.slice(int_at(0)? as usize, int_at(1)?, int_at(2)?)?
+            }
+            SpaceMethod::Decompose => {
+                need(2)?;
+                let dim = int_at(0)? as usize;
+                let targets = regs[args[1] as usize].as_tuple()?;
+                space.decompose(dim, targets)?
+            }
+        };
+        Ok(Value::Space(s))
+    }
+
+    fn exec_builtin(
+        &self,
+        regs: &[Value],
+        which: Builtin,
+        args: &[u16],
+    ) -> Result<Value, String> {
+        let val = |i: usize| &regs[args[i] as usize];
+        match which {
+            Builtin::Machine => {
+                if args.len() != 1 {
+                    return Err("Machine(KIND) takes one argument".into());
+                }
+                let kind_name = match val(0) {
+                    Value::Str(s) => s.clone(),
+                    other => {
+                        return Err(format!("Machine() expects a kind, got {}", other.kind()))
+                    }
+                };
+                let kind = ProcKind::parse(&kind_name)?;
+                Ok(Value::Space(ProcSpace::machine(&self.module.desc, kind)))
+            }
+            Builtin::TupleOf => {
+                let mut v = Vec::with_capacity(args.len());
+                for i in 0..args.len() {
+                    match val(i) {
+                        Value::Int(x) => v.push(*x),
+                        Value::Tuple(t) => v.extend(t.0.iter().copied()),
+                        other => {
+                            return Err(format!(
+                                "tuple() element must be int, got {}",
+                                other.kind()
+                            ))
+                        }
+                    }
+                }
+                Ok(Value::Tuple(Tuple(v)))
+            }
+            Builtin::Len => {
+                if args.len() != 1 {
+                    return Err("len(x) takes one argument".into());
+                }
+                match val(0) {
+                    Value::Tuple(t) => Ok(Value::Int(t.dim() as i64)),
+                    other => Err(format!("len() expects Tuple, got {}", other.kind())),
+                }
+            }
+            Builtin::Abs => {
+                if args.len() != 1 {
+                    return Err("abs(x) takes one argument".into());
+                }
+                Ok(Value::Int(val(0).as_int()?.abs()))
+            }
+            Builtin::Min | Builtin::Max => {
+                let fname = if which == Builtin::Min { "min" } else { "max" };
+                if args.is_empty() {
+                    return Err(format!("{fname}() needs arguments"));
+                }
+                let mut acc: Option<i64> = None;
+                let mut fold = |x: i64| {
+                    acc = Some(match acc {
+                        None => x,
+                        Some(a) => {
+                            if which == Builtin::Min {
+                                a.min(x)
+                            } else {
+                                a.max(x)
+                            }
+                        }
+                    })
+                };
+                for i in 0..args.len() {
+                    match val(i) {
+                        Value::Int(x) => fold(*x),
+                        Value::Tuple(t) => t.0.iter().for_each(|&x| fold(x)),
+                        other => {
+                            return Err(format!(
+                                "{fname}() expects ints/Tuples, got {}",
+                                other.kind()
+                            ))
+                        }
+                    }
+                }
+                Ok(Value::Int(acc.unwrap()))
+            }
+            Builtin::Prod => {
+                if args.len() != 1 {
+                    return Err("prod(t) takes one argument".into());
+                }
+                Ok(Value::Int(val(0).as_tuple()?.product()))
+            }
+            Builtin::Linearize => {
+                if args.len() != 2 {
+                    return Err("linearize(point, extent) takes two arguments".into());
+                }
+                let p = val(0).as_tuple()?;
+                let e = val(1).as_tuple()?;
+                if p.dim() != e.dim() {
+                    return Err("linearize: arity mismatch".into());
+                }
+                Ok(Value::Int(p.linearize(e)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::topology::MachineDesc;
+    use crate::mapple::interp::Interp;
+    use crate::mapple::lower::lower;
+    use crate::mapple::parser::parse;
+
+    fn plan_and_oracle(src: &str, nodes: usize, gpus: usize) -> (MappingPlan, Interp) {
+        let prog = parse(src).unwrap();
+        let mut desc = MachineDesc::paper_testbed(nodes);
+        desc.gpus_per_node = gpus;
+        let interp = Interp::new(&prog, &desc).unwrap();
+        let module = lower(&prog, &interp);
+        (MappingPlan::new(module), interp)
+    }
+
+    const BLOCK2D: &str = "\
+m = Machine(GPU)
+def block2D(Tuple ipoint, Tuple ispace):
+    idx = ipoint * m.size / ispace
+    return m[*idx]
+";
+
+    #[test]
+    fn fig3_block2d_matches_interp() {
+        let (plan, oracle) = plan_and_oracle(BLOCK2D, 2, 2);
+        let ispace = Tuple::from([6, 6]);
+        let dom = Rect::from_extent(&ispace);
+        let table = plan.eval_domain("block2D", &dom).unwrap();
+        assert_eq!(table.len(), 36);
+        for p in dom.points() {
+            let want = oracle.map_point("block2D", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(want), "{p:?}");
+        }
+        // Fig 3 spot check: (2,3) → node 0 gpu 1
+        let p = table.get(&Tuple::from([2, 3])).unwrap();
+        assert_eq!((p.node, p.local), (0, 1));
+    }
+
+    #[test]
+    fn hierarchical_block_prelude_hoists_decompose() {
+        let src = "\
+m_2d = Machine(GPU)
+def hb(Tuple ipoint, Tuple ispace):
+    m_3d = m_2d.decompose(0, ispace)
+    sub = (ispace + m_3d[:-1] - 1) / m_3d[:-1]
+    m_4d = m_3d.decompose(2, sub)
+    upper = tuple(ipoint[i] * m_4d.size[i] / ispace[i] for i in (0, 1))
+    lower = tuple(ipoint[i] % m_4d.size[i + 2] for i in (0, 1))
+    return m_4d[*upper, *lower]
+";
+        let (plan, oracle) = plan_and_oracle(src, 4, 4);
+        let ispace = Tuple::from([8, 8]);
+        let dom = Rect::from_extent(&ispace);
+        let table = plan.eval_domain("hb", &dom).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for p in dom.points() {
+            let want = oracle.map_point("hb", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(want), "{p:?}");
+            seen.insert(table.get(&p).unwrap());
+        }
+        assert_eq!(seen.len(), 16, "all 16 GPUs used");
+    }
+
+    #[test]
+    fn ternary_and_branches_match_interp() {
+        let src = "\
+m = Machine(GPU)
+m1 = m.merge(0, 1)
+def f(Tuple p, Tuple s):
+    g = s[0] > s[2] ? s[0] : s[2]
+    lin = p[0] + p[1] * g + p[2] * g * g
+    if lin % 2 == 0 and lin > 0:
+        return m1[lin % m1.size[0]]
+    else:
+        return m1[0]
+";
+        let (plan, oracle) = plan_and_oracle(src, 2, 4);
+        let ispace = Tuple::from([2, 3, 4]);
+        let dom = Rect::from_extent(&ispace);
+        let table = plan.eval_domain("f", &dom).unwrap();
+        for p in dom.points() {
+            let want = oracle.map_point("f", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(want), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn builtins_match_interp() {
+        let src = "\
+m = Machine(GPU)
+def helper(Tuple p):
+    return min(p) + max(p) + len(p) + abs(0 - 2) + prod(p) + linearize(p, (9, 9))
+def f(Tuple p, Tuple s):
+    v = helper(p)
+    return m[v % m.size[0], v % m.size[1]]
+";
+        let (plan, oracle) = plan_and_oracle(src, 2, 2);
+        let ispace = Tuple::from([5, 5]);
+        let dom = Rect::from_extent(&ispace);
+        let table = plan.eval_domain("f", &dom).unwrap();
+        for p in dom.points() {
+            let want = oracle.map_point("f", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(want), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn errors_match_interp_shape() {
+        let src = "\
+m = Machine(GPU)
+def bad(Tuple p, Tuple s):
+    return 42
+def div0(Tuple p, Tuple s):
+    return m[p[0] / 0, 0]
+def loop(Tuple p, Tuple s):
+    return loop(p, s)
+";
+        let (plan, oracle) = plan_and_oracle(src, 2, 2);
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let e = plan.eval_domain("bad", &dom).unwrap_err();
+        assert!(e.contains("must return a processor"), "{e}");
+        let e = plan.eval_domain("div0", &dom).unwrap_err();
+        assert!(e.contains("division by zero"), "{e}");
+        let e = plan.eval_domain("loop", &dom).unwrap_err();
+        assert!(e.contains("depth limit"), "{e}");
+        // interpreter agrees these are errors
+        let ispace = Tuple::from([2, 2]);
+        assert!(oracle.map_point("bad", &Tuple::from([0, 0]), &ispace).is_err());
+        assert!(oracle.map_point("div0", &Tuple::from([0, 0]), &ispace).is_err());
+    }
+
+    #[test]
+    fn placement_table_indexing() {
+        let procs: Vec<ProcId> = (0..6)
+            .map(|i| ProcId { node: i as usize, kind: ProcKind::Gpu, local: 0 })
+            .collect();
+        let t = PlacementTable::from_extent(Tuple::from([2, 3]), procs);
+        assert_eq!(t.get(&Tuple::from([0, 0])).unwrap().node, 0);
+        assert_eq!(t.get(&Tuple::from([0, 2])).unwrap().node, 2);
+        assert_eq!(t.get(&Tuple::from([1, 0])).unwrap().node, 3);
+        assert_eq!(t.get(&Tuple::from([1, 2])).unwrap().node, 5);
+        assert_eq!(t.get(&Tuple::from([2, 0])), None, "out of domain");
+        assert_eq!(t.get(&Tuple::from([0])), None, "arity mismatch");
+        assert_eq!(t.node(&Tuple::from([1, 1])), Some(4));
+        // offset domain
+        let procs2 = vec![ProcId { node: 7, kind: ProcKind::Gpu, local: 1 }; 4];
+        let t2 = PlacementTable::new(Tuple::from([2, 2]), Tuple::from([2, 2]), procs2);
+        assert_eq!(t2.get(&Tuple::from([0, 0])), None);
+        assert_eq!(t2.get(&Tuple::from([3, 3])).unwrap().node, 7);
+    }
+
+    #[test]
+    fn restore_isolates_points() {
+        // body overwrites a prelude-computed variable; each point must see
+        // the fresh prelude value, not the previous point's leftover.
+        let src = "\
+m = Machine(GPU)
+def f(Tuple p, Tuple s):
+    x = s[0]
+    x = x + p[0]
+    return m[x % m.size[0], 0]
+";
+        let (plan, oracle) = plan_and_oracle(src, 2, 2);
+        let ispace = Tuple::from([4, 1]);
+        let dom = Rect::from_extent(&ispace);
+        let table = plan.eval_domain("f", &dom).unwrap();
+        for p in dom.points() {
+            let want = oracle.map_point("f", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(want), "{p:?}");
+        }
+    }
+}

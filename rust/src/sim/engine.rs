@@ -109,6 +109,15 @@ pub fn simulate(
     let mut oom: Option<OomError> = None;
 
     'outer: for launch in launches {
+        // Batch-wise policy lookup: one query per (launch, arg) instead of
+        // one per (point, arg). Mapper policy tables are launch-invariant,
+        // and the Mapple policy path allocates per query — hoisting keeps
+        // the per-point loop allocation-free on the policy side.
+        let mem_kinds: Vec<MemKind> =
+            (0..launch.reqs.len()).map(|ri| policies.mem_kind(&launch.name, ri)).collect();
+        let gc_args: Vec<bool> =
+            (0..launch.reqs.len()).map(|ri| policies.should_gc(&launch.name, ri)).collect();
+        let bp_limit = policies.backpressure(&launch.name);
         for pt in launch.points() {
             let proc = *placements
                 .get(&pt)
@@ -122,7 +131,7 @@ pub fn simulate(
 
             // backpressure: the (i - limit)-th previous launch of this task
             // must have finished before this one starts.
-            if let Some(limit) = policies.backpressure(&launch.name) {
+            if let Some(limit) = bp_limit {
                 if limit > 0 {
                     if let Some(window) = recent.get(&launch.name) {
                         if window.len() >= limit {
@@ -137,8 +146,7 @@ pub fn simulate(
                 let rect = env.access_rect(launch, ri, &pt);
                 let region = env.region(req.region);
                 let bytes = rect.volume() as u64 * region.elem_bytes;
-                let mem_kind = policies.mem_kind(&launch.name, ri);
-                let dst_mem = MemId::for_proc(proc, mem_kind);
+                let dst_mem = MemId::for_proc(proc, mem_kinds[ri]);
                 let key = (req.region, rect.clone());
 
                 // does a valid copy already exist at the destination?
@@ -268,8 +276,7 @@ pub fn simulate(
             for (ri, req) in launch.reqs.iter().enumerate() {
                 let rect = env.access_rect(launch, ri, &pt);
                 let key = (req.region, rect.clone());
-                let mem_kind = policies.mem_kind(&launch.name, ri);
-                let dst_mem = MemId::for_proc(proc, mem_kind);
+                let dst_mem = MemId::for_proc(proc, mem_kinds[ri]);
                 if req.privilege.writes() {
                     if let Some(cs) = state.get_mut(&key) {
                         // free every other copy
@@ -282,7 +289,7 @@ pub fn simulate(
                         }
                     }
                 }
-                if policies.should_gc(&launch.name, ri) {
+                if gc_args[ri] {
                     if let Some(cs) = state.get_mut(&key) {
                         for c in cs.copies.iter().filter(|c| c.mem == dst_mem) {
                             pool.free(c.mem, c.bytes);

@@ -14,16 +14,73 @@
 
 use super::deps::Dependences;
 use super::task::{IndexLaunch, LaunchId, PointTask};
-use crate::machine::point::Tuple;
+use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::ProcId;
+use crate::mapple::vm::PlacementTable;
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 
-/// SHARD + MAP: the two user-supplied mapping functions of §5.1.
+/// SHARD + MAP: the two user-supplied mapping functions of §5.1, plus
+/// the batched [`IndexMapping::plan`] form the runtime actually consumes
+/// (one placement table per launch instead of two callbacks per point).
 pub trait IndexMapping {
     /// SHARD: select the node a point task is distributed to.
     fn shard(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<usize, String>;
     /// MAP: select the concrete processor within that node.
     fn map(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String>;
+
+    /// Batched SHARD∘MAP for an entire launch domain. The pipeline calls
+    /// this once per launch. Default: per-point `shard` (bounds-checked
+    /// against `nodes` before any `map` call, preserving the §5.1 rule
+    /// order) then per-point `map`.
+    fn plan(&self, task: &str, domain: &Rect, nodes: usize) -> Result<LaunchPlan, String> {
+        if domain.volume() <= 0 {
+            return Err("empty launch domain".into());
+        }
+        let ispace = domain.extent();
+        let mut shards = Vec::with_capacity(domain.volume() as usize);
+        for p in domain.points() {
+            let node = self.shard(task, &p, &ispace)?;
+            if node >= nodes {
+                return Err(format!(
+                    "SHARD({task}) returned node {node} ≥ {nodes} for point {p:?}"
+                ));
+            }
+            shards.push(node);
+        }
+        let mut procs = Vec::with_capacity(shards.len());
+        for p in domain.points() {
+            procs.push(self.map(task, &p, &ispace)?);
+        }
+        Ok(LaunchPlan {
+            shards,
+            table: Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)),
+        })
+    }
+}
+
+/// The per-launch mapping artifact the pipeline consumes: SHARD values in
+/// row-major domain order plus the MAP placement table.
+#[derive(Clone, Debug)]
+pub struct LaunchPlan {
+    /// Node per point, in `Rect::points()` order.
+    pub shards: Vec<usize>,
+    /// Processor per point (same order, via the table).
+    pub table: Rc<PlacementTable>,
+}
+
+impl LaunchPlan {
+    /// Derive the SHARD vector from a MAP table (§5.1: MAP refines SHARD,
+    /// so a placement's node component *is* its shard).
+    pub fn from_table(table: Rc<PlacementTable>) -> LaunchPlan {
+        let shards = table.procs().iter().map(|p| p.node).collect();
+        LaunchPlan { shards, table }
+    }
+
+    /// Processor for a point of this launch.
+    pub fn proc_of(&self, point: &Tuple) -> Option<ProcId> {
+        self.table.get(point)
+    }
 }
 
 /// Execution log entry (Fig 10's `e`).
@@ -80,11 +137,6 @@ pub fn run(
     let mut enqueued_q: Vec<VecDeque<PointTask>> = vec![VecDeque::new(); nodes];
     let mut mapped_q: Vec<VecDeque<PointTask>> = vec![VecDeque::new(); nodes];
 
-    let ispace: HashMap<LaunchId, Tuple> =
-        launches.iter().map(|l| (l.id, l.domain.extent())).collect();
-    let name: HashMap<LaunchId, &str> =
-        launches.iter().map(|l| (l.id, l.name.as_str())).collect();
-
     // Sibling-predecessor relation (program order ∧ dependence): the [Map]
     // rule requires sibling predecessors a task depends on to be mapped.
     // [Enqueue]: the parent enqueues launches in program order; within an
@@ -98,13 +150,18 @@ pub fn run(
         }
     }
 
+    // One batched SHARD∘MAP plan per launch — the mapper sees each launch
+    // domain exactly once instead of two callbacks per point.
+    let mut plans: HashMap<LaunchId, LaunchPlan> = HashMap::new();
+
     // [Enqueue] + [Distribute] + [Local]: enqueue each launch in program
-    // order, SHARD each point to its node queue.
+    // order, SHARD each point to its node queue from the launch plan.
     for launch in launches {
-        for pt in launch.points() {
-            let node = mapping
-                .shard(&launch.name, &pt.point, &ispace[&launch.id])
-                .map_err(PipelineError)?;
+        let plan = mapping
+            .plan(&launch.name, &launch.domain, nodes)
+            .map_err(PipelineError)?;
+        for (idx, pt) in launch.points().enumerate() {
+            let node = plan.shards[idx];
             if node >= nodes {
                 return Err(PipelineError(format!(
                     "SHARD({}) returned node {node} ≥ {nodes} for point {:?}",
@@ -113,17 +170,15 @@ pub fn run(
             }
             log.push(LogEntry::Enqueued(pt.clone()));
             stage.insert(pt.clone(), Stage::Enqueued);
-            enqueued_q[node].push_back(pt.clone());
+            enqueued_q[node].push_back(pt);
         }
         // [Local]: sharded tasks move to the node's mapped-stage queue.
-        for q in enqueued_q.iter_mut() {
+        for (node, q) in enqueued_q.iter_mut().enumerate() {
             while let Some(pt) = q.pop_front() {
-                let node = mapping
-                    .shard(name[&pt.launch], &pt.point, &ispace[&pt.launch])
-                    .map_err(PipelineError)?;
                 mapped_q[node].push_back(pt);
             }
         }
+        plans.insert(launch.id, plan);
     }
 
     // [Map] / [Launch] / [Execute]: fire transitions until quiescent.
@@ -163,9 +218,12 @@ pub fn run(
                     .iter()
                     .all(|p| mapped_or_later(&stage, p));
                 if ready {
-                    let proc = mapping
-                        .map(name[&pt.launch], &pt.point, &ispace[&pt.launch])
-                        .map_err(PipelineError)?;
+                    let proc = plans[&pt.launch].proc_of(&pt.point).ok_or_else(|| {
+                        PipelineError(format!(
+                            "plan for launch {:?} lacks point {:?}",
+                            pt.launch, pt.point
+                        ))
+                    })?;
                     log.push(LogEntry::Mapped(pt.clone(), proc));
                     placements.insert(pt.clone(), proc);
                     stage.insert(pt.clone(), Stage::Mapped);

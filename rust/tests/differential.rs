@@ -1,0 +1,273 @@
+//! Differential tests: the batched MappingPlan VM against the
+//! tree-walking interpreter oracle.
+//!
+//! The lowering pass + VM (mapple::lower / mapple::vm) replace the
+//! per-point tree walk on the hot path; the tree walker stays as the
+//! reference semantics. These tests prove, for every shipped mapper
+//! (all nine apps, baseline and tuned), every launch of a real app
+//! instance, and several machine shapes, that
+//!
+//!   VM placement(point) == interpreter placement(point)
+//!
+//! point-for-point — plus randomized language-coverage programs driven by
+//! the in-house property harness.
+
+use mapple::apps::{self, mappers};
+use mapple::machine::point::{Rect, Tuple};
+use mapple::machine::topology::MachineDesc;
+use mapple::mapple::MapperSpec;
+use mapple::util::prng::Rng;
+use mapple::util::proptest::check;
+
+const APPS: &[&str] = &[
+    "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
+];
+
+fn machine_shapes() -> Vec<MachineDesc> {
+    let mut out = Vec::new();
+    for nodes in [1usize, 2, 4] {
+        for gpus in [2usize, 4] {
+            let mut d = MachineDesc::paper_testbed(nodes);
+            d.gpus_per_node = gpus;
+            out.push(d);
+        }
+    }
+    out
+}
+
+fn build_app(name: &str, procs: usize) -> apps::AppInstance {
+    match name {
+        "cannon" => apps::cannon(64, procs),
+        "summa" => apps::summa(64, procs),
+        "pumma" => apps::pumma(64, procs),
+        "johnson" => apps::johnson(64, procs),
+        "solomonik" => apps::solomonik(64, procs),
+        "cosma" => apps::cosma(64, procs),
+        "stencil" => {
+            let g = mapple::decompose::decompose(procs as u64, &[256, 256]);
+            apps::stencil(&apps::StencilParams {
+                x: 256,
+                y: 256,
+                gx: g.factors[0] as i64,
+                gy: g.factors[1] as i64,
+                halo: 1,
+                steps: 2,
+            })
+        }
+        "circuit" => apps::circuit(&apps::CircuitParams {
+            pieces: procs as i64,
+            nodes_per_piece: 64,
+            wires_per_piece: 128,
+            pct_shared: 10,
+            loops: 2,
+        }),
+        "pennant" => apps::pennant(&apps::PennantParams {
+            chunks: procs as i64,
+            zones_per_chunk: 128,
+            cycles: 2,
+        }),
+        other => panic!("unknown app {other}"),
+    }
+}
+
+/// The headline differential property: for all nine apps' mappers
+/// (baseline and tuned), across machine shapes, the compiled MappingPlan
+/// produces exactly the tree-walker's placements on every launch.
+#[test]
+fn vm_placements_equal_interp_for_all_nine_apps() {
+    for desc in machine_shapes() {
+        let procs = desc.nodes * desc.gpus_per_node;
+        for app_name in APPS {
+            let sources = [
+                ("base", mappers::mapple_source(app_name).unwrap()),
+                ("tuned", mappers::tuned_source(app_name).unwrap()),
+            ];
+            for (flavor, src) in sources {
+                let spec = MapperSpec::compile(src, &desc)
+                    .unwrap_or_else(|e| panic!("{app_name} {flavor}: {e}"));
+                let app = build_app(app_name, procs);
+                for launch in &app.launches {
+                    // the test must not be vacuous: the mapping function
+                    // has to actually run on the VM, not the fallback
+                    let func = spec
+                        .mapping_fn(&launch.name)
+                        .unwrap_or_else(|| panic!("{app_name}: no mapping for {}", launch.name));
+                    assert!(
+                        spec.plan.supports(func),
+                        "{app_name} {flavor}: '{func}' fell back to the tree walker"
+                    );
+                    let table = spec.plan_domain(&launch.name, &launch.domain).unwrap_or_else(
+                        |e| {
+                            panic!(
+                                "{app_name} {flavor} {} ({}n×{}g): {e}",
+                                launch.name, desc.nodes, desc.gpus_per_node
+                            )
+                        },
+                    );
+                    let ispace = launch.domain.extent();
+                    for p in launch.domain.points() {
+                        let oracle = spec
+                            .map_point(&launch.name, &p, &ispace)
+                            .unwrap_or_else(|e| panic!("{app_name} oracle {}: {e}", launch.name));
+                        assert_eq!(
+                            table.get(&p),
+                            Some(oracle),
+                            "{app_name} {flavor} {} point {p:?} ({}n×{}g)",
+                            launch.name,
+                            desc.nodes,
+                            desc.gpus_per_node
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Language-coverage corpus: mappers exercising constructs the nine app
+/// mappers don't all hit (if/elif/else chains, and/or, builtins, negative
+/// indexing, nested helper calls, hoisted-then-overwritten locals).
+const COVERAGE_MAPPERS: &[&str] = &[
+    // ternary + cyclic over a merged space
+    "m = Machine(GPU)\n\
+     m1 = m.merge(0, 1)\n\
+     def f(Tuple p, Tuple s):\n    \
+         g = s[0] > s[1] ? s[0] : s[1]\n    \
+         return m1[(p[0] * g + p[1]) % m1.size[0]]\n",
+    // if/elif/else with and/or
+    "m = Machine(GPU)\n\
+     def f(Tuple p, Tuple s):\n    \
+         if p[0] == 0 and p[1] == 0:\n        \
+             return m[0, 0]\n    \
+         elif p[0] == 0 or p[1] == 0:\n        \
+             return m[p[0] % m.size[0], 0]\n    \
+         else:\n        \
+             return m[p[0] % m.size[0], p[1] % m.size[1]]\n",
+    // builtins + helper composition
+    "m = Machine(GPU)\n\
+     def helper(Tuple p, Tuple s):\n    \
+         return min(p) + max(s) + len(p) + abs(p[0] - s[1]) + prod(p + 1)\n\
+     def f(Tuple p, Tuple s):\n    \
+         v = helper(p, s)\n    \
+         return m[v % m.size[0], v % m.size[1]]\n",
+    // negative tuple index + slice + linearize
+    "m = Machine(GPU)\n\
+     def f(Tuple p, Tuple s):\n    \
+         lin = linearize(p, s)\n    \
+         tail = s[1:]\n    \
+         return m[(lin + tail[0] + p[-1]) % m.size[0], 0]\n",
+    // hoisted local overwritten per point (restore-set stress)
+    "m = Machine(GPU)\n\
+     def f(Tuple p, Tuple s):\n    \
+         x = s[0] + s[1]\n    \
+         x = x * 3 + p[0] * 2 + p[1]\n    \
+         return m[x % m.size[0], x % m.size[1]]\n",
+    // generator + splat indexing over a transformed space
+    "m = Machine(GPU)\n\
+     def f(Tuple p, Tuple s):\n    \
+         m2 = m.swap(0, 1)\n    \
+         idx = tuple(p[i] % m2.size[i] for i in (0, 1))\n    \
+         return m2[*idx]\n",
+];
+
+#[test]
+fn vm_matches_interp_on_language_coverage_corpus() {
+    check(
+        "vm ≡ interp on coverage corpus",
+        96,
+        |r: &mut Rng| {
+            let which = r.range(0, COVERAGE_MAPPERS.len() as i64 - 1) as usize;
+            let nodes = *r.choose(&[1usize, 2, 4]);
+            let gpus = *r.choose(&[2usize, 4]);
+            let sx = r.range(2, 9);
+            let sy = r.range(2, 9);
+            (which, nodes, gpus, sx, sy)
+        },
+        |&(which, nodes, gpus, sx, sy)| {
+            let mut desc = MachineDesc::paper_testbed(nodes);
+            desc.gpus_per_node = gpus;
+            let src = COVERAGE_MAPPERS[which];
+            let spec = MapperSpec::compile(src, &desc).map_err(|e| e.to_string())?;
+            if !spec.plan.supports("f") {
+                return Err(format!("corpus mapper {which} did not lower"));
+            }
+            let ispace = Tuple::from([sx, sy]);
+            let dom = Rect::from_extent(&ispace);
+            let table = spec.plan.eval_domain("f", &dom).map_err(|e| e.to_string())?;
+            for p in dom.points() {
+                let oracle = spec
+                    .interp
+                    .map_point("f", &p, &ispace)
+                    .map_err(|e| format!("oracle: {e}"))?;
+                if table.get(&p) != Some(oracle) {
+                    return Err(format!(
+                        "mapper {which} ({nodes}n×{gpus}g, ispace {ispace:?}): VM {:?} != interp {oracle:?} at {p:?}",
+                        table.get(&p)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Error-path agreement: when the oracle rejects a program at runtime,
+/// the VM must reject it too (messages may differ; outcomes must agree).
+#[test]
+fn vm_and_interp_agree_on_failures() {
+    let desc = MachineDesc::paper_testbed(2);
+    let cases = [
+        // non-processor return
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return 7\n",
+        // division by zero
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return m[p[0] / 0, 0]\n",
+        // out-of-bounds space index
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return m[99, 99]\n",
+        // unbounded recursion
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return f(p, s)\n",
+    ];
+    let ispace = Tuple::from([2, 2]);
+    let dom = Rect::from_extent(&ispace);
+    for src in cases {
+        let spec = MapperSpec::compile(src, &desc).unwrap();
+        assert!(spec.plan.supports("f"), "{src}");
+        let vm = spec.plan.eval_domain("f", &dom);
+        let oracle = spec.interp.map_point("f", &Tuple::from([0, 0]), &ispace);
+        assert!(vm.is_err(), "VM accepted: {src}");
+        assert!(oracle.is_err(), "interp accepted: {src}");
+    }
+}
+
+/// The MappleMapper's batched tables must match per-point oracle calls
+/// through the public Mapper interface as well (cache + plan layers).
+#[test]
+fn mapper_tables_equal_oracle_through_public_interface() {
+    use mapple::mapper::api::{Mapper, TaskCtx};
+    use mapple::mapper::MappleMapper;
+    let desc = MachineDesc::paper_testbed(2);
+    for app_name in APPS {
+        let spec = MapperSpec::compile(mappers::mapple_source(app_name).unwrap(), &desc).unwrap();
+        let mapper = MappleMapper::new(spec);
+        let app = build_app(app_name, desc.nodes * desc.gpus_per_node);
+        for launch in &app.launches {
+            let ispace = launch.domain.extent();
+            let ctx = TaskCtx {
+                task_name: &launch.name,
+                launch_domain: &launch.domain,
+                num_nodes: desc.nodes,
+                procs_per_node: desc.gpus_per_node,
+            };
+            let table = mapper.build_plan(&ctx, &launch.domain).unwrap();
+            for p in launch.domain.points() {
+                let oracle = mapper.spec.map_point(&launch.name, &p, &ispace).unwrap();
+                assert_eq!(table.get(&p), Some(oracle), "{app_name}/{} {p:?}", launch.name);
+                assert_eq!(
+                    mapper.map_task(&ctx, &p, &ispace).unwrap(),
+                    oracle,
+                    "{app_name}/{} {p:?}",
+                    launch.name
+                );
+            }
+        }
+    }
+}
