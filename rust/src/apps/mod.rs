@@ -2,6 +2,7 @@
 //! algorithms plus Stencil, Circuit, and Pennant, with a shared
 //! build-map-simulate harness.
 
+pub mod builder_mappers;
 pub mod common;
 pub mod mappers;
 pub mod matmul;

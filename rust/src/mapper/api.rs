@@ -193,39 +193,40 @@ pub struct MapperAsMapping<'a> {
     pub procs_per_node: usize,
 }
 
-impl IndexMapping for MapperAsMapping<'_> {
-    fn shard(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        let rect = Rect::from_extent(ispace);
-        let ctx = TaskCtx {
-            task_name: task,
-            launch_domain: &rect,
-            num_nodes: self.num_nodes,
-            procs_per_node: self.procs_per_node,
-        };
-        self.mapper.shard(&ctx, point, ispace)
-    }
-
-    fn map(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let rect = Rect::from_extent(ispace);
-        let ctx = TaskCtx {
-            task_name: task,
-            launch_domain: &rect,
-            num_nodes: self.num_nodes,
-            procs_per_node: self.procs_per_node,
-        };
-        self.mapper.map_task(&ctx, point, ispace)
-    }
-
-    /// Batched path: one `build_plan` call per launch; SHARD values are
-    /// the node components of the MAP table (§5.1: MAP refines SHARD).
-    fn plan(&self, task: &str, domain: &Rect, nodes: usize) -> Result<LaunchPlan, String> {
+impl MapperAsMapping<'_> {
+    /// Run a callback with a `TaskCtx` for the given launch domain.
+    fn with_ctx<R>(&self, task: &str, domain: &Rect, f: impl FnOnce(&TaskCtx) -> R) -> R {
         let ctx = TaskCtx {
             task_name: task,
             launch_domain: domain,
             num_nodes: self.num_nodes,
             procs_per_node: self.procs_per_node,
         };
-        let table = self.mapper.build_plan(&ctx, domain)?;
+        f(&ctx)
+    }
+
+    /// Policy callbacks have no live launch; fabricate a 1-point domain.
+    fn with_policy_ctx<R>(&self, task: &str, f: impl FnOnce(&TaskCtx) -> R) -> R {
+        let rect = Rect::from_extent(&Tuple::from([1]));
+        self.with_ctx(task, &rect, f)
+    }
+}
+
+impl IndexMapping for MapperAsMapping<'_> {
+    fn shard(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+        let rect = Rect::from_extent(ispace);
+        self.with_ctx(task, &rect, |ctx| self.mapper.shard(ctx, point, ispace))
+    }
+
+    fn map(&self, task: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        let rect = Rect::from_extent(ispace);
+        self.with_ctx(task, &rect, |ctx| self.mapper.map_task(ctx, point, ispace))
+    }
+
+    /// Batched path: one `build_plan` call per launch; SHARD values are
+    /// the node components of the MAP table (§5.1: MAP refines SHARD).
+    fn plan(&self, task: &str, domain: &Rect, nodes: usize) -> Result<LaunchPlan, String> {
+        let table = self.with_ctx(task, domain, |ctx| self.mapper.build_plan(ctx, domain))?;
         let _ = nodes; // the pipeline bounds-checks shard values itself
         Ok(LaunchPlan::from_table(table))
     }
@@ -234,36 +235,15 @@ impl IndexMapping for MapperAsMapping<'_> {
 /// Adapter: any [`Mapper`] supplies simulator policies.
 impl MappingPolicies for MapperAsMapping<'_> {
     fn mem_kind(&self, task: &str, arg: usize) -> MemKind {
-        let rect = Rect::from_extent(&Tuple::from([1]));
-        let ctx = TaskCtx {
-            task_name: task,
-            launch_domain: &rect,
-            num_nodes: self.num_nodes,
-            procs_per_node: self.procs_per_node,
-        };
-        self.mapper.select_target_memory(&ctx, arg)
+        self.with_policy_ctx(task, |ctx| self.mapper.select_target_memory(ctx, arg))
     }
 
     fn should_gc(&self, task: &str, arg: usize) -> bool {
-        let rect = Rect::from_extent(&Tuple::from([1]));
-        let ctx = TaskCtx {
-            task_name: task,
-            launch_domain: &rect,
-            num_nodes: self.num_nodes,
-            procs_per_node: self.procs_per_node,
-        };
-        self.mapper.garbage_collect(&ctx, arg)
+        self.with_policy_ctx(task, |ctx| self.mapper.garbage_collect(ctx, arg))
     }
 
     fn backpressure(&self, task: &str) -> Option<usize> {
-        let rect = Rect::from_extent(&Tuple::from([1]));
-        let ctx = TaskCtx {
-            task_name: task,
-            launch_domain: &rect,
-            num_nodes: self.num_nodes,
-            procs_per_node: self.procs_per_node,
-        };
-        self.mapper.select_backpressure(&ctx)
+        self.with_policy_ctx(task, |ctx| self.mapper.select_backpressure(ctx))
     }
 }
 

@@ -1,131 +1,40 @@
-//! Hand-written low-level mappers for the three 2D matrix-multiplication
-//! algorithms (Cannon's, SUMMA, PUMMA). These are the Rust analogues of
-//! the expert C++ mappers the paper compares against in Table 1: each is
-//! written directly against the 19-callback interface with its own
-//! linearizer, block-selection, and slicing boilerplate (the paper's
-//! expert mappers were likewise per-application copies), and each makes
-//! *identical* mapping decisions to the corresponding Mapple mapper —
-//! the fidelity property §6.1 checks.
+//! Expert mappers for the three 2D matrix-multiplication algorithms
+//! (Cannon's, SUMMA, PUMMA) — the Rust analogues of the expert C++
+//! mappers the paper compares against in Table 1.
+//!
+//! All three share the Fig 12 `hierarchical_block2D` distribution, and
+//! each now *constructs* it through the typed `mapple::build` API
+//! (via `builder_mappers::built_spec`), so SHARD/MAP and the batched
+//! `build_plan` run on the same decompose solver, transform chains, and
+//! `MappingPlan` bytecode as the Mapple text mappers. What stays
+//! hand-written is the expert policy surface: GEMM-friendly layout
+//! constraints and (for Cannon) the systolic-step priority boost.
 
-use crate::machine::point::{Rect, Tuple};
-use crate::machine::topology::{MemKind, ProcId, ProcKind};
-use crate::mapper::api::{Mapper, SliceTaskInput, SliceTaskOutput, TaskCtx, TaskOptions, TaskSlice};
+use crate::mapper::api::{Mapper, TaskCtx};
+use crate::mapper::expert::{delegate_placement, gemm_layout, placement_core};
+use crate::mapper::translate::MappleMapper;
 use crate::mapple::program::LayoutProps;
-use crate::mapple::vm::PlacementTable;
-use std::rc::Rc;
-
-/// Exhaustively select a 2D processor grid (d1, d2) with d1*d2 = count
-/// minimizing the communication objective d1/l1 + d2/l2, breaking ties
-/// toward the lexicographically larger tuple. This is the long-form
-/// equivalent of Mapple's one-line `decompose` call — the kind of helper
-/// every low-level mapper reimplements.
-fn select_num_blocks_2d(count: i64, ispace: &Tuple) -> (i64, i64) {
-    let mut best: Option<((i64, i64), f64)> = None;
-    let l1 = ispace[0] as f64;
-    let l2 = ispace[1] as f64;
-    let mut d1 = 1i64;
-    while d1 <= count {
-        if count % d1 == 0 {
-            let d2 = count / d1;
-            let objective = d1 as f64 / l1 + d2 as f64 / l2;
-            let better = match best {
-                None => true,
-                Some((cand, obj)) => {
-                    objective < obj - 1e-12
-                        || (objective < obj + 1e-12 && (d1, d2) > cand)
-                }
-            };
-            if better {
-                best = Some(((d1, d2), objective));
-            }
-        }
-        d1 += 1;
-    }
-    best.expect("count >= 1 always has the (count, 1) factorization").0
-}
-
-/// Row-major linearizer over a 2D block space — the
-/// `AffineLinearizedIndexSpace` equivalent from the C++ mapper (Fig 1b).
-fn linearize_block_2d(point: &Tuple, blocks: (i64, i64)) -> i64 {
-    let (b1, _b2) = blocks;
-    // first dimension fastest, matching the split-chain pull-back
-    point[0] + point[1] * b1
-}
-
-/// Batched MappingPlan emission shared by the three 2D expert mappers:
-/// the block-grid selection (the expensive divisor scan) runs **once per
-/// launch**, then the per-point index transformation fills the table.
-/// Decisions are identical to the per-point `map_task` path.
-fn hierarchical_block_table(
-    who: &str,
-    num_nodes: usize,
-    gpus_per_node: usize,
-    domain: &Rect,
-) -> Result<Rc<PlacementTable>, String> {
-    if domain.volume() <= 0 {
-        return Err("empty launch domain".into());
-    }
-    let ispace = domain.extent();
-    if ispace.dim() != 2 {
-        return Err(format!("{who} mapper expects 2D launches, got {ispace:?}"));
-    }
-    let (n1, n2) = select_num_blocks_2d(num_nodes as i64, &ispace);
-    let sub = Tuple::from([(ispace[0] + n1 - 1) / n1, (ispace[1] + n2 - 1) / n2]);
-    let (g1, g2) = select_num_blocks_2d(gpus_per_node as i64, &sub);
-    let mut procs = Vec::with_capacity(domain.volume().max(0) as usize);
-    for p in domain.points() {
-        let u1 = p[0] * n1 / ispace[0];
-        let u2 = p[1] * n2 / ispace[1];
-        let l1 = p[0] % g1;
-        let l2 = p[1] % g2;
-        let node = (u1 + u2 * n1) as usize;
-        let gpu = (l1 + l2 * g1) as usize;
-        if gpu >= gpus_per_node {
-            return Err(format!("gpu index {gpu} out of range"));
-        }
-        procs.push(ProcId { node, kind: ProcKind::Gpu, local: gpu });
-    }
-    Ok(Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
-}
 
 // ===========================================================================
 // Cannon's algorithm
 // ===========================================================================
 
 /// Expert mapper for Cannon's algorithm: hierarchical block distribution
-/// (nodes over the task grid, GPUs cyclically within the node's subgrid).
+/// (nodes over the task grid, GPUs cyclically within the node's subgrid),
+/// built with `mapple::build` and fronted by expert policy choices.
 pub struct CannonExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl CannonExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        CannonExpertMapper { num_nodes, gpus_per_node }
-    }
-
-    /// The hierarchical index transformation: node grid over the
-    /// iteration space, GPU grid over the per-node sub-space.
-    fn hierarchical_block(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        // node-level block grid
-        let (n1, n2) = select_num_blocks_2d(self.num_nodes as i64, ispace);
-        // per-node sub iteration space
-        let sub = Tuple::from([
-            (ispace[0] + n1 - 1) / n1,
-            (ispace[1] + n2 - 1) / n2,
-        ]);
-        // GPU-level grid over the subspace
-        let (g1, g2) = select_num_blocks_2d(self.gpus_per_node as i64, &sub);
-        // upper coordinates: block primitive per dimension
-        let u1 = point[0] * n1 / ispace[0];
-        let u2 = point[1] * n2 / ispace[1];
-        // lower coordinates: cyclic primitive per dimension
-        let l1 = point[0] % g1;
-        let l2 = point[1] % g2;
-        // pull back through the split chain: node = u1 + u2*n1 etc.
-        let node = linearize_block_2d(&Tuple::from([u1, u2]), (n1, n2));
-        let gpu = linearize_block_2d(&Tuple::from([l1, l2]), (g1, g2));
-        (node as usize, gpu as usize)
+        CannonExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("cannon", num_nodes, gpus_per_node),
+        }
     }
 }
 
@@ -134,62 +43,10 @@ impl Mapper for CannonExpertMapper {
         "cannon-expert"
     }
 
-    fn select_task_options(&self, _task: &TaskCtx) -> TaskOptions {
-        TaskOptions { inline: false, stealable: false, map_locally: true, priority: 0 }
-    }
-
-    fn select_tasks_to_map(&self, _task: &TaskCtx, candidates: usize) -> usize {
-        candidates
-    }
-
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        // Explicit point-by-point slicing loop, as in the C++ mapper's
-        // PointInRectIterator code path.
-        let ispace = input.domain.extent();
-        let mut output = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            let slice = TaskSlice { domain: Rect::new(it.clone(), it), proc };
-            output.slices.push(slice);
-        }
-        Ok(output)
-    }
-
-    fn select_sharding_functor(&self, _task: &TaskCtx) -> usize {
-        0
-    }
-
-    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        if point.dim() != 2 || ispace.dim() != 2 {
-            return Err(format!("cannon mapper expects 2D launches, got {point:?}"));
-        }
-        let (node, _gpu) = self.hierarchical_block(point, ispace);
-        Ok(node)
-    }
-
-    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let node = self.shard(task, point, ispace)?;
-        let (_n, gpu) = self.hierarchical_block(point, ispace);
-        if gpu >= self.gpus_per_node {
-            return Err(format!("gpu index {gpu} out of range"));
-        }
-        Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
-    }
-
-    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
-        hierarchical_block_table("cannon", self.num_nodes, self.gpus_per_node, domain)
-    }
-
-    fn select_proc_kind(&self, _task: &TaskCtx) -> ProcKind {
-        ProcKind::Gpu
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        MemKind::FbMem
-    }
+    delegate_placement!();
 
     fn select_layout_constraints(&self, _task: &TaskCtx, _arg: usize) -> LayoutProps {
-        LayoutProps { fortran_order: true, soa: true, align: 128 }
+        gemm_layout()
     }
 
     fn select_task_priority(&self, task: &TaskCtx) -> i32 {
@@ -200,47 +57,28 @@ impl Mapper for CannonExpertMapper {
             0
         }
     }
-
-    fn garbage_collect(&self, _task: &TaskCtx, _arg: usize) -> bool {
-        false
-    }
-
-    fn select_backpressure(&self, _task: &TaskCtx) -> Option<usize> {
-        None
-    }
 }
 
 // ===========================================================================
 // SUMMA
 // ===========================================================================
 
-/// Expert mapper for SUMMA. The index transformation is the same
-/// hierarchical block/cyclic family as Cannon's (the paper's Fig 12 notes
-/// the three 2D algorithms share `hierarchical_block2D`), but the mapper
-/// is an independent implementation, as the C++ originals were.
+/// Expert mapper for SUMMA. The broadcast variant shares Cannon's
+/// hierarchical block distribution (Fig 12); data movement differs,
+/// mapping does not.
 pub struct SummaExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl SummaExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        SummaExpertMapper { num_nodes, gpus_per_node }
-    }
-
-    fn select_blocks(&self, count: i64, ispace: &Tuple) -> (i64, i64) {
-        select_num_blocks_2d(count, ispace)
-    }
-
-    fn compute_indices(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        let (n1, n2) = self.select_blocks(self.num_nodes as i64, ispace);
-        let sub = Tuple::from([(ispace[0] + n1 - 1) / n1, (ispace[1] + n2 - 1) / n2]);
-        let (g1, g2) = self.select_blocks(self.gpus_per_node as i64, &sub);
-        let u1 = point[0] * n1 / ispace[0];
-        let u2 = point[1] * n2 / ispace[1];
-        let l1 = point[0] % g1;
-        let l2 = point[1] % g2;
-        ((u1 + u2 * n1) as usize, (l1 + l2 * g1) as usize)
+        SummaExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("summa", num_nodes, gpus_per_node),
+        }
     }
 }
 
@@ -249,39 +87,10 @@ impl Mapper for SummaExpertMapper {
         "summa-expert"
     }
 
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
-        let mut output = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            output.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
-        }
-        Ok(output)
-    }
-
-    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        if point.dim() != 2 {
-            return Err("summa mapper expects 2D launches".into());
-        }
-        Ok(self.compute_indices(point, ispace).0)
-    }
-
-    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let (node, gpu) = self.compute_indices(point, ispace);
-        let _ = task;
-        Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
-    }
-
-    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
-        hierarchical_block_table("summa", self.num_nodes, self.gpus_per_node, domain)
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        MemKind::FbMem
-    }
+    delegate_placement!();
 
     fn select_layout_constraints(&self, _task: &TaskCtx, _arg: usize) -> LayoutProps {
-        LayoutProps { fortran_order: true, soa: true, align: 128 }
+        gemm_layout()
     }
 }
 
@@ -289,30 +98,21 @@ impl Mapper for SummaExpertMapper {
 // PUMMA
 // ===========================================================================
 
-/// Expert mapper for PUMMA (block-cyclic rotating variant).
+/// Expert mapper for PUMMA (block-cyclic rotating variant); operand
+/// rotation is expressed in the task graph, not the mapper.
 pub struct PummaExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl PummaExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        PummaExpertMapper { num_nodes, gpus_per_node }
-    }
-
-    fn grid_for(&self, count: i64, ispace: &Tuple) -> (i64, i64) {
-        select_num_blocks_2d(count, ispace)
-    }
-
-    fn indices(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        let (n1, n2) = self.grid_for(self.num_nodes as i64, ispace);
-        let sub = Tuple::from([(ispace[0] + n1 - 1) / n1, (ispace[1] + n2 - 1) / n2]);
-        let (g1, g2) = self.grid_for(self.gpus_per_node as i64, &sub);
-        let u1 = point[0] * n1 / ispace[0];
-        let u2 = point[1] * n2 / ispace[1];
-        let l1 = point[0] % g1;
-        let l2 = point[1] % g2;
-        ((u1 + u2 * n1) as usize, (l1 + l2 * g1) as usize)
+        PummaExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("pumma", num_nodes, gpus_per_node),
+        }
     }
 }
 
@@ -321,58 +121,45 @@ impl Mapper for PummaExpertMapper {
         "pumma-expert"
     }
 
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
-        let mut output = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            output.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
-        }
-        Ok(output)
-    }
-
-    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        if point.dim() != 2 {
-            return Err("pumma mapper expects 2D launches".into());
-        }
-        Ok(self.indices(point, ispace).0)
-    }
-
-    fn map_task(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let (node, gpu) = self.indices(point, ispace);
-        Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
-    }
-
-    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
-        hierarchical_block_table("pumma", self.num_nodes, self.gpus_per_node, domain)
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        MemKind::FbMem
-    }
+    delegate_placement!();
 
     fn select_layout_constraints(&self, _task: &TaskCtx, _arg: usize) -> LayoutProps {
-        LayoutProps { fortran_order: true, soa: true, align: 128 }
+        gemm_layout()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::machine::point::{Rect, Tuple};
+    use crate::machine::topology::{MachineDesc, MemKind, ProcKind};
+    use crate::mapple::program::MapperSpec;
 
     #[test]
-    fn select_num_blocks_matches_decompose() {
-        use crate::decompose::decompose;
-        for count in [2i64, 4, 6, 8, 12, 16] {
-            for ispace in [[4i64, 4], [8, 2], [2, 8], [12, 18], [16, 4]] {
-                let t = Tuple::from(ispace);
-                let (d1, d2) = select_num_blocks_2d(count, &t);
-                let r = decompose(count as u64, &[ispace[0] as u64, ispace[1] as u64]);
-                assert_eq!(
-                    (d1 as u64, d2 as u64),
-                    (r.factors[0], r.factors[1]),
-                    "count={count} ispace={ispace:?}"
-                );
+    fn expert_placements_equal_text_compiled_mapper() {
+        // The builder-built expert core must place exactly like the
+        // text-compiled cannon.mpl across machine shapes.
+        for (nodes, gpus) in [(2usize, 2usize), (4, 4), (1, 4)] {
+            let mut d = MachineDesc::paper_testbed(nodes);
+            d.gpus_per_node = gpus;
+            let text = MapperSpec::compile(
+                crate::apps::mappers::mapple_source("cannon").unwrap(),
+                &d,
+            )
+            .unwrap();
+            let expert = CannonExpertMapper::new(nodes, gpus);
+            let ispace = Tuple::from([8, 8]);
+            let dom = Rect::from_extent(&ispace);
+            let ctx = TaskCtx {
+                task_name: "mm_step_0",
+                launch_domain: &dom,
+                num_nodes: nodes,
+                procs_per_node: gpus,
+            };
+            for p in dom.points() {
+                let want = text.map_point("mm_step_0", &p, &ispace).unwrap();
+                let got = expert.map_task(&ctx, &p, &ispace).unwrap();
+                assert_eq!(got, want, "{nodes}n×{gpus}g {p:?}");
             }
         }
     }
@@ -431,7 +218,7 @@ mod tests {
     #[test]
     fn three_mappers_agree_on_shared_function() {
         // Fig 12: Cannon/PUMMA/SUMMA share hierarchical_block2D — the
-        // three independent implementations must agree.
+        // three builder-built specs must agree.
         let c = CannonExpertMapper::new(4, 4);
         let s = SummaExpertMapper::new(4, 4);
         let p = PummaExpertMapper::new(4, 4);
@@ -450,5 +237,25 @@ mod tests {
             assert_eq!(a, b);
             assert_eq!(a, d);
         }
+    }
+
+    #[test]
+    fn expert_policy_overrides() {
+        let m = CannonExpertMapper::new(2, 2);
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let ctx = TaskCtx {
+            task_name: "mm_step_0",
+            launch_domain: &dom,
+            num_nodes: 2,
+            procs_per_node: 2,
+        };
+        assert_eq!(m.select_proc_kind(&ctx), ProcKind::Gpu);
+        assert_eq!(m.select_target_memory(&ctx, 0), MemKind::FbMem);
+        let l = m.select_layout_constraints(&ctx, 0);
+        assert!(l.fortran_order && l.align == 128);
+        assert_eq!(m.select_task_priority(&ctx), 1);
+        let mut init_ctx = ctx.clone();
+        init_ctx.task_name = "init_a";
+        assert_eq!(m.select_task_priority(&init_ctx), 0);
     }
 }

@@ -1,92 +1,36 @@
-//! Hand-written low-level mappers for the non-2D matrix-multiplication
-//! algorithms: Johnson's 3D, Solomonik's 2.5D, and COSMA. As with the 2D
-//! family, each reimplements its linearizers and block selection against
-//! the 19-callback interface and matches its Mapple counterpart's
-//! decisions exactly.
+//! Expert mappers for the non-2D matrix-multiplication algorithms:
+//! Johnson's 3D, Solomonik's 2.5D, and COSMA. As with the 2D family,
+//! each constructs its index mapping through the typed `mapple::build`
+//! API — the conditional linearization, 3D hierarchical blocks, and the
+//! COSMA equal-split grid all run on the shared transform/decompose
+//! machinery — while the expert policy surface (GEMM layouts) stays
+//! hand-written.
 
-use crate::machine::point::{Rect, Tuple};
-use crate::machine::topology::{MemKind, ProcId, ProcKind};
-use crate::mapper::api::{Mapper, SliceTaskInput, SliceTaskOutput, TaskCtx, TaskSlice};
+use crate::mapper::api::{Mapper, TaskCtx};
+use crate::mapper::expert::{delegate_placement, gemm_layout, placement_core};
+use crate::mapper::translate::MappleMapper;
 use crate::mapple::program::LayoutProps;
-use crate::mapple::vm::PlacementTable;
-use std::rc::Rc;
-
-/// Batched table emission from a per-point closed form; callers hoist
-/// their launch-invariant grid selection into the closure's captures.
-fn table_from<F>(domain: &Rect, f: F) -> Result<Rc<PlacementTable>, String>
-where
-    F: Fn(&Tuple) -> Result<ProcId, String>,
-{
-    if domain.volume() <= 0 {
-        return Err("empty launch domain".into());
-    }
-    let ispace = domain.extent();
-    let mut procs = Vec::with_capacity(domain.volume() as usize);
-    for p in domain.points() {
-        procs.push(f(&p)?);
-    }
-    Ok(Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
-}
-
-/// Select a 3D grid (d1, d2, d3), d1·d2·d3 = count, minimizing
-/// Σ d_m / l_m with lexicographically-largest tie-breaking — the
-/// long-form equivalent of `decompose` in three dimensions.
-fn select_num_blocks_3d(count: i64, l: &Tuple) -> (i64, i64, i64) {
-    let mut best: Option<((i64, i64, i64), f64)> = None;
-    let mut d1 = 1i64;
-    while d1 <= count {
-        if count % d1 != 0 {
-            d1 += 1;
-            continue;
-        }
-        let rest = count / d1;
-        let mut d2 = 1i64;
-        while d2 <= rest {
-            if rest % d2 != 0 {
-                d2 += 1;
-                continue;
-            }
-            let d3 = rest / d2;
-            let objective =
-                d1 as f64 / l[0] as f64 + d2 as f64 / l[1] as f64 + d3 as f64 / l[2] as f64;
-            let cand = (d1, d2, d3);
-            let better = match best {
-                None => true,
-                Some((b, obj)) => {
-                    objective < obj - 1e-12 || (objective < obj + 1e-12 && cand > b)
-                }
-            };
-            if better {
-                best = Some((cand, objective));
-            }
-            d2 += 1;
-        }
-        d1 += 1;
-    }
-    best.unwrap().0
-}
 
 // ===========================================================================
 // Johnson's 3D algorithm
 // ===========================================================================
 
 /// Expert mapper for Johnson's algorithm: the conditional linearization
-/// of Fig 12 (`conditional_linearize3D`), distributing the 3D task cube
-/// cyclically over nodes, then over GPUs.
+/// of Fig 12 (`conditional_linearize3D`) for the 3D task cube, the
+/// linearized block distribution for 2D init launches.
 pub struct JohnsonExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl JohnsonExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        JohnsonExpertMapper { num_nodes, gpus_per_node }
-    }
-
-    fn linearize(&self, point: &Tuple, ispace: &Tuple) -> i64 {
-        // grid_size = ispace[0] > ispace[2] ? ispace[0] : ispace[2]
-        let grid_size = if ispace[0] > ispace[2] { ispace[0] } else { ispace[2] };
-        point[0] + point[1] * grid_size + point[2] * grid_size * grid_size
+        JohnsonExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("johnson", num_nodes, gpus_per_node),
+        }
     }
 }
 
@@ -95,52 +39,10 @@ impl Mapper for JohnsonExpertMapper {
         "johnson-expert"
     }
 
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
-        let mut out = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
-        }
-        Ok(out)
-    }
-
-    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        if point.dim() == 3 {
-            let lin = self.linearize(point, ispace);
-            Ok((lin % self.num_nodes as i64) as usize)
-        } else {
-            // 2D init launches: linearized block over the flattened
-            // (GPU-fastest) processor space
-            let lin = point.linearize(ispace);
-            let n = ispace.product();
-            let total = (self.num_nodes * self.gpus_per_node) as i64;
-            let flat = lin * total / n;
-            Ok((flat / self.gpus_per_node as i64) as usize)
-        }
-    }
-
-    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let node = self.shard(task, point, ispace)?;
-        let local = if point.dim() == 3 {
-            let lin = self.linearize(point, ispace);
-            ((lin / self.num_nodes as i64) % self.gpus_per_node as i64) as usize
-        } else {
-            let lin = point.linearize(ispace);
-            let n = ispace.product();
-            let total = (self.num_nodes * self.gpus_per_node) as i64;
-            let flat = lin * total / n;
-            (flat % self.gpus_per_node as i64) as usize
-        };
-        Ok(ProcId { node, kind: ProcKind::Gpu, local })
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        MemKind::FbMem
-    }
+    delegate_placement!();
 
     fn select_layout_constraints(&self, _task: &TaskCtx, _arg: usize) -> LayoutProps {
-        LayoutProps { fortran_order: true, soa: true, align: 128 }
+        gemm_layout()
     }
 }
 
@@ -150,45 +52,21 @@ impl Mapper for JohnsonExpertMapper {
 
 /// Expert mapper for Solomonik's algorithm: `hierarchical_block3D` for
 /// the compute phase (Fig 5 / Fig 12 function 1) and `linearize_cyclic`
-/// for the reduction phase (Fig 12 function 2).
+/// for init and the C reduction (Fig 12 function 2) — selected by task
+/// name through the spec's IndexTaskMap table.
 pub struct SolomonikExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl SolomonikExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        SolomonikExpertMapper { num_nodes, gpus_per_node }
-    }
-
-    fn hierarchical_block3d(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        let (n1, n2, n3) = select_num_blocks_3d(self.num_nodes as i64, ispace);
-        let sub = Tuple::from([
-            (ispace[0] + n1 - 1) / n1,
-            (ispace[1] + n2 - 1) / n2,
-            (ispace[2] + n3 - 1) / n3,
-        ]);
-        let (g1, g2, g3) = select_num_blocks_3d(self.gpus_per_node as i64, &sub);
-        let u1 = point[0] * n1 / ispace[0];
-        let u2 = point[1] * n2 / ispace[1];
-        let u3 = point[2] * n3 / ispace[2];
-        let l1 = point[0] % g1;
-        let l2 = point[1] % g2;
-        let l3 = point[2] % g3;
-        // split-chain pull-back: first dim fastest
-        let node = u1 + n1 * (u2 + n2 * u3);
-        let gpu = l1 + g1 * (l2 + g2 * l3);
-        (node as usize, gpu as usize)
-    }
-
-    fn linearize_cyclic(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        // linearized = p0 + s0*p1 + s0*s1*p2 (2D points pad p2 = 0)
-        let p2 = if point.dim() > 2 { point[2] } else { 0 };
-        let s1 = if ispace.dim() > 1 { ispace[1] } else { 1 };
-        let linearized = point[0] + ispace[0] * point[1] + ispace[0] * s1 * p2;
-        let node = linearized % self.num_nodes as i64;
-        let gpu = (linearized / self.num_nodes as i64) % self.gpus_per_node as i64;
-        (node as usize, gpu as usize)
+        SolomonikExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("solomonik", num_nodes, gpus_per_node),
+        }
     }
 }
 
@@ -197,89 +75,29 @@ impl Mapper for SolomonikExpertMapper {
         "solomonik-expert"
     }
 
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
-        let mut out = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
-        }
-        Ok(out)
-    }
-
-    fn shard(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        Ok(self.indices(task, point, ispace).0)
-    }
-
-    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let (node, gpu) = self.indices(task, point, ispace);
-        Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
-    }
-
-    fn build_plan(&self, task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
-        let ispace = domain.extent();
-        if task.task_name == "mm25d" && ispace.dim() == 3 {
-            // Hoist the two 3D grid selections out of the per-point loop.
-            let (n1, n2, n3) = select_num_blocks_3d(self.num_nodes as i64, &ispace);
-            let sub = Tuple::from([
-                (ispace[0] + n1 - 1) / n1,
-                (ispace[1] + n2 - 1) / n2,
-                (ispace[2] + n3 - 1) / n3,
-            ]);
-            let (g1, g2, g3) = select_num_blocks_3d(self.gpus_per_node as i64, &sub);
-            return table_from(domain, |p| {
-                let u1 = p[0] * n1 / ispace[0];
-                let u2 = p[1] * n2 / ispace[1];
-                let u3 = p[2] * n3 / ispace[2];
-                let l1 = p[0] % g1;
-                let l2 = p[1] % g2;
-                let l3 = p[2] % g3;
-                Ok(ProcId {
-                    node: (u1 + n1 * (u2 + n2 * u3)) as usize,
-                    kind: ProcKind::Gpu,
-                    local: (l1 + g1 * (l2 + g2 * l3)) as usize,
-                })
-            });
-        }
-        table_from(domain, |p| self.map_task(task, p, &ispace))
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        MemKind::FbMem
-    }
-}
-
-impl SolomonikExpertMapper {
-    fn indices(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        if task.task_name == "mm25d" && point.dim() == 3 {
-            self.hierarchical_block3d(point, ispace)
-        } else {
-            self.linearize_cyclic(point, ispace)
-        }
-    }
+    delegate_placement!();
 }
 
 // ===========================================================================
 // COSMA
 // ===========================================================================
 
-/// Expert mapper for COSMA: `special_linearize3D` (Fig 12) — split the
-/// node dimension as equally as possible into a 3D grid (the `decompose`
-/// with all-ones targets), then linearize and distribute cyclically.
+/// Expert mapper for COSMA: `special_linearize3D` (Fig 12) — the node
+/// dimension split as equally as possible into a 3D grid (`auto_split`
+/// with all-ones targets), then linearized and distributed cyclically.
 pub struct CosmaExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl CosmaExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        CosmaExpertMapper { num_nodes, gpus_per_node }
-    }
-
-    /// Split `count` into three factors as equal as possible (the
-    /// decompose(0, (1,1,1)) of Fig 12: objective Σ d_m minimized).
-    fn equal_split_3(&self, count: i64) -> (i64, i64, i64) {
-        select_num_blocks_3d(count, &Tuple::from([1, 1, 1]))
+        CosmaExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("cosma", num_nodes, gpus_per_node),
+        }
     }
 }
 
@@ -288,61 +106,13 @@ impl Mapper for CosmaExpertMapper {
         "cosma-expert"
     }
 
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
-        let mut out = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
-        }
-        Ok(out)
-    }
-
-    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        if point.dim() == 3 {
-            let (_d1, gy, gx) = self.equal_split_3(self.num_nodes as i64);
-            let linearized = point[0] + point[1] * gx + point[2] * gx * gy;
-            Ok((linearized % self.num_nodes as i64) as usize)
-        } else {
-            let lin = point.linearize(ispace);
-            let n = ispace.product();
-            let total = (self.num_nodes * self.gpus_per_node) as i64;
-            let flat = lin * total / n;
-            Ok((flat / self.gpus_per_node as i64) as usize)
-        }
-    }
-
-    fn map_task(&self, task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let node = self.shard(task, point, ispace)?;
-        let local = if point.dim() == 3 {
-            let (_d1, gy, gx) = self.equal_split_3(self.num_nodes as i64);
-            let linearized = point[0] + point[1] * gx + point[2] * gx * gy;
-            ((linearized / self.num_nodes as i64) % self.gpus_per_node as i64) as usize
-        } else {
-            let lin = point.linearize(ispace);
-            let n = ispace.product();
-            let total = (self.num_nodes * self.gpus_per_node) as i64;
-            (lin * total / n % self.gpus_per_node as i64) as usize
-        };
-        Ok(ProcId { node, kind: ProcKind::Gpu, local })
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        MemKind::FbMem
-    }
+    delegate_placement!();
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn grid_3d_balanced() {
-        assert_eq!(select_num_blocks_3d(8, &Tuple::from([64, 64, 64])), (2, 2, 2));
-        assert_eq!(select_num_blocks_3d(16, &Tuple::from([4, 8, 4])), (2, 4, 2));
-        // all-ones targets = most balanced split, descending tie-break
-        assert_eq!(select_num_blocks_3d(12, &Tuple::from([1, 1, 1])), (3, 2, 2));
-    }
+    use crate::machine::point::{Rect, Tuple};
 
     #[test]
     fn johnson_covers_procs() {

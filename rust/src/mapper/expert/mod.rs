@@ -1,5 +1,15 @@
 //! The nine expert mappers (Table 1's "C++ mapper" analogues) plus a
 //! registry for bench harnesses.
+//!
+//! Since the `mapple::build` redesign, every expert mapper constructs
+//! its placement logic through the typed builder API
+//! (`crate::apps::builder_mappers::built_spec`): the index mapping runs
+//! on the same transform/decompose machinery and `MappingPlan` bytecode
+//! as the Mapple text mappers, instead of re-deriving placements with
+//! ad-hoc closed-form arithmetic. What remains hand-written per expert
+//! is the *policy* surface of the 19-callback interface — layouts,
+//! priorities, the conventional memory choices — which is exactly where
+//! the paper's expert mappers differ from the tuned Mapple ones.
 
 pub mod matmul2d;
 pub mod matmul3d;
@@ -10,6 +20,79 @@ pub use matmul3d::{CosmaExpertMapper, JohnsonExpertMapper, SolomonikExpertMapper
 pub use science::{CircuitExpertMapper, PennantExpertMapper, StencilExpertMapper};
 
 use super::api::Mapper;
+use super::translate::MappleMapper;
+use crate::apps::builder_mappers::built_spec;
+use crate::machine::topology::MachineDesc;
+
+pub(crate) use crate::apps::builder_mappers::gemm_layout;
+
+/// Build the baseline (untuned) spec for an app on an
+/// `(num_nodes, gpus_per_node)` machine via the typed builder API.
+pub(crate) fn placement_core(app: &str, num_nodes: usize, gpus_per_node: usize) -> MappleMapper {
+    let mut desc = MachineDesc::paper_testbed(num_nodes);
+    desc.gpus_per_node = gpus_per_node;
+    let spec = built_spec(app, false, &desc)
+        .unwrap_or_else(|e| panic!("builder spec for '{app}' must compile: {e}"));
+    MappleMapper::new(spec)
+}
+
+/// Delegate the placement half of the 19-callback interface (SHARD, MAP,
+/// the batched plan, and the directive-backed policies) to the
+/// builder-built spec in `self.spec`. Expert mappers override the policy
+/// callbacks they hand-tune on top of this.
+macro_rules! delegate_placement {
+    () => {
+        fn shard(
+            &self,
+            task: &crate::mapper::api::TaskCtx,
+            point: &crate::machine::point::Tuple,
+            ispace: &crate::machine::point::Tuple,
+        ) -> Result<usize, String> {
+            crate::mapper::api::Mapper::shard(&self.spec, task, point, ispace)
+        }
+
+        fn map_task(
+            &self,
+            task: &crate::mapper::api::TaskCtx,
+            point: &crate::machine::point::Tuple,
+            ispace: &crate::machine::point::Tuple,
+        ) -> Result<crate::machine::topology::ProcId, String> {
+            crate::mapper::api::Mapper::map_task(&self.spec, task, point, ispace)
+        }
+
+        fn build_plan(
+            &self,
+            task: &crate::mapper::api::TaskCtx,
+            domain: &crate::machine::point::Rect,
+        ) -> Result<std::rc::Rc<crate::mapple::vm::PlacementTable>, String> {
+            crate::mapper::api::Mapper::build_plan(&self.spec, task, domain)
+        }
+
+        fn select_proc_kind(
+            &self,
+            task: &crate::mapper::api::TaskCtx,
+        ) -> crate::machine::topology::ProcKind {
+            crate::mapper::api::Mapper::select_proc_kind(&self.spec, task)
+        }
+
+        fn select_target_memory(
+            &self,
+            task: &crate::mapper::api::TaskCtx,
+            arg: usize,
+        ) -> crate::machine::topology::MemKind {
+            crate::mapper::api::Mapper::select_target_memory(&self.spec, task, arg)
+        }
+
+        fn garbage_collect(&self, task: &crate::mapper::api::TaskCtx, arg: usize) -> bool {
+            crate::mapper::api::Mapper::garbage_collect(&self.spec, task, arg)
+        }
+
+        fn select_backpressure(&self, task: &crate::mapper::api::TaskCtx) -> Option<usize> {
+            crate::mapper::api::Mapper::select_backpressure(&self.spec, task)
+        }
+    };
+}
+pub(crate) use delegate_placement;
 
 /// Instantiate the expert mapper for an application by name.
 pub fn expert_for(app: &str, num_nodes: usize, gpus_per_node: usize) -> Option<Box<dyn Mapper>> {

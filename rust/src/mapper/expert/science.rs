@@ -1,80 +1,44 @@
-//! Hand-written low-level mappers for the scientific benchmarks:
-//! Stencil, Circuit, Pennant. These encode the conventional expert
-//! choices (block distributions, everything on GPU in FBMEM) that the
-//! paper's tuned Mapple mappers then beat by changing memory placement
-//! (Table 2, apps 1–3).
+//! Expert mappers for the scientific benchmarks: Stencil, Circuit,
+//! Pennant. These encode the conventional expert choices (block
+//! distributions, everything on GPU in FBMEM) that the paper's tuned
+//! Mapple mappers then beat by changing memory placement (Table 2,
+//! apps 1–3). The block distributions themselves are constructed through
+//! the typed `mapple::build` API, so the linearized-block index math is
+//! the exact same `MappingPlan` bytecode the Mapple text mappers run.
 
 use crate::decompose::greedy_grid;
-use crate::machine::point::{Rect, Tuple};
-use crate::machine::topology::{MemKind, ProcId, ProcKind};
-use crate::mapper::api::{Mapper, SliceTaskInput, SliceTaskOutput, TaskCtx, TaskSlice};
-use crate::mapple::program::LayoutProps;
-use crate::mapple::vm::PlacementTable;
-use std::rc::Rc;
-
-/// Batched MappingPlan emission for the linearized block family: one
-/// table per launch from the closed-form flat index (identical decisions
-/// to per-point `map_task`).
-fn block_linear_table(
-    num_nodes: usize,
-    gpus_per_node: usize,
-    domain: &Rect,
-    row_major_2d: bool,
-) -> Result<Rc<PlacementTable>, String> {
-    if domain.volume() <= 0 {
-        return Err("empty launch domain".into());
-    }
-    let ispace = domain.extent();
-    let total = (num_nodes * gpus_per_node) as i64;
-    let n = ispace.product();
-    let mut procs = Vec::with_capacity(domain.volume() as usize);
-    for p in domain.points() {
-        let lin = if row_major_2d { p[0] * ispace[1] + p[1] } else { p[0] };
-        let flat = lin * total / n;
-        procs.push(ProcId {
-            node: (flat / gpus_per_node as i64) as usize,
-            kind: ProcKind::Gpu,
-            local: (flat % gpus_per_node as i64) as usize,
-        });
-    }
-    Ok(Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
-}
+use crate::mapper::api::Mapper;
+use crate::mapper::expert::{delegate_placement, placement_core};
+use crate::mapper::translate::MappleMapper;
 
 // ===========================================================================
 // Stencil
 // ===========================================================================
 
 /// Expert mapper for the 2D stencil: tile (i, j) of a (gx, gy) tiling
-/// goes to the linearized processor i·gy + j over the flattened GPU
-/// space. The *grid itself* comes from Algorithm 1's greedy heuristic —
+/// goes to the linearized processor over the flattened GPU space, so
+/// row-adjacent tiles share a node (minimizes inter-node halo edges).
+/// The *tile grid itself* comes from Algorithm 1's greedy heuristic —
 /// the baseline the decompose primitive beats in §6.3.
 pub struct StencilExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl StencilExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        StencilExpertMapper { num_nodes, gpus_per_node }
+        StencilExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("stencil", num_nodes, gpus_per_node),
+        }
     }
 
     /// Algorithm 1 grid for a processor count (ignores the space shape).
     pub fn select_grid(&self) -> (i64, i64) {
         let g = greedy_grid((self.num_nodes * self.gpus_per_node) as u64, 2);
         (g[0] as i64, g[1] as i64)
-    }
-
-    fn linear_proc(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        // row-major over the launch (tile) grid
-        let lin = point[0] * ispace[1] + point[1];
-        let total = (self.num_nodes * self.gpus_per_node) as i64;
-        let n = ispace.product();
-        // block over the flattened GPU space so neighboring tiles share
-        // a node (minimizes inter-node edges of the tile graph)
-        let flat = lin * total / n;
-        let node = (flat / self.gpus_per_node as i64) as usize;
-        let gpu = (flat % self.gpus_per_node as i64) as usize;
-        (node, gpu)
     }
 }
 
@@ -83,42 +47,7 @@ impl Mapper for StencilExpertMapper {
         "stencil-expert"
     }
 
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
-        let mut out = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
-        }
-        Ok(out)
-    }
-
-    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        if point.dim() != 2 {
-            return Err("stencil mapper expects 2D tile launches".into());
-        }
-        Ok(self.linear_proc(point, ispace).0)
-    }
-
-    fn map_task(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let (node, gpu) = self.linear_proc(point, ispace);
-        Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
-    }
-
-    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
-        if domain.dim() != 2 {
-            return Err("stencil mapper expects 2D tile launches".into());
-        }
-        block_linear_table(self.num_nodes, self.gpus_per_node, domain, true)
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        MemKind::FbMem
-    }
-
-    fn select_layout_constraints(&self, _task: &TaskCtx, _arg: usize) -> LayoutProps {
-        LayoutProps { fortran_order: false, soa: true, align: 0 }
-    }
+    delegate_placement!();
 }
 
 // ===========================================================================
@@ -131,17 +60,16 @@ impl Mapper for StencilExpertMapper {
 pub struct CircuitExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl CircuitExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        CircuitExpertMapper { num_nodes, gpus_per_node }
-    }
-
-    fn place(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        let total = (self.num_nodes * self.gpus_per_node) as i64;
-        let flat = point[0] * total / ispace[0];
-        ((flat / self.gpus_per_node as i64) as usize, (flat % self.gpus_per_node as i64) as usize)
+        CircuitExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("circuit", num_nodes, gpus_per_node),
+        }
     }
 }
 
@@ -150,62 +78,29 @@ impl Mapper for CircuitExpertMapper {
         "circuit-expert"
     }
 
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
-        let mut out = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
-        }
-        Ok(out)
-    }
-
-    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        if point.dim() != 1 {
-            return Err("circuit mapper expects 1D piece launches".into());
-        }
-        Ok(self.place(point, ispace).0)
-    }
-
-    fn map_task(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let (node, gpu) = self.place(point, ispace);
-        Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
-    }
-
-    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
-        if domain.dim() != 1 {
-            return Err("circuit mapper expects 1D piece launches".into());
-        }
-        block_linear_table(self.num_nodes, self.gpus_per_node, domain, false)
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        // conventional: everything in framebuffer
-        MemKind::FbMem
-    }
+    delegate_placement!();
 }
 
 // ===========================================================================
 // Pennant
 // ===========================================================================
 
-/// Expert mapper for Pennant: chunks block-distributed over GPUs,
-/// every task (including the tiny `advance` integration) on GPU — the
+/// Expert mapper for Pennant: chunks block-distributed over GPUs, every
+/// task (including the tiny `advance` integration) on GPU — the
 /// conventional choice the tuned mapper improves with TaskMap CPU.
 pub struct PennantExpertMapper {
     pub num_nodes: usize,
     pub gpus_per_node: usize,
+    spec: MappleMapper,
 }
 
 impl PennantExpertMapper {
     pub fn new(num_nodes: usize, gpus_per_node: usize) -> Self {
-        PennantExpertMapper { num_nodes, gpus_per_node }
-    }
-
-    fn place(&self, point: &Tuple, ispace: &Tuple) -> (usize, usize) {
-        let total = (self.num_nodes * self.gpus_per_node) as i64;
-        let flat = point[0] * total / ispace[0];
-        ((flat / self.gpus_per_node as i64) as usize, (flat % self.gpus_per_node as i64) as usize)
+        PennantExpertMapper {
+            num_nodes,
+            gpus_per_node,
+            spec: placement_core("pennant", num_nodes, gpus_per_node),
+        }
     }
 }
 
@@ -214,43 +109,14 @@ impl Mapper for PennantExpertMapper {
         "pennant-expert"
     }
 
-    fn slice_task(&self, task: &TaskCtx, input: &SliceTaskInput) -> Result<SliceTaskOutput, String> {
-        let ispace = input.domain.extent();
-        let mut out = SliceTaskOutput::default();
-        for it in input.domain.points() {
-            let proc = self.map_task(task, &it, &ispace)?;
-            out.slices.push(TaskSlice { domain: Rect::new(it.clone(), it), proc });
-        }
-        Ok(out)
-    }
-
-    fn shard(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
-        if point.dim() != 1 {
-            return Err("pennant mapper expects 1D chunk launches".into());
-        }
-        Ok(self.place(point, ispace).0)
-    }
-
-    fn map_task(&self, _task: &TaskCtx, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
-        let (node, gpu) = self.place(point, ispace);
-        Ok(ProcId { node, kind: ProcKind::Gpu, local: gpu })
-    }
-
-    fn build_plan(&self, _task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
-        if domain.dim() != 1 {
-            return Err("pennant mapper expects 1D chunk launches".into());
-        }
-        block_linear_table(self.num_nodes, self.gpus_per_node, domain, false)
-    }
-
-    fn select_target_memory(&self, _task: &TaskCtx, _arg: usize) -> MemKind {
-        MemKind::FbMem
-    }
+    delegate_placement!();
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::machine::point::{Rect, Tuple};
+    use crate::mapper::api::TaskCtx;
 
     #[test]
     fn stencil_grid_is_greedy() {

@@ -1,5 +1,11 @@
-//! Translation of a compiled Mapple program to the low-level mapper
+//! Translation of a compiled Mapple mapper to the low-level mapper
 //! interface (paper §5.2).
+//!
+//! The [`MapperSpec`] this layer adapts may come from either front-end —
+//! `.mpl` text or the typed `mapple::build::MapperBuilder` — both of
+//! which compile through the same typed-op seam; the expert mappers
+//! (`crate::mapper::expert`) wrap builder-built specs through this very
+//! adapter.
 //!
 //! A Mapple mapping function is compiled (via `mapple::lower`) into a
 //! `MappingPlan` whose VM evaluates an **entire launch domain in one

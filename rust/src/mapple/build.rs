@@ -1,0 +1,1306 @@
+//! The typed `mapple::build` mapper-construction API.
+//!
+//! This module is the **single construction seam** for mappers: both
+//! front-ends produce the same *typed ops* — [`TExpr`] / [`TStmt`] /
+//! [`TFunc`] for mapping functions and [`DirectiveOp`] for directives —
+//! and everything downstream (bytecode lowering in [`super::lower`],
+//! directive-table assembly in [`super::program`]) is driven by typed
+//! ops, never by raw AST nodes:
+//!
+//! * the **text front-end** (`mappers/*.mpl` → lexer → parser → AST)
+//!   *desugars* into typed ops via [`desugar_func`] and
+//!   [`DirectiveOp::from_ast`];
+//! * the **Rust front-end** ([`MapperBuilder`]) constructs typed ops
+//!   directly, with the paper's transformation primitives (`split`,
+//!   `merge`, `swap`, `slice`, and `auto_split` — the decompose
+//!   primitive) as first-class [`MachineView`] combinators.
+//!
+//! In the typed layer every machine method, builtin, and attribute is
+//! resolved to an enum ([`SpaceMethod`], [`Builtin`], [`AttrName`]),
+//! processor/memory kinds are real [`ProcKind`]/[`MemKind`] values, and
+//! generator iteration domains are literal integer lists — so lowering
+//! never re-parses a string. The tree-walking interpreter stays the
+//! reference oracle: builder programs are converted *back* to AST
+//! ([`to_ast_func`]) solely to instantiate it.
+//!
+//! ```text
+//!   .mpl text ── parse ──► AST ── desugar ─┐
+//!                                          ├─► typed ops ─► lower ─► MappingPlan
+//!   MapperBuilder combinators ─────────────┘        │
+//!                                                   └─► DirectiveOp ─► MapperSpec tables
+//! ```
+
+use super::ast::{Arg, BinOp, Expr, FuncDef, IndexArg, Item, Param, Program, Stmt, UnOp};
+use super::interp::Interp;
+use super::lower::{self, LowerError};
+use super::program::{DirectiveOp, LayoutProps, MapperSpec};
+use super::vm::MappingPlan;
+use crate::machine::topology::{MachineDesc, MemKind, ProcKind};
+
+// ---------------------------------------------------------------------------
+// resolved primitive enums
+// ---------------------------------------------------------------------------
+
+/// Attribute reads supported on values (`m.size`, `m.dim`, `t.dim`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttrName {
+    Size,
+    Dim,
+}
+
+/// Machine-space transformation methods (Fig 6 + decompose) — the
+/// paper's transformation primitives, first-class in the typed IR.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpaceMethod {
+    Split,
+    Merge,
+    Swap,
+    Slice,
+    Decompose,
+}
+
+impl SpaceMethod {
+    /// Surface syntax name (`.split(...)` etc.).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpaceMethod::Split => "split",
+            SpaceMethod::Merge => "merge",
+            SpaceMethod::Swap => "swap",
+            SpaceMethod::Slice => "slice",
+            SpaceMethod::Decompose => "decompose",
+        }
+    }
+}
+
+/// Built-in functions of the DSL.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Builtin {
+    Machine,
+    TupleOf,
+    Len,
+    Abs,
+    Min,
+    Max,
+    Prod,
+    Linearize,
+}
+
+impl Builtin {
+    /// Resolve a call target to a builtin, if it is one.
+    pub fn by_name(name: &str) -> Option<Builtin> {
+        Some(match name {
+            "Machine" => Builtin::Machine,
+            "tuple" => Builtin::TupleOf,
+            "len" => Builtin::Len,
+            "abs" => Builtin::Abs,
+            "min" => Builtin::Min,
+            "max" => Builtin::Max,
+            "prod" => Builtin::Prod,
+            "linearize" => Builtin::Linearize,
+            _ => return None,
+        })
+    }
+
+    /// Surface syntax name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Builtin::Machine => "Machine",
+            Builtin::TupleOf => "tuple",
+            Builtin::Len => "len",
+            Builtin::Abs => "abs",
+            Builtin::Min => "min",
+            Builtin::Max => "max",
+            Builtin::Prod => "prod",
+            Builtin::Linearize => "linearize",
+        }
+    }
+}
+
+/// Advisory parameter type tags (mirrors the interpreter's checks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TypeTag {
+    Tuple,
+    Int,
+}
+
+// ---------------------------------------------------------------------------
+// typed ops: the construction IR
+// ---------------------------------------------------------------------------
+
+/// A typed expression. Structurally close to the AST, but with every
+/// method/builtin/attribute resolved and generator domains literal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TExpr {
+    Int(i64),
+    Str(String),
+    /// Reference to a parameter, local, global, or proc-kind literal.
+    Name(String),
+    Tuple(Vec<TExpr>),
+    Unary { op: UnOp, inner: Box<TExpr> },
+    Binary { op: BinOp, lhs: Box<TExpr>, rhs: Box<TExpr> },
+    Ternary { cond: Box<TExpr>, then: Box<TExpr>, otherwise: Box<TExpr> },
+    /// Call of a user-defined function (builtins are [`TExpr::Builtin`]).
+    Call { func: String, args: Vec<TExpr> },
+    Builtin { which: Builtin, args: Vec<TExpr> },
+    /// Machine-space transformation (`recv.split(...)`, `.decompose(...)`).
+    Method { recv: Box<TExpr>, which: SpaceMethod, args: Vec<TExpr> },
+    Attr { recv: Box<TExpr>, name: AttrName },
+    /// Single-slice indexing `recv[lo:hi]` on tuples and spaces.
+    Slice { recv: Box<TExpr>, lo: Option<Box<TExpr>>, hi: Option<Box<TExpr>> },
+    /// General indexing `recv[a, *b, ...]`.
+    Index { recv: Box<TExpr>, args: Vec<TIndex> },
+    /// `tuple(elem for var in values)` with a literal iteration domain.
+    TupleGen { elem: Box<TExpr>, var: String, values: Vec<i64> },
+}
+
+/// One indexing operand: a plain coordinate or a splatted tuple.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TIndex {
+    Plain(TExpr),
+    Splat(TExpr),
+}
+
+/// A typed statement.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TStmt {
+    Assign { name: String, expr: TExpr },
+    Return { expr: TExpr },
+    Expr { expr: TExpr },
+    If { arms: Vec<(TExpr, Vec<TStmt>)>, else_body: Option<Vec<TStmt>> },
+}
+
+/// A typed parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TParam {
+    pub name: String,
+    pub tag: Option<TypeTag>,
+}
+
+/// A typed mapping/helper function — the unit the lowering pass compiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TFunc {
+    pub name: String,
+    pub params: Vec<TParam>,
+    pub body: Vec<TStmt>,
+}
+
+// ---------------------------------------------------------------------------
+// AST → typed ops (the text front-end desugars into the builder IR)
+// ---------------------------------------------------------------------------
+
+fn unsupported<T>(msg: impl Into<String>) -> Result<T, LowerError> {
+    Err(LowerError::Unsupported(msg.into()))
+}
+
+/// Desugar one parsed function into typed ops. Fails with
+/// [`LowerError::Unsupported`] for constructs outside the compiled
+/// subset (the caller then falls back to the tree-walking interpreter
+/// for that function, which still sees the original AST).
+pub fn desugar_func(f: &FuncDef) -> Result<TFunc, LowerError> {
+    let params = f
+        .params
+        .iter()
+        .map(|p| TParam {
+            name: p.name.clone(),
+            tag: match p.ty.as_deref() {
+                Some("Tuple") => Some(TypeTag::Tuple),
+                Some("int") => Some(TypeTag::Int),
+                _ => None,
+            },
+        })
+        .collect();
+    Ok(TFunc { name: f.name.clone(), params, body: desugar_block(&f.body)? })
+}
+
+fn desugar_block(body: &[Stmt]) -> Result<Vec<TStmt>, LowerError> {
+    body.iter().map(desugar_stmt).collect()
+}
+
+fn desugar_stmt(stmt: &Stmt) -> Result<TStmt, LowerError> {
+    Ok(match stmt {
+        Stmt::Assign { name, expr, .. } => {
+            TStmt::Assign { name: name.clone(), expr: desugar_expr(expr)? }
+        }
+        Stmt::Return { expr, .. } => TStmt::Return { expr: desugar_expr(expr)? },
+        Stmt::Expr { expr, .. } => TStmt::Expr { expr: desugar_expr(expr)? },
+        Stmt::If { arms, else_body, .. } => {
+            let mut t_arms = Vec::with_capacity(arms.len());
+            for (cond, body) in arms {
+                t_arms.push((desugar_expr(cond)?, desugar_block(body)?));
+            }
+            let t_else = match else_body {
+                Some(eb) => Some(desugar_block(eb)?),
+                None => None,
+            };
+            TStmt::If { arms: t_arms, else_body: t_else }
+        }
+    })
+}
+
+fn desugar_plain_args(args: &[Arg], what: &str) -> Result<Vec<TExpr>, LowerError> {
+    let mut out = Vec::with_capacity(args.len());
+    for a in args {
+        match a {
+            Arg::Plain(e) => out.push(desugar_expr(e)?),
+            Arg::Splat(_) => return unsupported(format!("splat in {what}")),
+        }
+    }
+    Ok(out)
+}
+
+fn desugar_expr(e: &Expr) -> Result<TExpr, LowerError> {
+    Ok(match e {
+        Expr::Int(v) => TExpr::Int(*v),
+        Expr::Str(s) => TExpr::Str(s.clone()),
+        Expr::Name(n) => TExpr::Name(n.clone()),
+        Expr::TupleLit(items) => {
+            TExpr::Tuple(items.iter().map(desugar_expr).collect::<Result<_, _>>()?)
+        }
+        Expr::Unary { op, inner } => {
+            TExpr::Unary { op: *op, inner: Box::new(desugar_expr(inner)?) }
+        }
+        Expr::Binary { op, lhs, rhs } => TExpr::Binary {
+            op: *op,
+            lhs: Box::new(desugar_expr(lhs)?),
+            rhs: Box::new(desugar_expr(rhs)?),
+        },
+        Expr::Ternary { cond, then, otherwise } => TExpr::Ternary {
+            cond: Box::new(desugar_expr(cond)?),
+            then: Box::new(desugar_expr(then)?),
+            otherwise: Box::new(desugar_expr(otherwise)?),
+        },
+        Expr::Call { func, args } => match Builtin::by_name(func) {
+            Some(which) => {
+                TExpr::Builtin { which, args: desugar_plain_args(args, "call arguments")? }
+            }
+            None => TExpr::Call {
+                func: func.clone(),
+                args: desugar_plain_args(args, "call arguments")?,
+            },
+        },
+        Expr::Method { recv, name, args } => {
+            let which = match name.as_str() {
+                "split" => SpaceMethod::Split,
+                "merge" => SpaceMethod::Merge,
+                "swap" => SpaceMethod::Swap,
+                "slice" => SpaceMethod::Slice,
+                "decompose" => SpaceMethod::Decompose,
+                other => return unsupported(format!("machine method '.{other}'")),
+            };
+            TExpr::Method {
+                recv: Box::new(desugar_expr(recv)?),
+                which,
+                args: desugar_plain_args(args, "method call")?,
+            }
+        }
+        Expr::Attr { recv, name } => {
+            let attr = match name.as_str() {
+                "size" => AttrName::Size,
+                "dim" => AttrName::Dim,
+                other => return unsupported(format!("attribute '.{other}'")),
+            };
+            TExpr::Attr { recv: Box::new(desugar_expr(recv)?), name: attr }
+        }
+        Expr::Index { recv, args } => {
+            if args.len() == 1 {
+                if let IndexArg::Slice { lo, hi } = &args[0] {
+                    let conv = |o: &Option<Expr>| -> Result<Option<Box<TExpr>>, LowerError> {
+                        Ok(match o {
+                            Some(e) => Some(Box::new(desugar_expr(e)?)),
+                            None => None,
+                        })
+                    };
+                    return Ok(TExpr::Slice {
+                        recv: Box::new(desugar_expr(recv)?),
+                        lo: conv(lo)?,
+                        hi: conv(hi)?,
+                    });
+                }
+            }
+            let mut t_args = Vec::with_capacity(args.len());
+            for a in args {
+                match a {
+                    IndexArg::Plain(e) => t_args.push(TIndex::Plain(desugar_expr(e)?)),
+                    IndexArg::Splat(e) => t_args.push(TIndex::Splat(desugar_expr(e)?)),
+                    IndexArg::Slice { .. } => {
+                        return unsupported("slice mixed with other index args")
+                    }
+                }
+            }
+            TExpr::Index { recv: Box::new(desugar_expr(recv)?), args: t_args }
+        }
+        Expr::TupleGen { elem, var, iter } => {
+            // Unrolled only over compile-time integer tuple literals
+            // ((0, 1), (0, 1, 2), ...) — which is the Fig 12 idiom.
+            let values = const_int_tuple(iter)
+                .ok_or_else(|| LowerError::Unsupported("generator over non-literal".into()))?;
+            TExpr::TupleGen { elem: Box::new(desugar_expr(elem)?), var: var.clone(), values }
+        }
+    })
+}
+
+/// Extract the integer values of a literal tuple expression, if it is one.
+fn const_int_tuple(e: &Expr) -> Option<Vec<i64>> {
+    let items = match e {
+        Expr::TupleLit(items) => items,
+        _ => return None,
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for it in items {
+        match it {
+            Expr::Int(v) => out.push(*v),
+            Expr::Unary { op: UnOp::Neg, inner } => match inner.as_ref() {
+                Expr::Int(v) => out.push(-v),
+                _ => return None,
+            },
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// typed ops → AST (only to instantiate the reference interpreter)
+// ---------------------------------------------------------------------------
+
+/// Convert a typed function back to AST form. Builder-made mappers use
+/// this solely to stand up the tree-walking oracle; lowering reads the
+/// typed ops directly.
+pub fn to_ast_func(f: &TFunc) -> FuncDef {
+    FuncDef {
+        name: f.name.clone(),
+        params: f
+            .params
+            .iter()
+            .map(|p| Param {
+                ty: match p.tag {
+                    Some(TypeTag::Tuple) => Some("Tuple".to_string()),
+                    Some(TypeTag::Int) => Some("int".to_string()),
+                    None => None,
+                },
+                name: p.name.clone(),
+            })
+            .collect(),
+        body: f.body.iter().map(to_ast_stmt).collect(),
+        line: 0,
+    }
+}
+
+fn to_ast_stmt(s: &TStmt) -> Stmt {
+    match s {
+        TStmt::Assign { name, expr } => {
+            Stmt::Assign { name: name.clone(), expr: to_ast_expr(expr), line: 0 }
+        }
+        TStmt::Return { expr } => Stmt::Return { expr: to_ast_expr(expr), line: 0 },
+        TStmt::Expr { expr } => Stmt::Expr { expr: to_ast_expr(expr), line: 0 },
+        TStmt::If { arms, else_body } => Stmt::If {
+            arms: arms
+                .iter()
+                .map(|(c, b)| (to_ast_expr(c), b.iter().map(to_ast_stmt).collect()))
+                .collect(),
+            else_body: else_body.as_ref().map(|eb| eb.iter().map(to_ast_stmt).collect()),
+            line: 0,
+        },
+    }
+}
+
+pub(crate) fn to_ast_expr(e: &TExpr) -> Expr {
+    let plain = |args: &[TExpr]| args.iter().map(|a| Arg::Plain(to_ast_expr(a))).collect();
+    match e {
+        TExpr::Int(v) => Expr::Int(*v),
+        TExpr::Str(s) => Expr::Str(s.clone()),
+        TExpr::Name(n) => Expr::Name(n.clone()),
+        TExpr::Tuple(items) => Expr::TupleLit(items.iter().map(to_ast_expr).collect()),
+        TExpr::Unary { op, inner } => {
+            Expr::Unary { op: *op, inner: Box::new(to_ast_expr(inner)) }
+        }
+        TExpr::Binary { op, lhs, rhs } => Expr::Binary {
+            op: *op,
+            lhs: Box::new(to_ast_expr(lhs)),
+            rhs: Box::new(to_ast_expr(rhs)),
+        },
+        TExpr::Ternary { cond, then, otherwise } => Expr::Ternary {
+            cond: Box::new(to_ast_expr(cond)),
+            then: Box::new(to_ast_expr(then)),
+            otherwise: Box::new(to_ast_expr(otherwise)),
+        },
+        TExpr::Call { func, args } => Expr::Call { func: func.clone(), args: plain(args) },
+        TExpr::Builtin { which, args } => {
+            Expr::Call { func: which.name().to_string(), args: plain(args) }
+        }
+        TExpr::Method { recv, which, args } => Expr::Method {
+            recv: Box::new(to_ast_expr(recv)),
+            name: which.name().to_string(),
+            args: plain(args),
+        },
+        TExpr::Attr { recv, name } => Expr::Attr {
+            recv: Box::new(to_ast_expr(recv)),
+            name: match name {
+                AttrName::Size => "size".to_string(),
+                AttrName::Dim => "dim".to_string(),
+            },
+        },
+        TExpr::Slice { recv, lo, hi } => Expr::Index {
+            recv: Box::new(to_ast_expr(recv)),
+            args: vec![IndexArg::Slice {
+                lo: lo.as_deref().map(to_ast_expr),
+                hi: hi.as_deref().map(to_ast_expr),
+            }],
+        },
+        TExpr::Index { recv, args } => Expr::Index {
+            recv: Box::new(to_ast_expr(recv)),
+            args: args
+                .iter()
+                .map(|a| match a {
+                    TIndex::Plain(e) => IndexArg::Plain(to_ast_expr(e)),
+                    TIndex::Splat(e) => IndexArg::Splat(to_ast_expr(e)),
+                })
+                .collect(),
+        },
+        TExpr::TupleGen { elem, var, values } => Expr::TupleGen {
+            elem: Box::new(to_ast_expr(elem)),
+            var: var.clone(),
+            iter: Box::new(Expr::TupleLit(values.iter().map(|&v| Expr::Int(v)).collect())),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the builder combinators
+// ---------------------------------------------------------------------------
+
+/// A value expression inside a mapping function under construction:
+/// wraps a [`TExpr`] and provides arithmetic / comparison / indexing
+/// combinators. Obtained from [`FnBuilder::ipoint`], [`FnBuilder::ispace`],
+/// [`MachineView::size`], literals via `VExpr::from(i64)`, etc.
+#[derive(Clone, Debug)]
+pub struct VExpr(pub(crate) TExpr);
+
+impl From<i64> for VExpr {
+    fn from(v: i64) -> VExpr {
+        VExpr(TExpr::Int(v))
+    }
+}
+
+impl From<&VExpr> for VExpr {
+    fn from(v: &VExpr) -> VExpr {
+        v.clone()
+    }
+}
+
+impl VExpr {
+    /// Integer literal.
+    pub fn int(v: i64) -> VExpr {
+        VExpr(TExpr::Int(v))
+    }
+
+    /// Tuple expression from element expressions.
+    pub fn tuple<I, E>(items: I) -> VExpr
+    where
+        I: IntoIterator<Item = E>,
+        E: Into<VExpr>,
+    {
+        VExpr(TExpr::Tuple(items.into_iter().map(|e| e.into().0).collect()))
+    }
+
+    /// Constant integer tuple `(a, b, ...)`.
+    pub fn ints<I: IntoIterator<Item = i64>>(items: I) -> VExpr {
+        VExpr(TExpr::Tuple(items.into_iter().map(TExpr::Int).collect()))
+    }
+
+    /// Tuple/element index `self[i]` (negative indices count from the end).
+    pub fn idx(&self, i: i64) -> VExpr {
+        self.idx_expr(VExpr::int(i))
+    }
+
+    /// Tuple/element index with a computed index expression.
+    pub fn idx_expr(&self, i: impl Into<VExpr>) -> VExpr {
+        VExpr(TExpr::Index {
+            recv: Box::new(self.0.clone()),
+            args: vec![TIndex::Plain(i.into().0)],
+        })
+    }
+
+    /// Python-style prefix slice `self[:hi]`.
+    pub fn slice_to(&self, hi: i64) -> VExpr {
+        VExpr(TExpr::Slice {
+            recv: Box::new(self.0.clone()),
+            lo: None,
+            hi: Some(Box::new(TExpr::Int(hi))),
+        })
+    }
+
+    /// Python-style suffix slice `self[lo:]`.
+    pub fn slice_from(&self, lo: i64) -> VExpr {
+        VExpr(TExpr::Slice {
+            recv: Box::new(self.0.clone()),
+            lo: Some(Box::new(TExpr::Int(lo))),
+            hi: None,
+        })
+    }
+
+    fn cmp(&self, op: BinOp, rhs: impl Into<VExpr>) -> VExpr {
+        VExpr(TExpr::Binary {
+            op,
+            lhs: Box::new(self.0.clone()),
+            rhs: Box::new(rhs.into().0),
+        })
+    }
+
+    pub fn cmp_eq(&self, rhs: impl Into<VExpr>) -> VExpr {
+        self.cmp(BinOp::Eq, rhs)
+    }
+
+    pub fn cmp_ne(&self, rhs: impl Into<VExpr>) -> VExpr {
+        self.cmp(BinOp::Ne, rhs)
+    }
+
+    pub fn cmp_lt(&self, rhs: impl Into<VExpr>) -> VExpr {
+        self.cmp(BinOp::Lt, rhs)
+    }
+
+    pub fn cmp_le(&self, rhs: impl Into<VExpr>) -> VExpr {
+        self.cmp(BinOp::Le, rhs)
+    }
+
+    pub fn cmp_gt(&self, rhs: impl Into<VExpr>) -> VExpr {
+        self.cmp(BinOp::Gt, rhs)
+    }
+
+    pub fn cmp_ge(&self, rhs: impl Into<VExpr>) -> VExpr {
+        self.cmp(BinOp::Ge, rhs)
+    }
+
+    /// C-style ternary on a boolean expression: `self ? then : otherwise`.
+    pub fn if_else(&self, then: impl Into<VExpr>, otherwise: impl Into<VExpr>) -> VExpr {
+        VExpr(TExpr::Ternary {
+            cond: Box::new(self.0.clone()),
+            then: Box::new(then.into().0),
+            otherwise: Box::new(otherwise.into().0),
+        })
+    }
+
+    fn builtin(which: Builtin, args: Vec<VExpr>) -> VExpr {
+        VExpr(TExpr::Builtin { which, args: args.into_iter().map(|a| a.0).collect() })
+    }
+
+    /// `prod(t)` — product of a tuple's components.
+    pub fn prod(t: impl Into<VExpr>) -> VExpr {
+        Self::builtin(Builtin::Prod, vec![t.into()])
+    }
+
+    /// `len(t)`.
+    pub fn len(t: impl Into<VExpr>) -> VExpr {
+        Self::builtin(Builtin::Len, vec![t.into()])
+    }
+
+    /// `abs(x)`.
+    pub fn abs(x: impl Into<VExpr>) -> VExpr {
+        Self::builtin(Builtin::Abs, vec![x.into()])
+    }
+
+    /// `min(...)` over ints and tuples.
+    pub fn min<I, E>(args: I) -> VExpr
+    where
+        I: IntoIterator<Item = E>,
+        E: Into<VExpr>,
+    {
+        Self::builtin(Builtin::Min, args.into_iter().map(Into::into).collect())
+    }
+
+    /// `max(...)` over ints and tuples.
+    pub fn max<I, E>(args: I) -> VExpr
+    where
+        I: IntoIterator<Item = E>,
+        E: Into<VExpr>,
+    {
+        Self::builtin(Builtin::Max, args.into_iter().map(Into::into).collect())
+    }
+
+    /// `linearize(point, extent)` — row-major linearization.
+    pub fn linearize(point: impl Into<VExpr>, extent: impl Into<VExpr>) -> VExpr {
+        Self::builtin(Builtin::Linearize, vec![point.into(), extent.into()])
+    }
+
+    /// `tuple(...)` builtin — flattens int and tuple arguments.
+    pub fn tuple_of<I, E>(args: I) -> VExpr
+    where
+        I: IntoIterator<Item = E>,
+        E: Into<VExpr>,
+    {
+        Self::builtin(Builtin::TupleOf, args.into_iter().map(Into::into).collect())
+    }
+
+    /// Call a user-defined function declared with [`MapperBuilder::def_fn`].
+    pub fn call<I, E>(func: &str, args: I) -> VExpr
+    where
+        I: IntoIterator<Item = E>,
+        E: Into<VExpr>,
+    {
+        VExpr(TExpr::Call {
+            func: func.to_string(),
+            args: args.into_iter().map(|a| a.into().0).collect(),
+        })
+    }
+}
+
+macro_rules! vexpr_binop {
+    ($trait:ident, $method:ident, $op:expr) => {
+        impl<R: Into<VExpr>> std::ops::$trait<R> for VExpr {
+            type Output = VExpr;
+            fn $method(self, rhs: R) -> VExpr {
+                VExpr(TExpr::Binary {
+                    op: $op,
+                    lhs: Box::new(self.0),
+                    rhs: Box::new(rhs.into().0),
+                })
+            }
+        }
+        impl<R: Into<VExpr>> std::ops::$trait<R> for &VExpr {
+            type Output = VExpr;
+            fn $method(self, rhs: R) -> VExpr {
+                VExpr(TExpr::Binary {
+                    op: $op,
+                    lhs: Box::new(self.0.clone()),
+                    rhs: Box::new(rhs.into().0),
+                })
+            }
+        }
+    };
+}
+
+vexpr_binop!(Add, add, BinOp::Add);
+vexpr_binop!(Sub, sub, BinOp::Sub);
+vexpr_binop!(Mul, mul, BinOp::Mul);
+vexpr_binop!(Div, div, BinOp::Div);
+vexpr_binop!(Rem, rem, BinOp::Mod);
+
+/// One operand of a multi-part space indexing: a single coordinate or a
+/// splatted tuple (`m[*upper, *lower]`).
+#[derive(Clone, Debug)]
+pub enum IdxPart {
+    One(VExpr),
+    Spread(VExpr),
+}
+
+impl IdxPart {
+    pub fn one(e: impl Into<VExpr>) -> IdxPart {
+        IdxPart::One(e.into())
+    }
+
+    pub fn spread(e: impl Into<VExpr>) -> IdxPart {
+        IdxPart::Spread(e.into())
+    }
+}
+
+/// A (possibly transformed) view of the machine's processors — the
+/// typed analogue of the DSL's `m = Machine(GPU)` object. Transformation
+/// combinators are *deferred*: they build typed ops that the lowering
+/// pass hoists into the once-per-launch prelude (or evaluates eagerly
+/// when registered as a global via [`MapperBuilder::view`]).
+#[derive(Clone, Debug)]
+pub struct MachineView {
+    expr: TExpr,
+}
+
+impl MachineView {
+    fn wrap(expr: TExpr) -> MachineView {
+        MachineView { expr }
+    }
+
+    fn method(&self, which: SpaceMethod, args: Vec<TExpr>) -> MachineView {
+        MachineView::wrap(TExpr::Method {
+            recv: Box::new(self.expr.clone()),
+            which,
+            args,
+        })
+    }
+
+    /// Fig 6 `split`: split dimension `dim` so its first factor is `d`.
+    pub fn split(&self, dim: usize, d: i64) -> MachineView {
+        self.method(SpaceMethod::Split, vec![TExpr::Int(dim as i64), TExpr::Int(d)])
+    }
+
+    /// Fig 6 `merge`: fuse dimensions `p` and `q`.
+    pub fn merge(&self, p: usize, q: usize) -> MachineView {
+        self.method(SpaceMethod::Merge, vec![TExpr::Int(p as i64), TExpr::Int(q as i64)])
+    }
+
+    /// Fig 6 `swap`: exchange dimensions `p` and `q`.
+    pub fn swap(&self, p: usize, q: usize) -> MachineView {
+        self.method(SpaceMethod::Swap, vec![TExpr::Int(p as i64), TExpr::Int(q as i64)])
+    }
+
+    /// Fig 6 `slice`: restrict dimension `dim` to `[low, high]`.
+    pub fn slice(&self, dim: usize, low: i64, high: i64) -> MachineView {
+        self.method(
+            SpaceMethod::Slice,
+            vec![TExpr::Int(dim as i64), TExpr::Int(low), TExpr::Int(high)],
+        )
+    }
+
+    /// The §4 decompose primitive: split dimension `dim` into
+    /// `task_dims.len()` dimensions, choosing the factorization that
+    /// minimizes the communication objective for the iteration extents
+    /// `task_dims` (typically the launch's `ispace`).
+    pub fn auto_split(&self, dim: usize, task_dims: impl Into<VExpr>) -> MachineView {
+        self.method(SpaceMethod::Decompose, vec![TExpr::Int(dim as i64), task_dims.into().0])
+    }
+
+    /// The shape tuple — the DSL's `m.size`.
+    pub fn size(&self) -> VExpr {
+        VExpr(TExpr::Attr { recv: Box::new(self.expr.clone()), name: AttrName::Size })
+    }
+
+    /// One shape component — the DSL's `m.size[i]`.
+    pub fn size_at(&self, i: i64) -> VExpr {
+        self.size().idx(i)
+    }
+
+    /// Dimensionality — the DSL's `m.dim`.
+    pub fn dim(&self) -> VExpr {
+        VExpr(TExpr::Attr { recv: Box::new(self.expr.clone()), name: AttrName::Dim })
+    }
+
+    /// Prefix of the shape tuple — the DSL's `m[:hi]` (Fig 12's
+    /// `ispace / m_4d[:-1]` idiom).
+    pub fn sizes_to(&self, hi: i64) -> VExpr {
+        VExpr(TExpr::Slice {
+            recv: Box::new(self.expr.clone()),
+            lo: None,
+            hi: Some(Box::new(TExpr::Int(hi))),
+        })
+    }
+
+    /// Index the view with one coordinate per dimension — the DSL's
+    /// `m[a, b, ...]`. Returns a processor-valued expression.
+    pub fn at<I, E>(&self, coords: I) -> VExpr
+    where
+        I: IntoIterator<Item = E>,
+        E: Into<VExpr>,
+    {
+        VExpr(TExpr::Index {
+            recv: Box::new(self.expr.clone()),
+            args: coords.into_iter().map(|c| TIndex::Plain(c.into().0)).collect(),
+        })
+    }
+
+    /// Index the view with a single splatted coordinate tuple — the
+    /// DSL's `m[*idx]`.
+    pub fn at_splat(&self, idx: impl Into<VExpr>) -> VExpr {
+        VExpr(TExpr::Index {
+            recv: Box::new(self.expr.clone()),
+            args: vec![TIndex::Splat(idx.into().0)],
+        })
+    }
+
+    /// Index the view with a mix of coordinates and splatted tuples —
+    /// the DSL's `m[*upper, *lower]`.
+    pub fn at_parts<I: IntoIterator<Item = IdxPart>>(&self, parts: I) -> VExpr {
+        VExpr(TExpr::Index {
+            recv: Box::new(self.expr.clone()),
+            args: parts
+                .into_iter()
+                .map(|p| match p {
+                    IdxPart::One(e) => TIndex::Plain(e.0),
+                    IdxPart::Spread(e) => TIndex::Splat(e.0),
+                })
+                .collect(),
+        })
+    }
+}
+
+/// Builds one mapping/helper function body. Obtained from
+/// [`MapperBuilder::def_fn`]; statements are recorded in call order.
+pub struct FnBuilder {
+    params: Vec<TParam>,
+    body: Vec<TStmt>,
+}
+
+impl FnBuilder {
+    /// The iteration-point parameter (first argument, a `Tuple`).
+    pub fn ipoint(&self) -> VExpr {
+        VExpr(TExpr::Name(self.params[0].name.clone()))
+    }
+
+    /// The iteration-space extent parameter (second argument, a `Tuple`).
+    pub fn ispace(&self) -> VExpr {
+        VExpr(TExpr::Name(self.params[1].name.clone()))
+    }
+
+    /// Extra parameter by position (helper functions only).
+    pub fn param(&self, i: usize) -> VExpr {
+        VExpr(TExpr::Name(self.params[i].name.clone()))
+    }
+
+    /// Bind `name = expr` as a local; returns a reference to it.
+    /// Locals whose expressions do not read `ipoint` are hoisted by the
+    /// lowering pass into the once-per-launch prelude.
+    pub fn bind(&mut self, name: &str, e: impl Into<VExpr>) -> VExpr {
+        self.body.push(TStmt::Assign { name: name.to_string(), expr: e.into().0 });
+        VExpr(TExpr::Name(name.to_string()))
+    }
+
+    /// Bind a transformed machine view as a local; returns a reference.
+    pub fn bind_view(&mut self, name: &str, v: MachineView) -> MachineView {
+        self.body.push(TStmt::Assign { name: name.to_string(), expr: v.expr });
+        MachineView::wrap(TExpr::Name(name.to_string()))
+    }
+
+    /// `return expr` — every control path must end in one.
+    pub fn ret(&mut self, e: impl Into<VExpr>) {
+        self.body.push(TStmt::Return { expr: e.into().0 });
+    }
+
+    /// A multi-armed `if`/`elif`/`else`. Each arm is `(condition, body)`;
+    /// bodies are built with nested [`FnBuilder`]s sharing the parameters.
+    pub fn branch(
+        &mut self,
+        arms: Vec<(VExpr, Vec<TStmt>)>,
+        else_body: Option<Vec<TStmt>>,
+    ) -> &mut Self {
+        self.body.push(TStmt::If {
+            arms: arms.into_iter().map(|(c, b)| (c.0, b)).collect(),
+            else_body,
+        });
+        self
+    }
+
+    /// Build a statement block for use inside [`FnBuilder::branch`].
+    pub fn block(&self, build: impl FnOnce(&mut FnBuilder)) -> Vec<TStmt> {
+        let mut inner = FnBuilder { params: self.params.clone(), body: Vec::new() };
+        build(&mut inner);
+        inner.body
+    }
+}
+
+/// The typed mapper-construction API: the Rust-embedded front-end that
+/// compiles directly into the same [`MappingPlan`] bytecode and
+/// [`MapperSpec`] directive tables as the `.mpl` text front-end.
+///
+/// # Example
+///
+/// The Fig 3 `block2D` mapper, authored from Rust:
+///
+/// ```
+/// use mapple::machine::point::{Rect, Tuple};
+/// use mapple::machine::topology::{MachineDesc, ProcKind};
+/// use mapple::mapple::build::MapperBuilder;
+///
+/// let mut desc = MachineDesc::paper_testbed(2);
+/// desc.gpus_per_node = 2;
+///
+/// let mut b = MapperBuilder::new(&desc);
+/// let m = b.machine("m", ProcKind::Gpu);
+/// b.def_fn("block2D", |f| {
+///     let idx = f.ipoint() * m.size() / f.ispace();
+///     f.ret(m.at_splat(idx));
+/// });
+/// b.index_task_map("matmul", "block2D");
+/// let spec = b.build().unwrap();
+///
+/// // Placements come from the same MappingPlan VM as text mappers.
+/// let dom = Rect::from_extent(&Tuple::from([6, 6]));
+/// let table = spec.plan_domain("matmul", &dom).unwrap();
+/// let p = table.get(&Tuple::from([2, 3])).unwrap();
+/// assert_eq!((p.node, p.local), (0, 1)); // Fig 3 spot check
+/// ```
+///
+/// Transformation primitives are first-class: `auto_split` (decompose)
+/// arguments may reference the per-launch `ispace`, and the lowering
+/// pass hoists such transforms into the once-per-launch prelude:
+///
+/// ```
+/// use mapple::machine::topology::{MachineDesc, ProcKind};
+/// use mapple::mapple::build::{MapperBuilder, VExpr};
+///
+/// let desc = MachineDesc::paper_testbed(4);
+/// let mut b = MapperBuilder::new(&desc);
+/// let m = b.machine("m", ProcKind::Gpu);
+/// b.def_fn("hier", |f| {
+///     let (p, s) = (f.ipoint(), f.ispace());
+///     let m3 = f.bind_view("m3", m.auto_split(0, s.clone()));
+///     let upper = p.idx(0) * m3.size_at(0) / s.idx(0);
+///     f.ret(m3.at([upper, p.idx(1) % m3.size_at(1), VExpr::int(0)]));
+/// });
+/// b.index_task_map("default", "hier");
+/// assert!(b.build().is_ok());
+/// ```
+pub struct MapperBuilder {
+    desc: MachineDesc,
+    globals: Vec<(String, TExpr)>,
+    funcs: Vec<TFunc>,
+    directives: Vec<DirectiveOp>,
+}
+
+impl MapperBuilder {
+    /// Start building a mapper bound to a machine description.
+    pub fn new(desc: &MachineDesc) -> MapperBuilder {
+        MapperBuilder {
+            desc: desc.clone(),
+            globals: Vec::new(),
+            funcs: Vec::new(),
+            directives: Vec::new(),
+        }
+    }
+
+    /// Declare the global `name = Machine(kind)` — the physical 2D
+    /// processor space `(nodes, procs_per_node)`.
+    pub fn machine(&mut self, name: &str, kind: ProcKind) -> MachineView {
+        self.globals.push((
+            name.to_string(),
+            TExpr::Builtin { which: Builtin::Machine, args: vec![TExpr::Str(kind.to_string())] },
+        ));
+        MachineView::wrap(TExpr::Name(name.to_string()))
+    }
+
+    /// Register a transformed view as a global binding (evaluated once
+    /// at build time, like a top-level `m_flat = m.merge(0, 1)`).
+    pub fn view(&mut self, name: &str, v: MachineView) -> MachineView {
+        self.globals.push((name.to_string(), v.expr));
+        MachineView::wrap(TExpr::Name(name.to_string()))
+    }
+
+    /// Define a mapping function `name(Tuple ipoint, Tuple ispace)`.
+    pub fn def_fn(&mut self, name: &str, build: impl FnOnce(&mut FnBuilder)) -> &mut Self {
+        self.def_fn_with(
+            name,
+            &[("ipoint", Some(TypeTag::Tuple)), ("ispace", Some(TypeTag::Tuple))],
+            build,
+        )
+    }
+
+    /// Define a helper function with explicit parameters.
+    pub fn def_fn_with(
+        &mut self,
+        name: &str,
+        params: &[(&str, Option<TypeTag>)],
+        build: impl FnOnce(&mut FnBuilder),
+    ) -> &mut Self {
+        let params: Vec<TParam> = params
+            .iter()
+            .map(|(n, tag)| TParam { name: n.to_string(), tag: *tag })
+            .collect();
+        let mut f = FnBuilder { params: params.clone(), body: Vec::new() };
+        build(&mut f);
+        self.funcs.push(TFunc { name: name.to_string(), params, body: f.body });
+        self
+    }
+
+    /// `IndexTaskMap task func` — index mapping for a task's launches.
+    /// The task name `"default"` is the fallback for unmapped tasks.
+    pub fn index_task_map(&mut self, task: &str, func: &str) -> &mut Self {
+        self.directives.push(DirectiveOp::IndexTaskMap {
+            task: task.to_string(),
+            func: func.to_string(),
+            line: None,
+        });
+        self
+    }
+
+    /// `TaskMap task KIND` — processor-kind selection.
+    pub fn task_map(&mut self, task: &str, kind: ProcKind) -> &mut Self {
+        self.directives.push(DirectiveOp::TaskMap { task: task.to_string(), kind, line: None });
+        self
+    }
+
+    /// `Region task argN KIND MEM` — memory placement for an argument.
+    pub fn region(&mut self, task: &str, arg: usize, kind: ProcKind, mem: MemKind) -> &mut Self {
+        self.directives.push(DirectiveOp::Region {
+            task: task.to_string(),
+            arg,
+            kind,
+            mem,
+            line: None,
+        });
+        self
+    }
+
+    /// `Layout task argN KIND props` — data layout constraints.
+    pub fn layout(
+        &mut self,
+        task: &str,
+        arg: usize,
+        kind: ProcKind,
+        props: LayoutProps,
+    ) -> &mut Self {
+        self.directives.push(DirectiveOp::Layout {
+            task: task.to_string(),
+            arg,
+            kind,
+            props,
+            line: None,
+        });
+        self
+    }
+
+    /// `GarbageCollect task argN` — eagerly collect the instance.
+    pub fn garbage_collect(&mut self, task: &str, arg: usize) -> &mut Self {
+        self.directives.push(DirectiveOp::GarbageCollect {
+            task: task.to_string(),
+            arg,
+            line: None,
+        });
+        self
+    }
+
+    /// `Backpressure task n` — limit in-flight launches of a task.
+    pub fn backpressure(&mut self, task: &str, limit: usize) -> &mut Self {
+        self.directives.push(DirectiveOp::Backpressure {
+            task: task.to_string(),
+            limit,
+            line: None,
+        });
+        self
+    }
+
+    /// Compile into a [`MapperSpec`]: globals are evaluated, typed
+    /// functions are lowered to [`MappingPlan`] bytecode, and directives
+    /// are assembled into the same tables the text front-end produces.
+    pub fn build(self) -> Result<MapperSpec, String> {
+        // The reference interpreter (oracle + fallback) is instantiated
+        // from an AST rendering of the typed ops; it also evaluates the
+        // global bindings that lowering folds into the constant pool.
+        let mut items = Vec::with_capacity(self.globals.len() + self.funcs.len());
+        for (name, expr) in &self.globals {
+            items.push(Item::Assign { name: name.clone(), expr: to_ast_expr(expr), line: 0 });
+        }
+        for f in &self.funcs {
+            items.push(Item::Def(to_ast_func(f)));
+        }
+        let prog = Program { items };
+        let interp = Interp::new(&prog, &self.desc).map_err(|e| e.to_string())?;
+        let typed: Vec<(String, Option<TFunc>)> =
+            self.funcs.into_iter().map(|f| (f.name.clone(), Some(f))).collect();
+        let module = lower::lower_funcs(typed, &interp);
+        let plan = MappingPlan::new(module);
+        MapperSpec::from_parts(interp, plan, self.directives)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::point::{Rect, Tuple};
+    use crate::mapple::parser::parse;
+
+    fn desc(nodes: usize, gpus: usize) -> MachineDesc {
+        let mut d = MachineDesc::paper_testbed(nodes);
+        d.gpus_per_node = gpus;
+        d
+    }
+
+    #[test]
+    fn desugar_roundtrips_through_ast() {
+        // desugar(to_ast(desugar(ast))) == desugar(ast) for a program
+        // covering every typed-op variant.
+        let src = "\
+m = Machine(GPU)
+def helper(Tuple p, int i):
+    return p[i]
+def f(Tuple p, Tuple s):
+    m2 = m.decompose(0, s)
+    g = s[0] > s[1] ? s[0] : s[1]
+    u = tuple(helper(p, i) % m2.size[i] for i in (0, 1))
+    head = m2[:-1]
+    if g == 0 and p[0] != 1:
+        return m2[*u, 0]
+    else:
+        return m2[u[0], u[-1], linearize(p, s) % m2.size[2]]
+";
+        let prog = parse(src).unwrap();
+        for f in prog.funcs() {
+            let typed = desugar_func(f).unwrap();
+            let back = to_ast_func(&typed);
+            let typed2 = desugar_func(&back).unwrap();
+            assert_eq!(typed, typed2, "{}", f.name);
+        }
+    }
+
+    #[test]
+    fn desugar_rejects_unsupported_constructs() {
+        let cases = [
+            // generator over a runtime iterable
+            "def f(Tuple p, Tuple s):\n    return tuple(p[i] for i in s)\n",
+            // splat in a call argument
+            "def f(Tuple p, Tuple s):\n    return prod(tuple(*p))\n",
+        ];
+        for src in cases {
+            let prog = parse(src).unwrap();
+            let f = prog.funcs().next().unwrap();
+            assert!(
+                matches!(desugar_func(f), Err(LowerError::Unsupported(_))),
+                "{src}"
+            );
+        }
+    }
+
+    #[test]
+    fn builder_block2d_matches_text_front_end() {
+        let d = desc(2, 2);
+        let mut b = MapperBuilder::new(&d);
+        let m = b.machine("m", ProcKind::Gpu);
+        b.def_fn("block2D", |f| {
+            let idx = f.ipoint() * m.size() / f.ispace();
+            f.ret(m.at_splat(idx));
+        });
+        b.index_task_map("matmul", "block2D");
+        b.task_map("init_cpu", ProcKind::Cpu);
+        b.region("matmul", 0, ProcKind::Gpu, MemKind::ZeroCopy);
+        b.garbage_collect("matmul", 2);
+        b.backpressure("matmul", 2);
+        let spec = b.build().unwrap();
+
+        let text = MapperSpec::compile(
+            "m = Machine(GPU)\n\
+             def block2D(Tuple ipoint, Tuple ispace):\n    \
+                 idx = ipoint * m.size / ispace\n    \
+                 return m[*idx]\n\
+             IndexTaskMap matmul block2D\n\
+             TaskMap init_cpu CPU\n\
+             Region matmul arg0 GPU ZCMEM\n\
+             GarbageCollect matmul arg2\n\
+             Backpressure matmul 2\n",
+            &d,
+        )
+        .unwrap();
+
+        assert!(spec.plan.supports("block2D"), "builder functions lower to bytecode");
+        let dom = Rect::from_extent(&Tuple::from([6, 6]));
+        assert_eq!(
+            spec.plan_domain("matmul", &dom).unwrap(),
+            text.plan_domain("matmul", &dom).unwrap()
+        );
+        assert_eq!(spec.index_task_maps, text.index_task_maps);
+        assert_eq!(spec.task_maps, text.task_maps);
+        assert_eq!(spec.regions, text.regions);
+        assert_eq!(spec.gc, text.gc);
+        assert_eq!(spec.backpressure, text.backpressure);
+    }
+
+    #[test]
+    fn builder_oracle_agrees_with_vm() {
+        let d = desc(4, 4);
+        let mut b = MapperBuilder::new(&d);
+        let m = b.machine("m", ProcKind::Gpu);
+        b.def_fn("hier", |f| {
+            let (p, s) = (f.ipoint(), f.ispace());
+            let m3 = f.bind_view("m3", m.auto_split(0, s.clone()));
+            let sub = f.bind("sub", (s.clone() + m3.sizes_to(-1) - 1i64) / m3.sizes_to(-1));
+            let m4 = f.bind_view("m4", m3.auto_split(2, sub));
+            let upper = VExpr::tuple([
+                p.idx(0) * m4.size_at(0) / s.idx(0),
+                p.idx(1) * m4.size_at(1) / s.idx(1),
+            ]);
+            let lower = VExpr::tuple([p.idx(0) % m4.size_at(2), p.idx(1) % m4.size_at(3)]);
+            f.ret(m4.at_parts([IdxPart::spread(upper), IdxPart::spread(lower)]));
+        });
+        b.index_task_map("default", "hier");
+        let spec = b.build().unwrap();
+        let ispace = Tuple::from([8, 8]);
+        let dom = Rect::from_extent(&ispace);
+        let table = spec.plan_domain("anytask", &dom).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for p in dom.points() {
+            let oracle = spec.map_point("anytask", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(oracle), "{p:?}");
+            seen.insert(oracle);
+        }
+        assert_eq!(seen.len(), 16, "all 16 GPUs used");
+    }
+
+    #[test]
+    fn builder_helpers_ternary_and_branches() {
+        let d = desc(2, 4);
+        let mut b = MapperBuilder::new(&d);
+        let m = b.machine("m", ProcKind::Gpu);
+        let m_flat = b.view("m_flat", m.merge(0, 1));
+        b.def_fn_with(
+            "pick",
+            &[("p", Some(TypeTag::Tuple)), ("i", Some(TypeTag::Int))],
+            |f| {
+                let (p, i) = (f.param(0), f.param(1));
+                f.ret(p.idx_expr(i));
+            },
+        );
+        b.def_fn("f", |f| {
+            let (p, s) = (f.ipoint(), f.ispace());
+            let g = f.bind("g", s.idx(0).cmp_gt(s.idx(1)).if_else(s.idx(0), s.idx(1)));
+            let lin = f.bind("lin", VExpr::call("pick", [p.clone(), VExpr::int(0)]) * g + p.idx(1));
+            let then = f.block(|f2| {
+                f2.ret(m_flat.at([VExpr::int(0)]));
+            });
+            let els = f.block(|f2| {
+                let lin2 = f2.ipoint().idx(0) + f2.ipoint().idx(1);
+                f2.ret(m_flat.at([(lin2 + lin.clone()) % m_flat.size_at(0)]));
+            });
+            f.branch(vec![(lin.cmp_eq(0i64), then)], Some(els));
+        });
+        b.index_task_map("default", "f");
+        let spec = b.build().unwrap();
+        let ispace = Tuple::from([3, 5]);
+        let dom = Rect::from_extent(&ispace);
+        let table = spec.plan_domain("t", &dom).unwrap();
+        for p in dom.points() {
+            let oracle = spec.map_point("t", &p, &ispace).unwrap();
+            assert_eq!(table.get(&p), Some(oracle), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn builder_duplicate_directives_rejected() {
+        let d = desc(2, 2);
+        let mut b = MapperBuilder::new(&d);
+        let m = b.machine("m", ProcKind::Gpu);
+        b.def_fn("f", |f| {
+            f.ret(m.at([0i64, 0]));
+        });
+        b.index_task_map("t", "f");
+        b.index_task_map("t", "f");
+        let e = b.build().unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn builder_undefined_mapping_fn_rejected() {
+        let d = desc(2, 2);
+        let mut b = MapperBuilder::new(&d);
+        b.index_task_map("t", "nosuch");
+        let e = b.build().unwrap_err();
+        assert!(e.contains("undefined function"), "{e}");
+    }
+
+    #[test]
+    fn builder_transform_chain_matches_direct_space() {
+        // split/merge/swap/slice chains in the builder index exactly like
+        // the eagerly transformed ProcSpace.
+        use crate::machine::space::ProcSpace;
+        let d = desc(4, 4);
+        let space = ProcSpace::machine(&d, ProcKind::Gpu)
+            .split(0, 2)
+            .unwrap()
+            .swap(0, 2)
+            .unwrap()
+            .merge(1, 2)
+            .unwrap();
+        let mut b = MapperBuilder::new(&d);
+        let m = b.machine("m", ProcKind::Gpu);
+        let mt = b.view("mt", m.split(0, 2).swap(0, 2).merge(1, 2));
+        b.def_fn("f", |f| {
+            let p = f.ipoint();
+            f.ret(mt.at([p.idx(0) % mt.size_at(0), p.idx(1) % mt.size_at(1)]));
+        });
+        b.index_task_map("default", "f");
+        let spec = b.build().unwrap();
+        let ispace = Tuple::from([7, 9]);
+        let dom = Rect::from_extent(&ispace);
+        let table = spec.plan_domain("t", &dom).unwrap();
+        let sizes = space.size().clone();
+        for p in dom.points() {
+            let want = space
+                .index(&Tuple::from([p[0].rem_euclid(sizes[0]), p[1].rem_euclid(sizes[1])]))
+                .unwrap();
+            assert_eq!(table.get(&p), Some(want), "{p:?}");
+        }
+    }
+}

@@ -1,10 +1,17 @@
-//! Lowering pass: Mapple mapping functions → `MappingPlan` bytecode.
+//! Lowering pass: typed mapping ops → `MappingPlan` bytecode.
 //!
 //! The tree-walking [`super::interp::Interp`] is the reference semantics;
-//! this pass compiles each function body into a compact register-based
+//! this pass compiles each function into a compact register-based
 //! instruction sequence (one [`FuncCode`] per function) that the VM in
-//! [`super::vm`] evaluates without re-entering the AST. Three properties
-//! make the compiled form fast on the per-launch hot path:
+//! [`super::vm`] evaluates without re-entering the AST.
+//!
+//! Lowering consumes the **typed ops** of [`super::build`] ([`TFunc`] /
+//! [`TStmt`] / [`TExpr`]) — the single construction IR shared by both
+//! front-ends. Text mappers reach it through [`lower`], which desugars
+//! the parsed AST per function; Rust-authored mappers
+//! (`build::MapperBuilder`) hand their typed ops to [`lower_funcs`]
+//! directly. Three properties make the compiled form fast on the
+//! per-launch hot path:
 //!
 //! 1. **Loop-invariant prelude.** A mapping function is invoked once per
 //!    iteration point with `(ipoint, ispace)`; within one launch `ispace`
@@ -24,16 +31,20 @@
 //! Lowering is *best-effort*: any construct outside the supported subset
 //! (e.g. a `tuple(... for v in xs)` generator over a non-literal
 //! iterable, or a read of a conditionally assigned variable) fails with
-//! [`LowerError::Unsupported`], and the caller falls back to the tree
-//! walker for that function. Every shipped mapper in `mappers/*.mpl`
-//! lowers fully; `rust/tests/differential.rs` proves bytecode ≡ tree
-//! walker placements point-for-point.
+//! [`LowerError::Unsupported`] — either at desugar time or here — and
+//! the caller falls back to the tree walker for that function. Every
+//! shipped mapper in `mappers/*.mpl` lowers fully;
+//! `rust/tests/differential.rs` proves bytecode ≡ tree walker placements
+//! point-for-point.
 
-use super::ast::{Arg, BinOp, Expr, FuncDef, IndexArg, Program, Stmt, UnOp};
+use super::ast::{BinOp, Program, UnOp};
+use super::build::{self, TExpr, TFunc, TIndex, TStmt};
 use super::interp::Interp;
 use super::value::{arith, Value};
-use crate::machine::topology::{MachineDesc, ProcKind};
+use crate::machine::topology::MachineDesc;
 use std::collections::{HashMap, HashSet};
+
+pub use super::build::{AttrName, Builtin, SpaceMethod, TypeTag};
 
 /// Why a function could not be lowered.
 #[derive(Debug, Clone)]
@@ -58,36 +69,6 @@ type LResult<T> = Result<T, LowerError>;
 
 fn unsupported<T>(msg: impl Into<String>) -> LResult<T> {
     Err(LowerError::Unsupported(msg.into()))
-}
-
-/// Attribute reads supported on values (`m.size`, `m.dim`, `t.dim`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum AttrName {
-    Size,
-    Dim,
-}
-
-/// Machine-space transformation methods (Fig 6 + decompose).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SpaceMethod {
-    Split,
-    Merge,
-    Swap,
-    Slice,
-    Decompose,
-}
-
-/// Built-in functions of the DSL.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Builtin {
-    Machine,
-    TupleOf,
-    Len,
-    Abs,
-    Min,
-    Max,
-    Prod,
-    Linearize,
 }
 
 /// One indexing operand: a plain coordinate register or a splatted tuple.
@@ -154,13 +135,6 @@ impl Op {
     }
 }
 
-/// Advisory parameter type tags (mirrors the interpreter's checks).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum TypeTag {
-    Tuple,
-    Int,
-}
-
 /// Compiled code for one function.
 #[derive(Clone, Debug)]
 pub struct FuncCode {
@@ -192,7 +166,7 @@ pub struct Module {
 
 impl Module {
     /// Index of a fully lowered function (transitively: every function it
-    /// calls is lowered too — guaranteed by the fixpoint in [`lower`]).
+    /// calls is lowered too — guaranteed by the fixpoint in [`lower_funcs`]).
     pub fn func_index(&self, name: &str) -> Option<usize> {
         let idx = *self.by_name.get(name)?;
         if self.funcs[idx].is_some() {
@@ -216,19 +190,32 @@ impl Module {
     }
 }
 
-/// Lower every function of a parsed program. Globals must already be
+/// Lower every function of a parsed program: the text front-end desugars
+/// each AST function into the typed ops of [`super::build`], then shares
+/// [`lower_funcs`] with the Rust builder. Globals must already be
 /// evaluated — they are read from the bound interpreter, which is also
 /// the reference the VM is differentially tested against.
 pub fn lower(prog: &Program, interp: &Interp) -> Module {
-    let defs: Vec<&FuncDef> = prog.funcs().collect();
+    let funcs: Vec<(String, Option<TFunc>)> = prog
+        .funcs()
+        .map(|f| (f.name.clone(), build::desugar_func(f).ok()))
+        .collect();
+    lower_funcs(funcs, interp)
+}
+
+/// Lower typed functions into a [`Module`] — the single IR-emission
+/// entry point both front-ends feed. A `None` slot marks a function the
+/// desugaring step already rejected (interp fallback); functions that
+/// fail lowering here join them, as do (by fixpoint) their callers.
+pub fn lower_funcs(defs: Vec<(String, Option<TFunc>)>, interp: &Interp) -> Module {
     let mut by_name = HashMap::new();
-    for (i, f) in defs.iter().enumerate() {
-        by_name.insert(f.name.clone(), i);
+    for (i, (name, _)) in defs.iter().enumerate() {
+        by_name.insert(name.clone(), i);
     }
     let mut ctx = Ctx { interp, func_ids: &by_name, consts: Vec::new() };
     let mut funcs: Vec<Option<FuncCode>> = Vec::with_capacity(defs.len());
-    for f in &defs {
-        funcs.push(lower_func(f, &mut ctx).ok());
+    for (_, tf) in &defs {
+        funcs.push(tf.as_ref().and_then(|f| lower_func(f, &mut ctx).ok()));
     }
     // Fixpoint: a function calling an unlowered function is unlowered.
     loop {
@@ -273,7 +260,7 @@ impl Ctx<'_> {
     fn named_value(&self, name: &str) -> Option<Value> {
         if let Some(v) = self.interp.global_value(name) {
             Some(v.clone())
-        } else if ProcKind::parse(name).is_ok() {
+        } else if crate::machine::topology::ProcKind::parse(name).is_ok() {
             Some(Value::Str(name.to_string()))
         } else {
             None
@@ -281,7 +268,7 @@ impl Ctx<'_> {
     }
 }
 
-fn lower_func(f: &FuncDef, ctx: &mut Ctx<'_>) -> LResult<FuncCode> {
+fn lower_func(f: &TFunc, ctx: &mut Ctx<'_>) -> LResult<FuncCode> {
     let mut fl = FnLowerer {
         ctx,
         vars: HashMap::new(),
@@ -297,11 +284,7 @@ fn lower_func(f: &FuncDef, ctx: &mut Ctx<'_>) -> LResult<FuncCode> {
     for p in &f.params {
         let reg = fl.alloc()?;
         fl.vars.insert(p.name.clone(), Var { reg, definite: true });
-        param_types.push(match p.ty.as_deref() {
-            Some("Tuple") => Some(TypeTag::Tuple),
-            Some("int") => Some(TypeTag::Int),
-            _ => None,
-        });
+        param_types.push(p.tag);
     }
     // Split the body: the maximal prefix of assignments that never read
     // the first parameter (the iteration point) is hoisted into the
@@ -312,7 +295,7 @@ fn lower_func(f: &FuncDef, ctx: &mut Ctx<'_>) -> LResult<FuncCode> {
         tainted.insert(point.name.clone());
         for stmt in &f.body {
             match stmt {
-                Stmt::Assign { name, expr, .. } => {
+                TStmt::Assign { name, expr } => {
                     // Reassigning the point parameter cannot be hoisted:
                     // the per-point driver rewrites its register.
                     if name == &point.name {
@@ -439,9 +422,9 @@ impl FnLowerer<'_, '_> {
 
     // ---- statements -------------------------------------------------------
 
-    fn lower_stmt(&mut self, stmt: &Stmt) -> LResult<()> {
+    fn lower_stmt(&mut self, stmt: &TStmt) -> LResult<()> {
         match stmt {
-            Stmt::Assign { name, expr, .. } => {
+            TStmt::Assign { name, expr } => {
                 let src = self.lower_expr(expr)?;
                 match self.vars.get(name).copied() {
                     Some(v) => {
@@ -456,16 +439,16 @@ impl FnLowerer<'_, '_> {
                 }
                 Ok(())
             }
-            Stmt::Return { expr, .. } => {
+            TStmt::Return { expr } => {
                 let src = self.lower_expr(expr)?;
                 self.emit(Op::Ret { src });
                 Ok(())
             }
-            Stmt::Expr { expr, .. } => {
+            TStmt::Expr { expr } => {
                 let _ = self.lower_expr(expr)?;
                 Ok(())
             }
-            Stmt::If { arms, else_body, .. } => {
+            TStmt::If { arms, else_body } => {
                 let before: HashMap<String, Var> = self.vars.clone();
                 let mut arm_defs: Vec<HashMap<String, Var>> = Vec::new();
                 let mut end_jumps: Vec<usize> = Vec::new();
@@ -533,12 +516,12 @@ impl FnLowerer<'_, '_> {
 
     // ---- expressions ------------------------------------------------------
 
-    fn lower_expr(&mut self, e: &Expr) -> LResult<u16> {
+    fn lower_expr(&mut self, e: &TExpr) -> LResult<u16> {
         match e {
-            Expr::Int(v) => self.int_const(*v),
-            Expr::Str(s) => self.value_const(Value::Str(s.clone())),
-            Expr::Name(n) => self.lower_name(n),
-            Expr::TupleLit(items) => {
+            TExpr::Int(v) => self.int_const(*v),
+            TExpr::Str(s) => self.value_const(Value::Str(s.clone())),
+            TExpr::Name(n) => self.lower_name(n),
+            TExpr::Tuple(items) => {
                 let mut elems = Vec::with_capacity(items.len());
                 for it in items {
                     elems.push(self.lower_expr(it)?);
@@ -551,7 +534,7 @@ impl FnLowerer<'_, '_> {
                 self.emit(Op::TupleNew { dst, elems });
                 Ok(dst)
             }
-            Expr::Unary { op, inner } => {
+            TExpr::Unary { op, inner } => {
                 let src = self.lower_expr(inner)?;
                 let known_int = match self.known.get(&src) {
                     Some(Value::Int(v)) => Some(*v),
@@ -567,7 +550,7 @@ impl FnLowerer<'_, '_> {
                 }
                 Ok(dst)
             }
-            Expr::Binary { op, lhs, rhs } => match op {
+            TExpr::Binary { op, lhs, rhs } => match op {
                 BinOp::And | BinOp::Or => self.lower_shortcircuit(*op, lhs, rhs),
                 _ => {
                     let l = self.lower_expr(lhs)?;
@@ -592,7 +575,7 @@ impl FnLowerer<'_, '_> {
                     Ok(dst)
                 }
             },
-            Expr::Ternary { cond, then, otherwise } => {
+            TExpr::Ternary { cond, then, otherwise } => {
                 let c = self.lower_expr(cond)?;
                 let dst = self.alloc()?;
                 let br = self.here();
@@ -607,69 +590,75 @@ impl FnLowerer<'_, '_> {
                 self.patch_jump(jend);
                 Ok(dst)
             }
-            Expr::Call { func, args } => self.lower_call(func, args),
-            Expr::Method { recv, name, args } => {
-                let r = self.lower_expr(recv)?;
-                let which = match name.as_str() {
-                    "split" => SpaceMethod::Split,
-                    "merge" => SpaceMethod::Merge,
-                    "swap" => SpaceMethod::Swap,
-                    "slice" => SpaceMethod::Slice,
-                    "decompose" => SpaceMethod::Decompose,
-                    other => return unsupported(format!("machine method '.{other}'")),
-                };
+            TExpr::Call { func, args } => {
                 let mut regs = Vec::with_capacity(args.len());
                 for a in args {
-                    match a {
-                        Arg::Plain(e) => regs.push(self.lower_expr(e)?),
-                        Arg::Splat(_) => return unsupported("splat in method call"),
+                    regs.push(self.lower_expr(a)?);
+                }
+                let idx = match self.ctx.func_ids.get(func) {
+                    Some(&i) => i,
+                    None => {
+                        return Err(LowerError::Invalid(format!("undefined function '{func}'")))
                     }
+                };
+                if !self.calls.contains(&idx) {
+                    self.calls.push(idx);
                 }
                 let dst = self.alloc()?;
-                self.emit(Op::Method { dst, recv: r, which, args: regs });
+                self.emit(Op::Call { dst, func: idx as u16, args: regs });
                 Ok(dst)
             }
-            Expr::Attr { recv, name } => {
+            TExpr::Builtin { which, args } => {
+                let mut regs = Vec::with_capacity(args.len());
+                for a in args {
+                    regs.push(self.lower_expr(a)?);
+                }
+                let dst = self.alloc()?;
+                self.emit(Op::Builtin { dst, which: *which, args: regs });
+                Ok(dst)
+            }
+            TExpr::Method { recv, which, args } => {
                 let r = self.lower_expr(recv)?;
-                let attr = match name.as_str() {
-                    "size" => AttrName::Size,
-                    "dim" => AttrName::Dim,
-                    other => return unsupported(format!("attribute '.{other}'")),
-                };
+                let mut regs = Vec::with_capacity(args.len());
+                for a in args {
+                    regs.push(self.lower_expr(a)?);
+                }
+                let dst = self.alloc()?;
+                self.emit(Op::Method { dst, recv: r, which: *which, args: regs });
+                Ok(dst)
+            }
+            TExpr::Attr { recv, name } => {
+                let r = self.lower_expr(recv)?;
                 // Fold attributes of known constants (`m.size`).
-                let folded = self.known.get(&r).and_then(|v| eval_attr(v, attr).ok());
+                let folded = self.known.get(&r).and_then(|v| eval_attr(v, *name).ok());
                 if let Some(f) = folded {
                     return self.value_const(f);
                 }
                 let dst = self.alloc()?;
-                self.emit(Op::Attr { dst, src: r, name: attr });
+                self.emit(Op::Attr { dst, src: r, name: *name });
                 Ok(dst)
             }
-            Expr::Index { recv, args } => {
+            TExpr::Slice { recv, lo, hi } => {
                 let r = self.lower_expr(recv)?;
-                if args.len() == 1 {
-                    if let IndexArg::Slice { lo, hi } = &args[0] {
-                        let lo_r = match lo {
-                            Some(e) => Some(self.lower_expr(e)?),
-                            None => None,
-                        };
-                        let hi_r = match hi {
-                            Some(e) => Some(self.lower_expr(e)?),
-                            None => None,
-                        };
-                        let dst = self.alloc()?;
-                        self.emit(Op::SliceIdx { dst, recv: r, lo: lo_r, hi: hi_r });
-                        return Ok(dst);
-                    }
-                }
+                let lo_r = match lo {
+                    Some(e) => Some(self.lower_expr(e)?),
+                    None => None,
+                };
+                let hi_r = match hi {
+                    Some(e) => Some(self.lower_expr(e)?),
+                    None => None,
+                };
+                let dst = self.alloc()?;
+                self.emit(Op::SliceIdx { dst, recv: r, lo: lo_r, hi: hi_r });
+                Ok(dst)
+            }
+            TExpr::Index { recv, args } => {
+                let r = self.lower_expr(recv)?;
                 let mut srcs = Vec::with_capacity(args.len());
                 for a in args {
                     match a {
-                        IndexArg::Plain(e) => srcs.push(IndexSrc::Reg(self.lower_expr(e)?)),
-                        IndexArg::Splat(e) => srcs.push(IndexSrc::Splat(self.lower_expr(e)?)),
-                        IndexArg::Slice { .. } => {
-                            return unsupported("slice mixed with other index args")
-                        }
+                        TIndex::Plain(e) => srcs.push(IndexSrc::Reg(self.lower_expr(e)?)),
+                        TIndex::Splat(e) => srcs.push(IndexSrc::Splat(self.lower_expr(e)?)),
                     }
                 }
                 // Fold constant-tuple[constant-int] (`m_flat.size[0]`).
@@ -699,16 +688,13 @@ impl FnLowerer<'_, '_> {
                 self.emit(Op::Index { dst, recv: r, args: srcs });
                 Ok(dst)
             }
-            Expr::TupleGen { elem, var, iter } => {
-                // Unrolled only over compile-time integer tuple literals
-                // ((0, 1), (0, 1, 2), ...) — which is the Fig 12 idiom.
-                let values = const_int_tuple(iter)
-                    .ok_or_else(|| LowerError::Unsupported("generator over non-literal".into()))?;
+            TExpr::TupleGen { elem, var, values } => {
+                // Unrolled over the literal iteration domain (Fig 12 idiom).
                 let var_reg = self.alloc()?;
                 let shadowed = self.vars.insert(var.clone(), Var { reg: var_reg, definite: true });
                 let mut elems = Vec::with_capacity(values.len());
                 let mut result = Ok(());
-                for v in values {
+                for &v in values {
                     self.emit(Op::IConst { dst: var_reg, v });
                     match self.lower_expr(elem) {
                         Ok(r) => elems.push(r),
@@ -757,7 +743,7 @@ impl FnLowerer<'_, '_> {
         }
     }
 
-    fn lower_shortcircuit(&mut self, op: BinOp, lhs: &Expr, rhs: &Expr) -> LResult<u16> {
+    fn lower_shortcircuit(&mut self, op: BinOp, lhs: &TExpr, rhs: &TExpr) -> LResult<u16> {
         let dst = self.alloc()?;
         let l = self.lower_expr(lhs)?;
         match op {
@@ -787,41 +773,6 @@ impl FnLowerer<'_, '_> {
         }
         Ok(dst)
     }
-
-    fn lower_call(&mut self, func: &str, args: &[Arg]) -> LResult<u16> {
-        let builtin = match func {
-            "Machine" => Some(Builtin::Machine),
-            "tuple" => Some(Builtin::TupleOf),
-            "len" => Some(Builtin::Len),
-            "abs" => Some(Builtin::Abs),
-            "min" => Some(Builtin::Min),
-            "max" => Some(Builtin::Max),
-            "prod" => Some(Builtin::Prod),
-            "linearize" => Some(Builtin::Linearize),
-            _ => None,
-        };
-        let mut regs = Vec::with_capacity(args.len());
-        for a in args {
-            match a {
-                Arg::Plain(e) => regs.push(self.lower_expr(e)?),
-                Arg::Splat(_) => return unsupported("splat in call arguments"),
-            }
-        }
-        let dst = self.alloc()?;
-        if let Some(which) = builtin {
-            self.emit(Op::Builtin { dst, which, args: regs });
-            return Ok(dst);
-        }
-        let idx = match self.ctx.func_ids.get(func) {
-            Some(&i) => i,
-            None => return Err(LowerError::Invalid(format!("undefined function '{func}'"))),
-        };
-        if !self.calls.contains(&idx) {
-            self.calls.push(idx);
-        }
-        self.emit(Op::Call { dst, func: idx as u16, args: regs });
-        Ok(dst)
-    }
 }
 
 fn eval_attr(v: &Value, attr: AttrName) -> Result<Value, String> {
@@ -834,83 +785,59 @@ fn eval_attr(v: &Value, attr: AttrName) -> Result<Value, String> {
     }
 }
 
-/// Extract the integer values of a literal tuple expression, if it is one.
-fn const_int_tuple(e: &Expr) -> Option<Vec<i64>> {
-    let items = match e {
-        Expr::TupleLit(items) => items,
-        _ => return None,
-    };
-    let mut out = Vec::with_capacity(items.len());
-    for it in items {
-        match it {
-            Expr::Int(v) => out.push(*v),
-            Expr::Unary { op: UnOp::Neg, inner } => match inner.as_ref() {
-                Expr::Int(v) => out.push(-v),
-                _ => return None,
-            },
-            _ => return None,
-        }
-    }
-    Some(out)
-}
-
-/// Collect variable names an expression reads (generator vars excluded
-/// within their element expression).
-fn expr_reads(e: &Expr, out: &mut HashSet<String>) {
+/// Collect variable names a typed expression reads (generator vars
+/// excluded within their element expression).
+fn expr_reads(e: &TExpr, out: &mut HashSet<String>) {
     match e {
-        Expr::Int(_) | Expr::Str(_) => {}
-        Expr::Name(n) => {
+        TExpr::Int(_) | TExpr::Str(_) => {}
+        TExpr::Name(n) => {
             out.insert(n.clone());
         }
-        Expr::TupleLit(items) => {
+        TExpr::Tuple(items) => {
             for it in items {
                 expr_reads(it, out);
             }
         }
-        Expr::Unary { inner, .. } => expr_reads(inner, out),
-        Expr::Binary { lhs, rhs, .. } => {
+        TExpr::Unary { inner, .. } => expr_reads(inner, out),
+        TExpr::Binary { lhs, rhs, .. } => {
             expr_reads(lhs, out);
             expr_reads(rhs, out);
         }
-        Expr::Ternary { cond, then, otherwise } => {
+        TExpr::Ternary { cond, then, otherwise } => {
             expr_reads(cond, out);
             expr_reads(then, out);
             expr_reads(otherwise, out);
         }
-        Expr::Call { args, .. } => {
+        TExpr::Call { args, .. } | TExpr::Builtin { args, .. } => {
             for a in args {
-                match a {
-                    Arg::Plain(x) | Arg::Splat(x) => expr_reads(x, out),
-                }
+                expr_reads(a, out);
             }
         }
-        Expr::Method { recv, args, .. } => {
+        TExpr::Method { recv, args, .. } => {
+            expr_reads(recv, out);
+            for a in args {
+                expr_reads(a, out);
+            }
+        }
+        TExpr::Attr { recv, .. } => expr_reads(recv, out),
+        TExpr::Slice { recv, lo, hi } => {
+            expr_reads(recv, out);
+            if let Some(x) = lo {
+                expr_reads(x, out);
+            }
+            if let Some(x) = hi {
+                expr_reads(x, out);
+            }
+        }
+        TExpr::Index { recv, args } => {
             expr_reads(recv, out);
             for a in args {
                 match a {
-                    Arg::Plain(x) | Arg::Splat(x) => expr_reads(x, out),
+                    TIndex::Plain(x) | TIndex::Splat(x) => expr_reads(x, out),
                 }
             }
         }
-        Expr::Attr { recv, .. } => expr_reads(recv, out),
-        Expr::Index { recv, args } => {
-            expr_reads(recv, out);
-            for a in args {
-                match a {
-                    IndexArg::Plain(x) | IndexArg::Splat(x) => expr_reads(x, out),
-                    IndexArg::Slice { lo, hi } => {
-                        if let Some(x) = lo {
-                            expr_reads(x, out);
-                        }
-                        if let Some(x) = hi {
-                            expr_reads(x, out);
-                        }
-                    }
-                }
-            }
-        }
-        Expr::TupleGen { elem, var, iter } => {
-            expr_reads(iter, out);
+        TExpr::TupleGen { elem, var, .. } => {
             let mut inner = HashSet::new();
             expr_reads(elem, &mut inner);
             inner.remove(var);

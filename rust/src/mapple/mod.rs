@@ -1,21 +1,30 @@
 //! The Mapple DSL front-end (paper §2–§5).
 //!
-//! Pipeline: source text → [`token::lex`] → [`parser::parse`] →
-//! [`lower::lower`] (bytecode, bound to a [`crate::machine::MachineDesc`])
-//! → [`vm::MappingPlan`] (batched per-launch evaluation) →
-//! [`program::MapperSpec`] (directive tables + plan). The mapper
-//! translation layer (`crate::mapper::translate`) then adapts a
-//! `MapperSpec` to the low-level 19-callback mapper interface, mirroring
-//! how the paper translates Mapple into Legion's C++ mapping interface —
-//! but batched: one [`vm::PlacementTable`] per launch domain instead of a
-//! tree-walk per iteration point.
+//! Two front-ends share one construction seam — the **typed ops** of
+//! [`build`]:
+//!
+//! * text: source → [`token::lex`] → [`parser::parse`] → AST →
+//!   *desugar* ([`build::desugar_func`], `program::DirectiveOp::from_ast`)
+//! * Rust: [`build::MapperBuilder`] combinators (typed transformation
+//!   primitives: `split`/`merge`/`swap`/`slice`/`auto_split`)
+//!
+//! From typed ops, [`lower::lower_funcs`] emits `MappingPlan` bytecode
+//! (bound to a [`crate::machine::MachineDesc`]), [`vm::MappingPlan`]
+//! evaluates whole launch domains batched, and
+//! [`program::MapperSpec::from_parts`] assembles the directive tables.
+//! The mapper translation layer (`crate::mapper::translate`) then adapts
+//! a `MapperSpec` to the low-level 19-callback mapper interface,
+//! mirroring how the paper translates Mapple into Legion's C++ mapping
+//! interface — but batched: one [`vm::PlacementTable`] per launch domain
+//! instead of a tree-walk per iteration point.
 //!
 //! The tree-walking [`interp::Interp`] remains as the reference oracle:
 //! functions outside the compiled subset fall back to it, and
-//! `rust/tests/differential.rs` checks VM ≡ interpreter placements for
-//! every shipped mapper.
+//! `rust/tests/differential.rs` + `rust/tests/builder_text_equiv.rs`
+//! check VM ≡ interpreter and builder ≡ text for every shipped mapper.
 
 pub mod ast;
+pub mod build;
 pub mod interp;
 pub mod lower;
 pub mod parser;
@@ -24,8 +33,9 @@ pub mod token;
 pub mod value;
 pub mod vm;
 
+pub use build::{MachineView, MapperBuilder, VExpr};
 pub use interp::Interp;
 pub use lower::{lower, Module};
 pub use parser::parse;
-pub use program::{LayoutProps, MapperSpec};
+pub use program::{DirectiveOp, LayoutProps, MapperSpec};
 pub use vm::{MappingPlan, PlacementTable};

@@ -5,6 +5,14 @@
 //! to (IndexTaskMap), *which processor kind* runs it (TaskMap), *where*
 //! each region argument lives (Region/DataMap), *how* it is laid out
 //! (Layout), and the GC / backpressure policies.
+//!
+//! Table construction is driven by **typed directives** ([`DirectiveOp`])
+//! — the directive half of the `mapple::build` construction seam. The
+//! text front-end desugars parsed [`Directive`] AST nodes into
+//! `DirectiveOp`s (resolving processor/memory kinds and layout
+//! properties, with source lines for diagnostics); the Rust builder
+//! ([`super::build::MapperBuilder`]) produces them directly. Both meet in
+//! [`MapperSpec::from_parts`].
 
 use super::ast::{Directive, Program};
 use super::interp::{Interp, RtError};
@@ -33,7 +41,8 @@ impl Default for LayoutProps {
 }
 
 impl LayoutProps {
-    fn parse(props: &[String]) -> Result<LayoutProps, String> {
+    /// Parse surface-syntax property tokens (`F_order`, `SOA`, `align128`).
+    pub fn parse(props: &[String]) -> Result<LayoutProps, String> {
         let mut out = LayoutProps::default();
         for p in props {
             match p.as_str() {
@@ -53,6 +62,79 @@ impl LayoutProps {
     }
 }
 
+/// A typed, resolved mapping directive — what both front-ends produce.
+/// `line` is the source line for text mappers, `None` for builder ones.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DirectiveOp {
+    IndexTaskMap { task: String, func: String, line: Option<usize> },
+    TaskMap { task: String, kind: ProcKind, line: Option<usize> },
+    Region { task: String, arg: usize, kind: ProcKind, mem: MemKind, line: Option<usize> },
+    Layout { task: String, arg: usize, kind: ProcKind, props: LayoutProps, line: Option<usize> },
+    GarbageCollect { task: String, arg: usize, line: Option<usize> },
+    Backpressure { task: String, limit: usize, line: Option<usize> },
+}
+
+impl DirectiveOp {
+    /// Desugar a parsed directive, resolving kind/memory/layout strings.
+    pub fn from_ast(d: &Directive) -> Result<DirectiveOp, String> {
+        Ok(match d {
+            Directive::IndexTaskMap { task, func, line } => DirectiveOp::IndexTaskMap {
+                task: task.clone(),
+                func: func.clone(),
+                line: Some(*line),
+            },
+            Directive::TaskMap { task, proc, line } => DirectiveOp::TaskMap {
+                task: task.clone(),
+                kind: ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?,
+                line: Some(*line),
+            },
+            Directive::Region { task, arg, proc, mem, line } => DirectiveOp::Region {
+                task: task.clone(),
+                arg: *arg,
+                kind: ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?,
+                mem: MemKind::parse(mem).map_err(|e| format!("line {line}: {e}"))?,
+                line: Some(*line),
+            },
+            Directive::Layout { task, arg, proc, props, line } => DirectiveOp::Layout {
+                task: task.clone(),
+                arg: *arg,
+                kind: ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?,
+                props: LayoutProps::parse(props).map_err(|e| format!("line {line}: {e}"))?,
+                line: Some(*line),
+            },
+            Directive::GarbageCollect { task, arg, line } => DirectiveOp::GarbageCollect {
+                task: task.clone(),
+                arg: *arg,
+                line: Some(*line),
+            },
+            Directive::Backpressure { task, limit, line } => DirectiveOp::Backpressure {
+                task: task.clone(),
+                limit: *limit,
+                line: Some(*line),
+            },
+        })
+    }
+
+    fn line(&self) -> Option<usize> {
+        match self {
+            DirectiveOp::IndexTaskMap { line, .. }
+            | DirectiveOp::TaskMap { line, .. }
+            | DirectiveOp::Region { line, .. }
+            | DirectiveOp::Layout { line, .. }
+            | DirectiveOp::GarbageCollect { line, .. }
+            | DirectiveOp::Backpressure { line, .. } => *line,
+        }
+    }
+
+    /// Location prefix for diagnostics: `"line N"` or `"builder"`.
+    fn loc(&self) -> String {
+        match self.line() {
+            Some(l) => format!("line {l}"),
+            None => "builder".to_string(),
+        }
+    }
+}
+
 /// A fully compiled mapper bound to a machine.
 pub struct MapperSpec {
     /// Tree-walking reference interpreter (oracle + fallback).
@@ -64,12 +146,13 @@ pub struct MapperSpec {
     pub index_task_maps: HashMap<String, String>,
     /// task → processor kind.
     pub task_maps: HashMap<String, ProcKind>,
-    /// (task, arg) → (processor kind scope, memory kind).
-    pub regions: HashMap<(String, usize), (ProcKind, MemKind)>,
-    /// (task, arg) → layout constraints.
-    pub layouts: HashMap<(String, usize), (ProcKind, LayoutProps)>,
-    /// (task, arg) pairs to eagerly garbage-collect.
-    pub gc: HashSet<(String, usize)>,
+    /// task → arg → (processor kind scope, memory kind). Nested so the
+    /// simulator's per-launch policy probes never allocate a key.
+    pub regions: HashMap<String, HashMap<usize, (ProcKind, MemKind)>>,
+    /// task → arg → layout constraints.
+    pub layouts: HashMap<String, HashMap<usize, (ProcKind, LayoutProps)>>,
+    /// task → args to eagerly garbage-collect.
+    pub gc: HashMap<String, HashSet<usize>>,
     /// task → max in-flight launches.
     pub backpressure: HashMap<String, usize>,
 }
@@ -93,9 +176,27 @@ impl MapperSpec {
         Self::from_program(&prog, desc)
     }
 
+    /// Text front-end: bind the interpreter, lower the (desugared)
+    /// functions, desugar the directives, and assemble.
     pub fn from_program(prog: &Program, desc: &MachineDesc) -> Result<MapperSpec, String> {
         let interp = Interp::new(prog, desc).map_err(|e| e.to_string())?;
         let plan = MappingPlan::new(lower::lower(prog, &interp));
+        let mut ops = Vec::new();
+        for d in prog.directives() {
+            ops.push(DirectiveOp::from_ast(d)?);
+        }
+        Self::from_parts(interp, plan, ops)
+    }
+
+    /// Assemble the directive tables from typed ops — shared by the text
+    /// front-end and `build::MapperBuilder`. Any duplicate directive for
+    /// the same target is a compile error (with its source line when it
+    /// came from text).
+    pub fn from_parts(
+        interp: Interp,
+        plan: MappingPlan,
+        directives: Vec<DirectiveOp>,
+    ) -> Result<MapperSpec, String> {
         let mut spec = MapperSpec {
             interp,
             plan,
@@ -103,41 +204,60 @@ impl MapperSpec {
             task_maps: HashMap::new(),
             regions: HashMap::new(),
             layouts: HashMap::new(),
-            gc: HashSet::new(),
+            gc: HashMap::new(),
             backpressure: HashMap::new(),
         };
-        for d in prog.directives() {
+        for d in &directives {
+            let loc = d.loc();
             match d {
-                Directive::IndexTaskMap { task, func, line } => {
+                DirectiveOp::IndexTaskMap { task, func, .. } => {
                     if !spec.interp.has_func(func) {
                         return Err(format!(
-                            "line {line}: IndexTaskMap references undefined function '{func}'"
+                            "{loc}: IndexTaskMap references undefined function '{func}'"
                         ));
                     }
                     if spec.index_task_maps.insert(task.clone(), func.clone()).is_some() {
-                        return Err(format!("line {line}: duplicate IndexTaskMap for '{task}'"));
+                        return Err(format!("{loc}: duplicate IndexTaskMap for '{task}'"));
                     }
                 }
-                Directive::TaskMap { task, proc, line } => {
-                    let kind =
-                        ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?;
-                    spec.task_maps.insert(task.clone(), kind);
+                DirectiveOp::TaskMap { task, kind, .. } => {
+                    if spec.task_maps.insert(task.clone(), *kind).is_some() {
+                        return Err(format!("{loc}: duplicate TaskMap for '{task}'"));
+                    }
                 }
-                Directive::Region { task, arg, proc, mem, line } => {
-                    let pk = ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?;
-                    let mk = MemKind::parse(mem).map_err(|e| format!("line {line}: {e}"))?;
-                    spec.regions.insert((task.clone(), *arg), (pk, mk));
+                DirectiveOp::Region { task, arg, kind, mem, .. } => {
+                    let dup = spec
+                        .regions
+                        .entry(task.clone())
+                        .or_default()
+                        .insert(*arg, (*kind, *mem))
+                        .is_some();
+                    if dup {
+                        return Err(format!("{loc}: duplicate Region for '{task}' arg{arg}"));
+                    }
                 }
-                Directive::Layout { task, arg, proc, props, line } => {
-                    let pk = ProcKind::parse(proc).map_err(|e| format!("line {line}: {e}"))?;
-                    let lp = LayoutProps::parse(props).map_err(|e| format!("line {line}: {e}"))?;
-                    spec.layouts.insert((task.clone(), *arg), (pk, lp));
+                DirectiveOp::Layout { task, arg, kind, props, .. } => {
+                    let dup = spec
+                        .layouts
+                        .entry(task.clone())
+                        .or_default()
+                        .insert(*arg, (*kind, props.clone()))
+                        .is_some();
+                    if dup {
+                        return Err(format!("{loc}: duplicate Layout for '{task}' arg{arg}"));
+                    }
                 }
-                Directive::GarbageCollect { task, arg, .. } => {
-                    spec.gc.insert((task.clone(), *arg));
+                DirectiveOp::GarbageCollect { task, arg, .. } => {
+                    if !spec.gc.entry(task.clone()).or_default().insert(*arg) {
+                        return Err(format!(
+                            "{loc}: duplicate GarbageCollect for '{task}' arg{arg}"
+                        ));
+                    }
                 }
-                Directive::Backpressure { task, limit, .. } => {
-                    spec.backpressure.insert(task.clone(), *limit);
+                DirectiveOp::Backpressure { task, limit, .. } => {
+                    if spec.backpressure.insert(task.clone(), *limit).is_some() {
+                        return Err(format!("{loc}: duplicate Backpressure for '{task}'"));
+                    }
                 }
             }
         }
@@ -150,7 +270,7 @@ impl MapperSpec {
     pub fn mapping_fn(&self, task: &str) -> Option<&str> {
         self.index_task_maps
             .get(task)
-            .or_else(|| self.index_task_maps.get(&base_name(task)))
+            .or_else(|| self.index_task_maps.get(base_name(task)))
             .or_else(|| self.index_task_maps.get("default"))
             .map(|s| s.as_str())
     }
@@ -192,17 +312,19 @@ impl MapperSpec {
     pub fn proc_kind(&self, task: &str) -> ProcKind {
         self.task_maps
             .get(task)
-            .or_else(|| self.task_maps.get(&base_name(task)))
+            .or_else(|| self.task_maps.get(base_name(task)))
             .copied()
             .unwrap_or(ProcKind::Gpu)
     }
 
     /// Memory placement for (task, arg): defaults to FBMEM on GPU tasks,
-    /// SYSMEM otherwise (Legion default-mapper behaviour).
+    /// SYSMEM otherwise (Legion default-mapper behaviour). The probe is
+    /// borrow-based — no per-query key allocation.
     pub fn memory_for(&self, task: &str, arg: usize) -> (ProcKind, MemKind) {
         self.regions
-            .get(&(task.to_string(), arg))
-            .or_else(|| self.regions.get(&(base_name(task), arg)))
+            .get(task)
+            .and_then(|by_arg| by_arg.get(&arg))
+            .or_else(|| self.regions.get(base_name(task)).and_then(|by_arg| by_arg.get(&arg)))
             .copied()
             .unwrap_or_else(|| {
                 let pk = self.proc_kind(task);
@@ -214,34 +336,37 @@ impl MapperSpec {
     /// Layout for (task, arg).
     pub fn layout_for(&self, task: &str, arg: usize) -> LayoutProps {
         self.layouts
-            .get(&(task.to_string(), arg))
-            .or_else(|| self.layouts.get(&(base_name(task), arg)))
+            .get(task)
+            .and_then(|by_arg| by_arg.get(&arg))
+            .or_else(|| self.layouts.get(base_name(task)).and_then(|by_arg| by_arg.get(&arg)))
             .map(|(_, l)| l.clone())
             .unwrap_or_default()
     }
 
     /// Should (task, arg) be eagerly collected?
     pub fn should_gc(&self, task: &str, arg: usize) -> bool {
-        self.gc.contains(&(task.to_string(), arg)) || self.gc.contains(&(base_name(task), arg))
+        self.gc.get(task).map_or(false, |args| args.contains(&arg))
+            || self.gc.get(base_name(task)).map_or(false, |args| args.contains(&arg))
     }
 
     /// In-flight launch limit for a task (None = unlimited).
     pub fn backpressure_for(&self, task: &str) -> Option<usize> {
         self.backpressure
             .get(task)
-            .or_else(|| self.backpressure.get(&base_name(task)))
+            .or_else(|| self.backpressure.get(base_name(task)))
             .copied()
     }
 }
 
 /// Strip a trailing `_<number>` segment: `mm_step_3` → `mm_step`. Tasks
-/// instantiated per loop iteration share one directive family.
-pub fn base_name(task: &str) -> String {
+/// instantiated per loop iteration share one directive family. Returns a
+/// borrowed prefix so policy probes stay allocation-free.
+pub fn base_name(task: &str) -> &str {
     match task.rfind('_') {
         Some(i) if task[i + 1..].chars().all(|c| c.is_ascii_digit()) && i + 1 < task.len() => {
-            task[..i].to_string()
+            &task[..i]
         }
-        _ => task.to_string(),
+        _ => task,
     }
 }
 
@@ -286,6 +411,27 @@ Backpressure matmul 2
         assert!(!spec.should_gc("matmul", 0));
         assert_eq!(spec.backpressure_for("matmul"), Some(2));
         assert_eq!(spec.backpressure_for("other"), None);
+    }
+
+    #[test]
+    fn family_fallback_is_borrow_based() {
+        // `mm_step_3` resolves through the `mm_step` family entry.
+        let src = "\
+m = Machine(GPU)
+def f(Tuple p, Tuple s):
+    return m[0, 0]
+IndexTaskMap default f
+Region mm_step arg0 GPU ZCMEM
+GarbageCollect mm_step arg1
+Backpressure mm_step 4
+";
+        let spec = MapperSpec::compile(src, &desc()).unwrap();
+        assert_eq!(spec.memory_for("mm_step_3", 0), (ProcKind::Gpu, MemKind::ZeroCopy));
+        assert!(spec.should_gc("mm_step_12", 1));
+        assert_eq!(spec.backpressure_for("mm_step_0"), Some(4));
+        assert_eq!(base_name("mm_step_3"), "mm_step");
+        assert_eq!(base_name("mm_step_"), "mm_step_");
+        assert_eq!(base_name("plain"), "plain");
     }
 
     #[test]
@@ -341,5 +487,37 @@ IndexTaskMap t f
         assert!(e.contains("unknown layout property"));
         // bad proc kind
         assert!(MapperSpec::compile("TaskMap t FPGA\n", &desc()).is_err());
+    }
+
+    #[test]
+    fn all_duplicate_directives_error_with_line() {
+        let header = "\
+m = Machine(GPU)
+def f(Tuple p, Tuple s):
+    return m[0, 0]
+IndexTaskMap default f
+";
+        let cases = [
+            ("TaskMap t CPU\nTaskMap t GPU\n", "duplicate TaskMap"),
+            ("Region t arg0 GPU FBMEM\nRegion t arg0 GPU ZCMEM\n", "duplicate Region"),
+            (
+                "Layout t arg0 GPU F_order\nLayout t arg0 GPU C_order\n",
+                "duplicate Layout",
+            ),
+            (
+                "GarbageCollect t arg0\nGarbageCollect t arg0\n",
+                "duplicate GarbageCollect",
+            ),
+            ("Backpressure t 1\nBackpressure t 2\n", "duplicate Backpressure"),
+        ];
+        for (body, needle) in cases {
+            let src = format!("{header}{body}");
+            let e = MapperSpec::compile(&src, &desc()).unwrap_err();
+            assert!(e.contains(needle), "{needle}: {e}");
+            assert!(e.contains("line 6"), "duplicate reported at its line: {e}");
+        }
+        // distinct args are not duplicates
+        let ok = format!("{header}Region t arg0 GPU FBMEM\nRegion t arg1 GPU ZCMEM\n");
+        assert!(MapperSpec::compile(&ok, &desc()).is_ok());
     }
 }

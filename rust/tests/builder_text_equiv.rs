@@ -1,0 +1,222 @@
+//! Builder ↔ text equivalence suite: the typed `mapple::build` front-end
+//! and the `.mpl` text front-end must be indistinguishable artifacts.
+//!
+//! For all 18 shipped mapper sources (nine apps × baseline/tuned), the
+//! builder-reconstructed [`MapperSpec`] and the text-compiled one must
+//! produce identical `PlacementTable`s for every launch of a real app
+//! instance, across the differential machine-shape sweep — and identical
+//! directive tables. A randomized property test additionally drives
+//! arbitrary builder transform chains (`split`/`merge`/`swap`/`slice`/
+//! `auto_split`) against the eagerly transformed `ProcSpace` as a third,
+//! independent oracle.
+
+mod common;
+
+use common::{build_app, machine_shapes};
+use mapple::apps::builder_mappers::{built_spec, BUILT_APPS};
+use mapple::apps::mappers;
+use mapple::machine::point::{Rect, Tuple};
+use mapple::machine::space::ProcSpace;
+use mapple::machine::topology::{MachineDesc, ProcKind};
+use mapple::mapple::build::MapperBuilder;
+use mapple::mapple::MapperSpec;
+use mapple::util::prng::Rng;
+use mapple::util::proptest::check;
+
+fn text_spec(app: &str, tuned: bool, desc: &MachineDesc) -> MapperSpec {
+    let src = if tuned {
+        mappers::tuned_source(app).unwrap()
+    } else {
+        mappers::mapple_source(app).unwrap()
+    };
+    MapperSpec::compile(src, desc).unwrap_or_else(|e| panic!("{app} tuned={tuned}: {e}"))
+}
+
+/// The headline equivalence property: builder-made specs place every
+/// launch of every app exactly like their text-compiled twins, on every
+/// machine shape, through the same MappingPlan execution path.
+#[test]
+fn builder_placements_equal_text_for_all_18_mappers() {
+    for desc in machine_shapes() {
+        let procs = desc.nodes * desc.gpus_per_node;
+        for app in BUILT_APPS {
+            let instance = build_app(app, procs);
+            for tuned in [false, true] {
+                let text = text_spec(app, tuned, &desc);
+                let built = built_spec(app, tuned, &desc)
+                    .unwrap_or_else(|e| panic!("{app} tuned={tuned}: {e}"));
+                for launch in &instance.launches {
+                    // both sides must run compiled bytecode, not the
+                    // tree-walker fallback
+                    for spec in [&text, &built] {
+                        let func = spec.mapping_fn(&launch.name).unwrap_or_else(|| {
+                            panic!("{app}: no mapping for {}", launch.name)
+                        });
+                        assert!(
+                            spec.plan.supports(func),
+                            "{app} tuned={tuned}: '{func}' fell back to the tree walker"
+                        );
+                    }
+                    let a = text.plan_domain(&launch.name, &launch.domain).unwrap_or_else(
+                        |e| panic!("{app} tuned={tuned} {} text: {e}", launch.name),
+                    );
+                    let b = built.plan_domain(&launch.name, &launch.domain).unwrap_or_else(
+                        |e| panic!("{app} tuned={tuned} {} builder: {e}", launch.name),
+                    );
+                    assert_eq!(
+                        a, b,
+                        "{app} tuned={tuned} {} ({}n×{}g): builder table differs",
+                        launch.name, desc.nodes, desc.gpus_per_node
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Directive-table equivalence: the tables the simulator's policy path
+/// consumes must be identical field-for-field.
+#[test]
+fn builder_directive_tables_equal_text_for_all_18_mappers() {
+    let desc = MachineDesc::paper_testbed(2);
+    for app in BUILT_APPS {
+        for tuned in [false, true] {
+            let text = text_spec(app, tuned, &desc);
+            let built = built_spec(app, tuned, &desc).unwrap();
+            assert_eq!(built.index_task_maps, text.index_task_maps, "{app} tuned={tuned}");
+            assert_eq!(built.task_maps, text.task_maps, "{app} tuned={tuned}");
+            assert_eq!(built.regions, text.regions, "{app} tuned={tuned}");
+            assert_eq!(built.layouts, text.layouts, "{app} tuned={tuned}");
+            assert_eq!(built.gc, text.gc, "{app} tuned={tuned}");
+            assert_eq!(built.backpressure, text.backpressure, "{app} tuned={tuned}");
+        }
+    }
+}
+
+/// Randomized property: an arbitrary chain of typed transformation
+/// primitives, evaluated through the builder → bytecode → VM path AND
+/// through the tree-walking oracle, must agree with the eagerly
+/// transformed `ProcSpace` (an implementation-independent third oracle).
+#[test]
+fn random_builder_transform_chains_match_procspace_oracle() {
+    check(
+        "builder transform chains ≡ ProcSpace",
+        64,
+        |r: &mut Rng| {
+            let nodes = *r.choose(&[1usize, 2, 4]);
+            let gpus = *r.choose(&[2usize, 4]);
+            let steps = r.range(0, 4) as usize;
+            let seed = r.next_u64();
+            let sx = r.range(2, 8);
+            let sy = r.range(2, 8);
+            (nodes, gpus, steps, seed, sx, sy)
+        },
+        |&(nodes, gpus, steps, seed, sx, sy)| {
+            let mut desc = MachineDesc::paper_testbed(nodes);
+            desc.gpus_per_node = gpus;
+            let mut rng = Rng::new(seed);
+
+            // Grow an eagerly evaluated ProcSpace and the identical
+            // deferred builder chain side by side.
+            let mut space = ProcSpace::machine(&desc, ProcKind::Gpu);
+            let mut b = MapperBuilder::new(&desc);
+            let mut view = b.machine("m", ProcKind::Gpu);
+            for _ in 0..steps {
+                match rng.below(5) {
+                    0 => {
+                        // split a dim by a random divisor
+                        let d = rng.below(space.dim() as u64) as usize;
+                        let extent = space.size()[d];
+                        let divisors: Vec<i64> =
+                            (1..=extent).filter(|x| extent % x == 0).collect();
+                        let f = *rng.choose(&divisors);
+                        space = space.split(d, f).map_err(|e| e.to_string())?;
+                        view = view.split(d, f);
+                    }
+                    1 => {
+                        // merge two dims (requires p < q)
+                        if space.dim() >= 2 {
+                            let p = rng.below(space.dim() as u64 - 1) as usize;
+                            let q =
+                                p + 1 + rng.below((space.dim() - p - 1) as u64) as usize;
+                            space = space.merge(p, q).map_err(|e| e.to_string())?;
+                            view = view.merge(p, q);
+                        }
+                    }
+                    2 => {
+                        let p = rng.below(space.dim() as u64) as usize;
+                        let q = rng.below(space.dim() as u64) as usize;
+                        space = space.swap(p, q).map_err(|e| e.to_string())?;
+                        view = view.swap(p, q);
+                    }
+                    3 => {
+                        // slice a dim to a random non-empty subrange
+                        let d = rng.below(space.dim() as u64) as usize;
+                        let extent = space.size()[d];
+                        let lo = rng.range(0, extent - 1);
+                        let hi = rng.range(lo, extent - 1);
+                        space = space.slice(d, lo, hi).map_err(|e| e.to_string())?;
+                        view = view.slice(d, lo, hi);
+                    }
+                    _ => {
+                        // decompose (auto_split) with random small targets
+                        let d = rng.below(space.dim() as u64) as usize;
+                        let k = rng.range(1, 3) as usize;
+                        let targets: Vec<i64> =
+                            (0..k).map(|_| rng.range(1, 8)).collect();
+                        space = space
+                            .decompose(d, &Tuple::from(targets.as_slice()))
+                            .map_err(|e| e.to_string())?;
+                        view = view.auto_split(
+                            d,
+                            mapple::mapple::build::VExpr::ints(targets.iter().copied()),
+                        );
+                    }
+                }
+            }
+            let sizes = space.size().clone();
+            let dim = space.dim();
+
+            // Mapping function: coordinate j is (linearize(p, s) + j) mod
+            // size_j — exercises every dimension of the transformed view.
+            let vg = b.view("vg", view);
+            b.def_fn("f", |f| {
+                let (p, s) = (f.ipoint(), f.ispace());
+                let lin = f.bind("lin", mapple::mapple::build::VExpr::linearize(p, s));
+                let coords: Vec<mapple::mapple::build::VExpr> = (0..dim)
+                    .map(|j| (lin.clone() + (j as i64)) % vg.size_at(j as i64))
+                    .collect();
+                f.ret(vg.at(coords));
+            });
+            b.index_task_map("default", "f");
+            let spec = b.build()?;
+
+            let ispace = Tuple::from([sx, sy]);
+            let dom = Rect::from_extent(&ispace);
+            let table = spec.plan_domain("t", &dom).map_err(|e| format!("vm: {e}"))?;
+            for p in dom.points() {
+                let lin = p.linearize(&ispace);
+                let coords: Vec<i64> =
+                    (0..dim).map(|j| (lin + j as i64).rem_euclid(sizes[j])).collect();
+                let want = space
+                    .index(&Tuple::from(coords.as_slice()))
+                    .map_err(|e| format!("space oracle: {e}"))?;
+                let interp = spec
+                    .map_point("t", &p, &ispace)
+                    .map_err(|e| format!("interp oracle: {e}"))?;
+                if table.get(&p) != Some(want) {
+                    return Err(format!(
+                        "VM {:?} != ProcSpace {want:?} at {p:?} (shape {sizes:?})",
+                        table.get(&p)
+                    ));
+                }
+                if interp != want {
+                    return Err(format!(
+                        "interp {interp:?} != ProcSpace {want:?} at {p:?} (shape {sizes:?})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

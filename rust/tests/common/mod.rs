@@ -1,0 +1,56 @@
+//! Shared helpers for the integration-level test suites: the machine
+//! shapes the differential and builder↔text equivalence tests sweep, and
+//! real app-instance construction per app name.
+
+use mapple::apps;
+use mapple::machine::topology::MachineDesc;
+
+/// The machine-shape sweep: {1, 2, 4} nodes × {2, 4} GPUs.
+pub fn machine_shapes() -> Vec<MachineDesc> {
+    let mut out = Vec::new();
+    for nodes in [1usize, 2, 4] {
+        for gpus in [2usize, 4] {
+            let mut d = MachineDesc::paper_testbed(nodes);
+            d.gpus_per_node = gpus;
+            out.push(d);
+        }
+    }
+    out
+}
+
+/// Build a real instance of one of the nine apps sized for `procs`
+/// processors.
+pub fn build_app(name: &str, procs: usize) -> apps::AppInstance {
+    match name {
+        "cannon" => apps::cannon(64, procs),
+        "summa" => apps::summa(64, procs),
+        "pumma" => apps::pumma(64, procs),
+        "johnson" => apps::johnson(64, procs),
+        "solomonik" => apps::solomonik(64, procs),
+        "cosma" => apps::cosma(64, procs),
+        "stencil" => {
+            let g = mapple::decompose::decompose(procs as u64, &[256, 256]);
+            apps::stencil(&apps::StencilParams {
+                x: 256,
+                y: 256,
+                gx: g.factors[0] as i64,
+                gy: g.factors[1] as i64,
+                halo: 1,
+                steps: 2,
+            })
+        }
+        "circuit" => apps::circuit(&apps::CircuitParams {
+            pieces: procs as i64,
+            nodes_per_piece: 64,
+            wires_per_piece: 128,
+            pct_shared: 10,
+            loops: 2,
+        }),
+        "pennant" => apps::pennant(&apps::PennantParams {
+            chunks: procs as i64,
+            zones_per_chunk: 128,
+            cycles: 2,
+        }),
+        other => panic!("unknown app {other}"),
+    }
+}

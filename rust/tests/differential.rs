@@ -12,7 +12,10 @@
 //! point-for-point — plus randomized language-coverage programs driven by
 //! the in-house property harness.
 
-use mapple::apps::{self, mappers};
+mod common;
+
+use common::{build_app, machine_shapes};
+use mapple::apps::mappers;
 use mapple::machine::point::{Rect, Tuple};
 use mapple::machine::topology::MachineDesc;
 use mapple::mapple::MapperSpec;
@@ -22,53 +25,6 @@ use mapple::util::proptest::check;
 const APPS: &[&str] = &[
     "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
 ];
-
-fn machine_shapes() -> Vec<MachineDesc> {
-    let mut out = Vec::new();
-    for nodes in [1usize, 2, 4] {
-        for gpus in [2usize, 4] {
-            let mut d = MachineDesc::paper_testbed(nodes);
-            d.gpus_per_node = gpus;
-            out.push(d);
-        }
-    }
-    out
-}
-
-fn build_app(name: &str, procs: usize) -> apps::AppInstance {
-    match name {
-        "cannon" => apps::cannon(64, procs),
-        "summa" => apps::summa(64, procs),
-        "pumma" => apps::pumma(64, procs),
-        "johnson" => apps::johnson(64, procs),
-        "solomonik" => apps::solomonik(64, procs),
-        "cosma" => apps::cosma(64, procs),
-        "stencil" => {
-            let g = mapple::decompose::decompose(procs as u64, &[256, 256]);
-            apps::stencil(&apps::StencilParams {
-                x: 256,
-                y: 256,
-                gx: g.factors[0] as i64,
-                gy: g.factors[1] as i64,
-                halo: 1,
-                steps: 2,
-            })
-        }
-        "circuit" => apps::circuit(&apps::CircuitParams {
-            pieces: procs as i64,
-            nodes_per_piece: 64,
-            wires_per_piece: 128,
-            pct_shared: 10,
-            loops: 2,
-        }),
-        "pennant" => apps::pennant(&apps::PennantParams {
-            chunks: procs as i64,
-            zones_per_chunk: 128,
-            cycles: 2,
-        }),
-        other => panic!("unknown app {other}"),
-    }
-}
 
 /// The headline differential property: for all nine apps' mappers
 /// (baseline and tuned), across machine shapes, the compiled MappingPlan
