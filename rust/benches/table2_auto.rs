@@ -1,0 +1,96 @@
+//! Table 2 (auto) — the simulator-guided autotuner vs the baseline and
+//! hand-tuned Mapple mappers across all nine applications.
+//!
+//! Acceptance (ISSUE 4): the autotuned mapper is ≥ 1.0x vs the baseline
+//! Mapple mapper on every app (guaranteed by construction — the search
+//! is seeded with the baseline genome and only strictly better
+//! candidates replace it) and matches or beats the hand-tuned spec on at
+//! least 5 of 9 apps.
+//!
+//! Run: `cargo bench --bench table2_auto`
+
+use mapple::bench::{build_bench_app, mapper_for, run, write_report, Flavor, APP_ORDER};
+use mapple::machine::topology::MachineDesc;
+use mapple::mapper::MappleMapper;
+use mapple::tune::{tune, TuneConfig};
+use mapple::util::json::Json;
+use mapple::util::table::Table;
+
+fn main() {
+    let desc = MachineDesc::paper_testbed(2); // 2 nodes × 4 GPUs
+    println!(
+        "Table 2 (auto): autotuned vs baseline vs hand-tuned Mapple mappers \
+         ({} nodes x {} GPUs)\n",
+        desc.nodes, desc.gpus_per_node
+    );
+    let mut t = Table::new([
+        "#",
+        "Application",
+        "mapple",
+        "hand-tuned",
+        "auto",
+        "auto/mapple",
+        "auto vs tuned",
+        "evals",
+    ]);
+    let mut rows = Vec::new();
+    let mut vs_mapple = Vec::new();
+    let mut matches_tuned = 0usize;
+    for (i, app_name) in APP_ORDER.iter().enumerate() {
+        let app = build_bench_app(app_name, &desc);
+        let base = run(&app, mapper_for(&Flavor::Mapple, app_name, &desc).as_ref(), &desc)
+            .unwrap_or_else(|e| panic!("{app_name} mapple: {e}"));
+        let tuned = run(&app, mapper_for(&Flavor::Tuned, app_name, &desc).as_ref(), &desc)
+            .unwrap_or_else(|e| panic!("{app_name} tuned: {e}"));
+        assert!(base.oom.is_none() && tuned.oom.is_none(), "{app_name}: reference OOM");
+
+        let result = tune(&TuneConfig::quick(app_name, &desc))
+            .unwrap_or_else(|e| panic!("{app_name} tune: {e}"));
+        let auto_mapper = MappleMapper::new(result.best.build(&desc).unwrap());
+        let auto = run(&app, &auto_mapper, &desc)
+            .unwrap_or_else(|e| panic!("{app_name} auto: {e}"));
+        assert!(auto.oom.is_none(), "{app_name}: autotuned mapper OOMs");
+
+        let speedup = base.makespan / auto.makespan;
+        let vs_tuned = tuned.makespan / auto.makespan;
+        let matched = auto.makespan <= tuned.makespan * 1.001;
+        vs_mapple.push(speedup);
+        matches_tuned += usize::from(matched);
+        t.row([
+            format!("{}", i + 1),
+            app_name.to_string(),
+            format!("{:.3} ms", base.makespan * 1e3),
+            format!("{:.3} ms", tuned.makespan * 1e3),
+            format!("{:.3} ms", auto.makespan * 1e3),
+            format!("{speedup:.2}x"),
+            format!("{vs_tuned:.2}x{}", if matched { " ✓" } else { "" }),
+            format!("{}", result.evaluated),
+        ]);
+        rows.push(Json::obj(vec![
+            ("app", Json::Str(app_name.to_string())),
+            ("mapple_s", Json::Num(base.makespan)),
+            ("tuned_s", Json::Num(tuned.makespan)),
+            ("auto_s", Json::Num(auto.makespan)),
+            ("speedup_vs_mapple", Json::Num(speedup)),
+            ("speedup_vs_tuned", Json::Num(vs_tuned)),
+            ("matches_tuned", Json::Bool(matched)),
+            ("edits", Json::Num(result.best.edits() as f64)),
+            ("evaluated", Json::Num(result.evaluated as f64)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!(
+        "\nauto ≥ 1.0x vs baseline on all apps: min {:.3}x; matches/beats hand-tuned on {}/9",
+        vs_mapple.iter().cloned().fold(f64::INFINITY, f64::min),
+        matches_tuned
+    );
+    write_report("table2_auto", &Json::obj(vec![("rows", Json::Arr(rows))]));
+    assert!(
+        vs_mapple.iter().all(|&s| s >= 0.999),
+        "autotuner must never lose to the baseline mapper: {vs_mapple:?}"
+    );
+    assert!(
+        matches_tuned >= 5,
+        "autotuner must match/beat the hand-tuned mapper on ≥5 of 9 apps, got {matches_tuned}"
+    );
+}

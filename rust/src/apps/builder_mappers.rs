@@ -8,6 +8,12 @@
 //! machine shapes. The expert mappers (`crate::mapper::expert`) are thin
 //! policy wrappers over these specs, so "expert vs Mapple" comparisons
 //! share the transform/decompose machinery end-to-end.
+//!
+//! The construction is split in two installable halves so the autotuner
+//! (`crate::tune`) can reuse them: [`install_mapping`] adds the baseline
+//! mapping functions + `IndexTaskMap` directives (the tuner's seed
+//! genome), [`install_tuning`] adds the hand-tuned Table 2 policy
+//! directives on top.
 
 use crate::machine::topology::{MachineDesc, MemKind, ProcKind};
 use crate::mapple::build::{IdxPart, MachineView, MapperBuilder, VExpr};
@@ -49,15 +55,6 @@ fn tune_matmul2d(b: &mut MapperBuilder) {
     b.garbage_collect("mm_step", 1);
 }
 
-/// Cannon's, SUMMA, and PUMMA share one construction: the data-movement
-/// schedules differ in the task graph, the mapping does not (Fig 12).
-fn matmul2d(b: &mut MapperBuilder, tuned: bool) {
-    def_hierarchical_block2d(b);
-    if tuned {
-        tune_matmul2d(b);
-    }
-}
-
 /// `block_linear2D` over the GPU-fastest flattened space (shared by the
 /// Johnson/COSMA init launches and, in 1D form, the science apps).
 fn def_block_linear2d(b: &mut MapperBuilder, flat: &MachineView) {
@@ -70,7 +67,7 @@ fn def_block_linear2d(b: &mut MapperBuilder, flat: &MachineView) {
     });
 }
 
-fn johnson(b: &mut MapperBuilder, tuned: bool) {
+fn johnson_mapping(b: &mut MapperBuilder) {
     let m = b.machine("m", ProcKind::Gpu);
     let m_flat = b.view("m_flat", m.merge(0, 1));
     let m_gpu_flat = b.view("m_gpu_flat", m.swap(0, 1).merge(0, 1));
@@ -86,14 +83,9 @@ fn johnson(b: &mut MapperBuilder, tuned: bool) {
     def_block_linear2d(b, &m_gpu_flat);
     b.index_task_map("mm3d", "conditional_linearize3D");
     b.index_task_map("default", "block_linear2D");
-    if tuned {
-        for arg in 0..3 {
-            b.layout("mm3d", arg, ProcKind::Gpu, gemm_layout());
-        }
-    }
 }
 
-fn solomonik(b: &mut MapperBuilder, tuned: bool) {
+fn solomonik_mapping(b: &mut MapperBuilder) {
     let m2 = b.machine("m_2d", ProcKind::Gpu);
     let m_flat = b.view("m_flat", m2.merge(0, 1));
     b.def_fn("hierarchical_block3D", |f| {
@@ -120,13 +112,9 @@ fn solomonik(b: &mut MapperBuilder, tuned: bool) {
     });
     b.index_task_map("mm25d", "hierarchical_block3D");
     b.index_task_map("default", "linearize_cyclic");
-    if tuned {
-        b.layout("mm25d", 0, ProcKind::Gpu, gemm_layout());
-        b.layout("mm25d", 1, ProcKind::Gpu, gemm_layout());
-    }
 }
 
-fn cosma(b: &mut MapperBuilder, tuned: bool) {
+fn cosma_mapping(b: &mut MapperBuilder) {
     let m = b.machine("m", ProcKind::Gpu);
     let m_flat = b.view("m_flat", m.merge(0, 1));
     let m_gpu_flat = b.view("m_gpu_flat", m.swap(0, 1).merge(0, 1));
@@ -144,10 +132,6 @@ fn cosma(b: &mut MapperBuilder, tuned: bool) {
     def_block_linear2d(b, &m_gpu_flat);
     b.index_task_map("mm_cosma", "special_linearize3D");
     b.index_task_map("default", "block_linear2D");
-    if tuned {
-        b.layout("mm_cosma", 0, ProcKind::Gpu, gemm_layout());
-        b.layout("mm_cosma", 1, ProcKind::Gpu, gemm_layout());
-    }
 }
 
 /// 1D block distribution over the GPU-fastest flattened processor space.
@@ -163,35 +147,68 @@ fn def_block_linear1d(b: &mut MapperBuilder) -> MachineView {
     m_gpu_flat
 }
 
-fn stencil(b: &mut MapperBuilder, tuned: bool) {
+fn stencil_mapping(b: &mut MapperBuilder) {
     let m = b.machine("m", ProcKind::Gpu);
     let m_gpu_flat = b.view("m_gpu_flat", m.swap(0, 1).merge(0, 1));
     def_block_linear2d(b, &m_gpu_flat);
     b.index_task_map("default", "block_linear2D");
-    if tuned {
-        b.layout("step", 0, ProcKind::Gpu, LayoutProps::default());
-        for arg in 1..5 {
-            b.garbage_collect("step", arg);
-        }
-    }
 }
 
-fn circuit(b: &mut MapperBuilder, tuned: bool) {
-    def_block_linear1d(b);
-    if tuned {
-        for arg in [1, 2, 3] {
-            b.region("calc_new_currents", arg, ProcKind::Gpu, MemKind::ZeroCopy);
+/// Install the baseline mapping for an app: mapping functions plus
+/// `IndexTaskMap` directives, **no** policy directives. This is exactly
+/// the decision content of `mappers/<app>.mpl` — and the autotuner's
+/// seed genome.
+pub fn install_mapping(b: &mut MapperBuilder, app: &str) -> Result<(), String> {
+    match app {
+        "cannon" | "summa" | "pumma" => def_hierarchical_block2d(b),
+        "johnson" => johnson_mapping(b),
+        "solomonik" => solomonik_mapping(b),
+        "cosma" => cosma_mapping(b),
+        "stencil" => stencil_mapping(b),
+        "circuit" | "pennant" => {
+            def_block_linear1d(b);
         }
-        b.region("distribute_charge", 2, ProcKind::Gpu, MemKind::ZeroCopy);
-        b.region("update_voltages", 1, ProcKind::Gpu, MemKind::ZeroCopy);
+        other => return Err(format!("no builder mapper for app '{other}'")),
     }
+    Ok(())
 }
 
-fn pennant(b: &mut MapperBuilder, tuned: bool) {
-    def_block_linear1d(b);
-    if tuned {
-        b.task_map("advance", ProcKind::Cpu);
-        b.region("sum_point_forces", 2, ProcKind::Gpu, MemKind::ZeroCopy);
+/// Install the hand-tuned Table 2 policy directives for an app (the
+/// delta between `mappers/<app>.mpl` and `mappers/<app>_tuned.mpl`).
+pub fn install_tuning(b: &mut MapperBuilder, app: &str) {
+    match app {
+        "cannon" | "summa" | "pumma" => tune_matmul2d(b),
+        "johnson" => {
+            for arg in 0..3 {
+                b.layout("mm3d", arg, ProcKind::Gpu, gemm_layout());
+            }
+        }
+        "solomonik" => {
+            b.layout("mm25d", 0, ProcKind::Gpu, gemm_layout());
+            b.layout("mm25d", 1, ProcKind::Gpu, gemm_layout());
+        }
+        "cosma" => {
+            b.layout("mm_cosma", 0, ProcKind::Gpu, gemm_layout());
+            b.layout("mm_cosma", 1, ProcKind::Gpu, gemm_layout());
+        }
+        "stencil" => {
+            b.layout("step", 0, ProcKind::Gpu, LayoutProps::default());
+            for arg in 1..5 {
+                b.garbage_collect("step", arg);
+            }
+        }
+        "circuit" => {
+            for arg in [1, 2, 3] {
+                b.region("calc_new_currents", arg, ProcKind::Gpu, MemKind::ZeroCopy);
+            }
+            b.region("distribute_charge", 2, ProcKind::Gpu, MemKind::ZeroCopy);
+            b.region("update_voltages", 1, ProcKind::Gpu, MemKind::ZeroCopy);
+        }
+        "pennant" => {
+            b.task_map("advance", ProcKind::Cpu);
+            b.region("sum_point_forces", 2, ProcKind::Gpu, MemKind::ZeroCopy);
+        }
+        _ => {}
     }
 }
 
@@ -201,15 +218,9 @@ fn pennant(b: &mut MapperBuilder, tuned: bool) {
 /// exactly as in the `.mpl` sources.
 pub fn built_spec(app: &str, tuned: bool, desc: &MachineDesc) -> Result<MapperSpec, String> {
     let mut b = MapperBuilder::new(desc);
-    match app {
-        "cannon" | "summa" | "pumma" => matmul2d(&mut b, tuned),
-        "johnson" => johnson(&mut b, tuned),
-        "solomonik" => solomonik(&mut b, tuned),
-        "cosma" => cosma(&mut b, tuned),
-        "stencil" => stencil(&mut b, tuned),
-        "circuit" => circuit(&mut b, tuned),
-        "pennant" => pennant(&mut b, tuned),
-        other => return Err(format!("no builder mapper for app '{other}'")),
+    install_mapping(&mut b, app)?;
+    if tuned {
+        install_tuning(&mut b, app);
     }
     b.build()
 }

@@ -63,6 +63,13 @@ pub enum Flavor {
     Tuned,
     Expert,
     Heuristic,
+    /// Autotuned: run the simulator-guided search (`crate::tune`) with
+    /// its fixed-seed quick configuration against the bench-sized
+    /// workload and use the winning spec. Callers that need the
+    /// `TuneResult` details (the `table2_auto` bench) or a non-bench
+    /// workload (`mapple run --scale N`) call `tune`/`tune_with_ctx`
+    /// directly instead.
+    Auto,
 }
 
 pub fn mapper_for(flavor: &Flavor, app: &str, desc: &MachineDesc) -> Box<dyn Mapper> {
@@ -75,6 +82,10 @@ pub fn mapper_for(flavor: &Flavor, app: &str, desc: &MachineDesc) -> Box<dyn Map
         )),
         Flavor::Expert => expert_for(app, desc.nodes, desc.gpus_per_node).unwrap(),
         Flavor::Heuristic => Box::new(DefaultHeuristicMapper::new()),
+        Flavor::Auto => {
+            let result = crate::tune::tune(&crate::tune::TuneConfig::quick(app, desc)).unwrap();
+            Box::new(MappleMapper::new(result.best.build(desc).unwrap()))
+        }
     }
 }
 

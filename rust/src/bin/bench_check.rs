@@ -1,0 +1,420 @@
+//! `bench_check` — the CI bench-regression gate.
+//!
+//! Compares the JSON reports the figure/table benches write into
+//! `bench_reports/` against committed baselines (`BENCH_*.json` at the
+//! repo root) and fails when a tracked metric regresses beyond the
+//! tolerance (default 5%). All tracked metrics are *simulated* makespans
+//! and throughputs — deterministic, so the gate is immune to shared-
+//! runner timing noise.
+//!
+//! Modes:
+//!   bench_check                 compare reports vs baselines (exit 1 on
+//!                               regression)
+//!   bench_check --update        (re)write the baselines from the current
+//!                               reports — the ratchet: run the benches,
+//!                               update, commit the BENCH_*.json diff
+//!
+//! A baseline containing `"bootstrap": true` (or no rows) is a
+//! placeholder: it is reported but never fails the gate, so the first CI
+//! run on a fresh machine can record real numbers via `--update` and
+//! upload them as artifacts for a maintainer to commit. A *missing*
+//! baseline file, by contrast, fails the check — deleting a committed
+//! `BENCH_*.json` must not silently disable the gate.
+
+use mapple::util::cli::Command;
+use mapple::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tracked metric within a report row.
+#[derive(Clone, Copy)]
+struct Metric {
+    field: &'static str,
+    /// `true` for makespans/seconds, `false` for throughput/speedups.
+    lower_is_better: bool,
+}
+
+/// One (baseline file ↔ bench report) pair.
+struct Track {
+    baseline: &'static str,
+    report: &'static str,
+    /// Fields identifying a row across runs.
+    keys: &'static [&'static str],
+    metrics: &'static [Metric],
+}
+
+const TRACKS: &[Track] = &[
+    Track {
+        baseline: "BENCH_table2.json",
+        report: "table2_tuning.json",
+        keys: &["app"],
+        metrics: &[
+            Metric { field: "expert_s", lower_is_better: true },
+            Metric { field: "tuned_s", lower_is_better: true },
+        ],
+    },
+    Track {
+        baseline: "BENCH_fig13.json",
+        report: "fig13_heuristics.json",
+        keys: &["app", "gpus"],
+        metrics: &[Metric { field: "spec_tp", lower_is_better: false }],
+    },
+    Track {
+        baseline: "BENCH_fig14.json",
+        report: "fig14_decompose.json",
+        keys: &["aspect", "area_per_node", "gpus"],
+        metrics: &[
+            Metric { field: "decompose_s", lower_is_better: true },
+            Metric { field: "improvement", lower_is_better: false },
+        ],
+    },
+    Track {
+        baseline: "BENCH_table2_auto.json",
+        report: "table2_auto.json",
+        keys: &["app"],
+        metrics: &[
+            Metric { field: "auto_s", lower_is_better: true },
+            Metric { field: "speedup_vs_mapple", lower_is_better: false },
+        ],
+    },
+];
+
+fn load(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn rows(doc: &Json) -> Vec<&Json> {
+    match doc.get("rows") {
+        Some(Json::Arr(items)) => items.iter().collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn is_bootstrap(doc: &Json) -> bool {
+    matches!(doc.get("bootstrap"), Some(Json::Bool(true))) || rows(doc).is_empty()
+}
+
+/// Row identity: the key fields rendered compactly, joined with '/'.
+fn key_of(row: &Json, keys: &[&str]) -> String {
+    keys.iter()
+        .map(|k| row.get(k).map(|v| v.pretty()).unwrap_or_else(|| "?".into()))
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Compare one track. Returns (compared metric count, failure messages).
+fn check_track(
+    track: &Track,
+    baseline: &Json,
+    report: &Json,
+    tolerance: f64,
+) -> (usize, Vec<String>) {
+    let base_rows: BTreeMap<String, &Json> = rows(baseline)
+        .into_iter()
+        .map(|r| (key_of(r, track.keys), r))
+        .collect();
+    let new_rows: BTreeMap<String, &Json> = rows(report)
+        .into_iter()
+        .map(|r| (key_of(r, track.keys), r))
+        .collect();
+    let mut compared = 0;
+    let mut failures = Vec::new();
+    for (key, base_row) in &base_rows {
+        let Some(new_row) = new_rows.get(key) else {
+            failures.push(format!(
+                "{}: row '{key}' present in baseline but missing from {}",
+                track.baseline, track.report
+            ));
+            continue;
+        };
+        for m in track.metrics {
+            let (Some(old), Some(new)) = (
+                base_row.get(m.field).and_then(Json::as_f64),
+                new_row.get(m.field).and_then(Json::as_f64),
+            ) else {
+                continue; // metric not tracked in one of the files
+            };
+            compared += 1;
+            let regressed = if m.lower_is_better {
+                new > old * (1.0 + tolerance)
+            } else {
+                new < old * (1.0 - tolerance)
+            };
+            if regressed {
+                let pct = if m.lower_is_better {
+                    (new / old - 1.0) * 100.0
+                } else {
+                    (1.0 - new / old) * 100.0
+                };
+                failures.push(format!(
+                    "{}: '{key}' {} regressed {:.1}% ({} {old:.6e} -> {new:.6e})",
+                    track.report,
+                    m.field,
+                    pct,
+                    if m.lower_is_better { "up from" } else { "down from" },
+                ));
+            }
+        }
+    }
+    (compared, failures)
+}
+
+/// Baseline document for a report: rows filtered to key + metric fields.
+fn baseline_from_report(track: &Track, report: &Json) -> Json {
+    let mut out_rows = Vec::new();
+    for row in rows(report) {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        for k in track.keys {
+            if let Some(v) = row.get(k) {
+                fields.push((k, v.clone()));
+            }
+        }
+        for m in track.metrics {
+            if let Some(v) = row.get(m.field) {
+                fields.push((m.field, v.clone()));
+            }
+        }
+        out_rows.push(Json::obj(fields));
+    }
+    Json::obj(vec![
+        ("source", Json::Str(track.report.to_string())),
+        ("tolerance_note", Json::Str("simulated metrics; gate at ±5%".to_string())),
+        ("rows", Json::Arr(out_rows)),
+    ])
+}
+
+fn main() {
+    let cmd = Command::new("bench_check", "compare bench reports against committed baselines")
+        .opt("baseline-dir", "directory holding BENCH_*.json", Some(".."))
+        .opt("reports-dir", "directory the benches wrote reports into", Some("bench_reports"))
+        .opt("tolerance", "allowed relative regression", Some("0.05"))
+        .flag("update", "rewrite baselines from the current reports");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cmd.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let baseline_dir = PathBuf::from(args.str("baseline-dir").unwrap_or(".."));
+    let reports_dir = PathBuf::from(args.str("reports-dir").unwrap_or("bench_reports"));
+    let tolerance = args.f64("tolerance").unwrap_or(0.05);
+    let update = args.has("update");
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut total_compared = 0usize;
+    for track in TRACKS {
+        let baseline_path = baseline_dir.join(track.baseline);
+        let report_path = reports_dir.join(track.report);
+        let report = match load(&report_path) {
+            Ok(r) => r,
+            Err(e) => {
+                if update {
+                    eprintln!("[skip] {e}");
+                    continue;
+                }
+                failures.push(format!("missing bench report: {e}"));
+                continue;
+            }
+        };
+        if update {
+            let doc = baseline_from_report(track, &report);
+            match std::fs::write(&baseline_path, doc.pretty()) {
+                Ok(()) => println!(
+                    "[update] {} <- {} ({} rows)",
+                    baseline_path.display(),
+                    report_path.display(),
+                    rows(&report).len()
+                ),
+                Err(e) => {
+                    eprintln!("{}: {e}", baseline_path.display());
+                    std::process::exit(1);
+                }
+            }
+            continue;
+        }
+        let baseline = match load(&baseline_path) {
+            Ok(b) => b,
+            Err(e) => {
+                // Bootstrap is an explicit state (a committed placeholder
+                // file) — a *missing* baseline means it was deleted or a
+                // track was renamed, which must not pass silently.
+                failures.push(format!("missing committed baseline: {e}"));
+                continue;
+            }
+        };
+        if is_bootstrap(&baseline) {
+            println!(
+                "[bootstrap] {} is a placeholder; run `bench_check --update` and commit it",
+                track.baseline
+            );
+            continue;
+        }
+        let (compared, mut fails) = check_track(track, &baseline, &report, tolerance);
+        println!(
+            "[check] {} vs {}: {} metrics compared, {} regressions",
+            track.report,
+            track.baseline,
+            compared,
+            fails.len()
+        );
+        // A real (non-bootstrap) baseline that matches nothing means a
+        // field/key rename silently disabled the gate — fail loudly.
+        if compared == 0 {
+            failures.push(format!(
+                "{}: baseline has rows but no tracked metric matched {} — renamed \
+                 report fields or keys would silently disable the gate",
+                track.baseline, track.report
+            ));
+        }
+        total_compared += compared;
+        failures.append(&mut fails);
+    }
+
+    if update {
+        return;
+    }
+    if failures.is_empty() {
+        println!("bench_check OK ({total_compared} metrics within {:.0}%)", tolerance * 100.0);
+    } else {
+        eprintln!("bench_check FAILED:");
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(app: &str, tuned_s: f64) -> Json {
+        Json::obj(vec![("app", Json::Str(app.into())), ("tuned_s", Json::Num(tuned_s))])
+    }
+
+    fn doc(rows: Vec<Json>) -> Json {
+        Json::obj(vec![("rows", Json::Arr(rows))])
+    }
+
+    fn track() -> &'static Track {
+        &TRACKS[0] // table2: tuned_s lower-is-better
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = doc(vec![row("cannon", 1.00)]);
+        let new = doc(vec![row("cannon", 1.04)]);
+        let (compared, fails) = check_track(track(), &base, &new, 0.05);
+        assert_eq!(compared, 1);
+        assert!(fails.is_empty(), "{fails:?}");
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails() {
+        let base = doc(vec![row("cannon", 1.00)]);
+        let new = doc(vec![row("cannon", 1.07)]);
+        let (_, fails) = check_track(track(), &base, &new, 0.05);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("tuned_s"), "{fails:?}");
+    }
+
+    #[test]
+    fn improvement_always_passes_lower_is_better() {
+        let base = doc(vec![row("cannon", 1.00)]);
+        let new = doc(vec![row("cannon", 0.50)]);
+        let (_, fails) = check_track(track(), &base, &new, 0.05);
+        assert!(fails.is_empty(), "{fails:?}");
+    }
+
+    #[test]
+    fn higher_is_better_direction() {
+        let t = &TRACKS[1]; // fig13: spec_tp higher-is-better
+        let mk = |tp: f64| {
+            Json::obj(vec![
+                ("app", Json::Str("cannon".into())),
+                ("gpus", Json::Num(8.0)),
+                ("spec_tp", Json::Num(tp)),
+            ])
+        };
+        let base = doc(vec![mk(100.0)]);
+        let ok = doc(vec![mk(96.0)]);
+        let bad = doc(vec![mk(90.0)]);
+        assert!(check_track(t, &base, &ok, 0.05).1.is_empty());
+        assert_eq!(check_track(t, &base, &bad, 0.05).1.len(), 1);
+    }
+
+    #[test]
+    fn missing_row_is_a_failure() {
+        let base = doc(vec![row("cannon", 1.0), row("summa", 1.0)]);
+        let new = doc(vec![row("cannon", 1.0)]);
+        let (_, fails) = check_track(track(), &base, &new, 0.05);
+        assert_eq!(fails.len(), 1);
+        assert!(fails[0].contains("summa"), "{fails:?}");
+    }
+
+    #[test]
+    fn extra_report_rows_are_ignored() {
+        // new apps may appear in reports before the baseline is ratcheted
+        let base = doc(vec![row("cannon", 1.0)]);
+        let new = doc(vec![row("cannon", 1.0), row("newapp", 9.9)]);
+        let (compared, fails) = check_track(track(), &base, &new, 0.05);
+        assert_eq!(compared, 1);
+        assert!(fails.is_empty());
+    }
+
+    #[test]
+    fn renamed_metric_field_compares_nothing() {
+        // main() treats compared == 0 on a non-bootstrap baseline as a
+        // failure; a renamed metric field must surface as that signal,
+        // not as a quiet pass.
+        let base = doc(vec![Json::obj(vec![
+            ("app", Json::Str("cannon".into())),
+            ("tuned_seconds", Json::Num(1.0)), // renamed away from tuned_s
+        ])]);
+        let new = doc(vec![row("cannon", 9.9)]);
+        let (compared, fails) = check_track(track(), &base, &new, 0.05);
+        assert_eq!(compared, 0);
+        assert!(fails.is_empty(), "{fails:?}");
+        assert!(!is_bootstrap(&base), "has rows, so not bootstrap");
+    }
+
+    #[test]
+    fn bootstrap_detection() {
+        assert!(is_bootstrap(&Json::obj(vec![
+            ("bootstrap", Json::Bool(true)),
+            ("rows", Json::Arr(vec![row("cannon", 1.0)])),
+        ])));
+        assert!(is_bootstrap(&doc(vec![])));
+        assert!(!is_bootstrap(&doc(vec![row("cannon", 1.0)])));
+    }
+
+    #[test]
+    fn update_filters_to_tracked_fields() {
+        let report = doc(vec![Json::obj(vec![
+            ("app", Json::Str("cannon".into())),
+            ("tuned_s", Json::Num(1.5)),
+            ("expert_s", Json::Num(2.0)),
+            ("untracked", Json::Num(3.0)),
+        ])]);
+        let base = baseline_from_report(track(), &report);
+        let r = rows(&base);
+        assert_eq!(r.len(), 1);
+        assert!(r[0].get("untracked").is_none());
+        assert_eq!(r[0].get("tuned_s").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(r[0].get("expert_s").and_then(Json::as_f64), Some(2.0));
+        // round-trips through the parser
+        assert_eq!(Json::parse(&base.pretty()).unwrap(), base);
+    }
+
+    #[test]
+    fn key_rendering_is_stable() {
+        let r = Json::obj(vec![
+            ("app", Json::Str("cannon".into())),
+            ("gpus", Json::Num(8.0)),
+        ]);
+        assert_eq!(key_of(&r, &["app", "gpus"]), "\"cannon\"/8");
+    }
+}

@@ -65,6 +65,29 @@ impl Objective {
         }
     }
 
+    /// Adapt the objective to a `k`-dimensional decompose call: weight
+    /// vectors are truncated or padded (halo 1.0 / no transpose) so one
+    /// tuner-chosen objective can drive decompose calls of any arity
+    /// within a mapper (e.g. the 2-target node split and a 3-target GPU
+    /// split of a hierarchical mapping function).
+    pub fn for_dims(&self, k: usize) -> Objective {
+        match self {
+            Objective::Isotropic => Objective::Isotropic,
+            Objective::AnisotropicHalo(h) => {
+                let mut v = h.clone();
+                v.resize(k, 1.0);
+                Objective::AnisotropicHalo(v)
+            }
+            Objective::WithTranspose { halo, transpose_dims } => {
+                let mut h = halo.clone();
+                h.resize(k, 1.0);
+                let mut t = transpose_dims.clone();
+                t.resize(k, false);
+                Objective::WithTranspose { halo: h, transpose_dims: t }
+            }
+        }
+    }
+
     /// Exact inter-processor element count for the isotropic 2D/3D/kD
     /// block mapping (the quantity pictured in Figs 8 & 9). The paper
     /// counts both sides of each internal boundary (2D: total perimeter of

@@ -6,6 +6,7 @@ pub mod mapper;
 pub mod runtime;
 pub mod sim;
 pub mod tasking;
+pub mod tune;
 pub mod machine;
 pub mod util;
 pub fn smoke() -> &'static str { "mapple" }

@@ -95,7 +95,10 @@ impl ProcSpace {
             return Err(format!("decompose: nonpositive extent in {targets:?}"));
         }
         let l: Vec<u64> = targets.0.iter().map(|&x| x as u64).collect();
-        let solved = decompose_with(d as u64, &l, obj);
+        // Weighted objectives carry per-dimension vectors; adapt them to
+        // this call's arity so one mapper-wide objective fits every
+        // decompose in a transform chain.
+        let solved = decompose_with(d as u64, &l, &obj.for_dims(k));
         self.decompose_fixed(i, &solved.factors.iter().map(|&f| f as i64).collect::<Vec<_>>())
     }
 

@@ -4,7 +4,9 @@
 //!
 //! Subcommands:
 //!   run        — build an app, map it (mapple | expert | heuristic |
-//!                tuned), simulate, and report throughput/comm/memory
+//!                tuned | auto), simulate, and report throughput/comm/memory
+//!   tune       — search the mapper space with the simulator as cost model
+//!                and emit the winning mapper as .mpl source
 //!   compile    — parse + compile a .mpl file and dump its directive tables
 //!   decompose  — solve a processor-grid factorization for an iteration space
 //!   apps       — list available applications
@@ -12,6 +14,7 @@
 //! Examples:
 //!   mapple run --app cannon --nodes 2 --mapper mapple
 //!   mapple run --app stencil --nodes 4 --mapper heuristic
+//!   mapple tune --app circuit --nodes 2 --budget 128 --strategy beam
 //!   mapple compile mappers/cannon.mpl --nodes 2
 //!   mapple decompose --procs 48 --ispace 1024x512x64
 
@@ -22,6 +25,7 @@ use mapple::mapper::api::Mapper;
 use mapple::mapper::expert::expert_for;
 use mapple::mapper::{DefaultHeuristicMapper, MappleMapper};
 use mapple::mapple::MapperSpec;
+use mapple::tune::{tune, tune_with_ctx, EvalCtx, StrategyKind, TuneConfig};
 use mapple::util::bench::fmt_time;
 use mapple::util::cli::Command;
 
@@ -33,6 +37,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&argv[1..]),
+        Some("tune") => cmd_tune(&argv[1..]),
         Some("compile") => cmd_compile(&argv[1..]),
         Some("decompose") => cmd_decompose(&argv[1..]),
         Some("apps") => {
@@ -41,7 +46,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: mapple <run|compile|decompose|apps> [--help]\n\
+                "usage: mapple <run|tune|compile|decompose|apps> [--help]\n\
                  Mapple — declarative mapping for distributed heterogeneous programs."
             );
             2
@@ -92,7 +97,7 @@ fn cmd_run(argv: &[String]) -> i32 {
     let cmd = Command::new("mapple run", "map + simulate a benchmark")
         .opt("app", "application name (see `mapple apps`)", Some("cannon"))
         .opt("nodes", "cluster nodes (4 GPUs each)", Some("2"))
-        .opt("mapper", "mapple | tuned | expert | heuristic", Some("mapple"))
+        .opt("mapper", "mapple | tuned | expert | heuristic | auto", Some("mapple"))
         .opt("scale", "problem-size multiplier", Some("1"));
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -118,6 +123,21 @@ fn cmd_run(argv: &[String]) -> i32 {
         )),
         "expert" => expert_for(&app_name, desc.nodes, desc.gpus_per_node).unwrap(),
         "heuristic" => Box::new(DefaultHeuristicMapper::new()),
+        // Tune against the *same* workload this run simulates (scale and
+        // all) — the bench-sized Flavor::Auto context would optimize
+        // size-sensitive knobs (memories, backpressure) for a different
+        // problem size when --scale != 1.
+        "auto" => {
+            let tune_target = build_app(&app_name, &desc, scale).unwrap();
+            let ctx = EvalCtx::from_parts(&app_name, vec![desc.clone()], vec![tune_target]);
+            match tune_with_ctx(&TuneConfig::quick(&app_name, &desc), &ctx) {
+                Ok(result) => Box::new(MappleMapper::new(result.best.build(&desc).unwrap())),
+                Err(e) => {
+                    eprintln!("autotune failed: {e}");
+                    return 1;
+                }
+            }
+        }
         other => {
             eprintln!("unknown mapper '{other}'");
             return 2;
@@ -142,6 +162,72 @@ fn cmd_run(argv: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn cmd_tune(argv: &[String]) -> i32 {
+    let cmd = Command::new("mapple tune", "autotune a mapper against the simulator")
+        .opt("app", "application name (see `mapple apps`)", Some("cannon"))
+        .opt("nodes", "cluster nodes (4 GPUs each)", Some("2"))
+        .opt("budget", "candidate evaluations", Some("96"))
+        .opt("batch", "candidates per parallel round", Some("16"))
+        .opt("seed", "search RNG seed", Some("40961"))
+        .opt("threads", "worker threads (0 = auto)", Some("0"))
+        .opt("strategy", "random | greedy | beam | beamN", Some("beam"))
+        .opt("out", "write the winning mapper's .mpl here", None);
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let app = args.str("app").unwrap_or("cannon").to_string();
+    let nodes = args.usize("nodes").unwrap_or(2);
+    let strategy = match StrategyKind::parse(args.str("strategy").unwrap_or("beam")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let desc = MachineDesc::paper_testbed(nodes);
+    let mut cfg = TuneConfig::quick(&app, &desc);
+    cfg.budget = args.usize("budget").unwrap_or(96);
+    cfg.batch = args.usize("batch").unwrap_or(16).max(1);
+    cfg.seed = args.usize("seed").unwrap_or(40961) as u64;
+    cfg.threads = args.usize("threads").unwrap_or(0);
+    cfg.strategy = strategy;
+    let start = std::time::Instant::now();
+    let result = match tune(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("tune failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "{app} on {nodes} nodes: seed makespan {} -> tuned {} ({:.2}x) \
+         after {} candidates in {:.1}s ({} directive edits)",
+        fmt_time(result.seed_score),
+        fmt_time(result.best_score),
+        result.speedup(),
+        result.evaluated,
+        start.elapsed().as_secs_f64(),
+        result.best.edits(),
+    );
+    match args.str("out") {
+        Some(path) => match std::fs::write(path, &result.mpl) {
+            Ok(()) => println!("[winning mapper written to {path}]"),
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 1;
+            }
+        },
+        None => {
+            println!("\n# ---- winning mapper ----\n{}", result.mpl);
+        }
+    }
+    0
 }
 
 fn cmd_compile(argv: &[String]) -> i32 {

@@ -35,6 +35,7 @@ use super::interp::Interp;
 use super::lower::{self, LowerError};
 use super::program::{DirectiveOp, LayoutProps, MapperSpec};
 use super::vm::MappingPlan;
+use crate::decompose::Objective;
 use crate::machine::topology::{MachineDesc, MemKind, ProcKind};
 
 // ---------------------------------------------------------------------------
@@ -928,6 +929,7 @@ impl FnBuilder {
 /// ```
 pub struct MapperBuilder {
     desc: MachineDesc,
+    objective: Objective,
     globals: Vec<(String, TExpr)>,
     funcs: Vec<TFunc>,
     directives: Vec<DirectiveOp>,
@@ -938,10 +940,19 @@ impl MapperBuilder {
     pub fn new(desc: &MachineDesc) -> MapperBuilder {
         MapperBuilder {
             desc: desc.clone(),
+            objective: Objective::Isotropic,
             globals: Vec::new(),
             funcs: Vec::new(),
             directives: Vec::new(),
         }
+    }
+
+    /// Set the communication objective every `decompose`/`auto_split` in
+    /// this mapper optimizes (default: the §4.2 isotropic objective).
+    /// The autotuner searches over this knob.
+    pub fn with_objective(&mut self, objective: Objective) -> &mut Self {
+        self.objective = objective;
+        self
     }
 
     /// Declare the global `name = Machine(kind)` — the physical 2D
@@ -1069,7 +1080,8 @@ impl MapperBuilder {
             items.push(Item::Def(to_ast_func(f)));
         }
         let prog = Program { items };
-        let interp = Interp::new(&prog, &self.desc).map_err(|e| e.to_string())?;
+        let interp = Interp::with_objective(&prog, &self.desc, self.objective.clone())
+            .map_err(|e| e.to_string())?;
         let typed: Vec<(String, Option<TFunc>)> =
             self.funcs.into_iter().map(|f| (f.name.clone(), Some(f))).collect();
         let module = lower::lower_funcs(typed, &interp);

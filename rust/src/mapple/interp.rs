@@ -8,6 +8,7 @@
 use super::ast::*;
 use super::parser::parse;
 use super::value::{arith, compare, Value};
+use crate::decompose::Objective;
 use crate::machine::point::Tuple;
 use crate::machine::space::ProcSpace;
 use crate::machine::topology::{MachineDesc, ProcId, ProcKind};
@@ -49,6 +50,10 @@ pub struct Interp {
     funcs: HashMap<String, FuncDef>,
     globals: HashMap<String, Value>,
     steps: std::cell::Cell<usize>,
+    /// Communication objective every `decompose` in this program uses —
+    /// a compile-time knob (the autotuner searches over it); `.mpl`
+    /// surface syntax stays objective-free.
+    objective: Objective,
 }
 
 impl Interp {
@@ -58,8 +63,20 @@ impl Interp {
         Interp::new(&prog, desc).map_err(|e| e.to_string())
     }
 
-    /// Bind an already-parsed program.
+    /// Bind an already-parsed program with the default (§4.2 isotropic)
+    /// decompose objective.
     pub fn new(prog: &Program, desc: &MachineDesc) -> RtResult<Interp> {
+        Interp::with_objective(prog, desc, Objective::Isotropic)
+    }
+
+    /// Bind with an explicit decompose objective. The objective must be
+    /// fixed before binding: top-level assignments may already transform
+    /// machine spaces with `decompose`.
+    pub fn with_objective(
+        prog: &Program,
+        desc: &MachineDesc,
+        objective: Objective,
+    ) -> RtResult<Interp> {
         let mut funcs = HashMap::new();
         for f in prog.funcs() {
             if funcs.insert(f.name.clone(), f.clone()).is_some() {
@@ -71,6 +88,7 @@ impl Interp {
             funcs,
             globals: HashMap::new(),
             steps: std::cell::Cell::new(0),
+            objective,
         };
         // Evaluate top-level assignments in order.
         for item in &prog.items {
@@ -89,6 +107,11 @@ impl Interp {
     /// Does the program define this function?
     pub fn has_func(&self, name: &str) -> bool {
         self.funcs.contains_key(name)
+    }
+
+    /// The decompose objective this program was bound with.
+    pub fn objective(&self) -> &Objective {
+        &self.objective
     }
 
     /// Value of an evaluated top-level binding (used by the lowering pass
@@ -510,7 +533,7 @@ impl Interp {
                 need(2)?;
                 let dim = int_at(0)? as usize;
                 let targets = vals[1].as_tuple().map_err(rt)?;
-                let s = space.decompose(dim, targets).map_err(rt)?;
+                let s = space.decompose_obj(dim, targets, &self.objective).map_err(rt)?;
                 Ok(Value::Space(s))
             }
             _ => Err(rt(format!("unknown machine method '.{name}'"))),

@@ -41,6 +41,7 @@ use super::ast::{BinOp, Program, UnOp};
 use super::build::{self, TExpr, TFunc, TIndex, TStmt};
 use super::interp::Interp;
 use super::value::{arith, Value};
+use crate::decompose::Objective;
 use crate::machine::topology::MachineDesc;
 use std::collections::{HashMap, HashSet};
 
@@ -157,6 +158,9 @@ pub struct FuncCode {
 #[derive(Clone, Debug)]
 pub struct Module {
     pub desc: MachineDesc,
+    /// Decompose objective the program was bound with (mirrors the
+    /// interpreter's, so VM and tree walker always agree).
+    pub objective: Objective,
     pub consts: Vec<Value>,
     /// One slot per defined function; `None` = not lowerable (interp
     /// fallback). Call indices always refer to this vec.
@@ -234,7 +238,13 @@ pub fn lower_funcs(defs: Vec<(String, Option<TFunc>)>, interp: &Interp) -> Modul
             break;
         }
     }
-    Module { desc: interp.desc.clone(), consts: ctx.consts, funcs, by_name }
+    Module {
+        desc: interp.desc.clone(),
+        objective: interp.objective().clone(),
+        consts: ctx.consts,
+        funcs,
+        by_name,
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ use super::interp::{Interp, RtError};
 use super::lower;
 use super::parser::parse;
 use super::vm::{MappingPlan, PlacementTable};
+use crate::decompose::Objective;
 use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::{MachineDesc, MemKind, ProcId, ProcKind};
 use std::collections::{HashMap, HashSet};
@@ -172,14 +173,35 @@ impl std::fmt::Debug for MapperSpec {
 impl MapperSpec {
     /// Parse + bind + table-build in one step.
     pub fn compile(src: &str, desc: &MachineDesc) -> Result<MapperSpec, String> {
+        Self::compile_with(src, desc, Objective::Isotropic)
+    }
+
+    /// Compile with an explicit decompose objective — the compile-time
+    /// knob the autotuner searches; `.mpl` syntax itself stays
+    /// objective-free.
+    pub fn compile_with(
+        src: &str,
+        desc: &MachineDesc,
+        objective: Objective,
+    ) -> Result<MapperSpec, String> {
         let prog = parse(src).map_err(|e| e.to_string())?;
-        Self::from_program(&prog, desc)
+        Self::from_program_with(&prog, desc, objective)
     }
 
     /// Text front-end: bind the interpreter, lower the (desugared)
     /// functions, desugar the directives, and assemble.
     pub fn from_program(prog: &Program, desc: &MachineDesc) -> Result<MapperSpec, String> {
-        let interp = Interp::new(prog, desc).map_err(|e| e.to_string())?;
+        Self::from_program_with(prog, desc, Objective::Isotropic)
+    }
+
+    /// [`MapperSpec::from_program`] with an explicit decompose objective.
+    pub fn from_program_with(
+        prog: &Program,
+        desc: &MachineDesc,
+        objective: Objective,
+    ) -> Result<MapperSpec, String> {
+        let interp =
+            Interp::with_objective(prog, desc, objective).map_err(|e| e.to_string())?;
         let plan = MappingPlan::new(lower::lower(prog, &interp));
         let mut ops = Vec::new();
         for d in prog.directives() {

@@ -490,7 +490,7 @@ impl Vm<'_> {
                 need(2)?;
                 let dim = int_at(0)? as usize;
                 let targets = regs[args[1] as usize].as_tuple()?;
-                space.decompose(dim, targets)?
+                space.decompose_obj(dim, targets, &self.module.objective)?
             }
         };
         Ok(Value::Space(s))

@@ -1,0 +1,222 @@
+//! Simulator-guided mapper autotuning (the "LLM optimizers via
+//! agent-system interfaces" follow-up, done with classic search): the
+//! typed-op space PR 3 made first-class is small and discrete, and the
+//! PR 2 simulator is a cheap, deterministic cost model — so mapper
+//! tuning becomes search.
+//!
+//! ```text
+//!   TuneSpec genome (tune::spec)       seed = baseline .mpl mapper
+//!        │ mutate (tune::space)         over the app's task families
+//!        ▼
+//!   Strategy (tune::strategy)          random | greedy | beam
+//!        │ propose batch
+//!        ▼
+//!   worker pool (tune::score)          std::thread::scope, no deps
+//!        │ build → pipeline → sim      geomean makespan across shapes
+//!        ▼
+//!   TuneResult                         best genome + emitted .mpl
+//! ```
+//!
+//! Guarantee: the seed genome is scored first and only strictly better
+//! candidates replace it, so the returned mapper is never worse than the
+//! app's baseline Mapple mapper *under the scored shapes* (tested in
+//! `rust/tests/tune.rs`).
+
+pub mod score;
+pub mod space;
+pub mod spec;
+pub mod strategy;
+
+pub use score::{evaluate_parallel, score, EvalCtx};
+pub use space::SearchSpace;
+pub use spec::{ChainOp, MapFn, TuneSpec};
+pub use strategy::{BeamSearch, RandomSearch, Strategy, StrategyKind};
+
+use crate::decompose::Objective;
+use crate::machine::topology::MachineDesc;
+use crate::util::prng::Rng;
+use std::collections::HashMap;
+
+/// Tuning-run parameters.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// Application name (one of the nine benchmarks).
+    pub app: String,
+    /// Machine shapes candidates are scored on (geomean across them).
+    pub shapes: Vec<MachineDesc>,
+    /// RNG seed — the whole run is deterministic in it.
+    pub seed: u64,
+    /// Candidate evaluations after the seed genome.
+    pub budget: usize,
+    /// Candidates proposed (and scored in parallel) per round.
+    pub batch: usize,
+    /// Worker threads (0 = one per available core, capped at 8).
+    pub threads: usize,
+    pub strategy: StrategyKind,
+}
+
+impl TuneConfig {
+    /// The default configuration benches and `Flavor::Auto` use: beam
+    /// search over the single given shape with a fixed seed, sized to
+    /// finish in seconds per app.
+    pub fn quick(app: &str, desc: &MachineDesc) -> TuneConfig {
+        TuneConfig {
+            app: app.to_string(),
+            shapes: vec![desc.clone()],
+            seed: 0xA001,
+            budget: 96,
+            batch: 16,
+            threads: 0,
+            strategy: StrategyKind::Beam(4),
+        }
+    }
+
+    fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    }
+}
+
+/// Outcome of a tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    /// Best genome found (== the seed when nothing beat it).
+    pub best: TuneSpec,
+    /// Its score (geomean simulated makespan, seconds).
+    pub best_score: f64,
+    /// The seed genome's score — `best_score <= seed_score` always.
+    pub seed_score: f64,
+    /// Candidates considered, seed excluded (duplicate genomes are
+    /// served from a score memo instead of re-simulating).
+    pub evaluated: usize,
+    /// The best genome pretty-printed as `.mpl` source.
+    pub mpl: String,
+    /// The best genome's decompose objective — pass to
+    /// [`crate::mapple::MapperSpec::compile_with`] when recompiling the
+    /// emitted source (the objective has no surface syntax).
+    pub objective: Objective,
+}
+
+impl TuneResult {
+    /// Speedup of the tuned mapper over the seed (≥ 1.0 by construction).
+    pub fn speedup(&self) -> f64 {
+        self.seed_score / self.best_score
+    }
+}
+
+/// Run the autotuner against the benchmark-sized workload
+/// ([`EvalCtx::for_bench`]). Deterministic in `cfg.seed`: the strategy
+/// consumes the RNG single-threadedly and scoring is pure, so thread
+/// count and scheduling cannot change the result.
+pub fn tune(cfg: &TuneConfig) -> Result<TuneResult, String> {
+    if cfg.shapes.is_empty() {
+        return Err("tune: no machine shapes to score on".into());
+    }
+    if crate::apps::mappers::mapple_source(&cfg.app).is_none() {
+        return Err(format!("tune: unknown app '{}' (see `mapple apps`)", cfg.app));
+    }
+    let ctx = EvalCtx::for_bench(&cfg.app, cfg.shapes.clone());
+    tune_with_ctx(cfg, &ctx)
+}
+
+/// Run the autotuner against an explicit evaluation context — use this
+/// when the workload being tuned for differs from the bench sizing
+/// (e.g. `mapple run --mapper auto --scale N` tunes against the actual
+/// scaled instance).
+pub fn tune_with_ctx(cfg: &TuneConfig, ctx: &EvalCtx) -> Result<TuneResult, String> {
+    if ctx.shapes.is_empty() {
+        return Err("tune: no machine shapes to score on".into());
+    }
+    let space = SearchSpace::from_app(&cfg.app, &ctx.apps[0]);
+    let seed_spec = TuneSpec::seed(&cfg.app);
+    let seed_score = score(&seed_spec, ctx);
+    if !seed_score.is_finite() {
+        return Err(format!("tune: seed mapper for '{}' failed to simulate", cfg.app));
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut strat = cfg.strategy.build(seed_spec.clone());
+    strat.observe(&[(seed_spec.clone(), seed_score)]);
+    let threads = cfg.resolved_threads();
+
+    // Score memo: mutation can propose a genome that was already scored
+    // (e.g. an edit that undoes another); duplicates must not burn
+    // simulator budget. Keyed by the genome's Debug rendering, which is
+    // complete and deterministic.
+    let mut seen: HashMap<String, f64> = HashMap::new();
+    seen.insert(format!("{seed_spec:?}"), seed_score);
+
+    let mut best = (seed_spec, seed_score);
+    let mut evaluated = 0usize;
+    while evaluated < cfg.budget {
+        let want = cfg.batch.clamp(1, cfg.budget - evaluated);
+        let cands = strat.propose(&mut rng, &space, &ctx.shapes, want);
+        if cands.is_empty() {
+            break;
+        }
+        // Resolve each candidate to a slot: Ok(score) from the memo, or
+        // Err(index) into the deduplicated fresh list — identical genomes
+        // inside one batch are simulated once.
+        let keys: Vec<String> = cands.iter().map(|c| format!("{c:?}")).collect();
+        let mut fresh: Vec<TuneSpec> = Vec::new();
+        let mut fresh_of: HashMap<String, usize> = HashMap::new();
+        let mut slots: Vec<Result<f64, usize>> = Vec::with_capacity(cands.len());
+        for (c, key) in cands.iter().zip(&keys) {
+            if let Some(&v) = seen.get(key) {
+                slots.push(Ok(v));
+            } else {
+                let idx = *fresh_of.entry(key.clone()).or_insert_with(|| {
+                    fresh.push(c.clone());
+                    fresh.len() - 1
+                });
+                slots.push(Err(idx));
+            }
+        }
+        let fresh_scores = evaluate_parallel(&fresh, ctx, threads);
+        let scores: Vec<f64> = slots
+            .iter()
+            .map(|s| match s {
+                Ok(v) => *v,
+                Err(i) => fresh_scores[*i],
+            })
+            .collect();
+        for (key, idx) in fresh_of {
+            seen.insert(key, fresh_scores[idx]);
+        }
+        evaluated += cands.len();
+        let scored: Vec<(TuneSpec, f64)> = cands.into_iter().zip(scores).collect();
+        for (c, v) in &scored {
+            if *v < best.1 {
+                best = (c.clone(), *v);
+            }
+        }
+        strat.observe(&scored);
+    }
+
+    let mpl = best.0.to_mpl()?;
+    Ok(TuneResult {
+        objective: best.0.objective.clone(),
+        best_score: best.1,
+        seed_score,
+        evaluated,
+        mpl,
+        best: best.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_empty_shapes_and_unknown_app() {
+        let mut cfg = TuneConfig::quick("cannon", &MachineDesc::paper_testbed(1));
+        cfg.shapes.clear();
+        assert!(tune(&cfg).is_err());
+        let cfg = TuneConfig::quick("nope", &MachineDesc::paper_testbed(1));
+        let e = tune(&cfg);
+        assert!(e.is_err(), "{e:?}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Candidate scoring: compile the genome, run the §5.1 pipeline and the
+//! discrete-event simulator on every scored machine shape, and reduce to
+//! one figure of merit (geometric-mean makespan; lower is better).
+//!
+//! Evaluation is pure — a candidate's score depends only on the genome
+//! and the evaluation context — so batches are evaluated on a
+//! `std::thread` worker pool (the crate is dependency-free; no rayon)
+//! and results are bitwise deterministic regardless of thread count or
+//! interleaving.
+
+use super::spec::TuneSpec;
+use crate::apps::{run_app, AppInstance};
+use crate::machine::topology::MachineDesc;
+use crate::mapper::MappleMapper;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// The fixed evaluation context a tuning run scores candidates against:
+/// one app instance per machine shape (apps scale with the machine).
+pub struct EvalCtx {
+    pub app: String,
+    pub shapes: Vec<MachineDesc>,
+    pub apps: Vec<AppInstance>,
+}
+
+impl EvalCtx {
+    /// Benchmark-sized context (the `bench::build_bench_app` scaling).
+    pub fn for_bench(app: &str, shapes: Vec<MachineDesc>) -> EvalCtx {
+        let apps = shapes.iter().map(|d| crate::bench::build_bench_app(app, d)).collect();
+        EvalCtx { app: app.to_string(), shapes, apps }
+    }
+
+    /// Context over explicit instances (tests, custom workloads). The two
+    /// vectors must be parallel.
+    pub fn from_parts(app: &str, shapes: Vec<MachineDesc>, apps: Vec<AppInstance>) -> EvalCtx {
+        assert_eq!(shapes.len(), apps.len(), "one app instance per machine shape");
+        EvalCtx { app: app.to_string(), shapes, apps }
+    }
+}
+
+/// Simulated figure of merit for one candidate: the geometric mean of
+/// makespans across the context's shapes, `f64::INFINITY` when the
+/// candidate fails to compile, errors at mapping time, or OOMs — invalid
+/// candidates lose to every valid one.
+pub fn score(spec: &TuneSpec, ctx: &EvalCtx) -> f64 {
+    let mut log_sum = 0.0f64;
+    for (desc, app) in ctx.shapes.iter().zip(&ctx.apps) {
+        let mapper_spec = match spec.build(desc) {
+            Ok(s) => s,
+            Err(_) => return f64::INFINITY,
+        };
+        let mapper = MappleMapper::new(mapper_spec);
+        match run_app(app, &mapper, desc) {
+            Ok(out) if out.sim.oom.is_none() && out.sim.makespan > 0.0 => {
+                log_sum += out.sim.makespan.ln();
+            }
+            _ => return f64::INFINITY,
+        }
+    }
+    (log_sum / ctx.shapes.len() as f64).exp()
+}
+
+/// Score a batch of candidates on `threads` workers. Output order matches
+/// input order; the result is identical to sequential evaluation.
+pub fn evaluate_parallel(cands: &[TuneSpec], ctx: &EvalCtx, threads: usize) -> Vec<f64> {
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, cands.len());
+    if threads == 1 {
+        return cands.iter().map(|c| score(c, ctx)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out = Mutex::new(vec![f64::INFINITY; cands.len()]);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cands.len() {
+                    break;
+                }
+                let v = score(&cands[i], ctx);
+                out.lock().unwrap()[i] = v;
+            });
+        }
+    });
+    out.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    fn ctx() -> EvalCtx {
+        let desc = MachineDesc::paper_testbed(1);
+        let app = apps::cannon(256, 4);
+        EvalCtx::from_parts("cannon", vec![desc], vec![app])
+    }
+
+    #[test]
+    fn seed_scores_finite() {
+        let c = ctx();
+        let s = score(&TuneSpec::seed("cannon"), &c);
+        assert!(s.is_finite() && s > 0.0, "{s}");
+    }
+
+    #[test]
+    fn unknown_app_scores_infinite() {
+        let c = ctx();
+        assert!(score(&TuneSpec::seed("nope"), &c).is_infinite());
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let c = ctx();
+        let seed = TuneSpec::seed("cannon");
+        let mut gc = seed.clone();
+        gc.gc.insert(("mm_step".into(), 0));
+        let mut bad = seed.clone();
+        bad.app = "nope".into();
+        let cands = vec![seed.clone(), gc, bad, seed];
+        let seq: Vec<f64> = cands.iter().map(|x| score(x, &c)).collect();
+        let par = evaluate_parallel(&cands, &c, 4);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert!((a == b) || (a.is_infinite() && b.is_infinite()), "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! The tuner's search space: what an app exposes to mutate over, and the
+//! mutation operators that move a [`TuneSpec`] through it.
+//!
+//! The space is derived from the app's *task program* (launch names,
+//! region-argument counts, iteration-space arities), not hardcoded per
+//! app — any `AppInstance` is tunable. Mutations are generated validated:
+//! transform chains are checked against every machine shape the tuner
+//! scores on, so candidates rarely waste an evaluation on a compile
+//! error (runtime-invalid candidates still score `∞` and die off).
+
+use super::spec::{chain_shape, ChainOp, MapFn, TuneSpec};
+use crate::apps::AppInstance;
+use crate::decompose::Objective;
+use crate::machine::topology::{MachineDesc, MemKind, ProcKind};
+use crate::mapple::program::base_name;
+use crate::util::prng::Rng;
+use std::collections::BTreeMap;
+
+/// One task family of the app (launches sharing a directive family name).
+#[derive(Clone, Debug)]
+pub struct TaskInfo {
+    /// Family name (`mm_step_3` → `mm_step`) — what directives target.
+    pub family: String,
+    /// Max region-argument count across the family's launches.
+    pub args: usize,
+    /// Max per-point FLOPs — biases the TaskMap mutation toward CPU for
+    /// tiny tasks (paper §7.1: kernel-launch overhead dominates them).
+    pub flops_per_point: f64,
+}
+
+/// Everything the mutation operators need to know about an app.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub app: String,
+    pub tasks: Vec<TaskInfo>,
+    /// Smallest launch arity — bounds `HierBlock { dims }` proposals,
+    /// since a generated mapping serves every launch.
+    pub min_dims: usize,
+}
+
+/// Memory kinds a Region mutation may pick.
+const MEM_MENU: &[MemKind] =
+    &[MemKind::FbMem, MemKind::ZeroCopy, MemKind::SysMem, MemKind::RdmaMem];
+
+/// Processor kinds a TaskMap mutation may pick.
+const PROC_MENU: &[ProcKind] = &[ProcKind::Gpu, ProcKind::Cpu, ProcKind::Omp];
+
+/// In-flight limits a Backpressure mutation may pick.
+const BP_MENU: &[usize] = &[1, 2, 4, 8];
+
+/// Decompose objectives the tuner searches over. Weight vectors are
+/// adapted to each decompose call's arity via [`Objective::for_dims`].
+pub fn objective_menu() -> Vec<Objective> {
+    vec![
+        Objective::Isotropic,
+        Objective::AnisotropicHalo(vec![2.0, 1.0]),
+        Objective::AnisotropicHalo(vec![1.0, 2.0]),
+        Objective::AnisotropicHalo(vec![4.0, 1.0]),
+        Objective::AnisotropicHalo(vec![1.0, 4.0]),
+        Objective::WithTranspose { halo: vec![1.0, 1.0], transpose_dims: vec![true, false] },
+        Objective::WithTranspose { halo: vec![1.0, 1.0], transpose_dims: vec![false, true] },
+    ]
+}
+
+impl SearchSpace {
+    /// Derive the search space from an app's task program.
+    pub fn from_app(app: &str, inst: &AppInstance) -> SearchSpace {
+        let mut families: BTreeMap<&str, TaskInfo> = BTreeMap::new();
+        let mut min_dims = usize::MAX;
+        for launch in &inst.launches {
+            let fam = base_name(&launch.name);
+            min_dims = min_dims.min(launch.domain.extent().dim());
+            let entry = families.entry(fam).or_insert_with(|| TaskInfo {
+                family: fam.to_string(),
+                args: 0,
+                flops_per_point: 0.0,
+            });
+            entry.args = entry.args.max(launch.reqs.len());
+            entry.flops_per_point = entry.flops_per_point.max(launch.flops_per_point);
+        }
+        SearchSpace {
+            app: app.to_string(),
+            tasks: families.into_values().collect(),
+            min_dims: if min_dims == usize::MAX { 1 } else { min_dims },
+        }
+    }
+
+    /// One mutated child: 1–2 knob edits on a copy of `base`.
+    pub fn mutate(
+        &self,
+        base: &TuneSpec,
+        rng: &mut Rng,
+        shapes: &[MachineDesc],
+    ) -> TuneSpec {
+        let mut out = base.clone();
+        let edits = 1 + rng.below(2);
+        for _ in 0..edits {
+            self.mutate_once(&mut out, rng, shapes);
+        }
+        out
+    }
+
+    fn mutate_once(&self, spec: &mut TuneSpec, rng: &mut Rng, shapes: &[MachineDesc]) {
+        if self.tasks.is_empty() {
+            return;
+        }
+        match rng.below(12) {
+            // --- mapping function -----------------------------------------
+            0 => spec.mapping = None,
+            1 | 2 => spec.mapping = Some(self.random_map_fn(rng, shapes)),
+            // --- decompose objective --------------------------------------
+            3 => {
+                let menu = objective_menu();
+                spec.objective = rng.choose(&menu).clone();
+            }
+            // --- memory placement -----------------------------------------
+            4 | 5 => {
+                let t = rng.choose(&self.tasks);
+                if t.args == 0 {
+                    return;
+                }
+                let key = (t.family.clone(), rng.below(t.args as u64) as usize);
+                // Removal is only a real edit when the key exists;
+                // otherwise fall through to an insert so the child
+                // actually differs from its parent.
+                let removed = rng.chance(0.25) && spec.mem.remove(&key).is_some();
+                if !removed {
+                    spec.mem.insert(key, *rng.choose(MEM_MENU));
+                }
+            }
+            // --- eager collection -----------------------------------------
+            6 | 7 => {
+                let t = rng.choose(&self.tasks);
+                if t.args == 0 {
+                    return;
+                }
+                let key = (t.family.clone(), rng.below(t.args as u64) as usize);
+                if !spec.gc.remove(&key) {
+                    spec.gc.insert(key);
+                }
+            }
+            // --- processor kind -------------------------------------------
+            8 | 9 => {
+                let t = rng.choose(&self.tasks);
+                let removed = rng.chance(0.34) && spec.task_proc.remove(&t.family).is_some();
+                if !removed {
+                    // §7.1 heuristic as a proposal bias: tiny per-point
+                    // tasks are dominated by GPU launch overhead, so for
+                    // them propose CPU half the time.
+                    let kind = if t.flops_per_point < 1e6 && rng.chance(0.5) {
+                        ProcKind::Cpu
+                    } else {
+                        *rng.choose(PROC_MENU)
+                    };
+                    spec.task_proc.insert(t.family.clone(), kind);
+                }
+            }
+            // --- backpressure ---------------------------------------------
+            _ => {
+                let t = rng.choose(&self.tasks);
+                let removed = rng.chance(0.34) && spec.backpressure.remove(&t.family).is_some();
+                if !removed {
+                    spec.backpressure.insert(t.family.clone(), *rng.choose(BP_MENU));
+                }
+            }
+        }
+    }
+
+    fn random_map_fn(&self, rng: &mut Rng, shapes: &[MachineDesc]) -> MapFn {
+        let max_hier = self.min_dims.min(3);
+        match rng.below(3) {
+            0 if max_hier >= 1 => {
+                MapFn::HierBlock { dims: 1 + rng.below(max_hier as u64) as usize }
+            }
+            1 => MapFn::LinearBlock { chain: random_chain(rng, shapes) },
+            _ => MapFn::LinearCyclic { chain: random_chain(rng, shapes) },
+        }
+    }
+}
+
+/// A random transform chain over the 2-D GPU machine space that is valid
+/// on every scored shape and ends one-dimensional (for linear mappings).
+pub fn random_chain(rng: &mut Rng, shapes: &[MachineDesc]) -> Vec<ChainOp> {
+    let mut chain: Vec<ChainOp> = Vec::new();
+    // Optionally lead with the GPU-fastest reordering the shipped science
+    // mappers use — a strong prior in this codebase.
+    if rng.chance(0.5) {
+        chain.push(ChainOp::Swap { p: 0, q: 1 });
+    }
+    let extra = rng.below(3);
+    for _ in 0..extra {
+        let Some(shape) = valid_shape(&chain, shapes) else { break };
+        let n = shape.len();
+        let op = match rng.below(4) {
+            0 => {
+                // split a composite dimension by one of its prime-ish factors
+                let dim = rng.below(n as u64) as usize;
+                let ext = min_extent(&chain, shapes, dim);
+                match smallest_factor(ext) {
+                    Some(f) => ChainOp::Split { dim, factor: f },
+                    None => continue,
+                }
+            }
+            1 if n >= 2 => {
+                let p = rng.below((n - 1) as u64) as usize;
+                ChainOp::Merge { p, q: p + 1 }
+            }
+            2 if n >= 2 => {
+                let p = rng.below(n as u64) as usize;
+                let mut q = rng.below(n as u64) as usize;
+                if p == q {
+                    q = (q + 1) % n;
+                }
+                ChainOp::Swap { p: p.min(q), q: p.max(q) }
+            }
+            _ => {
+                // rare: slice away the tail half of a dimension
+                if !rng.chance(0.25) {
+                    continue;
+                }
+                let dim = rng.below(n as u64) as usize;
+                let ext = min_extent(&chain, shapes, dim);
+                if ext < 2 {
+                    continue;
+                }
+                ChainOp::Slice { dim, lo: 0, hi: ext / 2 }
+            }
+        };
+        let mut next = chain.clone();
+        next.push(op);
+        if valid_shape(&next, shapes).is_some() {
+            chain = next;
+        }
+    }
+    // Flatten to 1-D so the linear mappings can index it.
+    loop {
+        match valid_shape(&chain, shapes) {
+            Some(shape) if shape.len() > 1 => {
+                chain.push(ChainOp::Merge { p: 0, q: 1 });
+            }
+            Some(_) => break,
+            None => {
+                // Should not happen (every op was validated); fall back to
+                // the plain GPU-fastest flattening.
+                return vec![ChainOp::Swap { p: 0, q: 1 }, ChainOp::Merge { p: 0, q: 1 }];
+            }
+        }
+    }
+    chain
+}
+
+/// The chain's output shape on `shapes[0]`, provided the chain is valid
+/// on *every* shape.
+fn valid_shape(chain: &[ChainOp], shapes: &[MachineDesc]) -> Option<Vec<i64>> {
+    let mut first = None;
+    for (i, desc) in shapes.iter().enumerate() {
+        match chain_shape(chain, desc) {
+            Ok(s) if i == 0 => first = Some(s),
+            Ok(_) => {}
+            Err(_) => return None,
+        }
+    }
+    first
+}
+
+/// Smallest extent of dimension `dim` across shapes (divisor proposals
+/// must divide all of them — we use the gcd-ish conservative choice).
+fn min_extent(chain: &[ChainOp], shapes: &[MachineDesc], dim: usize) -> i64 {
+    let mut ext = i64::MAX;
+    for desc in shapes {
+        if let Ok(s) = chain_shape(chain, desc) {
+            if let Some(&e) = s.get(dim) {
+                ext = ext.min(e);
+            }
+        }
+    }
+    if ext == i64::MAX {
+        1
+    } else {
+        ext
+    }
+}
+
+/// Smallest prime factor > 1, if the extent is composite enough to split.
+fn smallest_factor(ext: i64) -> Option<i64> {
+    if ext < 2 {
+        return None;
+    }
+    for f in 2..=ext {
+        if f * f > ext {
+            break;
+        }
+        if ext % f == 0 {
+            return Some(f);
+        }
+    }
+    // prime: splitting off the whole extent is legal ((ext, 1) shape)
+    Some(ext)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    fn shapes() -> Vec<MachineDesc> {
+        vec![MachineDesc::paper_testbed(2)]
+    }
+
+    #[test]
+    fn space_from_app_finds_families() {
+        let inst = apps::cannon(256, 8);
+        let space = SearchSpace::from_app("cannon", &inst);
+        assert!(space.tasks.iter().any(|t| t.family == "mm_step"), "{:?}", space.tasks);
+        assert!(space.tasks.iter().all(|t| t.args > 0));
+        assert_eq!(space.min_dims, 2);
+    }
+
+    #[test]
+    fn random_chains_are_valid_and_flat() {
+        let shapes = shapes();
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let chain = random_chain(&mut rng, &shapes);
+            let shape = chain_shape(&chain, &shapes[0])
+                .unwrap_or_else(|e| panic!("{chain:?}: {e}"));
+            assert_eq!(shape.len(), 1, "{chain:?} → {shape:?}");
+            assert!(shape[0] >= 1);
+        }
+    }
+
+    #[test]
+    fn mutations_build_mostly() {
+        let inst = apps::cannon(256, 8);
+        let space = SearchSpace::from_app("cannon", &inst);
+        let shapes = shapes();
+        let mut rng = Rng::new(11);
+        let seed = TuneSpec::seed("cannon");
+        let mut ok = 0;
+        for _ in 0..100 {
+            let cand = space.mutate(&seed, &mut rng, &shapes);
+            if cand.build(&shapes[0]).is_ok() {
+                ok += 1;
+            }
+        }
+        assert!(ok >= 90, "only {ok}/100 mutated candidates compiled");
+    }
+
+    #[test]
+    fn mutation_is_deterministic_per_seed() {
+        let inst = apps::cannon(256, 8);
+        let space = SearchSpace::from_app("cannon", &inst);
+        let shapes = shapes();
+        let seed = TuneSpec::seed("cannon");
+        let a: Vec<TuneSpec> = {
+            let mut rng = Rng::new(5);
+            (0..20).map(|_| space.mutate(&seed, &mut rng, &shapes)).collect()
+        };
+        let b: Vec<TuneSpec> = {
+            let mut rng = Rng::new(5);
+            (0..20).map(|_| space.mutate(&seed, &mut rng, &shapes)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,192 @@
+//! Search strategies behind one [`Strategy`] trait: propose a batch,
+//! observe the scores, repeat. The driver owns the budget, the RNG, and
+//! the parallel evaluation; strategies are pure proposal/selection logic,
+//! which keeps every strategy deterministic under a fixed seed no matter
+//! how many worker threads score the batch.
+
+use super::space::SearchSpace;
+use super::spec::TuneSpec;
+use crate::machine::topology::MachineDesc;
+use crate::util::prng::Rng;
+use std::cmp::Ordering;
+
+/// A search strategy. `propose` may return fewer candidates than asked
+/// (never more); an empty proposal ends the run early.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    fn propose(
+        &mut self,
+        rng: &mut Rng,
+        space: &SearchSpace,
+        shapes: &[MachineDesc],
+        batch: usize,
+    ) -> Vec<TuneSpec>;
+
+    fn observe(&mut self, scored: &[(TuneSpec, f64)]);
+}
+
+/// Which strategy to run (CLI / config surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Independent mutations of the seed each round.
+    Random,
+    /// Beam search of the given width; width 1 is greedy hill-climbing.
+    Beam(usize),
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Result<StrategyKind, String> {
+        match s {
+            "random" => Ok(StrategyKind::Random),
+            "greedy" => Ok(StrategyKind::Beam(1)),
+            "beam" => Ok(StrategyKind::Beam(4)),
+            other => match other.strip_prefix("beam") {
+                Some(w) => w
+                    .parse::<usize>()
+                    .map(|w| StrategyKind::Beam(w.max(1)))
+                    .map_err(|_| format!("bad strategy '{other}'")),
+                None => Err(format!("unknown strategy '{other}' (random|greedy|beam|beamN)")),
+            },
+        }
+    }
+
+    /// Instantiate the strategy, rooted at the seed genome.
+    pub fn build(&self, seed: TuneSpec) -> Box<dyn Strategy> {
+        match *self {
+            StrategyKind::Random => Box::new(RandomSearch { seed }),
+            StrategyKind::Beam(width) => {
+                Box::new(BeamSearch { width: width.max(1), seed, beam: Vec::new() })
+            }
+        }
+    }
+}
+
+/// Pure random search: every candidate is a fresh mutation of the seed.
+pub struct RandomSearch {
+    seed: TuneSpec,
+}
+
+impl Strategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(
+        &mut self,
+        rng: &mut Rng,
+        space: &SearchSpace,
+        shapes: &[MachineDesc],
+        batch: usize,
+    ) -> Vec<TuneSpec> {
+        (0..batch).map(|_| space.mutate(&self.seed, rng, shapes)).collect()
+    }
+
+    fn observe(&mut self, _scored: &[(TuneSpec, f64)]) {}
+}
+
+/// Beam search / greedy refinement: keep the `width` best genomes seen,
+/// propose mutations of the beam round-robin, fold survivors back in.
+pub struct BeamSearch {
+    width: usize,
+    seed: TuneSpec,
+    beam: Vec<(TuneSpec, f64)>,
+}
+
+impl Strategy for BeamSearch {
+    fn name(&self) -> &'static str {
+        "beam"
+    }
+
+    fn propose(
+        &mut self,
+        rng: &mut Rng,
+        space: &SearchSpace,
+        shapes: &[MachineDesc],
+        batch: usize,
+    ) -> Vec<TuneSpec> {
+        let mut out = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let parent = if self.beam.is_empty() {
+                &self.seed
+            } else {
+                &self.beam[i % self.beam.len()].0
+            };
+            out.push(space.mutate(parent, rng, shapes));
+        }
+        out
+    }
+
+    fn observe(&mut self, scored: &[(TuneSpec, f64)]) {
+        for (spec, v) in scored {
+            if !v.is_finite() {
+                continue;
+            }
+            if self.beam.iter().any(|(b, _)| b == spec) {
+                continue; // already on the beam
+            }
+            self.beam.push((spec.clone(), *v));
+        }
+        // Stable sort: earlier (older) entries win ties, keeping the run
+        // deterministic and biased toward simpler, earlier-found genomes.
+        self.beam.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal));
+        self.beam.truncate(self.width);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    fn fixture() -> (SearchSpace, Vec<MachineDesc>, TuneSpec) {
+        let inst = apps::cannon(256, 8);
+        (
+            SearchSpace::from_app("cannon", &inst),
+            vec![MachineDesc::paper_testbed(2)],
+            TuneSpec::seed("cannon"),
+        )
+    }
+
+    #[test]
+    fn strategy_kind_parses() {
+        assert_eq!(StrategyKind::parse("random").unwrap(), StrategyKind::Random);
+        assert_eq!(StrategyKind::parse("greedy").unwrap(), StrategyKind::Beam(1));
+        assert_eq!(StrategyKind::parse("beam").unwrap(), StrategyKind::Beam(4));
+        assert_eq!(StrategyKind::parse("beam8").unwrap(), StrategyKind::Beam(8));
+        assert!(StrategyKind::parse("anneal").is_err());
+    }
+
+    #[test]
+    fn random_proposes_batch() {
+        let (space, shapes, seed) = fixture();
+        let mut s = StrategyKind::Random.build(seed);
+        let mut rng = Rng::new(1);
+        let got = s.propose(&mut rng, &space, &shapes, 7);
+        assert_eq!(got.len(), 7);
+    }
+
+    #[test]
+    fn beam_keeps_best_and_dedups() {
+        let (space, shapes, seed) = fixture();
+        let mut s = BeamSearch { width: 2, seed: seed.clone(), beam: Vec::new() };
+        let mut a = seed.clone();
+        a.gc.insert(("mm_step".into(), 0));
+        let mut b = seed.clone();
+        b.gc.insert(("mm_step".into(), 1));
+        s.observe(&[
+            (seed.clone(), 5.0),
+            (a.clone(), 3.0),
+            (b.clone(), 4.0),
+            (a.clone(), 3.0),        // duplicate genome: ignored
+            (seed.clone(), f64::INFINITY), // invalid: ignored (already present anyway)
+        ]);
+        assert_eq!(s.beam.len(), 2);
+        assert_eq!(s.beam[0].0, a);
+        assert_eq!(s.beam[1].0, b);
+        // proposals now mutate beam parents
+        let mut rng = Rng::new(2);
+        let got = s.propose(&mut rng, &space, &shapes, 4);
+        assert_eq!(got.len(), 4);
+    }
+}
