@@ -1,6 +1,7 @@
 //! Application abstraction: a benchmark builds a task program (launches +
 //! data environment) that mappers place and the simulator times.
 
+use crate::exec::{execute, ExecOptions, ExecResult};
 use crate::machine::point::Tuple;
 use crate::machine::topology::MachineDesc;
 use crate::mapper::api::{Mapper, MapperAsMapping};
@@ -56,6 +57,47 @@ pub fn run_app(
     pipeline::validate(&run, &deps)?;
     let sim = simulate(&app.launches, &app.env, &deps, &run.placements, desc, &adapter);
     Ok(RunOutcome { sim, mapper_name: mapper.mapper_name().to_string() })
+}
+
+/// Outcome of *measuring* an app under a mapper on real threads. The
+/// same mapping's modelled [`SimResult`] rides along (computed from the
+/// pipeline artifacts the measurement already produced), so callers can
+/// report "simulated vs measured" without re-running the mapping stack.
+/// The extra simulate pass is deliberate: it is cheap next to the
+/// dependence analysis both stages share, and keeps every measured
+/// outcome directly comparable to its model.
+pub struct ExecOutcome {
+    pub exec: ExecResult,
+    pub sim: SimResult,
+    pub mapper_name: String,
+}
+
+/// Map + execute an app for real (pipeline → exec). The concurrent run
+/// is always differentially verified against the sequential pipeline
+/// oracle — identical placements and transition multiset, §5.1
+/// invariants on the measured timeline — so a successful return is a
+/// checked result, not just a timing.
+pub fn exec_app(
+    app: &AppInstance,
+    mapper: &dyn Mapper,
+    desc: &MachineDesc,
+    opts: &ExecOptions,
+) -> Result<ExecOutcome, String> {
+    let deps = analyze(&app.launches, &app.env);
+    let adapter = MapperAsMapping {
+        mapper,
+        num_nodes: desc.nodes,
+        procs_per_node: desc.gpus_per_node,
+    };
+    let run = pipeline::run(&app.launches, &deps, &adapter, desc.nodes)
+        .map_err(|e| e.to_string())?;
+    pipeline::validate(&run, &deps)?;
+    let exec = execute(&app.launches, &app.env, &deps, &run, desc, &adapter, opts)
+        .map_err(|e| e.to_string())?;
+    exec.verify_against(&run, &deps)
+        .map_err(|e| format!("executor diverged from the pipeline oracle: {e}"))?;
+    let sim = simulate(&app.launches, &app.env, &deps, &run.placements, desc, &adapter);
+    Ok(ExecOutcome { exec, sim, mapper_name: mapper.mapper_name().to_string() })
 }
 
 /// Largest p with p*p ≤ n (processor grid side for 2D algorithms).

@@ -99,7 +99,8 @@ pub fn circuit(p: &CircuitParams) -> AppInstance {
                     projection: neighbor(p.pieces - 1),
                 })
                 .with_req(RegionReq::tiled(wires, pw, Privilege::ReadWrite))
-                .with_flops(64.0 * p.wires_per_piece as f64),
+                .with_flops(64.0 * p.wires_per_piece as f64)
+                .with_kernel("circuit_sweep"),
         );
         id += 1;
         launches.push(
@@ -112,14 +113,16 @@ pub fn circuit(p: &CircuitParams) -> AppInstance {
                     privilege: Privilege::Reduce,
                     projection: neighbor(1),
                 })
-                .with_flops(8.0 * p.wires_per_piece as f64),
+                .with_flops(8.0 * p.wires_per_piece as f64)
+                .with_kernel("circuit_sweep"),
         );
         id += 1;
         launches.push(
             IndexLaunch::new(id, &format!("update_voltages_{l}"), dom.clone())
                 .with_req(RegionReq::tiled(private, pp, Privilege::ReadWrite))
                 .with_req(RegionReq::tiled(shared, ps, Privilege::ReadWrite))
-                .with_flops(4.0 * (p.nodes_per_piece + shared_count) as f64),
+                .with_flops(4.0 * (p.nodes_per_piece + shared_count) as f64)
+                .with_kernel("circuit_sweep"),
         );
         id += 1;
     }
@@ -190,7 +193,8 @@ pub fn pennant(p: &PennantParams) -> AppInstance {
                 .with_req(RegionReq::tiled(zones, pz, Privilege::ReadOnly))
                 .with_req(RegionReq::tiled(points, pp, Privilege::ReadOnly))
                 .with_req(RegionReq::tiled(sides, psd, Privilege::ReadWrite))
-                .with_flops(96.0 * p.zones_per_chunk as f64),
+                .with_flops(96.0 * p.zones_per_chunk as f64)
+                .with_kernel("pennant_sweep"),
         );
         id += 1;
         launches.push(
@@ -203,7 +207,8 @@ pub fn pennant(p: &PennantParams) -> AppInstance {
                     privilege: Privilege::Reduce,
                     projection: neighbor.clone(),
                 })
-                .with_flops(16.0 * p.zones_per_chunk as f64),
+                .with_flops(16.0 * p.zones_per_chunk as f64)
+                .with_kernel("pennant_sweep"),
         );
         id += 1;
         // small integration task — the classic CPU-favoring candidate
@@ -211,7 +216,8 @@ pub fn pennant(p: &PennantParams) -> AppInstance {
             IndexLaunch::new(id, &format!("advance_{c}"), dom.clone())
                 .with_req(RegionReq::tiled(zones, pz, Privilege::ReadWrite))
                 .with_req(RegionReq::tiled(points, pp, Privilege::ReadWrite))
-                .with_flops(4.0 * p.zones_per_chunk as f64),
+                .with_flops(4.0 * p.zones_per_chunk as f64)
+                .with_kernel("pennant_sweep"),
         );
         id += 1;
     }

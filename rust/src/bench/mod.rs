@@ -1,6 +1,7 @@
 //! Shared support for the `cargo bench` figure/table generators.
 
 use crate::apps::{self, mappers, AppInstance};
+use crate::exec::{ExecOptions, ExecResult};
 use crate::machine::topology::MachineDesc;
 use crate::mapper::api::Mapper;
 use crate::mapper::expert::expert_for;
@@ -72,26 +73,81 @@ pub enum Flavor {
     Auto,
 }
 
-pub fn mapper_for(flavor: &Flavor, app: &str, desc: &MachineDesc) -> Box<dyn Mapper> {
-    match flavor {
-        Flavor::Mapple => Box::new(MappleMapper::new(
-            MapperSpec::compile(mappers::mapple_source(app).unwrap(), desc).unwrap(),
-        )),
-        Flavor::Tuned => Box::new(MappleMapper::new(
-            MapperSpec::compile(mappers::tuned_source(app).unwrap(), desc).unwrap(),
-        )),
-        Flavor::Expert => expert_for(app, desc.nodes, desc.gpus_per_node).unwrap(),
-        Flavor::Heuristic => Box::new(DefaultHeuristicMapper::new()),
-        Flavor::Auto => {
-            let result = crate::tune::tune(&crate::tune::TuneConfig::quick(app, desc)).unwrap();
-            Box::new(MappleMapper::new(result.best.build(desc).unwrap()))
+impl Flavor {
+    /// The CLI surface shared by `mapple run` and `mapple exec`.
+    pub fn parse(s: &str) -> Result<Flavor, String> {
+        match s {
+            "mapple" => Ok(Flavor::Mapple),
+            "tuned" => Ok(Flavor::Tuned),
+            "expert" => Ok(Flavor::Expert),
+            "heuristic" => Ok(Flavor::Heuristic),
+            "auto" => Ok(Flavor::Auto),
+            other => {
+                Err(format!("unknown mapper '{other}' (mapple|tuned|expert|heuristic|auto)"))
+            }
         }
     }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Flavor::Mapple => "mapple",
+            Flavor::Tuned => "tuned",
+            Flavor::Expert => "expert",
+            Flavor::Heuristic => "heuristic",
+            Flavor::Auto => "auto",
+        }
+    }
+}
+
+/// Fallible mapper construction — the single flavor-to-mapper table
+/// (`mapple run`/`mapple exec` route their non-Auto arms through this;
+/// the CLI handles `Auto` itself to tune against the scaled workload).
+pub fn try_mapper_for(
+    flavor: &Flavor,
+    app: &str,
+    desc: &MachineDesc,
+) -> Result<Box<dyn Mapper>, String> {
+    let mapper: Box<dyn Mapper> = match flavor {
+        Flavor::Mapple => Box::new(MappleMapper::new(MapperSpec::compile(
+            mappers::mapple_source(app).ok_or_else(|| format!("no mapple mapper for '{app}'"))?,
+            desc,
+        )?)),
+        Flavor::Tuned => Box::new(MappleMapper::new(MapperSpec::compile(
+            mappers::tuned_source(app).ok_or_else(|| format!("no tuned mapper for '{app}'"))?,
+            desc,
+        )?)),
+        Flavor::Expert => expert_for(app, desc.nodes, desc.gpus_per_node)
+            .ok_or_else(|| format!("no expert mapper for '{app}'"))?,
+        Flavor::Heuristic => Box::new(DefaultHeuristicMapper::new()),
+        Flavor::Auto => {
+            let result = crate::tune::tune(&crate::tune::TuneConfig::quick(app, desc))?;
+            Box::new(MappleMapper::new(result.best.build(desc)?))
+        }
+    };
+    Ok(mapper)
+}
+
+/// Infallible wrapper the bench harnesses use (shipped mappers compile).
+pub fn mapper_for(flavor: &Flavor, app: &str, desc: &MachineDesc) -> Box<dyn Mapper> {
+    try_mapper_for(flavor, app, desc)
+        .unwrap_or_else(|e| panic!("mapper {}/{app}: {e}", flavor.name()))
 }
 
 /// Map + simulate, returning the sim result (OOM is returned, not fatal).
 pub fn run(app: &AppInstance, mapper: &dyn Mapper, desc: &MachineDesc) -> Result<SimResult, String> {
     Ok(apps::run_app(app, mapper, desc)?.sim)
+}
+
+/// Map + *execute* on real threads (pipeline → exec), differentially
+/// verified against the sequential oracle. The measured counterpart of
+/// [`run`] for wall-clock reporting.
+pub fn run_exec(
+    app: &AppInstance,
+    mapper: &dyn Mapper,
+    desc: &MachineDesc,
+    opts: &ExecOptions,
+) -> Result<ExecResult, String> {
+    Ok(apps::exec_app(app, mapper, desc, opts)?.exec)
 }
 
 /// Write a JSON report next to the human-readable output.

@@ -1,0 +1,284 @@
+//! Real f32 tile kernels for the concurrent executor.
+//!
+//! Where the simulator charges `flops / rate` seconds per point task, the
+//! executor actually runs the task's math over the region tiles the task
+//! touches: a dense tile GEMM for the six matmul variants, a 5-point
+//! sweep for Stencil, and data-parallel sweeps for the science workloads
+//! and initialization tasks. Every kernel is a pure function of its input
+//! buffers (no RNG, no time), so region contents — and therefore the
+//! [`super::ExecResult`] checksum — are bitwise identical across worker
+//! counts and schedules.
+//!
+//! Buffers are `f32` regardless of the region's `elem_bytes`; element
+//! size only affects the byte accounting of data movement, which the
+//! plan computes from the region metadata.
+
+use crate::machine::point::Rect;
+use crate::tasking::region::RegionId;
+
+/// Kernel selector, resolved at plan time from [`crate::tasking::task::IndexLaunch::kernel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Dense f32 tile GEMM: args = [A (m×k) read, B (k×n) read,
+    /// C (m×n) accumulate].
+    MatmulTile,
+    /// 5-point stencil sweep: args = [cells RW, south/north halo_h RO,
+    /// east/west halo_v RO].
+    Stencil5,
+    /// Generic data-parallel sweep: every written argument is updated
+    /// from the task's read arguments. Covers initialization tasks, the
+    /// science workloads' per-piece updates, and reductions without a
+    /// dedicated kernel.
+    Sweep,
+}
+
+/// Map a launch's kernel name to its executor kernel. Unknown or absent
+/// names run the generic sweep — still real per-element compute, just
+/// without an algorithm-specific inner loop.
+pub fn resolve(kernel: Option<&str>) -> Kernel {
+    match kernel {
+        Some("matmul_tile") => Kernel::MatmulTile,
+        Some("stencil5") => Kernel::Stencil5,
+        // The science workloads' per-piece updates are data-parallel
+        // sweeps over their piece tiles (graph/mesh indirection folded
+        // into the elementwise mix).
+        Some("circuit_sweep") | Some("pennant_sweep") => Kernel::Sweep,
+        _ => Kernel::Sweep,
+    }
+}
+
+/// Per-argument view a kernel needs: tile shape plus access mode.
+#[derive(Clone, Debug)]
+pub struct ArgView {
+    pub rect: Rect,
+    pub reads: bool,
+    pub writes: bool,
+    pub reduces: bool,
+}
+
+/// Deterministic initial contents of a never-written tile (the cold-read
+/// base every gather starts from).
+pub fn cold_tile(region: RegionId, rect: &Rect) -> Vec<f32> {
+    let n = rect.volume().max(0) as usize;
+    let seed =
+        region.0 as i64 * 131 + rect.lo.iter().fold(0i64, |acc, &c| acc.wrapping_mul(31) + c);
+    (0..n).map(|i| (((seed + i as i64).rem_euclid(251)) as f32) * 0.004 - 0.5).collect()
+}
+
+/// Execute a kernel. `inputs[i]` is the gathered buffer for argument `i`
+/// (cold/zero base for write-only arguments). Returns one output buffer
+/// per *written* argument (`None` for read-only ones). Shape-mismatched
+/// launches fall back to the generic sweep rather than panicking.
+pub fn run(kernel: Kernel, args: &[ArgView], inputs: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
+    match kernel {
+        Kernel::MatmulTile => matmul_tile(args, inputs).unwrap_or_else(|| sweep(args, inputs)),
+        Kernel::Stencil5 => stencil5(args, inputs).unwrap_or_else(|| sweep(args, inputs)),
+        Kernel::Sweep => sweep(args, inputs),
+    }
+}
+
+/// (rows, cols) of a 2-D tile rect.
+fn dims2(rect: &Rect) -> Option<(usize, usize)> {
+    if rect.dim() != 2 {
+        return None;
+    }
+    let e = rect.extent();
+    Some((e[0] as usize, e[1] as usize))
+}
+
+#[allow(clippy::needless_range_loop)]
+fn matmul_tile(args: &[ArgView], inputs: &[Vec<f32>]) -> Option<Vec<Option<Vec<f32>>>> {
+    if args.len() != 3 || !args[2].writes {
+        return None;
+    }
+    let (m, k) = dims2(&args[0].rect)?;
+    let (k2, n) = dims2(&args[1].rect)?;
+    let (m2, n2) = dims2(&args[2].rect)?;
+    if k2 != k || m2 != m || n2 != n {
+        return None;
+    }
+    let a = &inputs[0];
+    let b = &inputs[1];
+    let mut c = inputs[2].clone();
+    if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+        return None;
+    }
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a[i * k + l] * b[l * n + j];
+            }
+            c[i * n + j] += acc;
+        }
+    }
+    let mut out: Vec<Option<Vec<f32>>> = vec![None, None, None];
+    out[2] = Some(c);
+    Some(out)
+}
+
+#[allow(clippy::needless_range_loop)]
+fn stencil5(args: &[ArgView], inputs: &[Vec<f32>]) -> Option<Vec<Option<Vec<f32>>>> {
+    if args.len() < 5 || !args[0].writes {
+        return None;
+    }
+    let (r, c) = dims2(&args[0].rect)?;
+    let cells = &inputs[0];
+    if cells.len() != r * c {
+        return None;
+    }
+    // Neighbor boundary strips: south/north are (2h × c) row strips, the
+    // south neighbor contributes its top row (strip row 0) and the north
+    // neighbor its bottom row (strip row 2h-1); east/west are (r × 2h)
+    // column strips contributing their left/right columns.
+    let (hs_rows, hs_cols) = dims2(&args[1].rect)?;
+    let (hn_rows, hn_cols) = dims2(&args[2].rect)?;
+    let (_, ve_cols) = dims2(&args[3].rect)?;
+    let (_, vw_cols) = dims2(&args[4].rect)?;
+    let south = &inputs[1];
+    let north = &inputs[2];
+    let east = &inputs[3];
+    let west = &inputs[4];
+    if hs_cols != c || hn_cols != c || south.len() != hs_rows * c || north.len() != hn_rows * c {
+        return None;
+    }
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            let center = cells[i * c + j];
+            let up = if i > 0 {
+                cells[(i - 1) * c + j]
+            } else {
+                north[(hn_rows - 1) * c + j]
+            };
+            let down = if i + 1 < r { cells[(i + 1) * c + j] } else { south[j] };
+            let left = if j > 0 {
+                cells[i * c + j - 1]
+            } else {
+                let idx = i * vw_cols + (vw_cols - 1);
+                if idx < west.len() {
+                    west[idx]
+                } else {
+                    0.0
+                }
+            };
+            let right = if j + 1 < c {
+                cells[i * c + j + 1]
+            } else {
+                let idx = i * ve_cols;
+                if idx < east.len() {
+                    east[idx]
+                } else {
+                    0.0
+                }
+            };
+            out[i * c + j] = 0.2 * (center + up + down + left + right);
+        }
+    }
+    let mut res: Vec<Option<Vec<f32>>> = vec![None; args.len()];
+    res[0] = Some(out);
+    Some(res)
+}
+
+/// The generic kernel: one real pass over every written tile, mixing in
+/// the read arguments elementwise (wrapped indexing when shapes differ).
+/// Reductions accumulate; read-write arguments blend.
+fn sweep(args: &[ArgView], inputs: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
+    let readers: Vec<usize> =
+        args.iter().enumerate().filter(|(_, a)| a.reads).map(|(i, _)| i).collect();
+    let mut out: Vec<Option<Vec<f32>>> = vec![None; args.len()];
+    for (wi, arg) in args.iter().enumerate() {
+        if !arg.writes {
+            continue;
+        }
+        let mut buf = inputs[wi].clone();
+        let others: Vec<usize> = readers.iter().copied().filter(|&ri| ri != wi).collect();
+        if others.is_empty() {
+            // pure initialization / self-update
+            for (i, v) in buf.iter_mut().enumerate() {
+                *v = 0.5 * *v + ((i % 97) as f32) * 0.01;
+            }
+        } else {
+            for (i, v) in buf.iter_mut().enumerate() {
+                let mut mix = 0.0f32;
+                for &ri in &others {
+                    let r = &inputs[ri];
+                    if !r.is_empty() {
+                        mix += r[i % r.len()];
+                    }
+                }
+                mix /= others.len() as f32;
+                *v = if arg.reduces { *v + 0.1 * mix } else { 0.5 * *v + 0.5 * mix };
+            }
+        }
+        out[wi] = Some(buf);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::point::Tuple;
+
+    fn view(extent: [i64; 2], reads: bool, writes: bool, reduces: bool) -> ArgView {
+        ArgView { rect: Rect::from_extent(&Tuple::from(extent)), reads, writes, reduces }
+    }
+
+    #[test]
+    fn matmul_tile_accumulates_identity() {
+        // A = I (2×2), B = [[1,2],[3,4]], C starts at zero → C = B.
+        let args = [
+            view([2, 2], true, false, false),
+            view([2, 2], true, false, false),
+            view([2, 2], true, true, true),
+        ];
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let c = vec![0.0; 4];
+        let out = run(Kernel::MatmulTile, &args, &[a, b.clone(), c]);
+        assert_eq!(out[2].as_ref().unwrap(), &b);
+        assert!(out[0].is_none() && out[1].is_none());
+    }
+
+    #[test]
+    fn sweep_reduces_and_blends() {
+        fn view1(extent: [i64; 1], reads: bool, writes: bool, reduces: bool) -> ArgView {
+            ArgView { rect: Rect::from_extent(&Tuple::from(extent)), reads, writes, reduces }
+        }
+        let args = [view1([4], true, true, true), view1([4], true, false, false)];
+        let prev = vec![1.0f32; 4];
+        let inp = vec![2.0f32; 4];
+        let out = run(Kernel::Sweep, &args, &[prev, inp]);
+        let r = out[0].as_ref().unwrap();
+        assert!(r.iter().all(|&v| (v - 1.2).abs() < 1e-6), "{r:?}");
+    }
+
+    #[test]
+    fn kernels_are_deterministic() {
+        let args = [view([3, 3], true, true, false)];
+        let input = cold_tile(RegionId(1), &args[0].rect);
+        let a = run(Kernel::Sweep, &args, &[input.clone()]);
+        let b = run(Kernel::Sweep, &args, &[input]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cold_tile_depends_on_region_and_rect() {
+        let r = Rect::from_extent(&Tuple::from([4]));
+        assert_eq!(cold_tile(RegionId(0), &r), cold_tile(RegionId(0), &r));
+        assert_ne!(cold_tile(RegionId(0), &r), cold_tile(RegionId(1), &r));
+    }
+
+    #[test]
+    fn shape_mismatch_falls_back_to_sweep() {
+        // Mis-sized B buffer can't GEMM; must not panic and still write.
+        let args = [
+            view([2, 2], true, false, false),
+            view([2, 2], true, false, false),
+            view([2, 2], true, true, true),
+        ];
+        let out = run(Kernel::MatmulTile, &args, &[vec![1.0; 4], vec![1.0; 3], vec![0.0; 4]]);
+        assert!(out[2].is_some(), "fell back to sweep and wrote C");
+    }
+}

@@ -1,0 +1,343 @@
+//! Concurrent multi-node executor: run a mapped task program for real.
+//!
+//! ```text
+//!   app (launches + regions)        mapper (any family)
+//!          │                              │
+//!          ▼                              ▼
+//!   tasking::pipeline  ──────────  LaunchPlan / PlacementTable
+//!          │           (the sequential §5.1 oracle)
+//!          ├────────────► sim::simulate   — modelled makespan (SimResult)
+//!          └────────────► exec::execute   — measured wall-clock (ExecResult)
+//! ```
+//!
+//! Where `crate::sim` *models* what a mapping costs, this module
+//! *measures* it: one OS thread per simulated node plus per-processor
+//! worker lanes execute real f32 kernels ([`kernels`]) over the actual
+//! region tiles, and tiles cross nodes as messages over bounded channels
+//! sized from the machine description. The same [`MappingPolicies`]
+//! drive memory/GC/backpressure handling, so every mapper, tuned `.mpl`,
+//! and autotuner winner turns into elapsed seconds and bytes moved.
+//!
+//! The executor consumes the pipeline's own per-launch plans (shared via
+//! `Arc` across node threads) and is differentially validated against
+//! that sequential oracle: [`ExecResult::verify_against`] requires
+//! identical placements, an identical transition multiset, and a
+//! concurrent timeline satisfying the same §5.1 invariants
+//! (`pipeline::validate_log`). Data content is deterministic by
+//! construction — static schedules per lane, plan-time transfer routing,
+//! and program-order serialization of commuting reductions — so the
+//! result checksum is invariant under worker count and tie-break seed.
+
+pub mod kernels;
+mod node;
+pub mod plan;
+
+pub use plan::{ExecPlan, ExecTask, ReqPlan, SendPlan, SourceSlice};
+
+use crate::machine::point::Tuple;
+use crate::machine::topology::{MachineDesc, ProcId};
+use crate::sim::engine::MappingPolicies;
+use crate::tasking::deps::{DataEnv, Dependences};
+use crate::tasking::pipeline::{self, LogEntry, PipelineRun, PlanError};
+use crate::tasking::task::{IndexLaunch, LaunchId, PointTask};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::fmt;
+
+/// Knobs of a concurrent run. The default — unlimited lanes, seed 0 —
+/// is the fastest, fully parallel schedule.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOptions {
+    /// Maximum concurrently executing kernels across the whole cluster
+    /// (0 = no extra cap: one in-flight kernel per processor lane).
+    /// Results are invariant in this — only wall-clock changes.
+    pub lanes: usize,
+    /// Tie-break seed for the static per-processor schedules: reorders
+    /// independent tasks within a dependence level. Results are
+    /// invariant in the seed; per-lane order is deterministic in it.
+    pub seed: u64,
+}
+
+/// Executor failure (planning; the concurrent run itself cannot fail).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecError {
+    Plan(PlanError),
+}
+
+impl From<PlanError> for ExecError {
+    fn from(e: PlanError) -> ExecError {
+        ExecError::Plan(e)
+    }
+}
+
+impl fmt::Display for ExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecError::Plan(e) => write!(f, "exec plan: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+/// Outcome of a measured run — the executor's counterpart of
+/// [`crate::sim::SimResult`]: `wall_seconds` is *measured* host time
+/// where `makespan` is *modelled* cluster time; the byte counters are
+/// directly comparable.
+#[derive(Debug)]
+pub struct ExecResult {
+    /// Measured wall-clock seconds of the concurrent run.
+    pub wall_seconds: f64,
+    /// Total useful FLOPs the kernels performed (cost-model figures).
+    pub total_flops: f64,
+    /// Bytes moved within a node (cross-processor pulls).
+    pub intra_bytes: u64,
+    /// Bytes moved across nodes (bounded-channel transfers).
+    pub inter_bytes: u64,
+    /// Peak bytes resident in any node's tile store.
+    pub peak_resident: u64,
+    /// Digest of every final region tile — schedule-invariant.
+    pub checksum: u64,
+    /// Point tasks executed.
+    pub tasks: usize,
+    pub placements: HashMap<PointTask, ProcId>,
+    /// Transition log: intake (Enqueued, Mapped) in program order, then
+    /// Launched/Executed in measured completion order.
+    pub log: Vec<LogEntry>,
+    /// Execution order per processor (deterministic under a fixed seed).
+    pub per_proc: Vec<(ProcId, Vec<PointTask>)>,
+}
+
+/// Total order on log entries for multiset comparison and tie-breaking.
+pub(crate) fn log_sort_key(e: &LogEntry) -> (u8, LaunchId, Tuple, Option<ProcId>) {
+    match e {
+        LogEntry::Enqueued(t) => (0, t.launch, t.point.clone(), None),
+        LogEntry::Mapped(t, p) => (1, t.launch, t.point.clone(), Some(*p)),
+        LogEntry::Launched(t, p) => (2, t.launch, t.point.clone(), Some(*p)),
+        LogEntry::Executed(t, p) => (3, t.launch, t.point.clone(), Some(*p)),
+    }
+}
+
+impl ExecResult {
+    pub fn total_bytes(&self) -> u64 {
+        self.intra_bytes + self.inter_bytes
+    }
+
+    /// Measured FLOP/s per node.
+    pub fn throughput_per_node(&self, nodes: usize) -> f64 {
+        if self.wall_seconds <= 0.0 || nodes == 0 {
+            return 0.0;
+        }
+        self.total_flops / self.wall_seconds / nodes as f64
+    }
+
+    /// The log in a schedule-independent canonical order (stage-major,
+    /// task-minor) — what invariance tests compare across runs.
+    pub fn canonical_log(&self) -> Vec<LogEntry> {
+        let mut v = self.log.clone();
+        v.sort_by_key(log_sort_key);
+        v
+    }
+
+    /// Differential check against the sequential pipeline oracle:
+    ///
+    /// 1. placements are identical,
+    /// 2. the transition multiset is identical — same four stages per
+    ///    task, on the same processors,
+    /// 3. the executor's own (concurrent) timeline satisfies the §5.1
+    ///    stage/dependence invariants via [`pipeline::validate_log`].
+    ///
+    /// Wall-clock interleaving of independent tasks is the one degree of
+    /// freedom a concurrent run legitimately has; everything else must
+    /// match the oracle exactly.
+    pub fn verify_against(
+        &self,
+        oracle: &PipelineRun,
+        deps: &Dependences,
+    ) -> Result<(), String> {
+        if self.placements != oracle.placements {
+            let mut tasks: Vec<&PointTask> = self.placements.keys().collect();
+            tasks.sort();
+            for t in tasks {
+                if self.placements.get(t) != oracle.placements.get(t) {
+                    return Err(format!(
+                        "exec/pipeline placement mismatch at {t:?}: {:?} vs {:?}",
+                        self.placements.get(t),
+                        oracle.placements.get(t)
+                    ));
+                }
+            }
+            return Err(format!(
+                "exec/pipeline placement sets differ: {} vs {} tasks",
+                self.placements.len(),
+                oracle.placements.len()
+            ));
+        }
+        let mut mine = self.log.clone();
+        let mut theirs = oracle.log.clone();
+        mine.sort_by_key(log_sort_key);
+        theirs.sort_by_key(log_sort_key);
+        if mine != theirs {
+            let first = mine
+                .iter()
+                .zip(&theirs)
+                .find(|(a, b)| a != b)
+                .map(|(a, b)| format!("{a:?} vs {b:?}"));
+            return Err(format!(
+                "exec transition multiset differs from the pipeline oracle ({} vs {} entries; first diff: {})",
+                mine.len(),
+                theirs.len(),
+                first.unwrap_or_else(|| "length".into())
+            ));
+        }
+        pipeline::validate_log(&self.log, &self.placements, deps)
+    }
+
+    /// JSON report (the CI wall-clock artifact).
+    pub fn to_json(&self, app: &str, mapper: &str, desc: &MachineDesc) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(app.to_string())),
+            ("mapper", Json::Str(mapper.to_string())),
+            ("nodes", Json::Num(desc.nodes as f64)),
+            ("gpus_per_node", Json::Num(desc.gpus_per_node as f64)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("tasks", Json::Num(self.tasks as f64)),
+            ("total_flops", Json::Num(self.total_flops)),
+            (
+                "measured_gflops_per_node",
+                Json::Num(self.throughput_per_node(desc.nodes) / 1e9),
+            ),
+            ("intra_bytes", Json::Num(self.intra_bytes as f64)),
+            ("inter_bytes", Json::Num(self.inter_bytes as f64)),
+            ("peak_resident_bytes", Json::Num(self.peak_resident as f64)),
+            ("checksum", Json::Str(format!("{:016x}", self.checksum))),
+        ])
+    }
+}
+
+/// Execute a mapped program for real. Mirrors [`crate::sim::simulate`]'s
+/// inputs — same launches/environment/dependences, same
+/// [`MappingPolicies`] — except that placements arrive as the pipeline's
+/// own [`PipelineRun`] (whose `Arc`-shared launch plans the node threads
+/// read directly).
+pub fn execute(
+    launches: &[IndexLaunch],
+    env: &DataEnv,
+    deps: &Dependences,
+    run: &PipelineRun,
+    desc: &MachineDesc,
+    policies: &dyn MappingPolicies,
+    opts: &ExecOptions,
+) -> Result<ExecResult, ExecError> {
+    let plan = plan::build(launches, env, deps, run, desc, policies, opts.seed)?;
+    let raw = node::run_plan(&plan, opts.lanes);
+    // Intake transitions in program order (preds always precede their
+    // dependents), then the measured Launched/Executed timeline.
+    let mut log = Vec::with_capacity(4 * plan.tasks.len());
+    for t in &plan.tasks {
+        log.push(LogEntry::Enqueued(t.pt.clone()));
+    }
+    for t in &plan.tasks {
+        log.push(LogEntry::Mapped(t.pt.clone(), t.proc));
+    }
+    log.extend(raw.events.into_iter().map(|(_seq, e)| e));
+    Ok(ExecResult {
+        wall_seconds: raw.wall_seconds,
+        total_flops: plan.total_flops,
+        intra_bytes: plan.intra_bytes,
+        inter_bytes: plan.inter_bytes,
+        peak_resident: raw.peak_resident,
+        checksum: raw.checksum,
+        tasks: plan.tasks.len(),
+        placements: plan.placements,
+        log,
+        per_proc: raw.per_proc,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::point::Rect;
+    use crate::machine::topology::ProcKind;
+    use crate::sim::engine::DefaultPolicies;
+    use crate::tasking::deps::analyze;
+    use crate::tasking::pipeline::IndexMapping;
+    use crate::tasking::region::{LogicalRegion, Partition, Privilege, RegionId};
+    use crate::tasking::task::RegionReq;
+
+    struct BlockMap;
+    impl IndexMapping for BlockMap {
+        fn shard(&self, _t: &str, point: &Tuple, ispace: &Tuple) -> Result<usize, String> {
+            Ok((point[0] * 2 / ispace[0]) as usize)
+        }
+        fn map(&self, t: &str, point: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+            let node = self.shard(t, point, ispace)?;
+            let local = if point.dim() > 1 { (point[1] * 2 / ispace[1]) as usize } else { 0 };
+            Ok(ProcId { node, kind: ProcKind::Gpu, local })
+        }
+    }
+
+    fn two_phase_program() -> (Vec<IndexLaunch>, DataEnv) {
+        let mut env = DataEnv::default();
+        let rid = env.add_region(LogicalRegion {
+            id: RegionId(0),
+            name: "A".into(),
+            extent: Tuple::from([8, 8]),
+            elem_bytes: 8,
+        });
+        let part = Partition::block(env.region(rid), &Tuple::from([2, 2])).unwrap();
+        let pidx = env.add_partition(part);
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let init = IndexLaunch::new(0, "init", dom.clone())
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::WriteOnly));
+        let step = IndexLaunch::new(1, "step", dom)
+            .with_req(RegionReq::tiled(rid, pidx, Privilege::ReadWrite));
+        (vec![init, step], env)
+    }
+
+    fn run_both() -> (ExecResult, PipelineRun, Dependences) {
+        let (launches, env) = two_phase_program();
+        let deps = analyze(&launches, &env);
+        let run = pipeline::run(&launches, &deps, &BlockMap, 2).unwrap();
+        let desc = crate::machine::topology::MachineDesc::paper_testbed(2);
+        let r = execute(
+            &launches,
+            &env,
+            &deps,
+            &run,
+            &desc,
+            &DefaultPolicies,
+            &ExecOptions::default(),
+        )
+        .unwrap();
+        (r, run, deps)
+    }
+
+    #[test]
+    fn executes_and_matches_the_oracle() {
+        let (r, run, deps) = run_both();
+        assert_eq!(r.tasks, 8);
+        assert!(r.wall_seconds > 0.0);
+        r.verify_against(&run, &deps).unwrap();
+    }
+
+    #[test]
+    fn checksum_and_order_are_reproducible() {
+        let (a, _, _) = run_both();
+        let (b, _, _) = run_both();
+        assert_eq!(a.checksum, b.checksum);
+        assert_eq!(a.per_proc, b.per_proc);
+        assert_eq!(a.canonical_log(), b.canonical_log());
+    }
+
+    #[test]
+    fn verify_catches_placement_divergence() {
+        let (mut r, run, deps) = run_both();
+        let t = PointTask { launch: LaunchId(0), point: Tuple::from([0, 0]) };
+        let wrong = ProcId { node: 1, kind: ProcKind::Gpu, local: 3 };
+        r.placements.insert(t, wrong);
+        let e = r.verify_against(&run, &deps).unwrap_err();
+        assert!(e.contains("placement"), "{e}");
+    }
+}

@@ -1,0 +1,405 @@
+//! The concurrent node runtime: one OS thread per node (the data-mover,
+//! draining that node's bounded inbound channel) plus one worker lane per
+//! processor that has work (executing the lane's static schedule).
+//!
+//! Region tiles live in per-node stores (`Mutex` + `Condvar`); remote
+//! tiles arrive as messages over `std::sync::mpsc::sync_channel`s whose
+//! capacity comes from [`MachineDesc::nic_inflight_msgs`] — a full
+//! channel exerts real backpressure on the sending lane, while the
+//! dedicated receiver thread guarantees every send eventually completes.
+//!
+//! Deadlock freedom: every lane executes its tasks in the projection of
+//! one global topological order of the plan's wait edges, so the
+//! earliest unfinished task in that order always has its waits satisfied
+//! and sits at the head of its lane; gathers only wait for tile versions
+//! whose producers are wait-predecessors; and compute-slot limits are
+//! only held while a kernel runs, never while blocking.
+
+use super::kernels::{self, ArgView};
+use super::plan::{ExecPlan, Key, ReqPlan};
+use crate::machine::point::{Rect, Tuple};
+use crate::machine::topology::ProcId;
+use crate::tasking::pipeline::LogEntry;
+use crate::tasking::task::PointTask;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// What the concurrent run itself produces; `super::execute` wraps this
+/// into an [`super::ExecResult`].
+pub(crate) struct RawOutcome {
+    pub wall_seconds: f64,
+    /// Launched/Executed events merged across lanes, in a total order
+    /// consistent with every happens-before edge of the run (each event
+    /// draws a ticket from one SeqCst counter *after* its waits
+    /// completed, so a predecessor's Executed always orders before its
+    /// dependent's Launched — wall-clock timestamps could tie).
+    pub events: Vec<(u64, LogEntry)>,
+    /// Order-insensitive digest of every final tile (latest version per
+    /// key), for thread-count-invariance checks.
+    pub checksum: u64,
+    /// Peak bytes resident in any node store (GC'd instances excluded).
+    pub peak_resident: u64,
+    /// Actual execution order per processor (== the static schedule).
+    pub per_proc: Vec<(ProcId, Vec<PointTask>)>,
+}
+
+/// One tile payload crossing nodes.
+struct DataMsg {
+    key: Key,
+    version: u64,
+    bytes: u64,
+    payload: Arc<Vec<f32>>,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    tiles: HashMap<Key, (u64, Arc<Vec<f32>>)>,
+    /// GC'd keys: contents retained for correctness, excluded from the
+    /// resident accounting (the sim is authoritative for OOM).
+    ghosts: HashSet<Key>,
+    resident: u64,
+    peak: u64,
+}
+
+struct NodeStore {
+    inner: Mutex<StoreInner>,
+    cv: Condvar,
+}
+
+impl NodeStore {
+    fn new() -> NodeStore {
+        NodeStore { inner: Mutex::new(StoreInner::default()), cv: Condvar::new() }
+    }
+
+    fn insert(&self, key: Key, version: u64, bytes: u64, payload: Arc<Vec<f32>>) {
+        let mut g = self.inner.lock().unwrap();
+        let newer = match g.tiles.get(&key) {
+            Some((v, _)) => version > *v,
+            None => true,
+        };
+        if newer {
+            let was_ghost = g.ghosts.remove(&key);
+            let existed = g.tiles.insert(key, (version, payload)).is_some();
+            if !existed || was_ghost {
+                g.resident += bytes;
+            }
+            g.peak = g.peak.max(g.resident);
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// GC directive: drop the instance from the resident accounting.
+    fn gc(&self, key: &Key, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if g.tiles.contains_key(key) && g.ghosts.insert(key.clone()) {
+            g.resident = g.resident.saturating_sub(bytes);
+        }
+    }
+
+    /// Block until the store holds `key` at `version` or newer.
+    fn wait_at_least(&self, key: &Key, version: u64) -> Arc<Vec<f32>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some((v, data)) = g.tiles.get(key) {
+                if *v >= version {
+                    return data.clone();
+                }
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Read a tile this node is known to hold (a just-written one).
+    fn peek(&self, key: &Key, version: u64) -> Arc<Vec<f32>> {
+        let g = self.inner.lock().unwrap();
+        let (v, data) = g.tiles.get(key).expect("send of a tile this node wrote");
+        debug_assert!(*v >= version, "sending a tile version that was never written");
+        data.clone()
+    }
+}
+
+/// Minimal counting semaphore (std has none): caps concurrently running
+/// kernels when `ExecOptions::lanes` is set.
+struct Sem {
+    slots: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Sem {
+    fn new(n: usize) -> Sem {
+        Sem { slots: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut g = self.slots.lock().unwrap();
+        while *g == 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+        *g -= 1;
+    }
+
+    fn release(&self) {
+        let mut g = self.slots.lock().unwrap();
+        *g += 1;
+        drop(g);
+        self.cv.notify_one();
+    }
+}
+
+struct Shared<'a> {
+    plan: &'a ExecPlan,
+    done: Vec<AtomicBool>,
+    done_lock: Mutex<usize>,
+    done_cv: Condvar,
+    stores: Vec<NodeStore>,
+    start: Instant,
+    /// Global event-order tickets (see [`RawOutcome::events`]).
+    event_seq: AtomicU64,
+}
+
+impl Shared<'_> {
+    fn wait_done(&self, t: usize) {
+        if self.done[t].load(Ordering::Acquire) {
+            return;
+        }
+        let mut g = self.done_lock.lock().unwrap();
+        while !self.done[t].load(Ordering::Acquire) {
+            g = self.done_cv.wait(g).unwrap();
+        }
+    }
+
+    fn mark_done(&self, t: usize) {
+        self.done[t].store(true, Ordering::Release);
+        let mut g = self.done_lock.lock().unwrap();
+        *g += 1;
+        drop(g);
+        self.done_cv.notify_all();
+    }
+}
+
+/// Row-major index of `p` within the tile `[lo, lo+extent)`.
+fn linear_idx(p: &Tuple, lo: &Tuple, extent: &Tuple) -> usize {
+    let mut idx = 0i64;
+    for d in 0..p.dim() {
+        idx = idx * extent[d] + (p[d] - lo[d]);
+    }
+    idx as usize
+}
+
+/// Overlay the overlap of `src` (tile `src_rect`) onto `dst` (`dst_rect`).
+fn overlay(dst: &mut [f32], dst_rect: &Rect, src: &[f32], src_rect: &Rect) {
+    if dst_rect == src_rect && dst.len() == src.len() {
+        dst.copy_from_slice(src);
+        return;
+    }
+    let Some(ov) = dst_rect.intersect(src_rect) else {
+        return;
+    };
+    let de = dst_rect.extent();
+    let se = src_rect.extent();
+    for p in ov.points() {
+        let di = linear_idx(&p, &dst_rect.lo, &de);
+        let si = linear_idx(&p, &src_rect.lo, &se);
+        if di < dst.len() && si < src.len() {
+            dst[di] = src[si];
+        }
+    }
+}
+
+/// Build a task's input buffer for one region argument: deterministic
+/// cold base, then every planned source tile in global write order.
+fn gather(store: &NodeStore, req: &ReqPlan) -> Vec<f32> {
+    let mut buf = if req.reads {
+        kernels::cold_tile(req.region, &req.rect)
+    } else {
+        vec![0.0f32; req.elems]
+    };
+    for s in &req.sources {
+        let tile = store.wait_at_least(&s.key, s.version);
+        overlay(&mut buf, &req.rect, &tile, &s.key.1);
+    }
+    buf
+}
+
+/// One worker lane: execute the static schedule for `proc`.
+fn lane_run(
+    shared: &Shared<'_>,
+    tasks_idx: &[usize],
+    txs: &[SyncSender<DataMsg>],
+    limiter: Option<&Sem>,
+) -> (Vec<(u64, LogEntry)>, Vec<PointTask>) {
+    let mut events = Vec::with_capacity(2 * tasks_idx.len());
+    let mut executed = Vec::with_capacity(tasks_idx.len());
+    for &t in tasks_idx {
+        let task = &shared.plan.tasks[t];
+        for &p in &task.waits {
+            shared.wait_done(p);
+        }
+        let store = &shared.stores[task.proc.node];
+        let inputs: Vec<Vec<f32>> = task.reqs.iter().map(|r| gather(store, r)).collect();
+        if let Some(sem) = limiter {
+            sem.acquire();
+        }
+        events.push((
+            shared.event_seq.fetch_add(1, Ordering::SeqCst),
+            LogEntry::Launched(task.pt.clone(), task.proc),
+        ));
+        let args: Vec<ArgView> = task
+            .reqs
+            .iter()
+            .map(|r| ArgView {
+                rect: r.rect.clone(),
+                reads: r.reads,
+                writes: r.writes,
+                reduces: r.reduces,
+            })
+            .collect();
+        let outs = kernels::run(task.kernel, &args, &inputs);
+        if let Some(sem) = limiter {
+            sem.release();
+        }
+        // Publish written tiles into this node's store.
+        for (ri, out) in outs.into_iter().enumerate() {
+            let r = &task.reqs[ri];
+            if !r.writes {
+                continue;
+            }
+            let payload = Arc::new(out.unwrap_or_else(|| inputs[ri].clone()));
+            store.insert((r.region, r.rect.clone()), r.write_version, r.bytes, payload);
+        }
+        events.push((
+            shared.event_seq.fetch_add(1, Ordering::SeqCst),
+            LogEntry::Executed(task.pt.clone(), task.proc),
+        ));
+        executed.push(task.pt.clone());
+        // GC directives: drop collected instances from the accounting.
+        for r in &task.reqs {
+            if r.gc {
+                store.gc(&(r.region, r.rect.clone()), r.bytes);
+            }
+        }
+        shared.mark_done(t);
+        // Push planned cross-node transfers (may block on the bounded
+        // channel — the destination's receiver is always draining).
+        for s in &task.sends {
+            let payload = shared.stores[task.proc.node].peek(&s.key, s.version);
+            txs[s.to_node]
+                .send(DataMsg {
+                    key: s.key.clone(),
+                    version: s.version,
+                    bytes: s.bytes,
+                    payload,
+                })
+                .expect("receiver lives until every planned transfer arrived");
+        }
+    }
+    (events, executed)
+}
+
+/// Node data-mover: drain exactly the planned number of inbound tiles.
+fn node_rx(store: &NodeStore, rx: Receiver<DataMsg>, expected: usize) {
+    for _ in 0..expected {
+        let msg = rx.recv().expect("every planned transfer is eventually sent");
+        store.insert(msg.key, msg.version, msg.bytes, msg.payload);
+    }
+}
+
+/// FNV-style fold for the content digest.
+fn fnv(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+/// Run a plan on real threads. `lanes_limit` caps concurrently running
+/// kernels (0 = one in-flight kernel per processor lane, no extra cap).
+pub(crate) fn run_plan(plan: &ExecPlan, lanes_limit: usize) -> RawOutcome {
+    let nodes = plan.desc.nodes;
+    let depth = plan.desc.nic_inflight_msgs();
+    let mut txs: Vec<SyncSender<DataMsg>> = Vec::with_capacity(nodes);
+    let mut rxs: Vec<Receiver<DataMsg>> = Vec::with_capacity(nodes);
+    for _ in 0..nodes {
+        let (tx, rx) = sync_channel(depth);
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let shared = Shared {
+        plan,
+        done: (0..plan.tasks.len()).map(|_| AtomicBool::new(false)).collect(),
+        done_lock: Mutex::new(0),
+        done_cv: Condvar::new(),
+        stores: (0..nodes).map(|_| NodeStore::new()).collect(),
+        start: Instant::now(),
+        event_seq: AtomicU64::new(0),
+    };
+    let limiter = if lanes_limit > 0 { Some(Sem::new(lanes_limit)) } else { None };
+
+    let mut all_events: Vec<(u64, LogEntry)> = Vec::new();
+    let mut per_proc: Vec<(ProcId, Vec<PointTask>)> = Vec::with_capacity(plan.lanes.len());
+    std::thread::scope(|s| {
+        let shared_ref = &shared;
+        let txs_ref = &txs;
+        let limiter_ref = limiter.as_ref();
+        let mut rx_handles = Vec::with_capacity(nodes);
+        for (n, rx) in rxs.into_iter().enumerate() {
+            let expected = plan.expected_msgs[n];
+            rx_handles.push(s.spawn(move || node_rx(&shared_ref.stores[n], rx, expected)));
+        }
+        let mut lane_handles = Vec::with_capacity(plan.lanes.len());
+        for (proc, list) in &plan.lanes {
+            lane_handles.push(s.spawn(move || {
+                let (events, executed) = lane_run(shared_ref, list, txs_ref, limiter_ref);
+                (*proc, events, executed)
+            }));
+        }
+        for h in lane_handles {
+            let (proc, events, executed) = h.join().expect("worker lane panicked");
+            all_events.extend(events);
+            per_proc.push((proc, executed));
+        }
+        for h in rx_handles {
+            h.join().expect("node receiver panicked");
+        }
+    });
+    let wall_seconds = shared.start.elapsed().as_secs_f64();
+
+    // Merge lane events into the run's total order (tickets are unique).
+    all_events.sort_by_key(|e| e.0);
+    per_proc.sort_by_key(|(p, _)| *p);
+
+    // Content digest: latest version of every tile, region-major.
+    let mut latest: HashMap<Key, (u64, Arc<Vec<f32>>)> = HashMap::new();
+    let mut peak_resident = 0u64;
+    for store in &shared.stores {
+        let g = store.inner.lock().unwrap();
+        peak_resident = peak_resident.max(g.peak);
+        for (key, (v, data)) in g.tiles.iter() {
+            let replace = match latest.get(key) {
+                Some((lv, _)) => v > lv,
+                None => true,
+            };
+            if replace {
+                latest.insert(key.clone(), (*v, data.clone()));
+            }
+        }
+    }
+    let mut entries: Vec<(&Key, &(u64, Arc<Vec<f32>>))> = latest.iter().collect();
+    entries.sort_by(|a, b| {
+        (a.0 .0, &a.0 .1.lo, &a.0 .1.hi).cmp(&(b.0 .0, &b.0 .1.lo, &b.0 .1.hi))
+    });
+    let mut checksum = 0xcbf2_9ce4_8422_2325u64;
+    for (key, (v, data)) in entries {
+        checksum = fnv(checksum, key.0 .0 as u64);
+        for &c in key.1.lo.iter().chain(key.1.hi.iter()) {
+            checksum = fnv(checksum, c as u64);
+        }
+        checksum = fnv(checksum, *v);
+        for &x in data.iter() {
+            checksum = fnv(checksum, x.to_bits() as u64);
+        }
+    }
+
+    RawOutcome { wall_seconds, events: all_events, checksum, peak_resident, per_proc }
+}

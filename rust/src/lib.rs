@@ -1,6 +1,7 @@
 pub mod apps;
 pub mod bench;
 pub mod decompose;
+pub mod exec;
 pub mod mapple;
 pub mod mapper;
 pub mod runtime;

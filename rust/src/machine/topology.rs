@@ -210,6 +210,14 @@ impl MachineDesc {
         }
     }
 
+    /// Bounded inbound-message slots per node NIC for the concurrent
+    /// executor (`crate::exec`): how many in-flight tile payloads the
+    /// RDMA staging window holds, assuming 32 MiB staging buffers. A
+    /// full channel exerts backpressure on the sending node's lanes.
+    pub fn nic_inflight_msgs(&self) -> usize {
+        ((self.zcmem_capacity / (32 << 20)) as usize).clamp(2, 64)
+    }
+
     /// All processors of a kind in (node-major, local-minor) order.
     pub fn all_procs(&self, kind: ProcKind) -> Vec<ProcId> {
         let mut v = Vec::with_capacity(self.total_procs(kind));
@@ -260,6 +268,14 @@ mod tests {
         assert_eq!(procs.len(), 8);
         assert_eq!(procs[0], ProcId { node: 0, kind: ProcKind::Gpu, local: 0 });
         assert_eq!(procs[5], ProcId { node: 1, kind: ProcKind::Gpu, local: 1 });
+    }
+
+    #[test]
+    fn nic_inflight_from_zcmem_window() {
+        let mut m = MachineDesc::paper_testbed(2);
+        assert_eq!(m.nic_inflight_msgs(), 64, "2 GiB / 32 MiB");
+        m.zcmem_capacity = 0;
+        assert_eq!(m.nic_inflight_msgs(), 2, "never unbuffered");
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! `mapple` CLI — the leader entrypoint: compile mappers, run benchmarks
-//! under a mapper on the simulated cluster, and query the decompose
-//! solver.
+//! under a mapper on the simulated cluster, execute them for real on the
+//! concurrent multi-node executor, and query the decompose solver.
 //!
 //! Subcommands:
 //!   run        — build an app, map it (mapple | expert | heuristic |
 //!                tuned | auto), simulate, and report throughput/comm/memory
+//!   exec       — build an app, map it, and *execute* it on real threads
+//!                (one per node + per-proc lanes), reporting measured
+//!                wall-clock; always differentially verified against the
+//!                sequential pipeline oracle
 //!   tune       — search the mapper space with the simulator as cost model
 //!                and emit the winning mapper as .mpl source
 //!   compile    — parse + compile a .mpl file and dump its directive tables
@@ -13,19 +17,21 @@
 //!
 //! Examples:
 //!   mapple run --app cannon --nodes 2 --mapper mapple
-//!   mapple run --app stencil --nodes 4 --mapper heuristic
+//!   mapple exec --app summa --nodes 2 --mapper tuned --json exec.json
 //!   mapple tune --app circuit --nodes 2 --budget 128 --strategy beam
+//!   mapple tune --app cannon --resume tuned.mpl --out tuned2.mpl
 //!   mapple compile mappers/cannon.mpl --nodes 2
 //!   mapple decompose --procs 48 --ispace 1024x512x64
 
-use mapple::apps::{self, mappers};
+use mapple::apps;
+use mapple::bench::Flavor;
 use mapple::decompose::{decompose, greedy_grid, Objective};
+use mapple::exec::ExecOptions;
 use mapple::machine::topology::MachineDesc;
 use mapple::mapper::api::Mapper;
-use mapple::mapper::expert::expert_for;
-use mapple::mapper::{DefaultHeuristicMapper, MappleMapper};
+use mapple::mapper::MappleMapper;
 use mapple::mapple::MapperSpec;
-use mapple::tune::{tune, tune_with_ctx, EvalCtx, StrategyKind, TuneConfig};
+use mapple::tune::{tune, tune_with_ctx, EvalCtx, StrategyKind, TuneConfig, TuneSpec};
 use mapple::util::bench::fmt_time;
 use mapple::util::cli::Command;
 
@@ -37,6 +43,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&argv[1..]),
+        Some("exec") => cmd_exec(&argv[1..]),
         Some("tune") => cmd_tune(&argv[1..]),
         Some("compile") => cmd_compile(&argv[1..]),
         Some("decompose") => cmd_decompose(&argv[1..]),
@@ -46,7 +53,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: mapple <run|tune|compile|decompose|apps> [--help]\n\
+                "usage: mapple <run|exec|tune|compile|decompose|apps> [--help]\n\
                  Mapple — declarative mapping for distributed heterogeneous programs."
             );
             2
@@ -93,6 +100,28 @@ fn build_app(name: &str, desc: &MachineDesc, scale: i64) -> Option<apps::AppInst
     })
 }
 
+/// Construct the mapper for a CLI flavor. Non-Auto flavors share
+/// `bench::try_mapper_for` (one flavor-to-mapper table); `Flavor::Auto`
+/// tunes against the *same* workload the command runs (scale and all) —
+/// the bench-sized context would optimize size-sensitive knobs
+/// (memories, backpressure) for a different problem when --scale != 1.
+fn build_mapper(
+    flavor: &Flavor,
+    app_name: &str,
+    desc: &MachineDesc,
+    scale: i64,
+) -> Result<Box<dyn Mapper>, String> {
+    if let Flavor::Auto = flavor {
+        let tune_target = build_app(app_name, desc, scale)
+            .ok_or_else(|| format!("unknown app '{app_name}'"))?;
+        let ctx = EvalCtx::from_parts(app_name, vec![desc.clone()], vec![tune_target]);
+        let result = tune_with_ctx(&TuneConfig::quick(app_name, desc), &ctx)
+            .map_err(|e| format!("autotune failed: {e}"))?;
+        return Ok(Box::new(MappleMapper::new(result.best.build(desc)?)));
+    }
+    mapple::bench::try_mapper_for(flavor, app_name, desc)
+}
+
 fn cmd_run(argv: &[String]) -> i32 {
     let cmd = Command::new("mapple run", "map + simulate a benchmark")
         .opt("app", "application name (see `mapple apps`)", Some("cannon"))
@@ -114,33 +143,18 @@ fn cmd_run(argv: &[String]) -> i32 {
         eprintln!("unknown app '{app_name}' — see `mapple apps`");
         return 2;
     };
-    let mapper: Box<dyn Mapper> = match args.str("mapper").unwrap_or("mapple") {
-        "mapple" => Box::new(MappleMapper::new(
-            MapperSpec::compile(mappers::mapple_source(&app_name).unwrap(), &desc).unwrap(),
-        )),
-        "tuned" => Box::new(MappleMapper::new(
-            MapperSpec::compile(mappers::tuned_source(&app_name).unwrap(), &desc).unwrap(),
-        )),
-        "expert" => expert_for(&app_name, desc.nodes, desc.gpus_per_node).unwrap(),
-        "heuristic" => Box::new(DefaultHeuristicMapper::new()),
-        // Tune against the *same* workload this run simulates (scale and
-        // all) — the bench-sized Flavor::Auto context would optimize
-        // size-sensitive knobs (memories, backpressure) for a different
-        // problem size when --scale != 1.
-        "auto" => {
-            let tune_target = build_app(&app_name, &desc, scale).unwrap();
-            let ctx = EvalCtx::from_parts(&app_name, vec![desc.clone()], vec![tune_target]);
-            match tune_with_ctx(&TuneConfig::quick(&app_name, &desc), &ctx) {
-                Ok(result) => Box::new(MappleMapper::new(result.best.build(&desc).unwrap())),
-                Err(e) => {
-                    eprintln!("autotune failed: {e}");
-                    return 1;
-                }
-            }
-        }
-        other => {
-            eprintln!("unknown mapper '{other}'");
+    let flavor = match Flavor::parse(args.str("mapper").unwrap_or("mapple")) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
             return 2;
+        }
+    };
+    let mapper = match build_mapper(&flavor, &app_name, &desc, scale) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
         }
     };
     match apps::run_app(&app, mapper.as_ref(), &desc) {
@@ -164,6 +178,94 @@ fn cmd_run(argv: &[String]) -> i32 {
     }
 }
 
+fn cmd_exec(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "mapple exec",
+        "map + execute a benchmark for real (concurrent multi-node executor)",
+    )
+    .opt("app", "application name (see `mapple apps`)", Some("cannon"))
+    .opt("nodes", "cluster nodes (4 GPUs each)", Some("2"))
+    .opt("mapper", "mapple | tuned | expert | heuristic | auto", Some("mapple"))
+    .opt("scale", "problem-size multiplier", Some("1"))
+    .opt("lanes", "max concurrent kernels (0 = one lane per proc)", Some("0"))
+    .opt("seed", "schedule tie-break seed", Some("0"))
+    .opt("json", "write the ExecResult JSON report here", None);
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nodes = args.usize("nodes").unwrap_or(2);
+    let scale = args.usize("scale").unwrap_or(1) as i64;
+    let app_name = args.str("app").unwrap_or("cannon").to_string();
+    let desc = MachineDesc::paper_testbed(nodes);
+    let Some(app) = build_app(&app_name, &desc, scale) else {
+        eprintln!("unknown app '{app_name}' — see `mapple apps`");
+        return 2;
+    };
+    let flavor = match Flavor::parse(args.str("mapper").unwrap_or("mapple")) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mapper = match build_mapper(&flavor, &app_name, &desc, scale) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let opts = ExecOptions {
+        lanes: args.usize("lanes").unwrap_or(0),
+        seed: args.usize("seed").unwrap_or(0) as u64,
+    };
+    let out = match apps::exec_app(&app, mapper.as_ref(), &desc, &opts) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("exec failed: {e}");
+            return 1;
+        }
+    };
+    // Side-by-side modelled time for the same mapping ("simulated vs
+    // measured": the sim predicts the paper testbed, exec measures this
+    // host). exec_app computed it from the same pipeline artifacts.
+    let simulated = format!(
+        "{}{}",
+        fmt_time(out.sim.makespan),
+        out.sim.oom.as_ref().map(|o| format!(" *** {o}")).unwrap_or_default(),
+    );
+    println!(
+        "{app_name} on {nodes} nodes under {} (measured, oracle-verified):\n  \
+         wall-clock {}  ({} tasks, {} lanes)\n  \
+         simulated makespan {simulated} (paper-testbed model)\n  \
+         measured throughput/node {:.3} GFLOP/s\n  \
+         comm intra {} KiB / inter {} KiB\n  \
+         peak resident {} KiB, checksum {:016x}",
+        out.mapper_name,
+        fmt_time(out.exec.wall_seconds),
+        out.exec.tasks,
+        if opts.lanes == 0 { "per-proc".to_string() } else { opts.lanes.to_string() },
+        out.exec.throughput_per_node(nodes) / 1e9,
+        out.exec.intra_bytes >> 10,
+        out.exec.inter_bytes >> 10,
+        out.exec.peak_resident >> 10,
+        out.exec.checksum,
+    );
+    if let Some(path) = args.str("json") {
+        let json = out.exec.to_json(&app_name, &out.mapper_name, &desc);
+        if let Err(e) = std::fs::write(path, json.pretty()) {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+        println!("[exec report written to {path}]");
+    }
+    0
+}
+
 fn cmd_tune(argv: &[String]) -> i32 {
     let cmd = Command::new("mapple tune", "autotune a mapper against the simulator")
         .opt("app", "application name (see `mapple apps`)", Some("cannon"))
@@ -173,6 +275,7 @@ fn cmd_tune(argv: &[String]) -> i32 {
         .opt("seed", "search RNG seed", Some("40961"))
         .opt("threads", "worker threads (0 = auto)", Some("0"))
         .opt("strategy", "random | greedy | beam | beamN", Some("beam"))
+        .opt("resume", "warm-start from a previously emitted .mpl", None)
         .opt("out", "write the winning mapper's .mpl here", None);
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -197,6 +300,25 @@ fn cmd_tune(argv: &[String]) -> i32 {
     cfg.seed = args.usize("seed").unwrap_or(40961) as u64;
     cfg.threads = args.usize("threads").unwrap_or(0);
     cfg.strategy = strategy;
+    if let Some(path) = args.str("resume") {
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 1;
+            }
+        };
+        match TuneSpec::from_mpl(&app, &src, &desc) {
+            Ok(spec) => {
+                println!("[resuming from {path}: {} directive edits]", spec.edits());
+                cfg.resume = Some(spec);
+            }
+            Err(e) => {
+                eprintln!("{path}: cannot resume: {e}");
+                return 1;
+            }
+        }
+    }
     let start = std::time::Instant::now();
     let result = match tune(&cfg) {
         Ok(r) => r,

@@ -12,8 +12,8 @@ use crate::machine::topology::{MemKind, ProcId, ProcKind};
 use crate::mapple::program::LayoutProps;
 use crate::mapple::vm::PlacementTable;
 use crate::sim::engine::MappingPolicies;
-use crate::tasking::pipeline::{IndexMapping, LaunchPlan};
-use std::rc::Rc;
+use crate::tasking::pipeline::{IndexMapping, LaunchPlan, PlanError};
+use std::sync::Arc;
 
 /// Context describing the task being mapped.
 #[derive(Clone, Debug)]
@@ -61,8 +61,12 @@ pub struct SliceTaskOutput {
 
 /// The low-level mapper interface (19 callbacks; defaults provided for
 /// all but the two the runtime cannot guess: `shard` and `map_task`).
+///
+/// `Send` because mapper-driven runs may hand the mapper to the
+/// concurrent executor's driver thread (`crate::exec`); every shipped
+/// mapper is plain data behind the `Arc`-shared placement tables.
 #[allow(unused_variables)]
-pub trait Mapper {
+pub trait Mapper: Send {
     /// Human-readable mapper name (profiling, logs).
     fn mapper_name(&self) -> &str;
 
@@ -108,7 +112,7 @@ pub trait Mapper {
     /// both callbacks. Default: derive the table from per-point
     /// `map_task`. Mappers with launch-invariant setup (grid selection,
     /// space transforms) override this to hoist it out of the loop.
-    fn build_plan(&self, task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+    fn build_plan(&self, task: &TaskCtx, domain: &Rect) -> Result<Arc<PlacementTable>, String> {
         if domain.volume() <= 0 {
             return Err("empty launch domain".into());
         }
@@ -117,7 +121,7 @@ pub trait Mapper {
         for p in domain.points() {
             procs.push(self.map_task(task, &p, &ispace)?);
         }
-        Ok(Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
+        Ok(Arc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)))
     }
 
     /// (7) Processor kind a task runs on.
@@ -225,8 +229,13 @@ impl IndexMapping for MapperAsMapping<'_> {
 
     /// Batched path: one `build_plan` call per launch; SHARD values are
     /// the node components of the MAP table (§5.1: MAP refines SHARD).
-    fn plan(&self, task: &str, domain: &Rect, nodes: usize) -> Result<LaunchPlan, String> {
-        let table = self.with_ctx(task, domain, |ctx| self.mapper.build_plan(ctx, domain))?;
+    fn plan(&self, task: &str, domain: &Rect, nodes: usize) -> Result<LaunchPlan, PlanError> {
+        if domain.volume() <= 0 {
+            return Err(PlanError::EmptyDomain { task: task.to_string() });
+        }
+        let table = self
+            .with_ctx(task, domain, |ctx| self.mapper.build_plan(ctx, domain))
+            .map_err(|detail| PlanError::Mapping { task: task.to_string(), detail })?;
         let _ = nodes; // the pipeline bounds-checks shard values itself
         Ok(LaunchPlan::from_table(table))
     }

@@ -64,7 +64,7 @@ macro_rules! delegate_placement {
             &self,
             task: &crate::mapper::api::TaskCtx,
             domain: &crate::machine::point::Rect,
-        ) -> Result<std::rc::Rc<crate::mapple::vm::PlacementTable>, String> {
+        ) -> Result<std::sync::Arc<crate::mapple::vm::PlacementTable>, String> {
             crate::mapper::api::Mapper::build_plan(&self.spec, task, domain)
         }
 

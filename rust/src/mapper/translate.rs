@@ -27,13 +27,13 @@ use crate::mapple::program::{LayoutProps, MapperSpec};
 use crate::mapple::vm::PlacementTable;
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// A [`Mapper`] implementation backed by a Mapple [`MapperSpec`].
 pub struct MappleMapper {
     pub spec: MapperSpec,
     /// task → launch ispace → placement table (computed once per shape).
-    plans: RefCell<HashMap<String, HashMap<Tuple, Rc<PlacementTable>>>>,
+    plans: RefCell<HashMap<String, HashMap<Tuple, Arc<PlacementTable>>>>,
 }
 
 impl MappleMapper {
@@ -43,7 +43,7 @@ impl MappleMapper {
 
     /// The placement table for a launch shape: cache probe without
     /// allocating, evaluate the whole domain on miss.
-    fn plan(&self, task: &str, ispace: &Tuple) -> Result<Rc<PlacementTable>, String> {
+    fn plan(&self, task: &str, ispace: &Tuple) -> Result<Arc<PlacementTable>, String> {
         {
             let plans = self.plans.borrow();
             if let Some(table) = plans.get(task).and_then(|by_shape| by_shape.get(ispace)) {
@@ -51,7 +51,7 @@ impl MappleMapper {
             }
         }
         let domain = Rect::from_extent(ispace);
-        let table = Rc::new(self.spec.plan_domain(task, &domain)?);
+        let table = Arc::new(self.spec.plan_domain(task, &domain)?);
         self.plans
             .borrow_mut()
             .entry(task.to_string())
@@ -83,13 +83,13 @@ impl Mapper for MappleMapper {
     }
 
     /// Batched path: hand the pipeline the whole launch's table at once.
-    fn build_plan(&self, task: &TaskCtx, domain: &Rect) -> Result<Rc<PlacementTable>, String> {
+    fn build_plan(&self, task: &TaskCtx, domain: &Rect) -> Result<Arc<PlacementTable>, String> {
         let ispace = domain.extent();
         if domain.lo == Tuple::zeros(domain.dim()) {
             // Cacheable: launch domains are zero-based.
             return self.plan(task.task_name, &ispace);
         }
-        Ok(Rc::new(self.spec.plan_domain(task.task_name, domain)?))
+        Ok(Arc::new(self.spec.plan_domain(task.task_name, domain)?))
     }
 
     fn select_proc_kind(&self, task: &TaskCtx) -> ProcKind {
@@ -174,7 +174,7 @@ Backpressure matmul 3
         // first call populates, second hits cache: same table object
         let a = m.build_plan(&c, &dom).unwrap();
         let b = m.build_plan(&c, &dom).unwrap();
-        assert!(Rc::ptr_eq(&a, &b), "second plan must be the cached table");
+        assert!(Arc::ptr_eq(&a, &b), "second plan must be the cached table");
         // per-point lookups resolve through the same cache
         let p1 = m.map_task(&c, &Tuple::from([7, 7]), &ispace).unwrap();
         let p2 = m.map_task(&c, &Tuple::from([7, 7]), &ispace).unwrap();

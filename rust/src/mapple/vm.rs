@@ -609,6 +609,18 @@ mod tests {
     use crate::mapple::lower::lower;
     use crate::mapple::parser::parse;
 
+    /// Placement artifacts cross threads: the pipeline's `LaunchPlan`s
+    /// are `Arc<PlacementTable>`s read concurrently by the executor's
+    /// node threads, and compiled plans are evaluated from the tuner's
+    /// worker pool. Keep them `Send + Sync` — this fails to compile if a
+    /// non-thread-safe field (`Rc`, `RefCell`, …) sneaks in.
+    #[test]
+    fn placement_artifacts_are_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<PlacementTable>();
+        check::<MappingPlan>();
+    }
+
     fn plan_and_oracle(src: &str, nodes: usize, gpus: usize) -> (MappingPlan, Interp) {
         let prog = parse(src).unwrap();
         let mut desc = MachineDesc::paper_testbed(nodes);

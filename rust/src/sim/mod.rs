@@ -3,6 +3,12 @@
 //! NVLink/IB channels with contention, per-GPU framebuffer capacities
 //! with OOM, compute rates, and the memory/GC/backpressure policies the
 //! mapper controls.
+//!
+//! [`SimResult`] *models* the paper testbed and is authoritative for the
+//! figure/table reproductions and the autotuner's cost model; its
+//! measured counterpart is `crate::exec::ExecResult` (same pipeline
+//! inputs, real threads + kernels, wall-clock instead of makespan) —
+//! see ARCHITECTURE.md "Simulated vs measured".
 
 pub mod channel;
 pub mod engine;

@@ -9,6 +9,8 @@ pub mod region;
 pub mod task;
 
 pub use deps::{analyze, DataEnv, Dependences};
-pub use pipeline::{run, validate, IndexMapping, LogEntry, PipelineRun};
+pub use pipeline::{
+    run, validate, IndexMapping, LaunchPlan, LogEntry, PipelineError, PipelineRun, PlanError,
+};
 pub use region::{LogicalRegion, Partition, Privilege, RegionId};
 pub use task::{IndexLaunch, LaunchId, PointTask, Projection, RegionReq};

@@ -7,10 +7,18 @@
 //! [Distribute]/[Local] and [Map] rules.
 //!
 //! This module implements the *abstract machine*: transitions fire in a
-//! deterministic worklist order and [Execute] is atomic. Timing (how long
-//! compute and data movement take on the physical cluster) is layered on
-//! by `crate::sim`, which consumes the placements and dependences this
-//! pipeline produces.
+//! deterministic worklist order and [Execute] is atomic. Two consumers
+//! layer the physical cluster on top of the placements and dependences
+//! this pipeline produces:
+//!
+//! * `crate::sim` — the discrete-event simulator (modelled timing), and
+//! * `crate::exec` — the concurrent executor (measured wall-clock),
+//!
+//! both of which treat this worklist machine as the mapping oracle. The
+//! per-launch [`LaunchPlan`]s are therefore part of [`PipelineRun`] (the
+//! executor re-reads them from its node threads, which is why the tables
+//! are `Arc`-shared), and mapping failures are the typed [`PlanError`]
+//! rather than bare strings.
 
 use super::deps::Dependences;
 use super::task::{IndexLaunch, LaunchId, PointTask};
@@ -18,7 +26,48 @@ use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::ProcId;
 use crate::mapple::vm::PlacementTable;
 use std::collections::{HashMap, VecDeque};
-use std::rc::Rc;
+use std::fmt;
+use std::sync::Arc;
+
+/// Typed mapping-plan failure, shared by the pipeline and the executor
+/// (`crate::exec`) so neither has to string-match the other's errors.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// The launch domain has zero volume.
+    EmptyDomain { task: String },
+    /// SHARD selected a node outside the machine.
+    ShardOutOfRange { task: String, point: Tuple, node: usize, nodes: usize },
+    /// A launch plan lacks a point of its own domain.
+    MissingPoint { task: String, point: Tuple },
+    /// The mapper callback itself failed (message from the mapper).
+    Mapping { task: String, detail: String },
+}
+
+impl PlanError {
+    /// Wrap a mapper-callback error message.
+    pub fn mapping(task: &str, detail: impl Into<String>) -> PlanError {
+        PlanError::Mapping { task: task.to_string(), detail: detail.into() }
+    }
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::EmptyDomain { task } => {
+                write!(f, "empty launch domain for task '{task}'")
+            }
+            PlanError::ShardOutOfRange { task, point, node, nodes } => {
+                write!(f, "SHARD({task}) returned node {node} ≥ {nodes} for point {point:?}")
+            }
+            PlanError::MissingPoint { task, point } => {
+                write!(f, "plan for task '{task}' lacks point {point:?}")
+            }
+            PlanError::Mapping { task, detail } => write!(f, "mapping '{task}': {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// SHARD + MAP: the two user-supplied mapping functions of §5.1, plus
 /// the batched [`IndexMapping::plan`] form the runtime actually consumes
@@ -33,46 +82,56 @@ pub trait IndexMapping {
     /// this once per launch. Default: per-point `shard` (bounds-checked
     /// against `nodes` before any `map` call, preserving the §5.1 rule
     /// order) then per-point `map`.
-    fn plan(&self, task: &str, domain: &Rect, nodes: usize) -> Result<LaunchPlan, String> {
+    fn plan(&self, task: &str, domain: &Rect, nodes: usize) -> Result<LaunchPlan, PlanError> {
         if domain.volume() <= 0 {
-            return Err("empty launch domain".into());
+            return Err(PlanError::EmptyDomain { task: task.to_string() });
         }
         let ispace = domain.extent();
         let mut shards = Vec::with_capacity(domain.volume() as usize);
         for p in domain.points() {
-            let node = self.shard(task, &p, &ispace)?;
+            let node = self
+                .shard(task, &p, &ispace)
+                .map_err(|detail| PlanError::Mapping { task: task.to_string(), detail })?;
             if node >= nodes {
-                return Err(format!(
-                    "SHARD({task}) returned node {node} ≥ {nodes} for point {p:?}"
-                ));
+                return Err(PlanError::ShardOutOfRange {
+                    task: task.to_string(),
+                    point: p,
+                    node,
+                    nodes,
+                });
             }
             shards.push(node);
         }
         let mut procs = Vec::with_capacity(shards.len());
         for p in domain.points() {
-            procs.push(self.map(task, &p, &ispace)?);
+            procs.push(
+                self.map(task, &p, &ispace)
+                    .map_err(|detail| PlanError::Mapping { task: task.to_string(), detail })?,
+            );
         }
         Ok(LaunchPlan {
             shards,
-            table: Rc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)),
+            table: Arc::new(PlacementTable::new(domain.lo.clone(), ispace, procs)),
         })
     }
 }
 
 /// The per-launch mapping artifact the pipeline consumes: SHARD values in
-/// row-major domain order plus the MAP placement table.
+/// row-major domain order plus the MAP placement table. The table is
+/// `Arc`-shared so the concurrent executor's node threads can read the
+/// same plan the sequential pipeline produced.
 #[derive(Clone, Debug)]
 pub struct LaunchPlan {
     /// Node per point, in `Rect::points()` order.
     pub shards: Vec<usize>,
     /// Processor per point (same order, via the table).
-    pub table: Rc<PlacementTable>,
+    pub table: Arc<PlacementTable>,
 }
 
 impl LaunchPlan {
     /// Derive the SHARD vector from a MAP table (§5.1: MAP refines SHARD,
     /// so a placement's node component *is* its shard).
-    pub fn from_table(table: Rc<PlacementTable>) -> LaunchPlan {
+    pub fn from_table(table: Arc<PlacementTable>) -> LaunchPlan {
         let shards = table.procs().iter().map(|p| p.node).collect();
         LaunchPlan { shards, table }
     }
@@ -92,20 +151,41 @@ pub enum LogEntry {
     Executed(PointTask, ProcId),
 }
 
-/// Result of running the pipeline: placements + ordered execution log.
+/// Result of running the pipeline: placements, ordered execution log, and
+/// the per-launch plans the runtimes (`sim`, `exec`) consume.
 #[derive(Debug)]
 pub struct PipelineRun {
     pub placements: HashMap<PointTask, ProcId>,
     pub log: Vec<LogEntry>,
+    /// One batched SHARD∘MAP plan per launch.
+    pub plans: HashMap<LaunchId, LaunchPlan>,
 }
 
-/// Errors surfaced by the pipeline (mapping failures, deadlock).
-#[derive(Debug)]
-pub struct PipelineError(pub String);
+/// Errors surfaced by the pipeline: typed mapping failures or deadlock.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PipelineError {
+    /// A launch plan failed or was inconsistent.
+    Plan(PlanError),
+    /// No transition could fire with tasks incomplete.
+    Deadlock { incomplete: usize, total: usize, sample: String },
+}
 
-impl std::fmt::Display for PipelineError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "pipeline error: {}", self.0)
+impl From<PlanError> for PipelineError {
+    fn from(e: PlanError) -> PipelineError {
+        PipelineError::Plan(e)
+    }
+}
+
+impl fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PipelineError::Plan(e) => write!(f, "pipeline error: {e}"),
+            PipelineError::Deadlock { incomplete, total, sample } => write!(
+                f,
+                "pipeline deadlock: {incomplete} of {total} tasks incomplete (e.g. {sample}) — \
+                 dependence cycle or mapping failure"
+            ),
+        }
     }
 }
 
@@ -153,20 +233,25 @@ pub fn run(
     // One batched SHARD∘MAP plan per launch — the mapper sees each launch
     // domain exactly once instead of two callbacks per point.
     let mut plans: HashMap<LaunchId, LaunchPlan> = HashMap::new();
+    // Launch ids are arbitrary u32s, not slice positions — name lookup
+    // for error reporting goes through the id.
+    let launch_names: HashMap<LaunchId, &str> =
+        launches.iter().map(|l| (l.id, l.name.as_str())).collect();
 
     // [Enqueue] + [Distribute] + [Local]: enqueue each launch in program
     // order, SHARD each point to its node queue from the launch plan.
     for launch in launches {
-        let plan = mapping
-            .plan(&launch.name, &launch.domain, nodes)
-            .map_err(PipelineError)?;
+        let plan = mapping.plan(&launch.name, &launch.domain, nodes)?;
         for (idx, pt) in launch.points().enumerate() {
             let node = plan.shards[idx];
             if node >= nodes {
-                return Err(PipelineError(format!(
-                    "SHARD({}) returned node {node} ≥ {nodes} for point {:?}",
-                    launch.name, pt.point
-                )));
+                return Err(PlanError::ShardOutOfRange {
+                    task: launch.name.clone(),
+                    point: pt.point.clone(),
+                    node,
+                    nodes,
+                }
+                .into());
             }
             log.push(LogEntry::Enqueued(pt.clone()));
             stage.insert(pt.clone(), Stage::Enqueued);
@@ -199,11 +284,11 @@ pub fn run(
                 .filter(|t| !matches!(stage[*t], Stage::Executed))
                 .take(4)
                 .collect();
-            return Err(PipelineError(format!(
-                "pipeline deadlock: {} of {total} tasks incomplete (e.g. {stuck:?}) — \
-                 dependence cycle or mapping failure",
-                total - done
-            )));
+            return Err(PipelineError::Deadlock {
+                incomplete: total - done,
+                total,
+                sample: format!("{stuck:?}"),
+            });
         }
         progress = false;
 
@@ -219,10 +304,10 @@ pub fn run(
                     .all(|p| mapped_or_later(&stage, p));
                 if ready {
                     let proc = plans[&pt.launch].proc_of(&pt.point).ok_or_else(|| {
-                        PipelineError(format!(
-                            "plan for launch {:?} lacks point {:?}",
-                            pt.launch, pt.point
-                        ))
+                        PipelineError::Plan(PlanError::MissingPoint {
+                            task: launch_names.get(&pt.launch).copied().unwrap_or("?").to_string(),
+                            point: pt.point.clone(),
+                        })
                     })?;
                     log.push(LogEntry::Mapped(pt.clone(), proc));
                     placements.insert(pt.clone(), proc);
@@ -252,14 +337,26 @@ pub fn run(
         }
     }
 
-    Ok(PipelineRun { placements, log })
+    Ok(PipelineRun { placements, log, plans })
 }
 
 /// Validate the §5.1 stage invariants over an execution log. Returns the
-/// first violation found. Used by integration and property tests.
+/// first violation found. Used by integration and property tests, and by
+/// the executor's differential harness (an [`crate::exec::ExecResult`]'s
+/// log must satisfy the same invariants as the sequential oracle's).
 pub fn validate(run: &PipelineRun, deps: &Dependences) -> Result<(), String> {
+    validate_log(&run.log, &run.placements, deps)
+}
+
+/// [`validate`] over a bare (log, placements) pair — the executor's
+/// concurrent log is checked with exactly the same rules.
+pub fn validate_log(
+    log: &[LogEntry],
+    placements: &HashMap<PointTask, ProcId>,
+    deps: &Dependences,
+) -> Result<(), String> {
     let mut position: HashMap<(u8, PointTask), usize> = HashMap::new();
-    for (i, e) in run.log.iter().enumerate() {
+    for (i, e) in log.iter().enumerate() {
         let (code, t) = match e {
             LogEntry::Enqueued(t) => (0u8, t),
             LogEntry::Mapped(t, _) => (1, t),
@@ -270,7 +367,7 @@ pub fn validate(run: &PipelineRun, deps: &Dependences) -> Result<(), String> {
             return Err(format!("duplicate log entry {e:?}"));
         }
     }
-    for (t, _proc) in &run.placements {
+    for (t, _proc) in placements {
         // stage ordering per task
         let stages: Vec<usize> = (0..4u8)
             .map(|c| {
@@ -346,6 +443,7 @@ mod tests {
         let deps = analyze(&launches, &env);
         let run = run(&launches, &deps, &BlockMap, 2).unwrap();
         assert_eq!(run.placements.len(), 8);
+        assert_eq!(run.plans.len(), 2, "one plan per launch");
         validate(&run, &deps).unwrap();
     }
 
@@ -357,10 +455,12 @@ mod tests {
         let t = PointTask { launch: LaunchId(0), point: Tuple::from([1, 1]) };
         let p = r.placements[&t];
         assert_eq!((p.node, p.local), (1, 1));
+        // the retained plan answers the same placement
+        assert_eq!(r.plans[&LaunchId(0)].proc_of(&t.point), Some(p));
     }
 
     #[test]
-    fn shard_out_of_range_rejected() {
+    fn shard_out_of_range_rejected_as_typed_error() {
         struct Bad;
         impl IndexMapping for Bad {
             fn shard(&self, _: &str, _: &Tuple, _: &Tuple) -> Result<usize, String> {
@@ -373,7 +473,19 @@ mod tests {
         let (launches, env) = two_phase_program();
         let deps = analyze(&launches, &env);
         let e = run(&launches, &deps, &Bad, 2).unwrap_err();
-        assert!(e.0.contains("SHARD"));
+        match e {
+            PipelineError::Plan(PlanError::ShardOutOfRange { node, nodes, .. }) => {
+                assert_eq!((node, nodes), (99, 2));
+            }
+            other => panic!("expected ShardOutOfRange, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_domain_rejected_as_typed_error() {
+        let dom = Rect::new(Tuple::from([1, 1]), Tuple::from([0, 0]));
+        let e = BlockMap.plan("t", &dom, 2).unwrap_err();
+        assert_eq!(e, PlanError::EmptyDomain { task: "t".into() });
     }
 
     #[test]
@@ -389,7 +501,13 @@ mod tests {
         }
         let (launches, env) = two_phase_program();
         let deps = analyze(&launches, &env);
-        assert!(run(&launches, &deps, &Failing, 2).is_err());
+        let e = run(&launches, &deps, &Failing, 2).unwrap_err();
+        match e {
+            PipelineError::Plan(PlanError::Mapping { detail, .. }) => {
+                assert!(detail.contains("no processor"), "{detail}");
+            }
+            other => panic!("expected Mapping, got {other:?}"),
+        }
     }
 
     #[test]

@@ -53,6 +53,11 @@ pub struct TuneConfig {
     /// Worker threads (0 = one per available core, capped at 8).
     pub threads: usize,
     pub strategy: StrategyKind,
+    /// Warm-start genome (`tune --resume <file.mpl>`): scored first and
+    /// folded into the strategy alongside the seed, so search continues
+    /// from a previous run's winner instead of restarting cold. The
+    /// never-worse-than-seed guarantee is unaffected.
+    pub resume: Option<TuneSpec>,
 }
 
 impl TuneConfig {
@@ -68,6 +73,7 @@ impl TuneConfig {
             batch: 16,
             threads: 0,
             strategy: StrategyKind::Beam(4),
+            resume: None,
         }
     }
 
@@ -150,6 +156,28 @@ pub fn tune_with_ctx(cfg: &TuneConfig, ctx: &EvalCtx) -> Result<TuneResult, Stri
 
     let mut best = (seed_spec, seed_score);
     let mut evaluated = 0usize;
+
+    // Warm start: score the resumed genome and fold it into the
+    // strategy's state (the beam keeps it if it beats the seed).
+    if let Some(resume) = &cfg.resume {
+        if resume.app != cfg.app {
+            return Err(format!(
+                "tune: resume genome targets app '{}', not '{}'",
+                resume.app, cfg.app
+            ));
+        }
+        let v = score(resume, ctx);
+        if !v.is_finite() {
+            return Err("tune: resume genome fails to simulate on the scored shapes".into());
+        }
+        seen.insert(format!("{resume:?}"), v);
+        strat.observe(&[(resume.clone(), v)]);
+        if v < best.1 {
+            best = (resume.clone(), v);
+        }
+        evaluated += 1;
+    }
+
     while evaluated < cfg.budget {
         let want = cfg.batch.clamp(1, cfg.budget - evaluated);
         let cands = strat.propose(&mut rng, &space, &ctx.shapes, want);

@@ -252,11 +252,15 @@ impl TuneSpec {
     /// Pretty-print the genome as `.mpl` source. Recompiling the result
     /// with [`MapperSpec::compile_with`] (passing [`TuneSpec::objective`],
     /// which has no surface syntax) reproduces the built spec's decisions
-    /// — see `rust/tests/tune.rs`.
+    /// — see `rust/tests/tune.rs`. The `# tune.*` comment lines carry the
+    /// genome knobs that have no directive surface (mapping template,
+    /// objective), so [`TuneSpec::from_mpl`] can warm-start a later run
+    /// (`tune --resume`) from the emitted file.
     pub fn to_mpl(&self) -> Result<String, String> {
         let mut s = String::new();
         let _ = writeln!(s, "# autotuned mapper for {} (crate::tune)", self.app);
-        let _ = writeln!(s, "# decompose objective: {:?}", self.objective);
+        let _ = writeln!(s, "# tune.objective: {}", fmt_objective(&self.objective));
+        let _ = writeln!(s, "# tune.mapping: {}", fmt_mapping(self.mapping.as_ref()));
         match &self.mapping {
             None => {
                 let base = crate::apps::mappers::mapple_source(&self.app)
@@ -284,6 +288,154 @@ impl TuneSpec {
         }
         Ok(s)
     }
+
+    /// Reconstruct a genome from a previously emitted `.mpl` — the warm
+    /// start behind `tune --resume`. The mapping template and objective
+    /// come from the `# tune.*` comment lines (absent in hand-written
+    /// files: baseline mapping, isotropic objective); the directive
+    /// tables are recovered by round-tripping the source through
+    /// [`MapperSpec::compile_with`]. The result is validated by building
+    /// it against `desc`.
+    pub fn from_mpl(app: &str, src: &str, desc: &MachineDesc) -> Result<TuneSpec, String> {
+        let mut objective = Objective::Isotropic;
+        let mut mapping: Option<MapFn> = None;
+        for line in src.lines() {
+            let line = line.trim();
+            if let Some(rest) = line.strip_prefix("# tune.objective:") {
+                objective = parse_objective(rest.trim())?;
+            } else if let Some(rest) = line.strip_prefix("# tune.mapping:") {
+                mapping = parse_mapping(rest.trim())?;
+            }
+        }
+        let spec = MapperSpec::compile_with(src, desc, objective.clone())
+            .map_err(|e| format!("resumed source does not compile: {e}"))?;
+        let mut g = TuneSpec::seed(app);
+        g.objective = objective;
+        g.mapping = mapping;
+        for (task, kind) in &spec.task_maps {
+            g.task_proc.insert(task.clone(), *kind);
+        }
+        for (task, args) in &spec.regions {
+            for (arg, (_scope, mem)) in args {
+                g.mem.insert((task.clone(), *arg), *mem);
+            }
+        }
+        for (task, args) in &spec.gc {
+            for arg in args {
+                g.gc.insert((task.clone(), *arg));
+            }
+        }
+        for (task, limit) in &spec.backpressure {
+            g.backpressure.insert(task.clone(), *limit);
+        }
+        g.build(desc).map_err(|e| format!("resumed genome does not build: {e}"))?;
+        Ok(g)
+    }
+}
+
+/// `# tune.objective:` serialization (round-trips via [`parse_objective`]).
+fn fmt_objective(o: &Objective) -> String {
+    fn list(v: &[f64]) -> String {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+    }
+    match o {
+        Objective::Isotropic => "isotropic".to_string(),
+        Objective::AnisotropicHalo(h) => format!("aniso:{}", list(h)),
+        Objective::WithTranspose { halo, transpose_dims } => format!(
+            "transpose:{};{}",
+            list(halo),
+            transpose_dims
+                .iter()
+                .map(|&d| if d { "1" } else { "0" })
+                .collect::<Vec<_>>()
+                .join(",")
+        ),
+    }
+}
+
+fn parse_objective(s: &str) -> Result<Objective, String> {
+    fn list(s: &str) -> Result<Vec<f64>, String> {
+        s.split(',')
+            .map(|x| x.trim().parse::<f64>().map_err(|_| format!("bad objective weight '{x}'")))
+            .collect()
+    }
+    if s == "isotropic" {
+        return Ok(Objective::Isotropic);
+    }
+    if let Some(rest) = s.strip_prefix("aniso:") {
+        return Ok(Objective::AnisotropicHalo(list(rest)?));
+    }
+    if let Some(rest) = s.strip_prefix("transpose:") {
+        let (h, d) = rest
+            .split_once(';')
+            .ok_or_else(|| format!("bad transpose objective '{rest}'"))?;
+        return Ok(Objective::WithTranspose {
+            halo: list(h)?,
+            transpose_dims: d.split(',').map(|x| x.trim() == "1").collect(),
+        });
+    }
+    Err(format!("unknown tune.objective '{s}'"))
+}
+
+/// `# tune.mapping:` serialization (round-trips via [`parse_mapping`]).
+fn fmt_mapping(m: Option<&MapFn>) -> String {
+    match m {
+        None => "seed".to_string(),
+        Some(MapFn::HierBlock { dims }) => format!("hier:{dims}"),
+        Some(MapFn::LinearBlock { chain }) => {
+            format!("linear_block:{}", chain.iter().map(|op| op.mpl()).collect::<String>())
+        }
+        Some(MapFn::LinearCyclic { chain }) => {
+            format!("linear_cyclic:{}", chain.iter().map(|op| op.mpl()).collect::<String>())
+        }
+    }
+}
+
+fn parse_mapping(s: &str) -> Result<Option<MapFn>, String> {
+    if s == "seed" {
+        return Ok(None);
+    }
+    if let Some(d) = s.strip_prefix("hier:") {
+        let dims =
+            d.trim().parse::<usize>().map_err(|_| format!("bad hier dims '{d}'"))?;
+        return Ok(Some(MapFn::HierBlock { dims }));
+    }
+    if let Some(rest) = s.strip_prefix("linear_block:") {
+        return Ok(Some(MapFn::LinearBlock { chain: parse_chain(rest)? }));
+    }
+    if let Some(rest) = s.strip_prefix("linear_cyclic:") {
+        return Ok(Some(MapFn::LinearCyclic { chain: parse_chain(rest)? }));
+    }
+    Err(format!("unknown tune.mapping '{s}'"))
+}
+
+/// Parse a `.split(0, 2).merge(0, 1)` transform chain.
+fn parse_chain(s: &str) -> Result<Vec<ChainOp>, String> {
+    let mut out = Vec::new();
+    for seg in s.split('.') {
+        let seg = seg.trim();
+        if seg.is_empty() {
+            continue;
+        }
+        let (name, rest) =
+            seg.split_once('(').ok_or_else(|| format!("bad chain op '{seg}'"))?;
+        let rest = rest.strip_suffix(')').ok_or_else(|| format!("bad chain op '{seg}'"))?;
+        let nums: Vec<i64> = rest
+            .split(',')
+            .map(|x| x.trim().parse::<i64>().map_err(|_| format!("bad chain arg in '{seg}'")))
+            .collect::<Result<_, _>>()?;
+        let op = match (name, nums.as_slice()) {
+            ("split", [dim, factor]) => ChainOp::Split { dim: *dim as usize, factor: *factor },
+            ("merge", [p, q]) => ChainOp::Merge { p: *p as usize, q: *q as usize },
+            ("swap", [p, q]) => ChainOp::Swap { p: *p as usize, q: *q as usize },
+            ("slice", [dim, lo, hi]) => {
+                ChainOp::Slice { dim: *dim as usize, lo: *lo, hi: *hi }
+            }
+            _ => return Err(format!("unknown chain op '{seg}'")),
+        };
+        out.push(op);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -395,6 +547,48 @@ mod tests {
         let table = spec.plan_domain("calc_new_currents", &dom).unwrap();
         let uniq: std::collections::HashSet<_> = table.procs().iter().collect();
         assert!(uniq.len() > 1, "spreads over processors: {uniq:?}");
+    }
+
+    #[test]
+    fn from_mpl_roundtrips_full_genomes() {
+        let d = desc(2, 4);
+        let cases = [
+            {
+                let mut g = TuneSpec::seed("cannon");
+                g.mapping = Some(MapFn::HierBlock { dims: 2 });
+                g.objective = Objective::AnisotropicHalo(vec![4.0, 1.0]);
+                g.gc.insert(("mm_step".into(), 0));
+                g.mem.insert(("mm_step".into(), 1), MemKind::ZeroCopy);
+                g.backpressure.insert("mm_step".into(), 2);
+                g
+            },
+            {
+                let mut g = TuneSpec::seed("cannon");
+                g.mapping = Some(MapFn::LinearBlock {
+                    chain: vec![ChainOp::Swap { p: 0, q: 1 }, ChainOp::Merge { p: 0, q: 1 }],
+                });
+                g.task_proc.insert("init_a".into(), ProcKind::Cpu);
+                g
+            },
+            TuneSpec::seed("cannon"),
+        ];
+        for g in cases {
+            let mpl = g.to_mpl().unwrap();
+            let back = TuneSpec::from_mpl("cannon", &mpl, &d)
+                .unwrap_or_else(|e| panic!("{g:?}: {e}"));
+            assert_eq!(back, g, "genome must round-trip through .mpl");
+        }
+    }
+
+    #[test]
+    fn from_mpl_accepts_plain_sources_as_baseline() {
+        // A hand-written mapper without tune.* comments resumes as the
+        // baseline mapping with its directives imported.
+        let d = desc(2, 4);
+        let src = crate::apps::mappers::mapple_source("cannon").unwrap();
+        let g = TuneSpec::from_mpl("cannon", src, &d).unwrap();
+        assert_eq!(g.mapping, None);
+        assert_eq!(g.objective, Objective::Isotropic);
     }
 
     #[test]

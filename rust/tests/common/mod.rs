@@ -2,6 +2,10 @@
 //! shapes the differential and builder↔text equivalence tests sweep, and
 //! real app-instance construction per app name.
 
+// Each test binary compiles this module independently; not every suite
+// uses every helper (e.g. exec.rs sweeps its own shape subset).
+#![allow(dead_code)]
+
 use mapple::apps;
 use mapple::machine::topology::MachineDesc;
 

@@ -4,7 +4,7 @@
 
 use mapple::machine::point::{Rect, Tuple};
 use mapple::machine::topology::MachineDesc;
-use mapple::tune::{tune, StrategyKind, TuneConfig};
+use mapple::tune::{tune, StrategyKind, TuneConfig, TuneSpec};
 
 fn small_cfg(app: &str, seed: u64, strategy: StrategyKind) -> TuneConfig {
     let mut cfg = TuneConfig::quick(app, &MachineDesc::paper_testbed(1));
@@ -99,6 +99,41 @@ fn emitted_mpl_recompiles_to_equivalent_spec() {
             );
         }
     }
+}
+
+#[test]
+fn resume_warm_starts_from_the_emitted_mpl() {
+    // `tune --resume file.mpl`: the emitted winner reconstructs into the
+    // identical genome, and a resumed run can never end up worse than
+    // the run it resumed from (the warm start is scored and kept).
+    let desc = MachineDesc::paper_testbed(1);
+    let first = tune(&small_cfg("cannon", 77, StrategyKind::Beam(2))).unwrap();
+    let resumed_genome = TuneSpec::from_mpl("cannon", &first.mpl, &desc)
+        .unwrap_or_else(|e| panic!("{e}\n{}", first.mpl));
+    assert_eq!(resumed_genome, first.best, "emitted .mpl reconstructs the winning genome");
+
+    let mut cfg = small_cfg("cannon", 5, StrategyKind::Beam(2));
+    cfg.budget = 4;
+    cfg.resume = Some(resumed_genome);
+    let second = tune(&cfg).unwrap();
+    assert!(
+        second.best_score <= first.best_score,
+        "resumed run lost ground: {} vs {}",
+        second.best_score,
+        first.best_score
+    );
+    assert!(second.evaluated >= 1, "the warm start counts as an evaluation");
+}
+
+#[test]
+fn resume_rejects_mismatched_app() {
+    let desc = MachineDesc::paper_testbed(1);
+    let first = tune(&small_cfg("cannon", 77, StrategyKind::Beam(2))).unwrap();
+    let genome = TuneSpec::from_mpl("cannon", &first.mpl, &desc).unwrap();
+    let mut cfg = small_cfg("pennant", 5, StrategyKind::Beam(2));
+    cfg.resume = Some(genome);
+    let e = tune(&cfg).unwrap_err();
+    assert!(e.contains("resume"), "{e}");
 }
 
 #[test]
