@@ -1,17 +1,19 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the L3 paths that run
 //! per task launch —
-//!   1. launch-domain mapping: per-point tree-walking interpreter vs the
-//!      batched MappingPlan VM (prelude hoisting + register bytecode),
+//!   1. launch-domain mapping, all three tiers: per-point tree-walking
+//!      interpreter vs the batched MappingPlan VM (prelude hoisting +
+//!      register bytecode) vs the closure-compiled tier (`mapple::compile`,
+//!      the default behind `eval_domain`),
 //!   2. per-point lookup through the MappleMapper's cached tables,
 //!   3. decompose solve: cold search vs memo hit,
 //!   4. end-to-end map+simulate for a full Cannon program.
 //!
-//! The acceptance bar for the MappingPlan IR is ≥2x over the tree walker
-//! on a 1024-point launch. CI runs this on noisy shared runners, so the
-//! gate takes the **best speedup over a few trials**: scheduler
-//! interference can only slow a trial down, so the best trial is the
-//! closest observation of the true ratio and a single descheduled sample
-//! cannot fail the job spuriously.
+//! Two gates on the 1024-point launch: the VM must be ≥2x the tree
+//! walker, and the compiled tier must be ≥1.5x the VM on top of that.
+//! CI runs this on noisy shared runners, so each gate takes the **best
+//! speedup over a few trials**: scheduler interference can only slow a
+//! trial down, so the best trial is the closest observation of the true
+//! ratio and a single descheduled sample cannot fail the job spuriously.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
@@ -28,12 +30,16 @@ use mapple::util::bench::Bencher;
 fn main() {
     let desc = MachineDesc::paper_testbed(4);
 
-    println!("== 1. launch-domain mapping: tree-walker vs batched MappingPlan VM ==");
+    println!("== 1. launch-domain mapping: tree-walker vs VM vs compiled closures ==");
     let src = mappers::mapple_source("cannon").unwrap();
     let spec = MapperSpec::compile(src, &desc).unwrap();
     assert!(
         spec.plan.supports("hierarchical_block2D"),
         "cannon mapper must compile to bytecode"
+    );
+    assert!(
+        spec.plan.compiled_for("hierarchical_block2D"),
+        "cannon mapper must reach the closure-compiled tier"
     );
     let ispace = Tuple::from([32, 32]); // 1024-point launch
     let dom = Rect::from_extent(&ispace);
@@ -42,7 +48,8 @@ fn main() {
     // Gate on the best of a few trials: CI-runner noise only ever slows a
     // trial down, so the max over trials is the robust estimate.
     const TRIALS: usize = 3;
-    let mut best_speedup = 0.0f64;
+    let mut best_vm_speedup = 0.0f64;
+    let mut best_compiled_speedup = 0.0f64;
     let mut m_interp_median = f64::NAN;
     for trial in 0..TRIALS {
         let m_interp = b1.run("tree-walker, 1024 points (per-point)", || {
@@ -53,28 +60,47 @@ fn main() {
             last
         });
         let m_vm = b1.run("MappingPlan VM, 1024 points (batched)", || {
-            spec.plan_domain("mm_step_0", &dom).unwrap()
+            spec.plan.eval_domain_vm("hierarchical_block2D", &dom).unwrap()
+        });
+        let m_compiled = b1.run("compiled closures, 1024 points (batched)", || {
+            spec.plan.eval_domain("hierarchical_block2D", &dom).unwrap()
         });
         if trial == 0 {
             println!("  {}", m_interp.summary());
             println!("  {}", m_vm.summary());
+            println!("  {}", m_compiled.summary());
             m_interp_median = m_interp.median();
         }
-        let speedup = m_interp.median() / m_vm.median();
-        println!("  trial {}: batched VM speedup {speedup:.1}x", trial + 1);
-        best_speedup = best_speedup.max(speedup);
-        if best_speedup >= 2.0 {
-            break; // gate already met; no need to burn more CI time
+        let vm_speedup = m_interp.median() / m_vm.median();
+        let compiled_speedup = m_vm.median() / m_compiled.median();
+        println!(
+            "  trial {}: VM {vm_speedup:.1}x over tree-walker, \
+             compiled {compiled_speedup:.1}x over VM",
+            trial + 1
+        );
+        best_vm_speedup = best_vm_speedup.max(vm_speedup);
+        best_compiled_speedup = best_compiled_speedup.max(compiled_speedup);
+        if best_vm_speedup >= 2.0 && best_compiled_speedup >= 1.5 {
+            break; // both gates already met; no need to burn more CI time
         }
     }
     println!(
-        "  best batched VM speedup over tree-walker: {best_speedup:.1}x  [{}]\n",
-        if best_speedup >= 2.0 { "PASS ≥2x" } else { "FAIL <2x" }
+        "  best VM speedup over tree-walker: {best_vm_speedup:.1}x  [{}]",
+        if best_vm_speedup >= 2.0 { "PASS ≥2x" } else { "FAIL <2x" }
+    );
+    println!(
+        "  best compiled speedup over VM: {best_compiled_speedup:.1}x  [{}]\n",
+        if best_compiled_speedup >= 1.5 { "PASS ≥1.5x" } else { "FAIL <1.5x" }
     );
     assert!(
-        best_speedup >= 2.0,
+        best_vm_speedup >= 2.0,
         "MappingPlan VM must be ≥2x the per-point tree-walker in the best of \
-         {TRIALS} trials (got {best_speedup:.2}x)"
+         {TRIALS} trials (got {best_vm_speedup:.2}x)"
+    );
+    assert!(
+        best_compiled_speedup >= 1.5,
+        "compiled closures must be ≥1.5x the bytecode VM in the best of \
+         {TRIALS} trials (got {best_compiled_speedup:.2}x)"
     );
 
     println!("== 2. per-point lookup through the cached placement table ==");

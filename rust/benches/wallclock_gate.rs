@@ -1,0 +1,96 @@
+//! Wall-clock soft gate for the executor's kernel tier: the blocked,
+//! buffer-pooled kernels (`KernelMode::Fast`, the default) must beat the
+//! naive reference kernels (`KernelMode::Naive`) by ≥2x geomean across
+//! the six matmul apps on a 2-node machine — at bitwise-identical
+//! checksums and identical byte accounting, so the speed can only come
+//! from how the same arithmetic is scheduled, never from doing different
+//! arithmetic.
+//!
+//! Like `perf_hotpath`, each mode takes the **best (minimum) wall-clock
+//! over a few trials**: CI-runner noise only ever slows a trial down, so
+//! the min is the robust estimate and a single descheduled sample cannot
+//! fail the job spuriously. The gate is on the geomean across apps
+//! rather than per-app, which tolerates one app with an unlucky
+//! tile shape without letting a real regression through.
+//!
+//! Run: `cargo bench --bench wallclock_gate`
+
+use mapple::bench::{mapper_for, run_exec, write_report, Flavor};
+use mapple::exec::{ExecOptions, KernelMode};
+use mapple::machine::topology::MachineDesc;
+use mapple::util::json::Json;
+use mapple::{apps, exec::ExecResult};
+
+const MATMUL_APPS: &[&str] = &["cannon", "summa", "pumma", "johnson", "solomonik", "cosma"];
+const N: i64 = 512;
+const TRIALS: usize = 3;
+
+fn best_of(app_name: &str, mode: KernelMode) -> ExecResult {
+    let desc = MachineDesc::paper_testbed(2);
+    let procs = desc.nodes * desc.gpus_per_node;
+    let app = match app_name {
+        "cannon" => apps::cannon(N, procs),
+        "summa" => apps::summa(N, procs),
+        "pumma" => apps::pumma(N, procs),
+        "johnson" => apps::johnson(N, procs),
+        "solomonik" => apps::solomonik(N, procs),
+        "cosma" => apps::cosma(N, procs),
+        other => panic!("unknown matmul app {other}"),
+    };
+    let mapper = mapper_for(&Flavor::Mapple, app_name, &desc);
+    let opts = ExecOptions { kernels: mode, ..ExecOptions::default() };
+    let mut best: Option<ExecResult> = None;
+    for _ in 0..TRIALS {
+        let r = run_exec(&app, mapper.as_ref(), &desc, &opts)
+            .unwrap_or_else(|e| panic!("{app_name} ({mode:?}): {e}"));
+        if best.as_ref().map(|b| r.wall_seconds < b.wall_seconds).unwrap_or(true) {
+            best = Some(r);
+        }
+    }
+    best.unwrap()
+}
+
+fn main() {
+    println!("== exec wall-clock: blocked/pooled kernels vs naive (N={N}, 2 nodes) ==");
+    let mut rows = Vec::new();
+    let mut log_sum = 0.0f64;
+    for app in MATMUL_APPS {
+        let naive = best_of(app, KernelMode::Naive);
+        let fast = best_of(app, KernelMode::Fast);
+        // Representation independence: the kernel tier may only change
+        // how fast the answer arrives, never the answer or the traffic.
+        assert_eq!(fast.checksum, naive.checksum, "{app}: checksum drifted between kernel modes");
+        assert_eq!(fast.intra_bytes, naive.intra_bytes, "{app}: intra-node bytes drifted");
+        assert_eq!(fast.inter_bytes, naive.inter_bytes, "{app}: inter-node bytes drifted");
+        let speedup = naive.wall_seconds / fast.wall_seconds;
+        log_sum += speedup.ln();
+        println!(
+            "  {app:10}  naive {:8.3}s   fast {:8.3}s   {speedup:5.2}x   checksum {:016x}",
+            naive.wall_seconds, fast.wall_seconds, fast.checksum
+        );
+        rows.push(Json::obj(vec![
+            ("app", Json::Str(app.to_string())),
+            ("naive_seconds", Json::Num(naive.wall_seconds)),
+            ("fast_seconds", Json::Num(fast.wall_seconds)),
+            ("speedup", Json::Num(speedup)),
+            ("checksum", Json::Str(format!("{:016x}", fast.checksum))),
+        ]));
+    }
+    let geomean = (log_sum / MATMUL_APPS.len() as f64).exp();
+    println!(
+        "  geomean fast/naive speedup: {geomean:.2}x  [{}]",
+        if geomean >= 2.0 { "PASS ≥2x" } else { "FAIL <2x" }
+    );
+    let report = Json::obj(vec![
+        ("n", Json::Num(N as f64)),
+        ("trials", Json::Num(TRIALS as f64)),
+        ("geomean_speedup", Json::Num(geomean)),
+        ("apps", Json::arr(rows)),
+    ]);
+    write_report("wallclock_gate", &report);
+    assert!(
+        geomean >= 2.0,
+        "blocked/pooled kernels must be ≥2x naive (geomean over the six matmul \
+         apps, best of {TRIALS} trials per mode; got {geomean:.2}x)"
+    );
+}

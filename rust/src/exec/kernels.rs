@@ -9,12 +9,26 @@
 //! [`super::ExecResult`] checksum — are bitwise identical across worker
 //! counts and schedules.
 //!
+//! Two implementation tiers share one operation order. [`KernelMode::Fast`]
+//! (the default) runs the cache-blocked GEMM over pooled buffers;
+//! [`KernelMode::Naive`] runs straightforward reference loops. Both apply
+//! the *same sequence of f32 multiply-adds per output element* (ascending
+//! inner-product index), so their results are bitwise identical — the
+//! differential invariant `tests` and the wall-clock gate lean on.
+//!
+//! Inputs arrive as [`TileBuf`]s: either an exclusively owned (pooled)
+//! buffer or a zero-copy `Arc` view of a store-resident tile. Kernels
+//! validate shapes *before* destructively taking any buffer, so the
+//! generic-sweep fallback always sees intact inputs.
+//!
 //! Buffers are `f32` regardless of the region's `elem_bytes`; element
 //! size only affects the byte accounting of data movement, which the
 //! plan computes from the region metadata.
 
+use super::pool::BufferPool;
 use crate::machine::point::Rect;
 use crate::tasking::region::RegionId;
+use std::sync::Arc;
 
 /// Kernel selector, resolved at plan time from [`crate::tasking::task::IndexLaunch::kernel`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,6 +44,19 @@ pub enum Kernel {
     /// science workloads' per-piece updates, and reductions without a
     /// dedicated kernel.
     Sweep,
+}
+
+/// Which kernel implementations a run uses. Both modes compute the same
+/// per-element f32 operation sequence, so region contents and checksums
+/// are bitwise identical; only wall-clock changes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Cache-blocked GEMM, pooled buffers (the default).
+    #[default]
+    Fast,
+    /// Straightforward reference loops — the differential baseline the
+    /// wall-clock gate measures Fast against.
+    Naive,
 }
 
 /// Map a launch's kernel name to its executor kernel. Unknown or absent
@@ -57,7 +84,8 @@ pub struct ArgView {
 }
 
 /// Deterministic initial contents of a never-written tile (the cold-read
-/// base every gather starts from).
+/// base every gather starts from). Nodes memoize this per (region, rect)
+/// in their tile store — see `super::node`.
 pub fn cold_tile(region: RegionId, rect: &Rect) -> Vec<f32> {
     let n = rect.volume().max(0) as usize;
     let seed =
@@ -65,15 +93,61 @@ pub fn cold_tile(region: RegionId, rect: &Rect) -> Vec<f32> {
     (0..n).map(|i| (((seed + i as i64).rem_euclid(251)) as f32) * 0.004 - 0.5).collect()
 }
 
+/// A gathered input buffer: exclusively owned (pooled allocation) or a
+/// zero-copy `Arc` view of a tile already resident in the node store.
+#[derive(Clone, Debug)]
+pub enum TileBuf {
+    Owned(Vec<f32>),
+    Shared(Arc<Vec<f32>>),
+}
+
+impl TileBuf {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            TileBuf::Owned(v) => v,
+            TileBuf::Shared(a) => a,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// Take exclusive ownership of the contents: moves an `Owned` buffer
+    /// out (leaving it empty) and copies a `Shared` view.
+    pub fn take_owned(&mut self) -> Vec<f32> {
+        match self {
+            TileBuf::Owned(v) => std::mem::take(v),
+            TileBuf::Shared(a) => a.as_ref().clone(),
+        }
+    }
+}
+
 /// Execute a kernel. `inputs[i]` is the gathered buffer for argument `i`
 /// (cold/zero base for write-only arguments). Returns one output buffer
 /// per *written* argument (`None` for read-only ones). Shape-mismatched
-/// launches fall back to the generic sweep rather than panicking.
-pub fn run(kernel: Kernel, args: &[ArgView], inputs: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
-    match kernel {
-        Kernel::MatmulTile => matmul_tile(args, inputs).unwrap_or_else(|| sweep(args, inputs)),
-        Kernel::Stencil5 => stencil5(args, inputs).unwrap_or_else(|| sweep(args, inputs)),
-        Kernel::Sweep => sweep(args, inputs),
+/// launches fall back to the generic sweep rather than panicking; every
+/// kernel validates before destructively taking a buffer, so the
+/// fallback sees intact inputs.
+pub fn run(
+    kernel: Kernel,
+    mode: KernelMode,
+    args: &[ArgView],
+    inputs: &mut [TileBuf],
+    pool: &BufferPool,
+) -> Vec<Option<Vec<f32>>> {
+    let specialized = match kernel {
+        Kernel::MatmulTile => matmul_tile(mode, args, inputs),
+        Kernel::Stencil5 => stencil5(args, inputs, pool),
+        Kernel::Sweep => None,
+    };
+    match specialized {
+        Some(out) => out,
+        None => sweep(args, inputs, pool),
     }
 }
 
@@ -86,8 +160,11 @@ fn dims2(rect: &Rect) -> Option<(usize, usize)> {
     Some((e[0] as usize, e[1] as usize))
 }
 
-#[allow(clippy::needless_range_loop)]
-fn matmul_tile(args: &[ArgView], inputs: &[Vec<f32>]) -> Option<Vec<Option<Vec<f32>>>> {
+fn matmul_tile(
+    mode: KernelMode,
+    args: &[ArgView],
+    inputs: &mut [TileBuf],
+) -> Option<Vec<Option<Vec<f32>>>> {
     if args.len() != 3 || !args[2].writes {
         return None;
     }
@@ -97,19 +174,17 @@ fn matmul_tile(args: &[ArgView], inputs: &[Vec<f32>]) -> Option<Vec<Option<Vec<f
     if k2 != k || m2 != m || n2 != n {
         return None;
     }
-    let a = &inputs[0];
-    let b = &inputs[1];
-    let mut c = inputs[2].clone();
-    if a.len() != m * k || b.len() != k * n || c.len() != m * n {
+    if inputs[0].len() != m * k || inputs[1].len() != k * n || inputs[2].len() != m * n {
         return None;
     }
-    for i in 0..m {
-        for j in 0..n {
-            let mut acc = 0.0f32;
-            for l in 0..k {
-                acc += a[i * k + l] * b[l * n + j];
-            }
-            c[i * n + j] += acc;
+    // All shape checks passed — only now take C destructively.
+    let mut c = inputs[2].take_owned();
+    {
+        let a = inputs[0].as_slice();
+        let b = inputs[1].as_slice();
+        match mode {
+            KernelMode::Naive => matmul_naive(m, n, k, a, b, &mut c),
+            KernelMode::Fast => matmul_blocked(m, n, k, a, b, &mut c),
         }
     }
     let mut out: Vec<Option<Vec<f32>>> = vec![None, None, None];
@@ -117,13 +192,64 @@ fn matmul_tile(args: &[ArgView], inputs: &[Vec<f32>]) -> Option<Vec<Option<Vec<f
     Some(out)
 }
 
+/// Reference GEMM: `c[i][j] += a[i][l] * b[l][j]` as individual f32
+/// multiply-adds with `l` ascending — the canonical per-element
+/// operation order both modes follow.
+fn matmul_naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let mut s = *cv;
+            for (l, &av) in arow.iter().enumerate() {
+                s += av * b[l * n + j];
+            }
+            *cv = s;
+        }
+    }
+}
+
+/// Panel edge: 64×64 f32 panels (16 KiB) keep the active B panel
+/// L1-resident across the i-block.
+const PANEL: usize = 64;
+
+/// Cache-blocked GEMM: i-k-j loop order tiled into ~[`PANEL`]² panels.
+/// The inner loop walks one row of B and one row of C contiguously
+/// (autovectorizable, unit stride), and each B panel is reused for a
+/// whole i-block. For every output element the multiply-adds still apply
+/// in ascending `l`, so results are bitwise identical to
+/// [`matmul_naive`].
+fn matmul_blocked(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for ib in (0..m).step_by(PANEL) {
+        let ie = (ib + PANEL).min(m);
+        for lb in (0..k).step_by(PANEL) {
+            let le = (lb + PANEL).min(k);
+            for i in ib..ie {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for l in lb..le {
+                    let av = arow[l];
+                    let brow = &b[l * n..(l + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[allow(clippy::needless_range_loop)]
-fn stencil5(args: &[ArgView], inputs: &[Vec<f32>]) -> Option<Vec<Option<Vec<f32>>>> {
+fn stencil5(
+    args: &[ArgView],
+    inputs: &[TileBuf],
+    pool: &BufferPool,
+) -> Option<Vec<Option<Vec<f32>>>> {
     if args.len() < 5 || !args[0].writes {
         return None;
     }
     let (r, c) = dims2(&args[0].rect)?;
-    let cells = &inputs[0];
+    let cells = inputs[0].as_slice();
     if cells.len() != r * c {
         return None;
     }
@@ -135,14 +261,14 @@ fn stencil5(args: &[ArgView], inputs: &[Vec<f32>]) -> Option<Vec<Option<Vec<f32>
     let (hn_rows, hn_cols) = dims2(&args[2].rect)?;
     let (_, ve_cols) = dims2(&args[3].rect)?;
     let (_, vw_cols) = dims2(&args[4].rect)?;
-    let south = &inputs[1];
-    let north = &inputs[2];
-    let east = &inputs[3];
-    let west = &inputs[4];
+    let south = inputs[1].as_slice();
+    let north = inputs[2].as_slice();
+    let east = inputs[3].as_slice();
+    let west = inputs[4].as_slice();
     if hs_cols != c || hn_cols != c || south.len() != hs_rows * c || north.len() != hn_rows * c {
         return None;
     }
-    let mut out = vec![0.0f32; r * c];
+    let mut out = pool.take_zeroed(r * c);
     for i in 0..r {
         for j in 0..c {
             let center = cells[i * c + j];
@@ -182,8 +308,10 @@ fn stencil5(args: &[ArgView], inputs: &[Vec<f32>]) -> Option<Vec<Option<Vec<f32>
 
 /// The generic kernel: one real pass over every written tile, mixing in
 /// the read arguments elementwise (wrapped indexing when shapes differ).
-/// Reductions accumulate; read-write arguments blend.
-fn sweep(args: &[ArgView], inputs: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
+/// Reductions accumulate; read-write arguments blend. Written arguments
+/// copy through the pool (a written tile can still be a reader for the
+/// task's other arguments, so its gathered input must stay intact).
+fn sweep(args: &[ArgView], inputs: &[TileBuf], pool: &BufferPool) -> Vec<Option<Vec<f32>>> {
     let readers: Vec<usize> =
         args.iter().enumerate().filter(|(_, a)| a.reads).map(|(i, _)| i).collect();
     let mut out: Vec<Option<Vec<f32>>> = vec![None; args.len()];
@@ -191,7 +319,7 @@ fn sweep(args: &[ArgView], inputs: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
         if !arg.writes {
             continue;
         }
-        let mut buf = inputs[wi].clone();
+        let mut buf = pool.take_copy(inputs[wi].as_slice());
         let others: Vec<usize> = readers.iter().copied().filter(|&ri| ri != wi).collect();
         if others.is_empty() {
             // pure initialization / self-update
@@ -202,7 +330,7 @@ fn sweep(args: &[ArgView], inputs: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
             for (i, v) in buf.iter_mut().enumerate() {
                 let mut mix = 0.0f32;
                 for &ri in &others {
-                    let r = &inputs[ri];
+                    let r = inputs[ri].as_slice();
                     if !r.is_empty() {
                         mix += r[i % r.len()];
                     }
@@ -225,6 +353,10 @@ mod tests {
         ArgView { rect: Rect::from_extent(&Tuple::from(extent)), reads, writes, reduces }
     }
 
+    fn bufs(vs: Vec<Vec<f32>>) -> Vec<TileBuf> {
+        vs.into_iter().map(TileBuf::Owned).collect()
+    }
+
     #[test]
     fn matmul_tile_accumulates_identity() {
         // A = I (2×2), B = [[1,2],[3,4]], C starts at zero → C = B.
@@ -235,10 +367,40 @@ mod tests {
         ];
         let a = vec![1.0, 0.0, 0.0, 1.0];
         let b = vec![1.0, 2.0, 3.0, 4.0];
-        let c = vec![0.0; 4];
-        let out = run(Kernel::MatmulTile, &args, &[a, b.clone(), c]);
-        assert_eq!(out[2].as_ref().unwrap(), &b);
-        assert!(out[0].is_none() && out[1].is_none());
+        let pool = BufferPool::new();
+        for mode in [KernelMode::Fast, KernelMode::Naive] {
+            let mut inputs = bufs(vec![a.clone(), b.clone(), vec![0.0; 4]]);
+            let out = run(Kernel::MatmulTile, mode, &args, &mut inputs, &pool);
+            assert_eq!(out[2].as_ref().unwrap(), &b, "{mode:?}");
+            assert!(out[0].is_none() && out[1].is_none());
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_is_bitwise_identical_to_naive() {
+        // Odd sizes larger than one PANEL exercise partial edge panels.
+        let (m, k, n) = (67, 129, 70);
+        let args = [
+            view([m as i64, k as i64], true, false, false),
+            view([k as i64, n as i64], true, false, false),
+            view([m as i64, n as i64], true, true, true),
+        ];
+        let gen = |len: usize, s: i64| -> Vec<f32> {
+            (0..len).map(|i| (((s + i as i64 * 7).rem_euclid(251)) as f32) * 0.004 - 0.5).collect()
+        };
+        let a = gen(m * k, 3);
+        let b = gen(k * n, 11);
+        let c0 = gen(m * n, 29);
+        let pool = BufferPool::new();
+        let mut fast_in = bufs(vec![a.clone(), b.clone(), c0.clone()]);
+        let mut naive_in = bufs(vec![a, b, c0]);
+        let fast = run(Kernel::MatmulTile, KernelMode::Fast, &args, &mut fast_in, &pool);
+        let naive = run(Kernel::MatmulTile, KernelMode::Naive, &args, &mut naive_in, &pool);
+        let (f, nv) = (fast[2].as_ref().unwrap(), naive[2].as_ref().unwrap());
+        assert_eq!(f.len(), nv.len());
+        for (i, (x, y)) in f.iter().zip(nv.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "element {i}: {x} vs {y}");
+        }
     }
 
     #[test]
@@ -247,19 +409,25 @@ mod tests {
             ArgView { rect: Rect::from_extent(&Tuple::from(extent)), reads, writes, reduces }
         }
         let args = [view1([4], true, true, true), view1([4], true, false, false)];
-        let prev = vec![1.0f32; 4];
-        let inp = vec![2.0f32; 4];
-        let out = run(Kernel::Sweep, &args, &[prev, inp]);
+        let pool = BufferPool::new();
+        let mut inputs = bufs(vec![vec![1.0f32; 4], vec![2.0f32; 4]]);
+        let out = run(Kernel::Sweep, KernelMode::Fast, &args, &mut inputs, &pool);
         let r = out[0].as_ref().unwrap();
         assert!(r.iter().all(|&v| (v - 1.2).abs() < 1e-6), "{r:?}");
     }
 
     #[test]
-    fn kernels_are_deterministic() {
+    fn pooled_and_shared_inputs_do_not_change_results() {
         let args = [view([3, 3], true, true, false)];
         let input = cold_tile(RegionId(1), &args[0].rect);
-        let a = run(Kernel::Sweep, &args, &[input.clone()]);
-        let b = run(Kernel::Sweep, &args, &[input]);
+        let pool = BufferPool::new();
+        // Dirty the pool so a recycled buffer would expose any missed
+        // initialization.
+        pool.put(vec![99.0f32; 9]);
+        let mut owned = bufs(vec![input.clone()]);
+        let mut shared = vec![TileBuf::Shared(Arc::new(input))];
+        let a = run(Kernel::Sweep, KernelMode::Fast, &args, &mut owned, &pool);
+        let b = run(Kernel::Sweep, KernelMode::Naive, &args, &mut shared, &pool);
         assert_eq!(a, b);
     }
 
@@ -271,14 +439,32 @@ mod tests {
     }
 
     #[test]
-    fn shape_mismatch_falls_back_to_sweep() {
-        // Mis-sized B buffer can't GEMM; must not panic and still write.
+    fn shape_mismatch_falls_back_to_sweep_with_intact_inputs() {
+        // Mis-sized B buffer can't GEMM; must not panic and still write,
+        // and the fallback must see the original (untaken) C contents.
         let args = [
             view([2, 2], true, false, false),
             view([2, 2], true, false, false),
             view([2, 2], true, true, true),
         ];
-        let out = run(Kernel::MatmulTile, &args, &[vec![1.0; 4], vec![1.0; 3], vec![0.0; 4]]);
-        assert!(out[2].is_some(), "fell back to sweep and wrote C");
+        let pool = BufferPool::new();
+        let mut inputs = bufs(vec![vec![1.0; 4], vec![1.0; 3], vec![2.0; 4]]);
+        let out = run(Kernel::MatmulTile, KernelMode::Fast, &args, &mut inputs, &pool);
+        let c = out[2].as_ref().unwrap();
+        assert_eq!(c.len(), 4, "fell back to sweep and wrote C");
+        // Sweep reduce from C=2.0 base: 2.0 + 0.1 * mix, never zeroed.
+        assert!(c.iter().all(|&v| v > 2.0), "{c:?}");
+    }
+
+    #[test]
+    fn take_owned_moves_or_copies() {
+        let mut o = TileBuf::Owned(vec![1.0, 2.0]);
+        assert_eq!(o.take_owned(), vec![1.0, 2.0]);
+        assert!(o.is_empty(), "owned buffer moved out");
+        let arc = Arc::new(vec![3.0, 4.0]);
+        let mut s = TileBuf::Shared(arc.clone());
+        assert_eq!(s.take_owned(), vec![3.0, 4.0]);
+        assert_eq!(s.len(), 2, "shared view still intact");
+        assert_eq!(arc.as_slice(), &[3.0, 4.0]);
     }
 }

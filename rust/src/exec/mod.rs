@@ -31,7 +31,9 @@
 pub mod kernels;
 mod node;
 pub mod plan;
+pub mod pool;
 
+pub use kernels::KernelMode;
 pub use plan::{ExecPlan, ExecTask, ReqPlan, SendPlan, SourceSlice};
 
 use crate::machine::point::Tuple;
@@ -56,6 +58,11 @@ pub struct ExecOptions {
     /// independent tasks within a dependence level. Results are
     /// invariant in the seed; per-lane order is deterministic in it.
     pub seed: u64,
+    /// Kernel implementation tier: [`KernelMode::Fast`] (cache-blocked
+    /// GEMM, pooled buffers — the default) or [`KernelMode::Naive`]
+    /// (reference loops). Results are bitwise invariant in this — only
+    /// wall-clock changes.
+    pub kernels: KernelMode,
 }
 
 /// Executor failure (planning; the concurrent run itself cannot fail).
@@ -230,7 +237,7 @@ pub fn execute(
     opts: &ExecOptions,
 ) -> Result<ExecResult, ExecError> {
     let plan = plan::build(launches, env, deps, run, desc, policies, opts.seed)?;
-    let raw = node::run_plan(&plan, opts.lanes);
+    let raw = node::run_plan(&plan, opts.lanes, opts.kernels);
     // Intake transitions in program order (preds always precede their
     // dependents), then the measured Launched/Executed timeline.
     let mut log = Vec::with_capacity(4 * plan.tasks.len());

@@ -15,11 +15,13 @@
 //! whose producers are wait-predecessors; and compute-slot limits are
 //! only held while a kernel runs, never while blocking.
 
-use super::kernels::{self, ArgView};
+use super::kernels::{self, ArgView, KernelMode, TileBuf};
 use super::plan::{ExecPlan, Key, ReqPlan};
+use super::pool::BufferPool;
 use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::ProcId;
 use crate::tasking::pipeline::LogEntry;
+use crate::tasking::region::RegionId;
 use crate::tasking::task::PointTask;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -60,6 +62,10 @@ struct StoreInner {
     /// GC'd keys: contents retained for correctness, excluded from the
     /// resident accounting (the sim is authoritative for OOM).
     ghosts: HashSet<Key>,
+    /// Memoized deterministic cold bases per (region, rect): computed on
+    /// first use instead of regenerated on every gather. Not part of the
+    /// tile state — excluded from checksums and resident accounting.
+    cold: HashMap<Key, Arc<Vec<f32>>>,
     resident: u64,
     peak: u64,
 }
@@ -113,6 +119,20 @@ impl NodeStore {
         }
     }
 
+    /// The deterministic cold base for `(region, rect)`, memoized per
+    /// node (the generation is pure, so every node computes identical
+    /// contents).
+    fn cold_base(&self, region: RegionId, rect: &Rect) -> Arc<Vec<f32>> {
+        let mut g = self.inner.lock().unwrap();
+        let key: Key = (region, rect.clone());
+        if let Some(base) = g.cold.get(&key) {
+            return base.clone();
+        }
+        let base = Arc::new(kernels::cold_tile(region, rect));
+        g.cold.insert(key, base.clone());
+        base
+    }
+
     /// Read a tile this node is known to hold (a just-written one).
     fn peek(&self, key: &Key, version: u64) -> Arc<Vec<f32>> {
         let g = self.inner.lock().unwrap();
@@ -156,6 +176,11 @@ struct Shared<'a> {
     done_lock: Mutex<usize>,
     done_cv: Condvar,
     stores: Vec<NodeStore>,
+    /// Per-node tile buffer pools: gather and output allocations recycle
+    /// through these instead of fresh `Vec`s per task.
+    pools: Vec<BufferPool>,
+    /// Kernel implementation tier (results are bitwise invariant in it).
+    mode: KernelMode,
     start: Instant,
     /// Global event-order tickets (see [`RawOutcome::events`]).
     event_seq: AtomicU64,
@@ -212,17 +237,30 @@ fn overlay(dst: &mut [f32], dst_rect: &Rect, src: &[f32], src_rect: &Rect) {
 
 /// Build a task's input buffer for one region argument: deterministic
 /// cold base, then every planned source tile in global write order.
-fn gather(store: &NodeStore, req: &ReqPlan) -> Vec<f32> {
+///
+/// Two zero-copy fast paths skip the copy entirely for read-only
+/// arguments: a plan-proven exact-rect single source hands out the
+/// store's `Arc` directly, and a source-less cold read hands out the
+/// memoized cold base. Everything else gathers into a pooled owned
+/// buffer. All paths produce bitwise-identical contents.
+fn gather(store: &NodeStore, req: &ReqPlan, pool: &BufferPool) -> TileBuf {
+    if req.zero_copy {
+        let s = &req.sources[0];
+        return TileBuf::Shared(store.wait_at_least(&s.key, s.version));
+    }
+    if req.reads && !req.writes && req.sources.is_empty() {
+        return TileBuf::Shared(store.cold_base(req.region, &req.rect));
+    }
     let mut buf = if req.reads {
-        kernels::cold_tile(req.region, &req.rect)
+        pool.take_copy(store.cold_base(req.region, &req.rect).as_slice())
     } else {
-        vec![0.0f32; req.elems]
+        pool.take_zeroed(req.elems)
     };
     for s in &req.sources {
         let tile = store.wait_at_least(&s.key, s.version);
         overlay(&mut buf, &req.rect, &tile, &s.key.1);
     }
-    buf
+    TileBuf::Owned(buf)
 }
 
 /// One worker lane: execute the static schedule for `proc`.
@@ -240,7 +278,9 @@ fn lane_run(
             shared.wait_done(p);
         }
         let store = &shared.stores[task.proc.node];
-        let inputs: Vec<Vec<f32>> = task.reqs.iter().map(|r| gather(store, r)).collect();
+        let pool = &shared.pools[task.proc.node];
+        let mut inputs: Vec<TileBuf> =
+            task.reqs.iter().map(|r| gather(store, r, pool)).collect();
         if let Some(sem) = limiter {
             sem.acquire();
         }
@@ -258,7 +298,7 @@ fn lane_run(
                 reduces: r.reduces,
             })
             .collect();
-        let outs = kernels::run(task.kernel, &args, &inputs);
+        let outs = kernels::run(task.kernel, shared.mode, &args, &mut inputs, pool);
         if let Some(sem) = limiter {
             sem.release();
         }
@@ -268,8 +308,18 @@ fn lane_run(
             if !r.writes {
                 continue;
             }
-            let payload = Arc::new(out.unwrap_or_else(|| inputs[ri].clone()));
+            let payload = Arc::new(match out {
+                Some(v) => v,
+                None => inputs[ri].take_owned(),
+            });
             store.insert((r.region, r.rect.clone()), r.write_version, r.bytes, payload);
+        }
+        // Recycle the owned gather buffers the kernel didn't consume
+        // (shared views cost nothing; moved-from buffers are empty).
+        for buf in inputs {
+            if let TileBuf::Owned(v) = buf {
+                pool.put(v);
+            }
         }
         events.push((
             shared.event_seq.fetch_add(1, Ordering::SeqCst),
@@ -314,8 +364,10 @@ fn fnv(h: u64, x: u64) -> u64 {
 }
 
 /// Run a plan on real threads. `lanes_limit` caps concurrently running
-/// kernels (0 = one in-flight kernel per processor lane, no extra cap).
-pub(crate) fn run_plan(plan: &ExecPlan, lanes_limit: usize) -> RawOutcome {
+/// kernels (0 = one in-flight kernel per processor lane, no extra cap);
+/// `mode` picks the kernel implementation tier (results are bitwise
+/// invariant in both knobs).
+pub(crate) fn run_plan(plan: &ExecPlan, lanes_limit: usize, mode: KernelMode) -> RawOutcome {
     let nodes = plan.desc.nodes;
     let depth = plan.desc.nic_inflight_msgs();
     let mut txs: Vec<SyncSender<DataMsg>> = Vec::with_capacity(nodes);
@@ -331,6 +383,8 @@ pub(crate) fn run_plan(plan: &ExecPlan, lanes_limit: usize) -> RawOutcome {
         done_lock: Mutex::new(0),
         done_cv: Condvar::new(),
         stores: (0..nodes).map(|_| NodeStore::new()).collect(),
+        pools: (0..nodes).map(|_| BufferPool::new()).collect(),
+        mode,
         start: Instant::now(),
         event_seq: AtomicU64::new(0),
     };

@@ -63,6 +63,11 @@ pub struct ReqPlan {
     pub reduces: bool,
     /// Tiles to overlay (ascending `seq`) over the cold base.
     pub sources: Vec<SourceSlice>,
+    /// Plan-proven zero-copy gather: a read-only argument whose single
+    /// source tile covers exactly this rect, so the node runtime hands
+    /// the kernel the store's `Arc` instead of copying. Byte accounting
+    /// is computed at plan time and unaffected.
+    pub zero_copy: bool,
     /// Version this task publishes for its tile (0 = does not write).
     pub write_version: u64,
     /// Mapper memory directive (placement accounting).
@@ -211,6 +216,7 @@ pub fn build(
                         writes: req.privilege.writes(),
                         reduces: req.privilege == Privilege::Reduce,
                         sources: Vec::new(),
+                        zero_copy: false,
                         write_version: 0,
                         mem: mem_kinds[ri],
                         gc: gc_args[ri],
@@ -338,7 +344,7 @@ pub fn build(
         }
     }
 
-    // 3. Merge wait lists and attach sends.
+    // 3. Merge wait lists, attach sends, and mark zero-copy gathers.
     for t in 0..tasks.len() {
         let mut w = std::mem::take(&mut tasks[t].waits);
         w.extend(extra_waits[t].iter().copied());
@@ -347,6 +353,12 @@ pub fn build(
         debug_assert!(w.iter().all(|&p| p < t), "waits must point backwards");
         tasks[t].waits = w;
         tasks[t].sends = std::mem::take(&mut sends_by[t]);
+        for rq in tasks[t].reqs.iter_mut() {
+            rq.zero_copy = rq.reads
+                && !rq.writes
+                && rq.sources.len() == 1
+                && rq.sources[0].key.1 == rq.rect;
+        }
     }
 
     // 4. Global topological order (depth-major, seeded tie-break within

@@ -1,0 +1,117 @@
+//! Per-node recycling pool for f32 tile buffers.
+//!
+//! The execution hot path allocates the same tile-sized `Vec<f32>`s over
+//! and over: one gathered input buffer per region argument per task, one
+//! output buffer per written argument. Tile shapes repeat across the
+//! whole run (a launch's points share partition geometry), so a simple
+//! size-bucketed free list turns almost every allocation after warm-up
+//! into a pop + fill.
+//!
+//! Correctness is allocation-invariant by construction: a buffer leaves
+//! the pool only through [`BufferPool::take_zeroed`] or
+//! [`BufferPool::take_copy`], both of which overwrite every element, so
+//! recycled contents can never leak into results. Byte accounting and
+//! checksums are computed from plan metadata and tile contents
+//! respectively and never observe where a buffer came from.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Per-bucket retention cap — bounds idle pool memory to
+/// `MAX_PER_BUCKET` buffers per distinct tile size.
+const MAX_PER_BUCKET: usize = 64;
+
+/// Size-bucketed free list of `Vec<f32>` tile buffers (one per node).
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    buckets: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    fn take_raw(&self, len: usize) -> Option<Vec<f32>> {
+        let mut g = self.buckets.lock().unwrap();
+        g.get_mut(&len).and_then(|b| b.pop())
+    }
+
+    /// A buffer of `len` zeros (recycled if one of that size is free).
+    pub fn take_zeroed(&self, len: usize) -> Vec<f32> {
+        match self.take_raw(len) {
+            Some(mut v) => {
+                v.fill(0.0);
+                v
+            }
+            None => vec![0.0f32; len],
+        }
+    }
+
+    /// A buffer holding a copy of `src` (recycled if one of that size is
+    /// free).
+    pub fn take_copy(&self, src: &[f32]) -> Vec<f32> {
+        match self.take_raw(src.len()) {
+            Some(mut v) => {
+                v.copy_from_slice(src);
+                v
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// Return a buffer for reuse. Empty buffers (e.g. a moved-from
+    /// [`super::kernels::TileBuf`]) are dropped, and full buckets shed
+    /// the extra buffer instead of growing without bound.
+    pub fn put(&self, v: Vec<f32>) {
+        if v.is_empty() {
+            return;
+        }
+        let mut g = self.buckets.lock().unwrap();
+        let b = g.entry(v.len()).or_default();
+        if b.len() < MAX_PER_BUCKET {
+            b.push(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycled_buffers_are_fully_overwritten() {
+        let pool = BufferPool::new();
+        pool.put(vec![7.0f32; 8]);
+        let z = pool.take_zeroed(8);
+        assert_eq!(z, vec![0.0f32; 8]);
+        pool.put(z);
+        let src: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let c = pool.take_copy(&src);
+        assert_eq!(c, src);
+    }
+
+    #[test]
+    fn sizes_are_bucketed_exactly() {
+        let pool = BufferPool::new();
+        pool.put(vec![1.0f32; 4]);
+        // A different size must not reuse the 4-element buffer.
+        let v = pool.take_zeroed(5);
+        assert_eq!(v.len(), 5);
+        // The 4-element one is still there.
+        let w = pool.take_zeroed(4);
+        assert_eq!(w.len(), 4);
+    }
+
+    #[test]
+    fn empty_buffers_and_overflow_are_dropped() {
+        let pool = BufferPool::new();
+        pool.put(Vec::new());
+        assert!(pool.take_raw(0).is_none());
+        for _ in 0..(MAX_PER_BUCKET + 10) {
+            pool.put(vec![0.0f32; 3]);
+        }
+        let g = pool.buckets.lock().unwrap();
+        assert_eq!(g.get(&3).map(|b| b.len()), Some(MAX_PER_BUCKET));
+    }
+}

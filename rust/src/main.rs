@@ -26,7 +26,7 @@
 use mapple::apps;
 use mapple::bench::Flavor;
 use mapple::decompose::{decompose, greedy_grid, Objective};
-use mapple::exec::ExecOptions;
+use mapple::exec::{ExecOptions, KernelMode};
 use mapple::machine::topology::MachineDesc;
 use mapple::mapper::api::Mapper;
 use mapple::mapper::MappleMapper;
@@ -189,6 +189,7 @@ fn cmd_exec(argv: &[String]) -> i32 {
     .opt("scale", "problem-size multiplier", Some("1"))
     .opt("lanes", "max concurrent kernels (0 = one lane per proc)", Some("0"))
     .opt("seed", "schedule tie-break seed", Some("0"))
+    .opt("kernels", "kernel tier: fast (blocked, pooled) | naive", Some("fast"))
     .opt("json", "write the ExecResult JSON report here", None);
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -219,9 +220,18 @@ fn cmd_exec(argv: &[String]) -> i32 {
             return 1;
         }
     };
+    let kernels = match args.str("kernels").unwrap_or("fast") {
+        "fast" => KernelMode::Fast,
+        "naive" => KernelMode::Naive,
+        other => {
+            eprintln!("bad --kernels '{other}' (expected fast | naive)");
+            return 2;
+        }
+    };
     let opts = ExecOptions {
         lanes: args.usize("lanes").unwrap_or(0),
         seed: args.usize("seed").unwrap_or(0) as u64,
+        kernels,
     };
     let out = match apps::exec_app(&app, mapper.as_ref(), &desc, &opts) {
         Ok(o) => o,

@@ -1,0 +1,1222 @@
+//! The plan compiler: `MappingPlan` bytecode → composed native closures.
+//!
+//! Third (and fastest) tier of the mapping-evaluation stack:
+//!
+//! * the tree-walking [`super::interp::Interp`] is the reference
+//!   semantics (per-point, name maps, environment clones),
+//! * the bytecode VM in [`super::vm`] batches a launch but still pays an
+//!   enum-dispatch-plus-`Value`-clone tax on every executed op,
+//! * this module lowers each [`FuncCode`] segment once, at plan-build
+//!   time, into basic blocks whose straight-line ops are fold-composed
+//!   into a single boxed `Fn` per block (direct-threading style). The
+//!   register file is a flat arena of [`Slot`]s: unboxed ints/bools/procs,
+//!   tuples inline up to [`MAX_INLINE`] components (so `ipoint * m.size /
+//!   ispace` never allocates), and `Arc`-backed spaces/strings/big tuples
+//!   out of line. Module constants are converted to slots at compile time
+//!   and the leading constant-preload run of the prelude is folded into
+//!   the frame template, so per-launch setup is a `memcpy`-style clone.
+//!
+//! Arithmetic closures are specialized per `BinOp` at compile time — no
+//! string or opcode dispatch survives to run time. Semantics (including
+//! error outcomes: overflow, division by zero, bounds, arity, recursion
+//! depth) mirror the VM exactly; `rust/tests/compiled_diff.rs` proves
+//! compiled ≡ VM ≡ interpreter placements for every shipped mapper, and
+//! the VM stays on as the differential oracle the way the interpreter
+//! did when the VM landed.
+
+use super::ast::BinOp;
+use super::lower::{AttrName, Builtin, FuncCode, IndexSrc, Module, Op, SpaceMethod, TypeTag};
+use super::value::{floor_div, floor_mod, Value};
+use crate::decompose::Objective;
+use crate::machine::point::{Rect, Tuple};
+use crate::machine::space::ProcSpace;
+use crate::machine::topology::{MachineDesc, ProcId, ProcKind};
+use std::cell::RefCell;
+use std::fmt;
+use std::sync::Arc;
+
+/// Hard recursion limit, matching the interpreter's and the VM's.
+const MAX_CALL_DEPTH: usize = 64;
+
+/// Tuples up to this many components live inline in a [`Slot`].
+pub(crate) const MAX_INLINE: usize = 8;
+
+/// A runtime value in the compiled tier. Scalars are unboxed; small
+/// tuples are inline arrays (allocation-free arithmetic); everything
+/// heap-backed is behind an `Arc` so a slot clone is a refcount bump.
+#[derive(Clone, Debug)]
+pub(crate) enum Slot {
+    Int(i64),
+    Bool(bool),
+    Proc(ProcId),
+    /// Inline tuple: `len` live components at the front of `buf`.
+    Small(u8, [i64; MAX_INLINE]),
+    /// Out-of-line tuple for dim > [`MAX_INLINE`] (rare).
+    Big(Arc<Tuple>),
+    Space(Arc<ProcSpace>),
+    Str(Arc<str>),
+}
+
+impl Slot {
+    fn kind(&self) -> &'static str {
+        match self {
+            Slot::Int(_) => "int",
+            Slot::Bool(_) => "bool",
+            Slot::Proc(_) => "Processor",
+            Slot::Small(..) | Slot::Big(_) => "Tuple",
+            Slot::Space(_) => "Machine",
+            Slot::Str(_) => "string",
+        }
+    }
+
+    #[inline]
+    fn as_int(&self) -> Result<i64, String> {
+        match self {
+            Slot::Int(i) => Ok(*i),
+            other => Err(format!("expected int, got {}", other.kind())),
+        }
+    }
+
+    #[inline]
+    fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            Slot::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {}", other.kind())),
+        }
+    }
+
+    /// Tuple components, regardless of inline/out-of-line representation.
+    #[inline]
+    fn tuple(&self) -> Option<&[i64]> {
+        match self {
+            Slot::Small(len, buf) => Some(&buf[..*len as usize]),
+            Slot::Big(t) => Some(&t.0),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    fn as_tuple(&self) -> Result<&[i64], String> {
+        self.tuple()
+            .ok_or_else(|| format!("expected Tuple, got {}", self.kind()))
+    }
+
+}
+
+/// Build the cheapest slot representation for tuple components.
+#[inline]
+pub(crate) fn make_tuple(xs: &[i64]) -> Slot {
+    if xs.len() <= MAX_INLINE {
+        let mut buf = [0i64; MAX_INLINE];
+        buf[..xs.len()].copy_from_slice(xs);
+        Slot::Small(xs.len() as u8, buf)
+    } else {
+        Slot::Big(Arc::new(Tuple(xs.to_vec())))
+    }
+}
+
+fn slot_of_value(v: &Value) -> Slot {
+    match v {
+        Value::Int(i) => Slot::Int(*i),
+        Value::Bool(b) => Slot::Bool(*b),
+        Value::Proc(p) => Slot::Proc(*p),
+        Value::Tuple(t) => make_tuple(&t.0),
+        Value::Space(s) => Slot::Space(Arc::new(s.clone())),
+        Value::Str(s) => Slot::Str(Arc::from(s.as_str())),
+    }
+}
+
+/// One compiled straight-line run: every op of a basic block composed
+/// into a single call. Depth is threaded for the recursion limit.
+type OpFn = Box<dyn Fn(&mut [Slot], &Rt<'_>, usize) -> Result<(), String> + Send + Sync>;
+
+/// Per-evaluation runtime state: the module (for calls) plus a frame
+/// pool so helper calls in the per-point loop reuse allocations.
+struct Rt<'m> {
+    cm: &'m CompiledModule,
+    frames: RefCell<Vec<Vec<Slot>>>,
+}
+
+impl<'m> Rt<'m> {
+    fn new(cm: &'m CompiledModule) -> Rt<'m> {
+        Rt { cm, frames: RefCell::new(Vec::new()) }
+    }
+
+    fn take_frame(&self, init: &[Slot]) -> Vec<Slot> {
+        let mut f = self.frames.borrow_mut().pop().unwrap_or_default();
+        f.clear();
+        f.extend(init.iter().cloned());
+        f
+    }
+
+    fn put_frame(&self, f: Vec<Slot>) {
+        self.frames.borrow_mut().push(f);
+    }
+}
+
+/// Block terminator. Branch targets are block indices within a segment.
+enum Term {
+    Jump(usize),
+    /// `BranchFalse`: bool register selects the successor.
+    Branch { cond: u16, on_true: usize, on_false: usize },
+    Ret(u16),
+    /// Segment end without `Ret` (legal for preludes).
+    Fall,
+    /// Function body fell through without `return` (runtime error).
+    FellOff,
+}
+
+struct Block {
+    run: Option<OpFn>,
+    term: Term,
+}
+
+/// A compiled code segment: basic blocks in leader order, entry = 0.
+struct Seg {
+    blocks: Vec<Block>,
+}
+
+/// Compiled form of one [`FuncCode`].
+pub(crate) struct CompiledFunc {
+    name: String,
+    param_types: Vec<Option<TypeTag>>,
+    prelude: Seg,
+    body: Seg,
+    restore: Vec<u16>,
+    /// Frame template: default slots with module constants (the leading
+    /// constant-preload run of the prelude) folded in at compile time.
+    init: Vec<Slot>,
+}
+
+/// A module's functions compiled to closures, mirroring
+/// [`Module::funcs`] slot-for-slot (`None` = not lowered).
+pub struct CompiledModule {
+    funcs: Vec<Option<CompiledFunc>>,
+}
+
+impl fmt::Debug for CompiledModule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let names: Vec<&str> = self
+            .funcs
+            .iter()
+            .flatten()
+            .map(|c| c.name.as_str())
+            .collect();
+        f.debug_struct("CompiledModule").field("funcs", &names).finish()
+    }
+}
+
+/// Compile every lowered function of a module. Infallible: the compiler
+/// covers the full bytecode op set.
+pub fn compile(module: &Module) -> CompiledModule {
+    let funcs = module
+        .funcs
+        .iter()
+        .map(|f| f.as_ref().map(|code| compile_func(code, module)))
+        .collect();
+    CompiledModule { funcs }
+}
+
+impl CompiledModule {
+    pub(crate) fn is_compiled(&self, idx: usize) -> bool {
+        idx < self.funcs.len() && self.funcs[idx].is_some()
+    }
+
+    /// Batched evaluation: prelude once, body per point — the compiled
+    /// counterpart of `MappingPlan::eval_domain_vm`, same contract.
+    pub(crate) fn eval_domain(
+        &self,
+        idx: usize,
+        func: &str,
+        domain: &Rect,
+    ) -> Result<super::vm::PlacementTable, String> {
+        let code = self.funcs[idx].as_ref().expect("caller checked is_compiled");
+        if code.param_types.len() != 2 {
+            return Err(format!(
+                "'{func}' expects {} arguments, got 2",
+                code.param_types.len()
+            ));
+        }
+        let ispace = domain.extent();
+        let rt = Rt::new(self);
+        let mut frame = code.init.clone();
+        frame[1] = make_tuple(&ispace.0);
+        if let Some(v) = run_seg(&code.prelude, &code.name, &mut frame, &rt, 0)? {
+            // A prelude never contains Ret; defensive all the same.
+            return constant_table(func, domain, ispace, v);
+        }
+        let snapshot: Vec<(usize, Slot)> = code
+            .restore
+            .iter()
+            .map(|&r| (r as usize, frame[r as usize].clone()))
+            .collect();
+        let mut procs = Vec::with_capacity(domain.volume().max(0) as usize);
+        // Row-major point sweep with an in-place coordinate counter: the
+        // per-point loop allocates nothing for `ipoint` when dim ≤ 8.
+        let dim = ispace.dim();
+        let mut cur = domain.lo.0.clone();
+        loop {
+            for (r, v) in &snapshot {
+                frame[*r] = v.clone();
+            }
+            frame[0] = make_tuple(&cur);
+            let out = run_seg(&code.body, &code.name, &mut frame, &rt, 0)?
+                .ok_or_else(|| format!("'{func}' finished without returning"))?;
+            match out {
+                Slot::Proc(pid) => procs.push(pid),
+                other => {
+                    return Err(format!(
+                        "mapping function '{func}' must return a processor, got {}",
+                        other.kind()
+                    ))
+                }
+            }
+            // increment, last dim fastest
+            let mut d = dim;
+            loop {
+                if d == 0 {
+                    return Ok(super::vm::PlacementTable::new(
+                        domain.lo.clone(),
+                        ispace,
+                        procs,
+                    ));
+                }
+                d -= 1;
+                cur[d] += 1;
+                if cur[d] <= domain.hi[d] {
+                    break;
+                }
+                cur[d] = domain.lo[d];
+            }
+        }
+    }
+
+    fn call_fn(
+        &self,
+        idx: usize,
+        frame: &mut Vec<Slot>,
+        rt: &Rt<'_>,
+        depth: usize,
+    ) -> Result<Slot, String> {
+        let code = self.funcs[idx]
+            .as_ref()
+            .expect("lower() fixpoint keeps callees of lowered functions lowered");
+        if depth >= MAX_CALL_DEPTH {
+            return Err(format!("call depth limit exceeded in '{}'", code.name));
+        }
+        if let Some(v) = run_seg(&code.prelude, &code.name, frame, rt, depth)? {
+            return Ok(v);
+        }
+        run_seg(&code.body, &code.name, frame, rt, depth)?
+            .ok_or_else(|| format!("'{}' finished without returning", code.name))
+    }
+}
+
+/// Degenerate case: a prelude that returns makes the mapping constant.
+fn constant_table(
+    func: &str,
+    domain: &Rect,
+    ispace: Tuple,
+    v: Slot,
+) -> Result<super::vm::PlacementTable, String> {
+    match v {
+        Slot::Proc(p) => Ok(super::vm::PlacementTable::new(
+            domain.lo.clone(),
+            ispace,
+            vec![p; domain.volume().max(0) as usize],
+        )),
+        other => Err(format!(
+            "mapping function '{func}' must return a processor, got {}",
+            other.kind()
+        )),
+    }
+}
+
+/// Dispatch loop over a segment's blocks. `Some(v)` on `Ret`, `None` on
+/// fall-through (prelude case).
+fn run_seg(
+    seg: &Seg,
+    fname: &str,
+    frame: &mut [Slot],
+    rt: &Rt<'_>,
+    depth: usize,
+) -> Result<Option<Slot>, String> {
+    if seg.blocks.is_empty() {
+        return Ok(None);
+    }
+    let mut b = 0usize;
+    loop {
+        let blk = &seg.blocks[b];
+        if let Some(run) = &blk.run {
+            run(frame, rt, depth)?;
+        }
+        match &blk.term {
+            Term::Jump(t) => b = *t,
+            Term::Branch { cond, on_true, on_false } => {
+                b = if frame[*cond as usize].as_bool()? { *on_true } else { *on_false };
+            }
+            Term::Ret(r) => return Ok(Some(frame[*r as usize].clone())),
+            Term::Fall => return Ok(None),
+            Term::FellOff => {
+                return Err(format!("'{fname}' finished without returning"))
+            }
+        }
+    }
+}
+
+fn compile_func(code: &FuncCode, module: &Module) -> CompiledFunc {
+    let mut init = vec![Slot::Int(0); code.nregs as usize];
+    // Fold the leading constant-preload run of the prelude into the frame
+    // template: those ops run unconditionally before anything else, so
+    // pre-materializing them is observationally identical and makes the
+    // per-launch prelude shorter.
+    // Never fold into a parameter register: the VM places arguments
+    // first and lets preloads overwrite them, while the template is
+    // cloned before arguments land — folding there would flip the order.
+    let nparams = code.param_types.len();
+    let mut folded = 0usize;
+    for op in &code.prelude {
+        match op {
+            Op::IConst { dst, v } if *dst as usize >= nparams => {
+                init[*dst as usize] = Slot::Int(*v)
+            }
+            Op::BConst { dst, v } if *dst as usize >= nparams => {
+                init[*dst as usize] = Slot::Bool(*v)
+            }
+            Op::Const { dst, idx } if *dst as usize >= nparams => {
+                init[*dst as usize] = slot_of_value(&module.consts[*idx as usize])
+            }
+            _ => break,
+        }
+        folded += 1;
+    }
+    // Jump targets are absolute within the segment; they can never point
+    // into the constant prefix (branches are emitted after preloads and
+    // only target ops after themselves), but verify and back off rather
+    // than miscompile if that invariant ever changes.
+    let min_target = code.prelude[folded..]
+        .iter()
+        .filter_map(|op| match op {
+            Op::Jump { to } => Some(*to as usize),
+            Op::BranchFalse { to, .. } => Some(*to as usize),
+            _ => None,
+        })
+        .min()
+        .unwrap_or(usize::MAX);
+    if min_target < folded {
+        folded = 0;
+        for s in init.iter_mut() {
+            *s = Slot::Int(0);
+        }
+    }
+    CompiledFunc {
+        name: code.name.clone(),
+        param_types: code.param_types.clone(),
+        prelude: compile_seg(&code.prelude[folded..], folded, module),
+        body: compile_seg(&code.body, 0, module),
+        restore: code.restore.clone(),
+        init,
+    }
+}
+
+/// Basic-block construction + per-block closure composition for one
+/// code segment. `base` is the pc offset stripped from the front (the
+/// folded constant prefix); jump targets are rebased by it.
+fn compile_seg(ops: &[Op], base: usize, module: &Module) -> Seg {
+    let n = ops.len();
+    let target = |to: u32| (to as usize) - base;
+    // 1. leaders (block starts); index n = virtual fall-through block
+    let mut leader = vec![false; n + 1];
+    leader[0] = true;
+    leader[n] = true;
+    for (pc, op) in ops.iter().enumerate() {
+        match op {
+            Op::Jump { to } => {
+                leader[target(*to)] = true;
+                leader[pc + 1] = true;
+            }
+            Op::BranchFalse { to, .. } => {
+                leader[target(*to)] = true;
+                leader[pc + 1] = true;
+            }
+            Op::Ret { .. } | Op::FellOff => leader[pc + 1] = true,
+            _ => {}
+        }
+    }
+    // pc → block index
+    let mut block_of = vec![0usize; n + 1];
+    let mut nblocks = 0usize;
+    for (pc, &l) in leader.iter().enumerate() {
+        if l {
+            block_of[pc] = nblocks;
+            nblocks += 1;
+        } else {
+            block_of[pc] = usize::MAX; // not a leader
+        }
+    }
+    // 2. compile each block: compose straight-line ops, pick terminator
+    let mut blocks = Vec::with_capacity(nblocks);
+    let mut pc = 0usize;
+    while pc < n {
+        let start = pc;
+        let mut fns: Vec<OpFn> = Vec::new();
+        let mut term: Option<Term> = None;
+        while pc < n {
+            match &ops[pc] {
+                Op::Jump { to } => {
+                    term = Some(Term::Jump(block_of[target(*to)]));
+                    pc += 1;
+                    break;
+                }
+                Op::BranchFalse { cond, to } => {
+                    term = Some(Term::Branch {
+                        cond: *cond,
+                        on_true: block_of[pc + 1],
+                        on_false: block_of[target(*to)],
+                    });
+                    pc += 1;
+                    break;
+                }
+                Op::Ret { src } => {
+                    term = Some(Term::Ret(*src));
+                    pc += 1;
+                    break;
+                }
+                Op::FellOff => {
+                    term = Some(Term::FellOff);
+                    pc += 1;
+                    break;
+                }
+                op => {
+                    fns.push(compile_op(op, module));
+                    pc += 1;
+                    if pc < n && leader[pc] {
+                        break; // fell into the next block
+                    }
+                }
+            }
+        }
+        let term = term.unwrap_or_else(|| {
+            if pc < n {
+                Term::Jump(block_of[pc])
+            } else {
+                Term::Fall
+            }
+        });
+        let run = fns
+            .into_iter()
+            .reduce(|f, g| Box::new(move |regs, rt, depth| {
+                f(regs, rt, depth)?;
+                g(regs, rt, depth)
+            }));
+        debug_assert_eq!(blocks.len(), block_of[start]);
+        blocks.push(Block { run, term });
+    }
+    // virtual fall-through block for jumps targeting the segment end
+    if leader[n] && block_of[n] == blocks.len() {
+        blocks.push(Block { run: None, term: Term::Fall });
+    }
+    Seg { blocks }
+}
+
+/// Specialized scalar arithmetic, chosen once at compile time.
+#[inline]
+fn scalar_arith(op: BinOp, a: i64, b: i64) -> Result<i64, String> {
+    match op {
+        BinOp::Add => a.checked_add(b).ok_or_else(|| "integer overflow in +".to_string()),
+        BinOp::Sub => a.checked_sub(b).ok_or_else(|| "integer overflow in -".to_string()),
+        BinOp::Mul => a.checked_mul(b).ok_or_else(|| "integer overflow in *".to_string()),
+        BinOp::Div => floor_div(a, b),
+        BinOp::Mod => floor_mod(a, b),
+        _ => Err(format!("unknown arithmetic op '{op}'")),
+    }
+}
+
+/// Elementwise tuple arithmetic over slot views, allocation-free up to
+/// [`MAX_INLINE`] components.
+fn tuple_arith(
+    op: BinOp,
+    a: &[i64],
+    b: Broadcast<'_>,
+) -> Result<Slot, String> {
+    if a.len() <= MAX_INLINE {
+        let mut buf = [0i64; MAX_INLINE];
+        for (i, out) in buf.iter_mut().take(a.len()).enumerate() {
+            *out = scalar_arith(op, a[i], b.at(i))?;
+        }
+        Ok(Slot::Small(a.len() as u8, buf))
+    } else {
+        let v: Result<Vec<i64>, String> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| scalar_arith(op, x, b.at(i)))
+            .collect();
+        Ok(Slot::Big(Arc::new(Tuple(v?))))
+    }
+}
+
+/// Right-hand side of a broadcasting tuple op.
+#[derive(Clone, Copy)]
+enum Broadcast<'a> {
+    Scalar(i64),
+    Elems(&'a [i64]),
+}
+
+impl Broadcast<'_> {
+    #[inline]
+    fn at(&self, i: usize) -> i64 {
+        match self {
+            Broadcast::Scalar(s) => *s,
+            Broadcast::Elems(e) => e[i],
+        }
+    }
+}
+
+fn bin_arith(op: BinOp, l: &Slot, r: &Slot) -> Result<Slot, String> {
+    match (l, r) {
+        (Slot::Int(a), Slot::Int(b)) => Ok(Slot::Int(scalar_arith(op, *a, *b)?)),
+        _ => match (l.tuple(), r.tuple()) {
+            (Some(a), Some(b)) => {
+                if a.len() != b.len() {
+                    return Err(format!(
+                        "tuple arity mismatch in '{op}': {:?} ({}d) vs {:?} ({}d)",
+                        Tuple(a.to_vec()),
+                        a.len(),
+                        Tuple(b.to_vec()),
+                        b.len()
+                    ));
+                }
+                tuple_arith(op, a, Broadcast::Elems(b))
+            }
+            (Some(a), None) => {
+                let b = r.as_int().map_err(|_| mixed_arith(op, l, r))?;
+                tuple_arith(op, a, Broadcast::Scalar(b))
+            }
+            (None, Some(b)) => {
+                let a = l.as_int().map_err(|_| mixed_arith(op, l, r))?;
+                // int ⊛ tuple broadcasts the scalar on the left
+                if b.len() <= MAX_INLINE {
+                    let mut buf = [0i64; MAX_INLINE];
+                    for (i, out) in buf.iter_mut().take(b.len()).enumerate() {
+                        *out = scalar_arith(op, a, b[i])?;
+                    }
+                    Ok(Slot::Small(b.len() as u8, buf))
+                } else {
+                    let v: Result<Vec<i64>, String> =
+                        b.iter().map(|&y| scalar_arith(op, a, y)).collect();
+                    Ok(Slot::Big(Arc::new(Tuple(v?))))
+                }
+            }
+            (None, None) => Err(mixed_arith(op, l, r)),
+        },
+    }
+}
+
+fn mixed_arith(op: BinOp, l: &Slot, r: &Slot) -> String {
+    format!("cannot apply '{op}' to {} and {}", l.kind(), r.kind())
+}
+
+fn bin_compare(op: BinOp, l: &Slot, r: &Slot) -> Result<Slot, String> {
+    match (l, r) {
+        (Slot::Int(a), Slot::Int(b)) => {
+            let v = match op {
+                BinOp::Eq => a == b,
+                BinOp::Ne => a != b,
+                BinOp::Lt => a < b,
+                BinOp::Le => a <= b,
+                BinOp::Gt => a > b,
+                BinOp::Ge => a >= b,
+                _ => return Err(format!("unknown comparison '{op}'")),
+            };
+            Ok(Slot::Bool(v))
+        }
+        _ => match (l.tuple(), r.tuple()) {
+            (Some(a), Some(b)) => match op {
+                BinOp::Eq => Ok(Slot::Bool(a == b)),
+                BinOp::Ne => Ok(Slot::Bool(a != b)),
+                _ => Err(format!("ordering comparison '{op}' not defined on tuples")),
+            },
+            _ => Err(format!("cannot compare {} and {}", l.kind(), r.kind())),
+        },
+    }
+}
+
+/// Compile one straight-line op into a closure. All dispatch on op
+/// variants, binops, attrs, methods, and builtins happens here, once.
+fn compile_op(op: &Op, module: &Module) -> OpFn {
+    match op {
+        Op::IConst { dst, v } => {
+            let (d, v) = (*dst as usize, *v);
+            Box::new(move |regs, _, _| {
+                regs[d] = Slot::Int(v);
+                Ok(())
+            })
+        }
+        Op::BConst { dst, v } => {
+            let (d, v) = (*dst as usize, *v);
+            Box::new(move |regs, _, _| {
+                regs[d] = Slot::Bool(v);
+                Ok(())
+            })
+        }
+        Op::Const { dst, idx } => {
+            let d = *dst as usize;
+            let template = slot_of_value(&module.consts[*idx as usize]);
+            Box::new(move |regs, _, _| {
+                regs[d] = template.clone();
+                Ok(())
+            })
+        }
+        Op::Move { dst, src } => {
+            let (d, s) = (*dst as usize, *src as usize);
+            Box::new(move |regs, _, _| {
+                regs[d] = regs[s].clone();
+                Ok(())
+            })
+        }
+        Op::Neg { dst, src } => {
+            let (d, s) = (*dst as usize, *src as usize);
+            Box::new(move |regs, _, _| {
+                let v = match &regs[s] {
+                    Slot::Int(i) => Slot::Int(-i),
+                    t => match t.tuple() {
+                        Some(xs) => {
+                            if xs.len() <= MAX_INLINE {
+                                let mut buf = [0i64; MAX_INLINE];
+                                for (i, out) in buf.iter_mut().take(xs.len()).enumerate() {
+                                    *out = -xs[i];
+                                }
+                                Slot::Small(xs.len() as u8, buf)
+                            } else {
+                                Slot::Big(Arc::new(Tuple(xs.iter().map(|&x| -x).collect())))
+                            }
+                        }
+                        None => return Err(format!("cannot negate {}", t.kind())),
+                    },
+                };
+                regs[d] = v;
+                Ok(())
+            })
+        }
+        Op::Not { dst, src } => {
+            let (d, s) = (*dst as usize, *src as usize);
+            Box::new(move |regs, _, _| {
+                let b = regs[s].as_bool()?;
+                regs[d] = Slot::Bool(!b);
+                Ok(())
+            })
+        }
+        Op::AsBool { dst, src } => {
+            let (d, s) = (*dst as usize, *src as usize);
+            Box::new(move |regs, _, _| {
+                let b = regs[s].as_bool()?;
+                regs[d] = Slot::Bool(b);
+                Ok(())
+            })
+        }
+        Op::Bin { op, dst, lhs, rhs } => {
+            let (op, d, l, r) = (*op, *dst as usize, *lhs as usize, *rhs as usize);
+            match op {
+                BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod => {
+                    Box::new(move |regs, _, _| {
+                        regs[d] = bin_arith(op, &regs[l], &regs[r])?;
+                        Ok(())
+                    })
+                }
+                BinOp::And | BinOp::Or => {
+                    Box::new(move |_, _, _| Err("internal: short-circuit op reached Bin".into()))
+                }
+                _ => Box::new(move |regs, _, _| {
+                    regs[d] = bin_compare(op, &regs[l], &regs[r])?;
+                    Ok(())
+                }),
+            }
+        }
+        Op::TupleNew { dst, elems } => {
+            let d = *dst as usize;
+            let elems: Box<[u16]> = elems.clone().into_boxed_slice();
+            Box::new(move |regs, _, _| {
+                if elems.len() <= MAX_INLINE {
+                    let mut buf = [0i64; MAX_INLINE];
+                    for (i, &e) in elems.iter().enumerate() {
+                        buf[i] = regs[e as usize].as_int()?;
+                    }
+                    regs[d] = Slot::Small(elems.len() as u8, buf);
+                } else {
+                    let v: Result<Vec<i64>, String> =
+                        elems.iter().map(|&e| regs[e as usize].as_int()).collect();
+                    regs[d] = Slot::Big(Arc::new(Tuple(v?)));
+                }
+                Ok(())
+            })
+        }
+        Op::Attr { dst, src, name } => {
+            let (d, s, name) = (*dst as usize, *src as usize, *name);
+            Box::new(move |regs, _, _| {
+                let v = match (&regs[s], name) {
+                    (Slot::Space(sp), AttrName::Size) => make_tuple(&sp.size().0),
+                    (Slot::Space(sp), AttrName::Dim) => Slot::Int(sp.dim() as i64),
+                    (t, AttrName::Dim) if t.tuple().is_some() => {
+                        Slot::Int(t.tuple().unwrap().len() as i64)
+                    }
+                    (other, AttrName::Size) => {
+                        return Err(format!("no attribute 'size' on {}", other.kind()))
+                    }
+                    (other, AttrName::Dim) => {
+                        return Err(format!("no attribute 'dim' on {}", other.kind()))
+                    }
+                };
+                regs[d] = v;
+                Ok(())
+            })
+        }
+        Op::SliceIdx { dst, recv, lo, hi } => {
+            let (d, r, lo, hi) = (*dst as usize, *recv as usize, *lo, *hi);
+            Box::new(move |regs, _, _| {
+                let lo_v = match lo {
+                    Some(rr) => regs[rr as usize].as_int()? as isize,
+                    None => 0,
+                };
+                let hi_v = match hi {
+                    Some(rr) => regs[rr as usize].as_int()? as isize,
+                    None => isize::MAX,
+                };
+                let view: &[i64] = match &regs[r] {
+                    Slot::Space(sp) => &sp.size().0,
+                    t => match t.tuple() {
+                        Some(xs) => xs,
+                        None => return Err(format!("cannot slice {}", t.kind())),
+                    },
+                };
+                let n = view.len() as isize;
+                let hi_v = if hi_v == isize::MAX { n } else { hi_v };
+                // Python-style normalization, matching Tuple::slice
+                let norm = |i: isize| -> usize {
+                    let j = if i < 0 { n + i } else { i };
+                    j.clamp(0, n) as usize
+                };
+                let (a, b) = (norm(lo_v), norm(hi_v));
+                regs[d] = make_tuple(&view[a..b.max(a)]);
+                Ok(())
+            })
+        }
+        Op::Index { dst, recv, args } => {
+            let (d, r) = (*dst as usize, *recv as usize);
+            let args: Box<[IndexSrc]> = args.clone().into_boxed_slice();
+            Box::new(move |regs, _, _| {
+                let mut coords: Vec<i64> = Vec::with_capacity(args.len() + 2);
+                for a in args.iter() {
+                    match a {
+                        IndexSrc::Reg(rr) => coords.push(regs[*rr as usize].as_int()?),
+                        IndexSrc::Splat(rr) => {
+                            coords.extend_from_slice(regs[*rr as usize].as_tuple()?)
+                        }
+                    }
+                }
+                let v = match &regs[r] {
+                    Slot::Space(sp) => Slot::Proc(sp.index(&Tuple(coords))?),
+                    t => match t.tuple() {
+                        Some(xs) => {
+                            if coords.len() != 1 {
+                                return Err(format!(
+                                    "tuple index takes 1 coordinate, got {}",
+                                    coords.len()
+                                ));
+                            }
+                            let mut i = coords[0];
+                            if i < 0 {
+                                i += xs.len() as i64;
+                            }
+                            if i < 0 || i as usize >= xs.len() {
+                                return Err(format!(
+                                    "tuple index {} out of range for {:?}",
+                                    coords[0],
+                                    Tuple(xs.to_vec())
+                                ));
+                            }
+                            Slot::Int(xs[i as usize])
+                        }
+                        None => return Err(format!("cannot index {}", t.kind())),
+                    },
+                };
+                regs[d] = v;
+                Ok(())
+            })
+        }
+        Op::Method { dst, recv, which, args } => {
+            let (d, r, which) = (*dst as usize, *recv as usize, *which);
+            let args: Box<[u16]> = args.clone().into_boxed_slice();
+            let objective: Objective = module.objective.clone();
+            Box::new(move |regs, _, _| {
+                regs[d] = exec_method(regs, r, which, &args, &objective)?;
+                Ok(())
+            })
+        }
+        Op::Builtin { dst, which, args } => {
+            let d = *dst as usize;
+            let args: Box<[u16]> = args.clone().into_boxed_slice();
+            compile_builtin(d, *which, args, module)
+        }
+        Op::Call { dst, func, args } => {
+            let (d, idx) = (*dst as usize, *func as usize);
+            let args: Box<[u16]> = args.clone().into_boxed_slice();
+            Box::new(move |regs, rt, depth| {
+                let code = rt.cm.funcs[idx]
+                    .as_ref()
+                    .expect("lower() fixpoint keeps callees of lowered functions lowered");
+                if code.param_types.len() != args.len() {
+                    return Err(format!(
+                        "'{}' expects {} arguments, got {}",
+                        code.name,
+                        code.param_types.len(),
+                        args.len()
+                    ));
+                }
+                for (tag, &a) in code.param_types.iter().zip(args.iter()) {
+                    let v = &regs[a as usize];
+                    let ok = match tag {
+                        Some(TypeTag::Tuple) => v.tuple().is_some(),
+                        Some(TypeTag::Int) => matches!(v, Slot::Int(_)),
+                        None => true,
+                    };
+                    if !ok {
+                        return Err(format!(
+                            "'{}' parameter type mismatch: got {}",
+                            code.name,
+                            v.kind()
+                        ));
+                    }
+                }
+                let mut frame = rt.take_frame(&code.init);
+                for (i, &a) in args.iter().enumerate() {
+                    frame[i] = regs[a as usize].clone();
+                }
+                let out = rt.cm.call_fn(idx, &mut frame, rt, depth + 1);
+                rt.put_frame(frame);
+                regs[d] = out?;
+                Ok(())
+            })
+        }
+        // terminators are handled by compile_seg, never reach here
+        Op::Jump { .. } | Op::BranchFalse { .. } | Op::Ret { .. } | Op::FellOff => {
+            unreachable!("terminator op in straight-line position")
+        }
+    }
+}
+
+fn exec_method(
+    regs: &[Slot],
+    recv: usize,
+    which: SpaceMethod,
+    args: &[u16],
+    objective: &Objective,
+) -> Result<Slot, String> {
+    let name = match which {
+        SpaceMethod::Split => "split",
+        SpaceMethod::Merge => "merge",
+        SpaceMethod::Swap => "swap",
+        SpaceMethod::Slice => "slice",
+        SpaceMethod::Decompose => "decompose",
+    };
+    let space: &ProcSpace = match &regs[recv] {
+        Slot::Space(s) => s,
+        other => {
+            return Err(format!(
+                "method '{name}': expected Machine space, got {}",
+                other.kind()
+            ))
+        }
+    };
+    let need = |n: usize| -> Result<(), String> {
+        if args.len() == n {
+            Ok(())
+        } else {
+            Err(format!(".{name}() takes {n} arguments, got {}", args.len()))
+        }
+    };
+    let int_at = |i: usize| -> Result<i64, String> { regs[args[i] as usize].as_int() };
+    let s = match which {
+        SpaceMethod::Split => {
+            need(2)?;
+            space.split(int_at(0)? as usize, int_at(1)?)?
+        }
+        SpaceMethod::Merge => {
+            need(2)?;
+            space.merge(int_at(0)? as usize, int_at(1)? as usize)?
+        }
+        SpaceMethod::Swap => {
+            need(2)?;
+            space.swap(int_at(0)? as usize, int_at(1)? as usize)?
+        }
+        SpaceMethod::Slice => {
+            need(3)?;
+            space.slice(int_at(0)? as usize, int_at(1)?, int_at(2)?)?
+        }
+        SpaceMethod::Decompose => {
+            need(2)?;
+            let dim = int_at(0)? as usize;
+            let targets = Tuple(regs[args[1] as usize].as_tuple()?.to_vec());
+            space.decompose_obj(dim, &targets, objective)?
+        }
+    };
+    Ok(Slot::Space(Arc::new(s)))
+}
+
+fn compile_builtin(d: usize, which: Builtin, args: Box<[u16]>, module: &Module) -> OpFn {
+    match which {
+        Builtin::Machine => {
+            let desc: MachineDesc = module.desc.clone();
+            Box::new(move |regs, _, _| {
+                if args.len() != 1 {
+                    return Err("Machine(KIND) takes one argument".into());
+                }
+                let kind_name = match &regs[args[0] as usize] {
+                    Slot::Str(s) => s.clone(),
+                    other => {
+                        return Err(format!("Machine() expects a kind, got {}", other.kind()))
+                    }
+                };
+                let kind = ProcKind::parse(&kind_name)?;
+                regs[d] = Slot::Space(Arc::new(ProcSpace::machine(&desc, kind)));
+                Ok(())
+            })
+        }
+        Builtin::TupleOf => Box::new(move |regs, _, _| {
+            let mut buf = [0i64; MAX_INLINE];
+            let mut n = 0usize;
+            let mut big: Option<Vec<i64>> = None;
+            let mut push = |x: i64, big: &mut Option<Vec<i64>>| {
+                if let Some(v) = big {
+                    v.push(x);
+                } else if n < MAX_INLINE {
+                    buf[n] = x;
+                    n += 1;
+                } else {
+                    let mut v = buf[..n].to_vec();
+                    v.push(x);
+                    *big = Some(v);
+                }
+            };
+            for &a in args.iter() {
+                match &regs[a as usize] {
+                    Slot::Int(x) => push(*x, &mut big),
+                    t => match t.tuple() {
+                        Some(xs) => {
+                            for &x in xs {
+                                push(x, &mut big);
+                            }
+                        }
+                        None => {
+                            return Err(format!(
+                                "tuple() element must be int, got {}",
+                                t.kind()
+                            ))
+                        }
+                    },
+                }
+            }
+            regs[d] = match big {
+                Some(v) => Slot::Big(Arc::new(Tuple(v))),
+                None => Slot::Small(n as u8, buf),
+            };
+            Ok(())
+        }),
+        Builtin::Len => Box::new(move |regs, _, _| {
+            if args.len() != 1 {
+                return Err("len(x) takes one argument".into());
+            }
+            match regs[args[0] as usize].tuple() {
+                Some(xs) => {
+                    regs[d] = Slot::Int(xs.len() as i64);
+                    Ok(())
+                }
+                None => Err(format!(
+                    "len() expects Tuple, got {}",
+                    regs[args[0] as usize].kind()
+                )),
+            }
+        }),
+        Builtin::Abs => Box::new(move |regs, _, _| {
+            if args.len() != 1 {
+                return Err("abs(x) takes one argument".into());
+            }
+            regs[d] = Slot::Int(regs[args[0] as usize].as_int()?.abs());
+            Ok(())
+        }),
+        Builtin::Min | Builtin::Max => Box::new(move |regs, _, _| {
+            let fname = if which == Builtin::Min { "min" } else { "max" };
+            if args.is_empty() {
+                return Err(format!("{fname}() needs arguments"));
+            }
+            let mut acc: Option<i64> = None;
+            let mut fold = |x: i64, acc: &mut Option<i64>| {
+                *acc = Some(match *acc {
+                    None => x,
+                    Some(a) => {
+                        if which == Builtin::Min {
+                            a.min(x)
+                        } else {
+                            a.max(x)
+                        }
+                    }
+                })
+            };
+            for &a in args.iter() {
+                match &regs[a as usize] {
+                    Slot::Int(x) => fold(*x, &mut acc),
+                    t => match t.tuple() {
+                        Some(xs) => xs.iter().for_each(|&x| fold(x, &mut acc)),
+                        None => {
+                            return Err(format!(
+                                "{fname}() expects ints/Tuples, got {}",
+                                t.kind()
+                            ))
+                        }
+                    },
+                }
+            }
+            regs[d] = Slot::Int(acc.unwrap());
+            Ok(())
+        }),
+        Builtin::Prod => Box::new(move |regs, _, _| {
+            if args.len() != 1 {
+                return Err("prod(t) takes one argument".into());
+            }
+            let xs = regs[args[0] as usize].as_tuple()?;
+            regs[d] = Slot::Int(xs.iter().product());
+            Ok(())
+        }),
+        Builtin::Linearize => Box::new(move |regs, _, _| {
+            if args.len() != 2 {
+                return Err("linearize(point, extent) takes two arguments".into());
+            }
+            let p = regs[args[0] as usize].as_tuple()?;
+            let e = regs[args[1] as usize].as_tuple()?;
+            if p.len() != e.len() {
+                return Err("linearize: arity mismatch".into());
+            }
+            // row-major, matching Tuple::linearize
+            let mut idx = 0i64;
+            for (&pi, &ei) in p.iter().zip(e.iter()) {
+                idx = idx * ei + pi;
+            }
+            regs[d] = Slot::Int(idx);
+            Ok(())
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::topology::MachineDesc;
+    use crate::mapple::interp::Interp;
+    use crate::mapple::lower::lower;
+    use crate::mapple::parser::parse;
+    use crate::mapple::vm::MappingPlan;
+
+    fn plan(src: &str, nodes: usize, gpus: usize) -> (MappingPlan, Interp) {
+        let prog = parse(src).unwrap();
+        let mut desc = MachineDesc::paper_testbed(nodes);
+        desc.gpus_per_node = gpus;
+        let interp = Interp::new(&prog, &desc).unwrap();
+        let module = lower(&prog, &interp);
+        (MappingPlan::new(module), interp)
+    }
+
+    /// The compiled tier must be thread-safe: plans cross into the
+    /// tuner's worker pool and the executor's node threads.
+    #[test]
+    fn compiled_module_is_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<CompiledModule>();
+    }
+
+    #[test]
+    fn slot_small_roundtrip() {
+        let s = make_tuple(&[3, -1, 4]);
+        assert_eq!(s.as_tuple().unwrap(), &[3, -1, 4]);
+        assert!(matches!(s, Slot::Small(3, _)));
+        let big: Vec<i64> = (0..12).collect();
+        let b = make_tuple(&big);
+        assert_eq!(b.as_tuple().unwrap(), &big[..]);
+        assert!(matches!(b, Slot::Big(_)));
+    }
+
+    #[test]
+    fn inline_tuple_arith_matches_value_semantics() {
+        let a = make_tuple(&[4, 6]);
+        let r = bin_arith(BinOp::Mul, &a, &Slot::Int(2)).unwrap();
+        assert_eq!(r.as_tuple().unwrap(), &[8, 12]);
+        let r = bin_arith(BinOp::Div, &Slot::Int(12), &a).unwrap();
+        assert_eq!(r.as_tuple().unwrap(), &[3, 2]);
+        assert!(bin_arith(BinOp::Mul, &Slot::Int(i64::MAX), &Slot::Int(2)).is_err());
+        assert!(bin_arith(BinOp::Div, &Slot::Int(1), &Slot::Int(0)).is_err());
+        // floor semantics, Python-style
+        let r = bin_arith(BinOp::Div, &Slot::Int(-1), &Slot::Int(2)).unwrap();
+        assert!(matches!(r, Slot::Int(-1)));
+    }
+
+    #[test]
+    fn compiled_matches_vm_on_hierarchical_mapper() {
+        let src = "\
+m_2d = Machine(GPU)
+def hb(Tuple ipoint, Tuple ispace):
+    m_3d = m_2d.decompose(0, ispace)
+    sub = (ispace + m_3d[:-1] - 1) / m_3d[:-1]
+    m_4d = m_3d.decompose(2, sub)
+    upper = tuple(ipoint[i] * m_4d.size[i] / ispace[i] for i in (0, 1))
+    lower = tuple(ipoint[i] % m_4d.size[i + 2] for i in (0, 1))
+    return m_4d[*upper, *lower]
+";
+        let (plan, _) = plan(src, 4, 4);
+        let dom = Rect::from_extent(&Tuple::from([8, 8]));
+        let fast = plan.eval_domain("hb", &dom).unwrap();
+        let oracle = plan.eval_domain_vm("hb", &dom).unwrap();
+        assert_eq!(fast, oracle);
+    }
+
+    #[test]
+    fn compiled_matches_vm_error_outcomes() {
+        let src = "\
+m = Machine(GPU)
+def bad(Tuple p, Tuple s):
+    return 42
+def div0(Tuple p, Tuple s):
+    return m[p[0] / 0, 0]
+def loop(Tuple p, Tuple s):
+    return loop(p, s)
+";
+        let (plan, _) = plan(src, 2, 2);
+        let dom = Rect::from_extent(&Tuple::from([2, 2]));
+        let e = plan.eval_domain("bad", &dom).unwrap_err();
+        assert!(e.contains("must return a processor"), "{e}");
+        let e = plan.eval_domain("div0", &dom).unwrap_err();
+        assert!(e.contains("division by zero"), "{e}");
+        let e = plan.eval_domain("loop", &dom).unwrap_err();
+        assert!(e.contains("depth limit"), "{e}");
+    }
+
+    #[test]
+    fn compiled_handles_branches_and_calls() {
+        let src = "\
+m = Machine(GPU)
+def helper(Tuple p):
+    return min(p) + max(p) + len(p) + abs(0 - 2) + prod(p) + linearize(p, (9, 9))
+def f(Tuple p, Tuple s):
+    v = helper(p)
+    g = s[0] > s[1] ? v : 0 - v
+    if g % 2 == 0 and g > 0:
+        return m[g % m.size[0], 0]
+    else:
+        return m[0, g % m.size[1]]
+";
+        let (plan, _) = plan(src, 2, 4);
+        for (sx, sy) in [(5, 3), (3, 5), (4, 4)] {
+            let dom = Rect::from_extent(&Tuple::from([sx, sy]));
+            let fast = plan.eval_domain("f", &dom).unwrap();
+            let oracle = plan.eval_domain_vm("f", &dom).unwrap();
+            assert_eq!(fast, oracle, "ispace ({sx},{sy})");
+        }
+    }
+}

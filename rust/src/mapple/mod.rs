@@ -25,6 +25,7 @@
 
 pub mod ast;
 pub mod build;
+pub mod compile;
 pub mod interp;
 pub mod lower;
 pub mod parser;

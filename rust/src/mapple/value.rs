@@ -1,5 +1,6 @@
 //! Runtime values for the Mapple interpreter and their operator semantics.
 
+use super::ast::BinOp;
 use crate::machine::point::Tuple;
 use crate::machine::space::ProcSpace;
 use crate::machine::topology::ProcId;
@@ -88,16 +89,30 @@ pub fn floor_mod(a: i64, b: i64) -> Result<i64, String> {
     Ok(a.rem_euclid(b))
 }
 
-/// Apply an arithmetic op elementwise with broadcasting between ints and
-/// tuples (the paper's `ipoint * m.size / ispace` idiom).
+/// String-keyed front for [`arith_op`] (parser-facing call sites).
 pub fn arith(op: &str, lhs: &Value, rhs: &Value) -> Result<Value, String> {
+    let op = match op {
+        "+" => BinOp::Add,
+        "-" => BinOp::Sub,
+        "*" => BinOp::Mul,
+        "/" => BinOp::Div,
+        "%" => BinOp::Mod,
+        _ => return Err(format!("unknown arithmetic op '{op}'")),
+    };
+    arith_op(op, lhs, rhs)
+}
+
+/// Apply an arithmetic op elementwise with broadcasting between ints and
+/// tuples (the paper's `ipoint * m.size / ispace` idiom). Takes the op
+/// enum directly so hot loops (the VM) never allocate an op symbol.
+pub fn arith_op(op: BinOp, lhs: &Value, rhs: &Value) -> Result<Value, String> {
     let scalar = |a: i64, b: i64| -> Result<i64, String> {
         Ok(match op {
-            "+" => a.checked_add(b).ok_or("integer overflow in +")?,
-            "-" => a.checked_sub(b).ok_or("integer overflow in -")?,
-            "*" => a.checked_mul(b).ok_or("integer overflow in *")?,
-            "/" => floor_div(a, b)?,
-            "%" => floor_mod(a, b)?,
+            BinOp::Add => a.checked_add(b).ok_or("integer overflow in +")?,
+            BinOp::Sub => a.checked_sub(b).ok_or("integer overflow in -")?,
+            BinOp::Mul => a.checked_mul(b).ok_or("integer overflow in *")?,
+            BinOp::Div => floor_div(a, b)?,
+            BinOp::Mod => floor_mod(a, b)?,
             _ => return Err(format!("unknown arithmetic op '{op}'")),
         })
     };
@@ -127,24 +142,38 @@ pub fn arith(op: &str, lhs: &Value, rhs: &Value) -> Result<Value, String> {
     }
 }
 
-/// Comparison ops. Ints compare numerically; tuples support ==/!= only.
+/// String-keyed front for [`compare_op`] (parser-facing call sites).
 pub fn compare(op: &str, lhs: &Value, rhs: &Value) -> Result<Value, String> {
+    let op = match op {
+        "==" => BinOp::Eq,
+        "!=" => BinOp::Ne,
+        "<" => BinOp::Lt,
+        "<=" => BinOp::Le,
+        ">" => BinOp::Gt,
+        ">=" => BinOp::Ge,
+        _ => return Err(format!("unknown comparison '{op}'")),
+    };
+    compare_op(op, lhs, rhs)
+}
+
+/// Comparison ops. Ints compare numerically; tuples support ==/!= only.
+pub fn compare_op(op: BinOp, lhs: &Value, rhs: &Value) -> Result<Value, String> {
     match (lhs, rhs) {
         (Value::Int(a), Value::Int(b)) => {
             let r = match op {
-                "==" => a == b,
-                "!=" => a != b,
-                "<" => a < b,
-                "<=" => a <= b,
-                ">" => a > b,
-                ">=" => a >= b,
+                BinOp::Eq => a == b,
+                BinOp::Ne => a != b,
+                BinOp::Lt => a < b,
+                BinOp::Le => a <= b,
+                BinOp::Gt => a > b,
+                BinOp::Ge => a >= b,
                 _ => return Err(format!("unknown comparison '{op}'")),
             };
             Ok(Value::Bool(r))
         }
         (Value::Tuple(a), Value::Tuple(b)) => match op {
-            "==" => Ok(Value::Bool(a == b)),
-            "!=" => Ok(Value::Bool(a != b)),
+            BinOp::Eq => Ok(Value::Bool(a == b)),
+            BinOp::Ne => Ok(Value::Bool(a != b)),
             _ => Err(format!("ordering comparison '{op}' not defined on tuples")),
         },
         (a, b) => Err(format!("cannot compare {} and {}", a.kind(), b.kind())),

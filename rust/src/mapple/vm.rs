@@ -23,11 +23,13 @@
 //! launch shape, and several machine shapes, VM placements must equal
 //! tree-walker placements exactly.
 
+use super::compile::{compile, CompiledModule};
 use super::lower::{AttrName, Builtin, FuncCode, IndexSrc, Module, Op, SpaceMethod, TypeTag};
-use super::value::{arith, compare, Value};
+use super::value::{arith_op, compare_op, Value};
 use crate::machine::point::{Rect, Tuple};
 use crate::machine::space::ProcSpace;
 use crate::machine::topology::{ProcId, ProcKind};
+use std::sync::Arc;
 
 /// Hard recursion limit, matching the interpreter's.
 const MAX_CALL_DEPTH: usize = 64;
@@ -109,15 +111,19 @@ impl PlacementTable {
     }
 }
 
-/// A compiled mapping plan: the lowered [`Module`] plus its evaluator.
+/// A compiled mapping plan: the lowered [`Module`] (VM bytecode — the
+/// differential oracle tier) plus its closure-compiled form (the default
+/// evaluation tier, see [`super::compile`]).
 #[derive(Clone, Debug)]
 pub struct MappingPlan {
     module: Module,
+    compiled: Arc<CompiledModule>,
 }
 
 impl MappingPlan {
     pub fn new(module: Module) -> MappingPlan {
-        MappingPlan { module }
+        let compiled = Arc::new(compile(&module));
+        MappingPlan { module, compiled }
     }
 
     pub fn module(&self) -> &Module {
@@ -129,9 +135,37 @@ impl MappingPlan {
         self.module.has(func)
     }
 
+    /// Is this function on the closure-compiled tier (else: the VM)?
+    /// Lets the differential suite assert its compiled-vs-VM comparisons
+    /// are not vacuous.
+    pub fn compiled_for(&self, func: &str) -> bool {
+        self.module
+            .func_index(func)
+            .map(|i| self.compiled.is_compiled(i))
+            .unwrap_or(false)
+    }
+
     /// Evaluate a mapping function over an entire launch domain: prelude
-    /// once, body per point.
+    /// once, body per point. Runs the closure-compiled tier; the bytecode
+    /// VM ([`Self::eval_domain_vm`]) is kept as the differential oracle.
     pub fn eval_domain(&self, func: &str, domain: &Rect) -> Result<PlacementTable, String> {
+        if domain.volume() <= 0 {
+            return Err("empty launch domain".into());
+        }
+        match self.module.func_index(func) {
+            Some(idx) if self.compiled.is_compiled(idx) => {
+                // entry() also enforces the 2-parameter contract for the
+                // VM path; the compiled path re-checks it itself.
+                self.compiled.eval_domain(idx, func, domain)
+            }
+            _ => self.eval_domain_vm(func, domain),
+        }
+    }
+
+    /// Evaluate on the bytecode VM — the oracle tier that the compiled
+    /// closures are differentially tested against (and the perf baseline
+    /// for the compiled-vs-VM gate in `benches/perf_hotpath.rs`).
+    pub fn eval_domain_vm(&self, func: &str, domain: &Rect) -> Result<PlacementTable, String> {
         if domain.volume() <= 0 {
             return Err("empty launch domain".into());
         }
@@ -152,7 +186,7 @@ impl MappingPlan {
         let mut procs = Vec::with_capacity(domain.volume().max(0) as usize);
         for p in domain.points() {
             for (r, v) in &snapshot {
-                regs[*r] = v.clone();
+                restore_reg(&mut regs[*r], v);
             }
             regs[0] = Value::Tuple(p);
             let out = vm
@@ -234,6 +268,23 @@ fn new_frame(nregs: u16) -> Vec<Value> {
     vec![Value::Int(0); nregs as usize]
 }
 
+/// Restore one register from the post-prelude snapshot: scalars copy,
+/// tuples reuse the register's existing allocation where possible.
+#[inline]
+fn restore_reg(dst: &mut Value, src: &Value) {
+    match (dst, src) {
+        (Value::Tuple(d), Value::Tuple(s)) => d.0.clone_from(&s.0),
+        (d, s) => {
+            *d = match s {
+                Value::Int(i) => Value::Int(*i),
+                Value::Bool(b) => Value::Bool(*b),
+                Value::Proc(p) => Value::Proc(*p),
+                other => other.clone(),
+            }
+        }
+    }
+}
+
 struct Vm<'m> {
     module: &'m Module,
 }
@@ -296,7 +347,17 @@ impl Vm<'_> {
                 Op::Const { dst, idx } => {
                     regs[*dst as usize] = self.module.consts[*idx as usize].clone()
                 }
-                Op::Move { dst, src } => regs[*dst as usize] = regs[*src as usize].clone(),
+                Op::Move { dst, src } => {
+                    // scalar values move as plain copies; a full clone is
+                    // reserved for heap-backed values (tuples, spaces)
+                    let v = match &regs[*src as usize] {
+                        Value::Int(i) => Value::Int(*i),
+                        Value::Bool(b) => Value::Bool(*b),
+                        Value::Proc(p) => Value::Proc(*p),
+                        other => other.clone(),
+                    };
+                    regs[*dst as usize] = v;
+                }
                 Op::Neg { dst, src } => {
                     let v = match &regs[*src as usize] {
                         Value::Int(i) => Value::Int(-i),
@@ -317,15 +378,16 @@ impl Vm<'_> {
                     use super::ast::BinOp;
                     let l = &regs[*lhs as usize];
                     let r = &regs[*rhs as usize];
-                    let sym = op.to_string();
+                    // dispatch on the op enum directly — the hot loop
+                    // must not allocate an op-symbol String per Bin
                     let v = match op {
                         BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod => {
-                            arith(&sym, l, r)?
+                            arith_op(*op, l, r)?
                         }
                         BinOp::And | BinOp::Or => {
                             return Err("internal: short-circuit op reached Bin".into())
                         }
-                        _ => compare(&sym, l, r)?,
+                        _ => compare_op(*op, l, r)?,
                     };
                     regs[*dst as usize] = v;
                 }

@@ -1,0 +1,224 @@
+//! Three-way differential suite: closure-compiled plans vs the bytecode
+//! VM vs the tree-walking interpreter.
+//!
+//! PR 2 proved VM ≡ interpreter; this suite adds the third tier
+//! (`mapple::compile` — the default evaluation path behind
+//! `MappingPlan::eval_domain`) and proves all three agree:
+//!
+//!   compiled placement(point) == VM placement(point) == interp placement(point)
+//!
+//! for all nine apps' mappers (baseline and tuned) across the machine
+//! shapes, for the randomized language-coverage corpus, and on error
+//! outcomes. Whole `PlacementTable`s are compared (lo/extent/procs), not
+//! just spot points, and every comparison asserts the function really is
+//! on the compiled tier so the test cannot silently degrade into VM≡VM.
+
+mod common;
+
+use common::{build_app, machine_shapes};
+use mapple::apps::mappers;
+use mapple::machine::point::{Rect, Tuple};
+use mapple::machine::topology::MachineDesc;
+use mapple::mapple::MapperSpec;
+use mapple::util::prng::Rng;
+use mapple::util::proptest::check;
+
+const APPS: &[&str] = &[
+    "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
+];
+
+/// All 18 shipped mappers (base + tuned × nine apps) × machine shapes:
+/// the compiled tier and the VM produce identical `PlacementTable`s, and
+/// both match the per-point interpreter oracle.
+#[test]
+fn compiled_vm_and_interp_agree_for_all_eighteen_mappers() {
+    for desc in machine_shapes() {
+        let procs = desc.nodes * desc.gpus_per_node;
+        for app_name in APPS {
+            let sources = [
+                ("base", mappers::mapple_source(app_name).unwrap()),
+                ("tuned", mappers::tuned_source(app_name).unwrap()),
+            ];
+            for (flavor, src) in sources {
+                let spec = MapperSpec::compile(src, &desc)
+                    .unwrap_or_else(|e| panic!("{app_name} {flavor}: {e}"));
+                let app = build_app(app_name, procs);
+                for launch in &app.launches {
+                    let func = spec
+                        .mapping_fn(&launch.name)
+                        .unwrap_or_else(|| panic!("{app_name}: no mapping for {}", launch.name));
+                    assert!(
+                        spec.plan.compiled_for(func),
+                        "{app_name} {flavor}: '{func}' not on the compiled tier"
+                    );
+                    let ctx = format!(
+                        "{app_name} {flavor} {} ({}n×{}g)",
+                        launch.name, desc.nodes, desc.gpus_per_node
+                    );
+                    let compiled = spec
+                        .plan
+                        .eval_domain(func, &launch.domain)
+                        .unwrap_or_else(|e| panic!("{ctx} compiled: {e}"));
+                    let vm = spec
+                        .plan
+                        .eval_domain_vm(func, &launch.domain)
+                        .unwrap_or_else(|e| panic!("{ctx} vm: {e}"));
+                    assert_eq!(compiled, vm, "{ctx}: compiled table != VM table");
+                    let ispace = launch.domain.extent();
+                    for p in launch.domain.points() {
+                        let oracle = spec
+                            .map_point(&launch.name, &p, &ispace)
+                            .unwrap_or_else(|e| panic!("{ctx} oracle: {e}"));
+                        assert_eq!(compiled.get(&p), Some(oracle), "{ctx} point {p:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The same language-coverage corpus the VM differential randomizes over
+/// (ternaries, and/or chains, builtins, negative indexing, helper calls,
+/// hoisted locals, splat indexing) — three ways.
+const COVERAGE_MAPPERS: &[&str] = &[
+    "m = Machine(GPU)\n\
+     m1 = m.merge(0, 1)\n\
+     def f(Tuple p, Tuple s):\n    \
+         g = s[0] > s[1] ? s[0] : s[1]\n    \
+         return m1[(p[0] * g + p[1]) % m1.size[0]]\n",
+    "m = Machine(GPU)\n\
+     def f(Tuple p, Tuple s):\n    \
+         if p[0] == 0 and p[1] == 0:\n        \
+             return m[0, 0]\n    \
+         elif p[0] == 0 or p[1] == 0:\n        \
+             return m[p[0] % m.size[0], 0]\n    \
+         else:\n        \
+             return m[p[0] % m.size[0], p[1] % m.size[1]]\n",
+    "m = Machine(GPU)\n\
+     def helper(Tuple p, Tuple s):\n    \
+         return min(p) + max(s) + len(p) + abs(p[0] - s[1]) + prod(p + 1)\n\
+     def f(Tuple p, Tuple s):\n    \
+         v = helper(p, s)\n    \
+         return m[v % m.size[0], v % m.size[1]]\n",
+    "m = Machine(GPU)\n\
+     def f(Tuple p, Tuple s):\n    \
+         lin = linearize(p, s)\n    \
+         tail = s[1:]\n    \
+         return m[(lin + tail[0] + p[-1]) % m.size[0], 0]\n",
+    "m = Machine(GPU)\n\
+     def f(Tuple p, Tuple s):\n    \
+         x = s[0] + s[1]\n    \
+         x = x * 3 + p[0] * 2 + p[1]\n    \
+         return m[x % m.size[0], x % m.size[1]]\n",
+    "m = Machine(GPU)\n\
+     def f(Tuple p, Tuple s):\n    \
+         m2 = m.swap(0, 1)\n    \
+         idx = tuple(p[i] % m2.size[i] for i in (0, 1))\n    \
+         return m2[*idx]\n",
+];
+
+#[test]
+fn compiled_matches_vm_and_interp_on_language_coverage_corpus() {
+    check(
+        "compiled ≡ vm ≡ interp on coverage corpus",
+        96,
+        |r: &mut Rng| {
+            let which = r.range(0, COVERAGE_MAPPERS.len() as i64 - 1) as usize;
+            let nodes = *r.choose(&[1usize, 2, 4]);
+            let gpus = *r.choose(&[2usize, 4]);
+            let sx = r.range(2, 9);
+            let sy = r.range(2, 9);
+            (which, nodes, gpus, sx, sy)
+        },
+        |&(which, nodes, gpus, sx, sy)| {
+            let mut desc = MachineDesc::paper_testbed(nodes);
+            desc.gpus_per_node = gpus;
+            let src = COVERAGE_MAPPERS[which];
+            let spec = MapperSpec::compile(src, &desc).map_err(|e| e.to_string())?;
+            if !spec.plan.compiled_for("f") {
+                return Err(format!("corpus mapper {which} did not reach the compiled tier"));
+            }
+            let ispace = Tuple::from([sx, sy]);
+            let dom = Rect::from_extent(&ispace);
+            let compiled = spec.plan.eval_domain("f", &dom).map_err(|e| e.to_string())?;
+            let vm = spec.plan.eval_domain_vm("f", &dom).map_err(|e| format!("vm: {e}"))?;
+            if compiled != vm {
+                return Err(format!(
+                    "mapper {which} ({nodes}n×{gpus}g, ispace {ispace:?}): compiled table != VM table"
+                ));
+            }
+            for p in dom.points() {
+                let oracle = spec
+                    .interp
+                    .map_point("f", &p, &ispace)
+                    .map_err(|e| format!("oracle: {e}"))?;
+                if compiled.get(&p) != Some(oracle) {
+                    return Err(format!(
+                        "mapper {which} ({nodes}n×{gpus}g, ispace {ispace:?}): compiled {:?} != interp {oracle:?} at {p:?}",
+                        compiled.get(&p)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Error-path agreement: when the interpreter rejects a program at
+/// runtime, both the compiled tier and the VM must reject it too
+/// (messages may differ; outcomes must agree).
+#[test]
+fn compiled_vm_and_interp_agree_on_failures() {
+    let desc = MachineDesc::paper_testbed(2);
+    let cases = [
+        // non-processor return
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return 7\n",
+        // division by zero
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return m[p[0] / 0, 0]\n",
+        // out-of-bounds space index
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return m[99, 99]\n",
+        // unbounded recursion
+        "m = Machine(GPU)\ndef f(Tuple p, Tuple s):\n    return f(p, s)\n",
+    ];
+    let ispace = Tuple::from([2, 2]);
+    let dom = Rect::from_extent(&ispace);
+    for src in cases {
+        let spec = MapperSpec::compile(src, &desc).unwrap();
+        assert!(spec.plan.compiled_for("f"), "{src}");
+        assert!(spec.plan.eval_domain("f", &dom).is_err(), "compiled accepted: {src}");
+        assert!(spec.plan.eval_domain_vm("f", &dom).is_err(), "VM accepted: {src}");
+        assert!(
+            spec.interp.map_point("f", &Tuple::from([0, 0]), &ispace).is_err(),
+            "interp accepted: {src}"
+        );
+    }
+}
+
+/// Directive tables are independent of the evaluation tier: the same
+/// `.mpl` source compiled twice yields identical policy tables, and the
+/// placement path through the public `MapperSpec` surface (which now
+/// routes through the compiled tier) matches the interpreter.
+#[test]
+fn directive_tables_and_public_surface_are_tier_independent() {
+    let desc = MachineDesc::paper_testbed(2);
+    for app_name in APPS {
+        let src = mappers::tuned_source(app_name).unwrap();
+        let a = MapperSpec::compile(src, &desc).unwrap();
+        let b = MapperSpec::compile(src, &desc).unwrap();
+        assert_eq!(a.index_task_maps, b.index_task_maps, "{app_name}");
+        assert_eq!(a.task_maps, b.task_maps, "{app_name}");
+        assert_eq!(a.regions, b.regions, "{app_name}");
+        assert_eq!(a.layouts, b.layouts, "{app_name}");
+        assert_eq!(a.gc, b.gc, "{app_name}");
+        assert_eq!(a.backpressure, b.backpressure, "{app_name}");
+        let app = build_app(app_name, desc.nodes * desc.gpus_per_node);
+        for launch in &app.launches {
+            let ispace = launch.domain.extent();
+            let table = a.plan_domain(&launch.name, &launch.domain).unwrap();
+            for p in launch.domain.points() {
+                let oracle = a.map_point(&launch.name, &p, &ispace).unwrap();
+                assert_eq!(table.get(&p), Some(oracle), "{app_name}/{} {p:?}", launch.name);
+            }
+        }
+    }
+}

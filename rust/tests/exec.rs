@@ -14,7 +14,7 @@ mod common;
 
 use common::build_app;
 use mapple::apps::AppInstance;
-use mapple::exec::{execute, ExecError, ExecOptions, ExecResult};
+use mapple::exec::{execute, ExecError, ExecOptions, ExecResult, KernelMode};
 use mapple::machine::topology::MachineDesc;
 use mapple::mapper::api::{Mapper, MapperAsMapping};
 use mapple::mapper::MappleMapper;
@@ -119,10 +119,11 @@ fn results_are_invariant_under_worker_count() {
     for app_name in ["cannon", "stencil", "pennant"] {
         let mapper = mapper_from(mappers::mapple_source(app_name).unwrap(), &desc);
         let app = build_app(app_name, 4);
-        let baseline =
-            run_exec(&app, &mapper, &desc, &ExecOptions { lanes: 1, seed: 0 }).0;
+        let one_lane = ExecOptions { lanes: 1, ..ExecOptions::default() };
+        let baseline = run_exec(&app, &mapper, &desc, &one_lane).0;
         for lanes in [2usize, 16] {
-            let r = run_exec(&app, &mapper, &desc, &ExecOptions { lanes, seed: 0 }).0;
+            let opts = ExecOptions { lanes, ..ExecOptions::default() };
+            let r = run_exec(&app, &mapper, &desc, &opts).0;
             assert_eq!(r.checksum, baseline.checksum, "{app_name} lanes={lanes}");
             assert_eq!(r.intra_bytes, baseline.intra_bytes, "{app_name} lanes={lanes}");
             assert_eq!(r.inter_bytes, baseline.inter_bytes, "{app_name} lanes={lanes}");
@@ -137,19 +138,68 @@ fn results_are_invariant_under_worker_count() {
 }
 
 #[test]
+fn fast_kernels_match_naive_bitwise_for_all_nine_apps() {
+    // The blocked GEMM + pooled buffers + zero-copy gathers of
+    // KernelMode::Fast must be representation changes only: every app's
+    // checksum, byte counters, log, and placements equal the naive
+    // reference kernels' exactly (same per-element f32 operation order).
+    use mapple::apps::mappers;
+    let desc = shape(2, 2);
+    for app_name in APPS {
+        let mapper = mapper_from(mappers::mapple_source(app_name).unwrap(), &desc);
+        let app = build_app(app_name, 4);
+        let naive_opts = ExecOptions { kernels: KernelMode::Naive, ..ExecOptions::default() };
+        let fast_opts = ExecOptions { kernels: KernelMode::Fast, ..ExecOptions::default() };
+        let naive = run_exec(&app, &mapper, &desc, &naive_opts).0;
+        let fast = run_exec(&app, &mapper, &desc, &fast_opts).0;
+        assert_eq!(fast.checksum, naive.checksum, "{app_name}");
+        assert_eq!(fast.intra_bytes, naive.intra_bytes, "{app_name}");
+        assert_eq!(fast.inter_bytes, naive.inter_bytes, "{app_name}");
+        assert_eq!(fast.placements, naive.placements, "{app_name}");
+        assert_eq!(fast.canonical_log(), naive.canonical_log(), "{app_name}");
+    }
+}
+
+#[test]
+fn kernel_modes_agree_across_worker_counts_and_seeds() {
+    // The bitwise fast≡naive invariant must also hold under lane caps
+    // and schedule reorderings (pool reuse patterns differ per schedule;
+    // contents must not).
+    use mapple::apps::mappers;
+    let desc = shape(2, 2);
+    for app_name in ["cannon", "summa", "stencil"] {
+        let mapper = mapper_from(mappers::mapple_source(app_name).unwrap(), &desc);
+        let app = build_app(app_name, 4);
+        let naive_opts = ExecOptions { kernels: KernelMode::Naive, ..ExecOptions::default() };
+        let reference = run_exec(&app, &mapper, &desc, &naive_opts).0;
+        for (lanes, seed) in [(1usize, 0u64), (2, 9), (16, 3)] {
+            let opts = ExecOptions { lanes, seed, kernels: KernelMode::Fast };
+            let fast = run_exec(&app, &mapper, &desc, &opts).0;
+            assert_eq!(
+                fast.checksum, reference.checksum,
+                "{app_name} lanes={lanes} seed={seed}"
+            );
+            assert_eq!(fast.canonical_log(), reference.canonical_log(), "{app_name}");
+        }
+    }
+}
+
+#[test]
 fn schedule_is_deterministic_in_the_seed() {
     use mapple::apps::mappers;
     let desc = shape(2, 2);
     let mapper = mapper_from(mappers::mapple_source("summa").unwrap(), &desc);
     let app = build_app("summa", 4);
-    let a = run_exec(&app, &mapper, &desc, &ExecOptions { lanes: 0, seed: 7 }).0;
-    let b = run_exec(&app, &mapper, &desc, &ExecOptions { lanes: 0, seed: 7 }).0;
+    let seven = ExecOptions { seed: 7, ..ExecOptions::default() };
+    let a = run_exec(&app, &mapper, &desc, &seven).0;
+    let b = run_exec(&app, &mapper, &desc, &seven).0;
     // same seed → identical per-processor execution order
     assert_eq!(a.per_proc, b.per_proc);
     assert_eq!(a.checksum, b.checksum);
     // a different seed may reorder independent tasks, but every result
     // the executor reports is schedule-invariant
-    let c = run_exec(&app, &mapper, &desc, &ExecOptions { lanes: 0, seed: 8 }).0;
+    let eight = ExecOptions { seed: 8, ..ExecOptions::default() };
+    let c = run_exec(&app, &mapper, &desc, &eight).0;
     assert_eq!(c.checksum, a.checksum);
     assert_eq!(c.placements, a.placements);
     assert_eq!(c.canonical_log(), a.canonical_log());
