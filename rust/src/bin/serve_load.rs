@@ -1,0 +1,432 @@
+//! Synthetic load driver for `mapple serve`: replay a Zipf-skewed trace
+//! over the nine apps × their real launch shapes × {mapple, tuned} ×
+//! machine shapes, and report plans/sec, latency percentiles, and cache
+//! hit/eviction rates as JSON.
+//!
+//! Two passes. The **cold** pass requests every distinct trace key once
+//! (through a single pipelined connection) and records each plan's
+//! digest. The **warm** pass fires `--requests` Zipf-sampled requests
+//! through `--conns` pipelined connections (window `--window` per
+//! connection) and verifies every response digest against the cold pass
+//! — so the benchmark doubles as an end-to-end cached≡cold-compiled
+//! check. A final `stats` op captures the server-side cache counters.
+//!
+//! By default the driver self-hosts an in-process server on an ephemeral
+//! loopback port (`--shards`/`--cache-bytes`/`--threads` size it) and
+//! shuts it down when done; pass `--addr` to drive an external daemon
+//! instead (it is left running).
+//!
+//! Report-only by default; `--min-plans-per-sec` turns the warm
+//! throughput into a hard gate (exit 1 below the floor).
+
+use mapple::bench::{build_bench_app, APP_ORDER};
+use mapple::machine::point::Tuple;
+use mapple::serve::proto::{read_frame, write_frame, PlanRequest, Request};
+use mapple::serve::{machine_for, serve, ServeOptions, Server};
+use mapple::util::cli::{Args, Command};
+use mapple::util::json::Json;
+use mapple::util::prng::Rng;
+use std::collections::{HashSet, VecDeque};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// One distinct request shape in the trace.
+#[derive(Clone)]
+struct TraceItem {
+    app: &'static str,
+    flavor: &'static str,
+    task: String,
+    ispace: Vec<i64>,
+    nodes: usize,
+    gpus: usize,
+}
+
+impl TraceItem {
+    fn request(&self) -> Request {
+        Request::Plan(PlanRequest {
+            app: self.app.to_string(),
+            flavor: self.flavor.to_string(),
+            task: self.task.clone(),
+            ispace: self.ispace.clone(),
+            nodes: self.nodes,
+            gpus: self.gpus,
+            table: false,
+        })
+    }
+}
+
+/// Every zero-based launch shape of every app on the trace's machine
+/// shapes, for both spec-backed flavors — the realistic key population
+/// the Zipf skew draws from.
+fn trace_items(seed: u64) -> Vec<TraceItem> {
+    let shapes: &[(usize, usize)] = &[(2, 4), (4, 4)];
+    let mut items = Vec::new();
+    for &(nodes, gpus) in shapes {
+        let desc = machine_for(nodes, gpus);
+        for &app in APP_ORDER {
+            let inst = build_bench_app(app, &desc);
+            let mut seen = HashSet::new();
+            for l in &inst.launches {
+                if l.domain.lo != Tuple::zeros(l.domain.dim()) {
+                    continue;
+                }
+                let extent = l.domain.extent().0.clone();
+                if !seen.insert((l.name.clone(), extent.clone())) {
+                    continue;
+                }
+                for flavor in ["mapple", "tuned"] {
+                    items.push(TraceItem {
+                        app,
+                        flavor,
+                        task: l.name.clone(),
+                        ispace: extent.clone(),
+                        nodes,
+                        gpus,
+                    });
+                }
+            }
+        }
+    }
+    // Deterministic shuffle so Zipf rank is uncorrelated with app order.
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    rng.shuffle(&mut items);
+    items
+}
+
+/// Zipf(s) over `n` ranks via inverse-CDF binary search.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for rank in 1..=n {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let r = rng.f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&r).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// What to do with a plan response's digest.
+enum DigestMode<'a> {
+    /// Cold pass: record it so the warm pass can verify against it.
+    Capture(&'a mut [String]),
+    /// Warm pass: compare against the cold pass's record.
+    Verify(&'a [String]),
+}
+
+/// Per-pass client-side tallies.
+struct RunStats {
+    latencies_ns: Vec<u64>,
+    mismatches: usize,
+    errors: usize,
+}
+
+impl RunStats {
+    fn new(cap: usize) -> RunStats {
+        RunStats { latencies_ns: Vec::with_capacity(cap), mismatches: 0, errors: 0 }
+    }
+}
+
+/// A pipelined client connection: keeps up to `window` requests in
+/// flight, matching responses to requests positionally (the protocol
+/// answers strictly in order per connection).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    window: usize,
+    /// (item index, send time) of in-flight requests, oldest first.
+    pending: VecDeque<(usize, Instant)>,
+}
+
+impl Conn {
+    fn connect(addr: &str, window: usize) -> Result<Conn, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream.set_nodelay(true).map_err(|e| e.to_string())?;
+        let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        Ok(Conn {
+            reader,
+            writer: BufWriter::new(stream),
+            window: window.max(1),
+            pending: VecDeque::new(),
+        })
+    }
+
+    /// Send one request; drain one response if the window is full.
+    fn push(
+        &mut self,
+        item_idx: usize,
+        req: &Request,
+        mode: &mut DigestMode<'_>,
+        out: &mut RunStats,
+    ) -> Result<(), String> {
+        let body = req.to_json().pretty();
+        write_frame(&mut self.writer, body.as_bytes()).map_err(|e| e.to_string())?;
+        self.writer.flush().map_err(|e| e.to_string())?;
+        self.pending.push_back((item_idx, Instant::now()));
+        if self.pending.len() >= self.window {
+            self.drain_one(mode, out)?;
+        }
+        Ok(())
+    }
+
+    /// Read one response, recording latency and handling its digest.
+    fn drain_one(&mut self, mode: &mut DigestMode<'_>, out: &mut RunStats) -> Result<(), String> {
+        let (item_idx, sent) = self.pending.pop_front().ok_or("drain with nothing pending")?;
+        let frame = read_frame(&mut self.reader)
+            .map_err(|e| e.to_string())?
+            .ok_or("server closed mid-stream")?;
+        out.latencies_ns.push(sent.elapsed().as_nanos() as u64);
+        let text = std::str::from_utf8(&frame).map_err(|e| e.to_string())?;
+        let resp = Json::parse(text)?;
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            out.errors += 1;
+            eprintln!("[serve_load] request error: {}", resp.pretty());
+            return Ok(());
+        }
+        let digest = resp.get("digest").and_then(|d| d.as_str());
+        match mode {
+            DigestMode::Capture(slots) => {
+                if let Some(d) = digest {
+                    slots[item_idx] = d.to_string();
+                }
+            }
+            DigestMode::Verify(slots) => {
+                let expect = &slots[item_idx];
+                if !expect.is_empty() && digest != Some(expect.as_str()) {
+                    out.mismatches += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn drain_all(&mut self, mode: &mut DigestMode<'_>, out: &mut RunStats) -> Result<(), String> {
+        while !self.pending.is_empty() {
+            self.drain_one(mode, out)?;
+        }
+        Ok(())
+    }
+
+    /// One synchronous request → parsed response (setup/stats path).
+    fn call(&mut self, req: &Request) -> Result<Json, String> {
+        let body = req.to_json().pretty();
+        write_frame(&mut self.writer, body.as_bytes()).map_err(|e| e.to_string())?;
+        self.writer.flush().map_err(|e| e.to_string())?;
+        let frame = read_frame(&mut self.reader)
+            .map_err(|e| e.to_string())?
+            .ok_or("server closed")?;
+        let text = std::str::from_utf8(&frame).map_err(|e| e.to_string())?;
+        Json::parse(text)
+    }
+}
+
+fn percentile_us(sorted_ns: &[u64], q: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ns.len() - 1) as f64 * q).round() as usize;
+    sorted_ns[idx] as f64 / 1000.0
+}
+
+fn pass_json(requests: usize, wall: f64, sorted_ns: &[u64]) -> Json {
+    let per_sec = if wall > 0.0 { requests as f64 / wall } else { 0.0 };
+    Json::obj(vec![
+        ("requests", Json::Num(requests as f64)),
+        ("wall_seconds", Json::Num(wall)),
+        ("plans_per_sec", Json::Num(per_sec)),
+        ("p50_us", Json::Num(percentile_us(sorted_ns, 0.50))),
+        ("p99_us", Json::Num(percentile_us(sorted_ns, 0.99))),
+        ("p999_us", Json::Num(percentile_us(sorted_ns, 0.999))),
+    ])
+}
+
+fn run(args: &Args) -> Result<i32, String> {
+    let requests = args.usize("requests").map_err(|e| e.to_string())?;
+    let conns = args.usize("conns").map_err(|e| e.to_string())?.max(1);
+    let window = args.usize("window").map_err(|e| e.to_string())?.max(1);
+    let shards = args.usize("shards").map_err(|e| e.to_string())?;
+    let cache_bytes = args.usize("cache-bytes").map_err(|e| e.to_string())?;
+    let threads = args.usize("threads").map_err(|e| e.to_string())?;
+    let zipf_s = args.f64("zipf").map_err(|e| e.to_string())?;
+    let seed = args.usize("seed").map_err(|e| e.to_string())? as u64;
+    let json_path = args.str("json").unwrap_or("serve_load.json").to_string();
+    let min_rate = args.f64("min-plans-per-sec").map_err(|e| e.to_string())?;
+
+    // Self-host unless pointed at an external daemon.
+    let (server, addr): (Option<Server>, String) = match args.str("addr") {
+        Some(a) if !a.is_empty() => (None, a.to_string()),
+        _ => {
+            let opts = ServeOptions {
+                addr: "127.0.0.1:0".to_string(),
+                threads,
+                shards,
+                cache_bytes,
+            };
+            let server = serve(&opts)?;
+            let addr = server.local_addr().to_string();
+            (Some(server), addr)
+        }
+    };
+
+    let items = trace_items(seed);
+    if items.is_empty() {
+        return Err("empty trace".to_string());
+    }
+    eprintln!("[serve_load] {} distinct keys, server at {addr}", items.len());
+
+    // ---- cold pass: every key once, capture digests ---------------------
+    let mut digests = vec![String::new(); items.len()];
+    let mut cold = RunStats::new(items.len());
+    let cold_start = Instant::now();
+    {
+        let mut conn = Conn::connect(&addr, window)?;
+        let mut mode = DigestMode::Capture(&mut digests);
+        for (i, item) in items.iter().enumerate() {
+            conn.push(i, &item.request(), &mut mode, &mut cold)?;
+        }
+        conn.drain_all(&mut mode, &mut cold)?;
+    }
+    let cold_wall = cold_start.elapsed().as_secs_f64();
+    if cold.errors > 0 {
+        return Err(format!("{} cold requests failed", cold.errors));
+    }
+    cold.latencies_ns.sort_unstable();
+
+    // ---- warm pass: Zipf trace over all connections ---------------------
+    let zipf = Zipf::new(items.len(), zipf_s);
+    let per_conn = requests / conns;
+    let warm_start = Instant::now();
+    let mut results: Vec<RunStats> = Vec::new();
+    std::thread::scope(|scope| -> Result<(), String> {
+        let mut handles = Vec::new();
+        for c in 0..conns {
+            let n = if c == 0 { requests - per_conn * (conns - 1) } else { per_conn };
+            let addr = addr.clone();
+            let items = &items;
+            let digests = &digests;
+            let zipf = &zipf;
+            handles.push(scope.spawn(move || -> Result<RunStats, String> {
+                let mut rng = Rng::new(seed.wrapping_add(c as u64 + 1));
+                let mut conn = Conn::connect(&addr, window)?;
+                let mut mode = DigestMode::Verify(digests);
+                let mut out = RunStats::new(n);
+                for _ in 0..n {
+                    let idx = zipf.sample(&mut rng);
+                    conn.push(idx, &items[idx].request(), &mut mode, &mut out)?;
+                }
+                conn.drain_all(&mut mode, &mut out)?;
+                Ok(out)
+            }));
+        }
+        for h in handles {
+            let r = h.join().map_err(|_| "client thread panicked".to_string())?;
+            results.push(r?);
+        }
+        Ok(())
+    })?;
+    let warm_wall = warm_start.elapsed().as_secs_f64();
+
+    let mut warm_ns: Vec<u64> = Vec::with_capacity(requests);
+    let mut mismatches = 0usize;
+    let mut errors = 0usize;
+    for r in &results {
+        warm_ns.extend_from_slice(&r.latencies_ns);
+        mismatches += r.mismatches;
+        errors += r.errors;
+    }
+    warm_ns.sort_unstable();
+
+    // ---- server-side counters + shutdown --------------------------------
+    let mut ctrl = Conn::connect(&addr, 1)?;
+    let server_stats = ctrl.call(&Request::Stats)?;
+    if let Some(s) = server {
+        // The handler sets the stop flag on "shutdown"; join the acceptor.
+        let _ = ctrl.call(&Request::Shutdown);
+        s.join();
+    }
+
+    let warm = pass_json(warm_ns.len(), warm_wall, &warm_ns);
+    let report = Json::obj(vec![
+        ("distinct_keys", Json::Num(items.len() as f64)),
+        ("connections", Json::Num(conns as f64)),
+        ("window", Json::Num(window as f64)),
+        ("zipf_s", Json::Num(zipf_s)),
+        ("seed", Json::Num(seed as f64)),
+        ("digest_mismatches", Json::Num(mismatches as f64)),
+        ("request_errors", Json::Num(errors as f64)),
+        ("cold", pass_json(items.len(), cold_wall, &cold.latencies_ns)),
+        ("warm", warm.clone()),
+        ("server", server_stats),
+    ]);
+    std::fs::write(&json_path, report.pretty()).map_err(|e| format!("write {json_path}: {e}"))?;
+
+    let rate = warm.get("plans_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let p50 = warm.get("p50_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let p99 = warm.get("p99_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!(
+        "[serve_load] warm: {:.0} plans/sec over {} requests ({} conns × window {}), \
+         p50 {:.1}µs p99 {:.1}µs — report: {}",
+        rate,
+        warm_ns.len(),
+        conns,
+        window,
+        p50,
+        p99,
+        json_path
+    );
+    if mismatches > 0 || errors > 0 {
+        eprintln!("[serve_load] FAIL: {mismatches} digest mismatches, {errors} errors");
+        return Ok(1);
+    }
+    if min_rate > 0.0 && rate < min_rate {
+        eprintln!("[serve_load] FAIL: {rate:.0} plans/sec is below the {min_rate:.0} floor");
+        return Ok(1);
+    }
+    Ok(0)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("serve_load", "replay a Zipf plan-request trace against mapple serve")
+        .opt("addr", "drive an external daemon at this address (default: self-host)", Some(""))
+        .opt("requests", "warm-pass request count", Some("1000000"))
+        .opt("conns", "client connections", Some("8"))
+        .opt("window", "pipelined requests in flight per connection", Some("64"))
+        .opt("shards", "plan-cache shards (self-hosted server)", Some("16"))
+        .opt("cache-bytes", "plan-cache byte budget (self-hosted server)", Some("268435456"))
+        .opt("threads", "server connection threads (self-hosted server)", Some("16"))
+        .opt("zipf", "Zipf skew exponent s", Some("1.1"))
+        .opt("seed", "trace seed", Some("42"))
+        .opt("json", "report path", Some("serve_load.json"))
+        .opt("min-plans-per-sec", "fail below this warm throughput (0 = report only)", Some("0"));
+    let code = match cmd.parse(&argv) {
+        Ok(args) => match run(&args) {
+            Ok(code) => code,
+            Err(e) => {
+                eprintln!("serve_load: {e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

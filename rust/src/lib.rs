@@ -5,6 +5,7 @@ pub mod exec;
 pub mod mapple;
 pub mod mapper;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tasking;
 pub mod tune;

@@ -8,4 +8,4 @@ pub mod transform;
 
 pub use point::{Rect, Tuple};
 pub use space::ProcSpace;
-pub use topology::{MachineDesc, MemKind, ProcId, ProcKind};
+pub use topology::{MachineDesc, MachineKey, MemKind, ProcId, ProcKind};

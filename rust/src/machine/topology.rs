@@ -228,6 +228,59 @@ impl MachineDesc {
         }
         v
     }
+
+    /// Canonical, hashable identity of this description — the machine
+    /// component of plan-cache keys (`crate::serve::cache`). Every field
+    /// participates; floats are captured as IEEE-754 bit patterns, so two
+    /// descriptions share a key exactly when they are bit-identical. Any
+    /// edit (node count, a bandwidth, a latency) yields a distinct key and
+    /// therefore a distinct cache namespace — no lossy fingerprinting that
+    /// could alias two machines onto each other's plans.
+    pub fn cache_key(&self) -> MachineKey {
+        MachineKey {
+            nodes: self.nodes,
+            gpus_per_node: self.gpus_per_node,
+            cpus_per_node: self.cpus_per_node,
+            omp_per_node: self.omp_per_node,
+            fbmem_capacity: self.fbmem_capacity,
+            sysmem_capacity: self.sysmem_capacity,
+            zcmem_capacity: self.zcmem_capacity,
+            float_bits: [
+                self.nvlink_bw.to_bits(),
+                self.ib_bw.to_bits(),
+                self.nvlink_lat.to_bits(),
+                self.ib_lat.to_bits(),
+                self.gpu_flops.to_bits(),
+                self.cpu_flops.to_bits(),
+                self.gpu_launch_overhead.to_bits(),
+                self.hbm_bw.to_bits(),
+                self.host_bw.to_bits(),
+            ],
+        }
+    }
+}
+
+/// Exact canonical form of a `MachineDesc` for use as a hash-map key.
+/// Built only via [`MachineDesc::cache_key`]; fields mirror the
+/// description one-for-one with f64s as raw bit patterns (declaration
+/// order of `MachineDesc`, floats in `float_bits` in field order).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct MachineKey {
+    nodes: usize,
+    gpus_per_node: usize,
+    cpus_per_node: usize,
+    omp_per_node: usize,
+    fbmem_capacity: u64,
+    sysmem_capacity: u64,
+    zcmem_capacity: u64,
+    float_bits: [u64; 9],
+}
+
+impl MachineKey {
+    /// Node count, for human-readable cache diagnostics.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
 }
 
 #[cfg(test)]
@@ -282,5 +335,24 @@ mod tests {
     fn display_forms() {
         let p = ProcId { node: 1, kind: ProcKind::Gpu, local: 3 };
         assert_eq!(p.to_string(), "n1:GPU3");
+    }
+
+    #[test]
+    fn cache_key_is_exact() {
+        let a = MachineDesc::paper_testbed(4);
+        let b = MachineDesc::paper_testbed(4);
+        assert_eq!(a.cache_key(), b.cache_key(), "identical descs share a key");
+
+        let mut c = MachineDesc::paper_testbed(4);
+        c.nodes = 8;
+        assert_ne!(a.cache_key(), c.cache_key(), "node count participates");
+
+        let mut d = MachineDesc::paper_testbed(4);
+        d.ib_bw += 1.0;
+        assert_ne!(a.cache_key(), d.cache_key(), "float fields participate bit-exactly");
+
+        let mut e = MachineDesc::paper_testbed(4);
+        e.zcmem_capacity += 1;
+        assert_ne!(a.cache_key(), e.cache_key(), "capacities participate");
     }
 }

@@ -13,11 +13,14 @@
 //!                and emit the winning mapper as .mpl source
 //!   compile    — parse + compile a .mpl file and dump its directive tables
 //!   decompose  — solve a processor-grid factorization for an iteration space
+//!   serve      — long-running mapping service: answer plan requests over
+//!                TCP from a sharded single-flight plan cache
 //!   apps       — list available applications
 //!
 //! Examples:
 //!   mapple run --app cannon --nodes 2 --mapper mapple
 //!   mapple exec --app summa --nodes 2 --mapper tuned --json exec.json
+//!   mapple serve --addr 127.0.0.1:7517 --threads 8 --cache-bytes 268435456
 //!   mapple tune --app circuit --nodes 2 --budget 128 --strategy beam
 //!   mapple tune --app cannon --resume tuned.mpl --out tuned2.mpl
 //!   mapple compile mappers/cannon.mpl --nodes 2
@@ -31,9 +34,12 @@ use mapple::machine::topology::MachineDesc;
 use mapple::mapper::api::Mapper;
 use mapple::mapper::MappleMapper;
 use mapple::mapple::MapperSpec;
+use mapple::serve::cache::PlanCache;
+use mapple::serve::{serve, ServeOptions};
 use mapple::tune::{tune, tune_with_ctx, EvalCtx, StrategyKind, TuneConfig, TuneSpec};
 use mapple::util::bench::fmt_time;
 use mapple::util::cli::Command;
+use mapple::util::json::Json;
 
 const APPS: &[&str] = &[
     "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
@@ -47,13 +53,14 @@ fn main() {
         Some("tune") => cmd_tune(&argv[1..]),
         Some("compile") => cmd_compile(&argv[1..]),
         Some("decompose") => cmd_decompose(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
         Some("apps") => {
             println!("{}", APPS.join("\n"));
             0
         }
         _ => {
             eprintln!(
-                "usage: mapple <run|exec|tune|compile|decompose|apps> [--help]\n\
+                "usage: mapple <run|exec|tune|compile|decompose|serve|apps> [--help]\n\
                  Mapple — declarative mapping for distributed heterogeneous programs."
             );
             2
@@ -266,7 +273,12 @@ fn cmd_exec(argv: &[String]) -> i32 {
         out.exec.checksum,
     );
     if let Some(path) = args.str("json") {
-        let json = out.exec.to_json(&app_name, &out.mapper_name, &desc);
+        let mut json = out.exec.to_json(&app_name, &out.mapper_name, &desc);
+        // Every MappleMapper plans through the shared process-wide cache;
+        // surface its counters next to the measured numbers.
+        if let Json::Obj(map) = &mut json {
+            map.insert("plan_cache".to_string(), PlanCache::global().stats().to_json());
+        }
         if let Err(e) = std::fs::write(path, json.pretty()) {
             eprintln!("{path}: {e}");
             return 1;
@@ -427,6 +439,51 @@ fn cmd_decompose(argv: &[String]) -> i32 {
         r.candidates,
         Objective::Isotropic.eval(&g, &ispace),
         Objective::amgm_lower_bound(procs, &ispace),
+    );
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cmd = Command::new("mapple serve", "answer plan requests from a sharded plan cache")
+        .opt("addr", "listen address", Some("127.0.0.1:7517"))
+        .opt("threads", "max concurrent connections", Some("8"))
+        .opt("shards", "plan-cache shards", Some("16"))
+        .opt("cache-bytes", "plan-cache byte budget", Some("268435456"));
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let opts = ServeOptions {
+        addr: args.str("addr").unwrap_or("127.0.0.1:7517").to_string(),
+        threads: args.usize("threads").unwrap_or(8).max(1),
+        shards: args.usize("shards").unwrap_or(16).max(1),
+        cache_bytes: args.usize("cache-bytes").unwrap_or(256 << 20),
+    };
+    let server = match serve(&opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "mapple serve listening on {} ({} threads, {} shards, {} MiB plan cache); \
+         ops: plan | invalidate | stats | ping | shutdown",
+        server.local_addr(),
+        opts.threads,
+        opts.shards,
+        opts.cache_bytes >> 20,
+    );
+    let state = std::sync::Arc::clone(server.state());
+    server.join();
+    let s = state.cache().stats();
+    println!(
+        "mapple serve stopped: {} hits / {} misses ({} coalesced, {} compiles), \
+         {} evictions, {} entries resident",
+        s.hits, s.misses, s.coalesced, s.compiles, s.evictions, s.entries,
     );
     0
 }

@@ -15,49 +15,74 @@
 //! SHARD and MAP callbacks; directive tables supply the remaining
 //! callbacks (memories, layouts, GC, backpressure, processor kinds).
 //!
-//! Tables are cached per `(task, ispace)`. The cache probe is borrow
-//! based — nested `task → ispace → table` maps — so the per-point hot
-//! path allocates nothing: keys are built (two small allocations) only on
-//! the one miss per launch shape.
+//! Tables are cached in the shared sharded plan cache
+//! ([`crate::serve::cache::PlanCache`]) under a process-unique mapper id
+//! plus the spec's canonical machine key — the same cache `mapple serve`
+//! answers remote requests from, so pipeline/sim/exec/tune and the
+//! daemon all share one bounded, statistics-bearing store. The probe
+//! path is borrow-based and allocation-free; keys are built only on the
+//! one miss per launch shape. Dropping a `MappleMapper` purges its
+//! entries.
 
 use super::api::{Mapper, TaskCtx};
 use crate::machine::point::{Rect, Tuple};
-use crate::machine::topology::{MemKind, ProcId, ProcKind};
+use crate::machine::topology::{MachineKey, MemKind, ProcId, ProcKind};
 use crate::mapple::program::{LayoutProps, MapperSpec};
 use crate::mapple::vm::PlacementTable;
-use std::cell::RefCell;
-use std::collections::HashMap;
+use crate::serve::cache::{next_mapper_id, CachedPlan, PlanCache};
 use std::sync::Arc;
 
 /// A [`Mapper`] implementation backed by a Mapple [`MapperSpec`].
+///
+/// `Send + Sync`: one instance may serve concurrent callers (the serve
+/// daemon shares one per (app, flavor, machine) so identical requests
+/// coalesce in the plan cache's single-flight layer).
 pub struct MappleMapper {
     pub spec: MapperSpec,
-    /// task → launch ispace → placement table (computed once per shape).
-    plans: RefCell<HashMap<String, HashMap<Tuple, Arc<PlacementTable>>>>,
+    cache: Arc<PlanCache>,
+    /// Process-unique cache namespace for this instance.
+    mapper_id: u64,
+    /// Canonical key of the machine the spec was bound to.
+    machine: MachineKey,
 }
 
 impl MappleMapper {
+    /// Route plans through the process-global shared cache.
     pub fn new(spec: MapperSpec) -> Self {
-        MappleMapper { spec, plans: RefCell::new(HashMap::new()) }
+        Self::with_cache(spec, PlanCache::global())
     }
 
-    /// The placement table for a launch shape: cache probe without
-    /// allocating, evaluate the whole domain on miss.
-    fn plan(&self, task: &str, ispace: &Tuple) -> Result<Arc<PlacementTable>, String> {
-        {
-            let plans = self.plans.borrow();
-            if let Some(table) = plans.get(task).and_then(|by_shape| by_shape.get(ispace)) {
-                return Ok(table.clone());
-            }
+    /// Route plans through a caller-owned cache (tests, private daemons).
+    pub fn with_cache(spec: MapperSpec, cache: Arc<PlanCache>) -> Self {
+        let machine = spec.plan.module().desc.cache_key();
+        MappleMapper { spec, cache, mapper_id: next_mapper_id(), machine }
+    }
+
+    /// The cache entry for a launch shape: allocation-free probe, whole
+    /// domain evaluated once on miss (single-flight across threads).
+    pub fn cached_plan(&self, task: &str, ispace: &Tuple) -> Result<Arc<CachedPlan>, String> {
+        Ok(self.cached_plan_hit(task, ispace)?.0)
+    }
+
+    /// As [`Self::cached_plan`], also reporting whether it was a hit.
+    pub fn cached_plan_hit(
+        &self,
+        task: &str,
+        ispace: &Tuple,
+    ) -> Result<(Arc<CachedPlan>, bool), String> {
+        // Reject before Rect::from_extent, which asserts on empty extents
+        // (remote requests must turn into error responses, not panics).
+        if ispace.0.is_empty() || ispace.0.iter().any(|&e| e <= 0) {
+            return Err("empty launch domain".to_string());
         }
-        let domain = Rect::from_extent(ispace);
-        let table = Arc::new(self.spec.plan_domain(task, &domain)?);
-        self.plans
-            .borrow_mut()
-            .entry(task.to_string())
-            .or_default()
-            .insert(ispace.clone(), table.clone());
-        Ok(table)
+        self.cache.get_or_compute(self.mapper_id, &self.machine, task, ispace, || {
+            self.spec.plan_domain(task, &Rect::from_extent(ispace))
+        })
+    }
+
+    /// The placement table for a launch shape.
+    fn plan(&self, task: &str, ispace: &Tuple) -> Result<Arc<PlacementTable>, String> {
+        Ok(Arc::clone(self.cached_plan(task, ispace)?.table()))
     }
 
     /// One point of a launch, via the cached plan.
@@ -66,6 +91,12 @@ impl MappleMapper {
         table
             .get(point)
             .ok_or_else(|| format!("point {point:?} outside launch domain {ispace:?}"))
+    }
+}
+
+impl Drop for MappleMapper {
+    fn drop(&mut self) {
+        self.cache.invalidate_mapper(self.mapper_id);
     }
 }
 
@@ -214,5 +245,40 @@ Backpressure matmul 3
         let mut c = ctx(&dom);
         c.task_name = "nope";
         assert!(m.map_task(&c, &Tuple::from([0]), &Tuple::from([2])).is_err());
+    }
+
+    #[test]
+    fn mapper_is_send_and_sync() {
+        fn takes<T: Send + Sync>() {}
+        takes::<MappleMapper>();
+    }
+
+    #[test]
+    fn drop_purges_cache_namespace() {
+        let cache = Arc::new(PlanCache::new(4, 1 << 20));
+        let dom = Rect::from_extent(&Tuple::from([4, 4]));
+        {
+            let spec = MapperSpec::compile(SRC, &desc()).unwrap();
+            let m = MappleMapper::with_cache(spec, Arc::clone(&cache));
+            m.build_plan(&ctx(&dom), &dom).unwrap();
+            assert_eq!(cache.stats().entries, 1);
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 0, "drop must purge this mapper's entries");
+        assert_eq!(s.invalidations, 1);
+    }
+
+    #[test]
+    fn concurrent_lookups_share_one_compile() {
+        let cache = Arc::new(PlanCache::new(4, 1 << 20));
+        let spec = MapperSpec::compile(SRC, &desc()).unwrap();
+        let m = MappleMapper::with_cache(spec, Arc::clone(&cache));
+        let ispace = Tuple::from([8, 8]);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| m.cached_plan("matmul", &ispace).unwrap());
+            }
+        });
+        assert_eq!(cache.stats().compiles, 1, "one compile across threads");
     }
 }

@@ -291,6 +291,43 @@ impl CompiledModule {
         }
     }
 
+    /// Single-point evaluation — the compiled counterpart of
+    /// `MappingPlan::eval_point_vm`, same contract. Runs prelude + body
+    /// once for `(ipoint, ispace)`; no snapshot/restore machinery needed
+    /// since the frame is discarded after the one body pass.
+    pub(crate) fn eval_point(
+        &self,
+        idx: usize,
+        func: &str,
+        ipoint: &Tuple,
+        ispace: &Tuple,
+    ) -> Result<ProcId, String> {
+        let code = self.funcs[idx].as_ref().expect("caller checked is_compiled");
+        if code.param_types.len() != 2 {
+            return Err(format!(
+                "'{func}' expects {} arguments, got 2",
+                code.param_types.len()
+            ));
+        }
+        let rt = Rt::new(self);
+        let mut frame = code.init.clone();
+        frame[0] = make_tuple(&ipoint.0);
+        frame[1] = make_tuple(&ispace.0);
+        let out = match run_seg(&code.prelude, &code.name, &mut frame, &rt, 0)? {
+            // A prelude never contains Ret; defensive all the same.
+            Some(v) => v,
+            None => run_seg(&code.body, &code.name, &mut frame, &rt, 0)?
+                .ok_or_else(|| format!("'{func}' finished without returning"))?,
+        };
+        match out {
+            Slot::Proc(pid) => Ok(pid),
+            other => Err(format!(
+                "mapping function '{func}' must return a processor, got {}",
+                other.kind()
+            )),
+        }
+    }
+
     fn call_fn(
         &self,
         idx: usize,

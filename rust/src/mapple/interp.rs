@@ -49,7 +49,11 @@ pub struct Interp {
     pub desc: MachineDesc,
     funcs: HashMap<String, FuncDef>,
     globals: HashMap<String, Value>,
-    steps: std::cell::Cell<usize>,
+    // Atomic (not `Cell`) so a bound program is `Sync` and one compiled
+    // `MapperSpec` can serve concurrent requests (`serve/`). The runaway
+    // guard is a global budget: concurrent evaluations share it, which
+    // only makes the limit stricter, never looser.
+    steps: std::sync::atomic::AtomicUsize,
     /// Communication objective every `decompose` in this program uses —
     /// a compile-time knob (the autotuner searches over it); `.mpl`
     /// surface syntax stays objective-free.
@@ -87,7 +91,7 @@ impl Interp {
             desc: desc.clone(),
             funcs,
             globals: HashMap::new(),
-            steps: std::cell::Cell::new(0),
+            steps: std::sync::atomic::AtomicUsize::new(0),
             objective,
         };
         // Evaluate top-level assignments in order.
@@ -123,7 +127,7 @@ impl Interp {
     /// Invoke a mapping function with `(ipoint, ispace)` and expect a
     /// processor result — the §5.2 translation contract.
     pub fn map_point(&self, func: &str, ipoint: &Tuple, ispace: &Tuple) -> RtResult<ProcId> {
-        self.steps.set(0);
+        self.steps.store(0, std::sync::atomic::Ordering::Relaxed);
         let out = self.call(
             func,
             vec![Value::Tuple(ipoint.clone()), Value::Tuple(ispace.clone())],
@@ -228,8 +232,7 @@ impl Interp {
     }
 
     fn tick(&self) -> RtResult<()> {
-        let s = self.steps.get() + 1;
-        self.steps.set(s);
+        let s = self.steps.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
         if s > MAX_STEPS {
             Err(rt("step limit exceeded (runaway mapping function?)"))
         } else {

@@ -207,7 +207,26 @@ impl MappingPlan {
 
     /// Evaluate one point (the §5.2 per-point contract; used by tests and
     /// the oracle comparison). `ispace` need not equal any domain extent.
+    /// Runs the closure-compiled tier when this function is on it — same
+    /// routing rule as [`Self::eval_domain`] — with the bytecode VM
+    /// ([`Self::eval_point_vm`]) kept as the differential oracle.
     pub fn eval_point(&self, func: &str, ipoint: &Tuple, ispace: &Tuple) -> Result<ProcId, String> {
+        match self.module.func_index(func) {
+            Some(idx) if self.compiled.is_compiled(idx) => {
+                self.compiled.eval_point(idx, func, ipoint, ispace)
+            }
+            _ => self.eval_point_vm(func, ipoint, ispace),
+        }
+    }
+
+    /// Single-point evaluation on the bytecode VM — the oracle tier for
+    /// the compiled `eval_point` (see `tests/compiled_diff.rs`).
+    pub fn eval_point_vm(
+        &self,
+        func: &str,
+        ipoint: &Tuple,
+        ispace: &Tuple,
+    ) -> Result<ProcId, String> {
         let code = self.entry(func)?;
         let mut regs = new_frame(code.nregs);
         regs[0] = Value::Tuple(ipoint.clone());

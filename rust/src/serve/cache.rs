@@ -1,0 +1,698 @@
+//! Sharded, single-flight plan cache: the one cache every mapping path
+//! (pipeline, sim, exec, tune, serve) resolves `PlacementTable`s through.
+//!
+//! Entries are keyed on the full identity of a placement decision:
+//!
+//! ```text
+//! (mapper id, MachineKey, task name, launch extent) → Arc<CachedPlan>
+//! ```
+//!
+//! * **mapper id** — a process-unique `u64` handed out by
+//!   [`next_mapper_id`]. Two `MappleMapper`s never share plans even when
+//!   compiled from identical sources (there is no canonical content hash
+//!   for builder-built specs); sharing across requests is achieved one
+//!   level up by reusing the *mapper instance* (see `serve::ServerState`).
+//! * **MachineKey** — the exact canonical form of the `MachineDesc` the
+//!   spec was bound to ([`crate::machine::MachineDesc::cache_key`]);
+//!   floats participate bit-for-bit, so no two machines alias.
+//! * **task / extent** — plans cover zero-based launch domains, so the
+//!   extent tuple is the whole domain identity.
+//!
+//! Design points, in the order they matter for throughput:
+//!
+//! * **Allocation-free hits.** The map is sharded (key-hash → shard) and
+//!   each shard's table sits behind an `RwLock` taken in *read* mode on
+//!   the hit path. Nested maps are probed with borrowed keys (`u64`,
+//!   `&MachineKey`, `&str`, `&Tuple`), so a hit performs no allocation
+//!   beyond the returned `Arc` refcount bump.
+//! * **LRU without write locks.** Each entry carries an `AtomicU64`
+//!   access stamp; hits store the cache-global tick with a relaxed store
+//!   while still under the shared lock. Eviction (insert path only)
+//!   scans the shard for the minimum stamp.
+//! * **Single-flight compiles.** A miss registers a flight keyed on the
+//!   owned key; concurrent requests for the same key block on the
+//!   flight's condvar instead of compiling again. The compile itself
+//!   runs with **no** cache locks held. Errors propagate to every
+//!   coalesced waiter but are not cached — the next request retries.
+//! * **Byte budgets per shard.** `max_bytes / shards` each; inserting
+//!   past the budget evicts least-recently-stamped entries (never the
+//!   entry just inserted) until under budget again.
+//! * **Incremental invalidation.** [`PlanCache::invalidate_machine`]
+//!   drops exactly the entries bound to one `MachineKey` (across all
+//!   mappers and shards); everything else survives. A compile already in
+//!   flight during an invalidation re-inserts under its (old) key —
+//!   harmless, because a *changed* machine description has a *different*
+//!   key, so the stale entry can never be served to the new machine and
+//!   simply ages out.
+
+use crate::machine::point::Tuple;
+use crate::machine::topology::MachineKey;
+use crate::machine::ProcId;
+use crate::mapple::vm::PlacementTable;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+
+/// Default shard count for the process-global cache.
+pub const DEFAULT_SHARDS: usize = 16;
+/// Default byte budget for the process-global cache (256 MiB).
+pub const DEFAULT_MAX_BYTES: usize = 256 << 20;
+
+/// Hand out a process-unique mapper id (the first key component).
+pub fn next_mapper_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A compiled placement decision at rest: the shared table plus the
+/// metadata `serve` answers constant-size responses from (digest, byte
+/// footprint) — computed once at insert, never on the hit path.
+#[derive(Debug)]
+pub struct CachedPlan {
+    table: Arc<PlacementTable>,
+    digest: u64,
+    bytes: usize,
+}
+
+impl CachedPlan {
+    fn new(table: PlacementTable, key_overhead: usize) -> CachedPlan {
+        let digest = digest_table(&table);
+        let bytes = key_overhead
+            + std::mem::size_of::<PlacementTable>()
+            + 8 * (table.lo().dim() + table.extent().dim())
+            + std::mem::size_of_val(table.procs());
+        CachedPlan { table: Arc::new(table), digest, bytes }
+    }
+
+    pub fn table(&self) -> &Arc<PlacementTable> {
+        &self.table
+    }
+
+    /// FNV-1a over (lo, extent, procs): lets a client verify that a warm
+    /// answer is bit-identical to the cold compile without shipping the
+    /// full table over the wire.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+fn digest_table(t: &PlacementTable) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut h = FNV_OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    for &c in &t.lo().0 {
+        eat(&c.to_le_bytes());
+    }
+    for &c in &t.extent().0 {
+        eat(&c.to_le_bytes());
+    }
+    for p in t.procs() {
+        eat(&(p.node as u64).to_le_bytes());
+        eat(&[p.kind as u8]);
+        eat(&(p.local as u64).to_le_bytes());
+    }
+    h
+}
+
+/// Counter snapshot shared by `mapple exec --json`, the serve `stats`
+/// op, and the load driver's report. `misses = compiles + coalesced`:
+/// every miss either led a compile or waited on one.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Requests answered from a ready entry.
+    pub hits: u64,
+    /// Requests that found no ready entry.
+    pub misses: u64,
+    /// Misses that coalesced onto another request's in-flight compile.
+    pub coalesced: u64,
+    /// Plan compiles actually executed (single-flight leaders).
+    pub compiles: u64,
+    /// Entries dropped by the byte-budget LRU.
+    pub evictions: u64,
+    /// Entries dropped by mapper/machine invalidation.
+    pub invalidations: u64,
+    /// Entries resident right now.
+    pub entries: u64,
+    /// Estimated resident bytes right now.
+    pub bytes: u64,
+}
+
+impl CacheStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("coalesced", Json::Num(self.coalesced as f64)),
+            ("compiles", Json::Num(self.compiles as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("invalidations", Json::Num(self.invalidations as f64)),
+            ("entries", Json::Num(self.entries as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    compiles: AtomicU64,
+    evictions: AtomicU64,
+    invalidations: AtomicU64,
+}
+
+/// Owned form of the full key — flight registry and eviction bookkeeping
+/// only; the probe path never builds one.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    mapper: u64,
+    machine: MachineKey,
+    task: String,
+    ispace: Tuple,
+}
+
+struct Entry {
+    plan: Arc<CachedPlan>,
+    /// Last-access tick; relaxed stores under the shard's *read* lock
+    /// keep the hit path free of exclusive locking.
+    stamp: AtomicU64,
+}
+
+type IspaceMap = HashMap<Tuple, Entry>;
+type TaskMap = HashMap<String, IspaceMap>;
+type MachineMap = HashMap<MachineKey, TaskMap>;
+
+#[derive(Default)]
+struct ShardMap {
+    map: HashMap<u64, MachineMap>,
+    bytes: usize,
+    entries: usize,
+}
+
+/// One in-flight compile; waiters block on the condvar until the leader
+/// publishes a result (or error).
+#[derive(Default)]
+struct Flight {
+    slot: Mutex<Option<Result<Arc<CachedPlan>, String>>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn wait(&self) -> Result<Arc<CachedPlan>, String> {
+        let mut slot = self.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = self.cv.wait(slot).unwrap();
+        }
+        slot.as_ref().unwrap().clone()
+    }
+
+    fn complete(&self, result: Result<Arc<CachedPlan>, String>) {
+        *self.slot.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+}
+
+struct Shard {
+    inner: RwLock<ShardMap>,
+    flights: Mutex<HashMap<PlanKey, Arc<Flight>>>,
+}
+
+// Lock-order discipline (deadlock freedom): `flights` may be held while
+// taking `inner` in read mode (the double-check probe); no path holds
+// `inner` while taking `flights`. Compiles run with neither held.
+impl Shard {
+    fn new() -> Shard {
+        Shard { inner: RwLock::new(ShardMap::default()), flights: Mutex::new(HashMap::new()) }
+    }
+
+    /// Allocation-free hit probe; bumps the LRU stamp on success.
+    fn probe(
+        &self,
+        mapper: u64,
+        machine: &MachineKey,
+        task: &str,
+        ispace: &Tuple,
+        tick: &AtomicU64,
+    ) -> Option<Arc<CachedPlan>> {
+        let g = self.inner.read().unwrap();
+        let e = g.map.get(&mapper)?.get(machine)?.get(task)?.get(ispace)?;
+        e.stamp.store(tick.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+        Some(Arc::clone(&e.plan))
+    }
+
+    /// Insert under the write lock, then evict least-recently-stamped
+    /// entries while over budget. Returns the number evicted.
+    fn insert(&self, key: &PlanKey, plan: Arc<CachedPlan>, stamp: u64, budget: usize) -> u64 {
+        let mut g = self.inner.write().unwrap();
+        let slot = g
+            .map
+            .entry(key.mapper)
+            .or_default()
+            .entry(key.machine.clone())
+            .or_default()
+            .entry(key.task.clone())
+            .or_default()
+            .entry(key.ispace.clone());
+        let added = plan.bytes;
+        let replaced = match slot {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                let old = o.get().plan.bytes;
+                o.insert(Entry { plan, stamp: AtomicU64::new(stamp) });
+                Some(old)
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(Entry { plan, stamp: AtomicU64::new(stamp) });
+                None
+            }
+        };
+        g.bytes += added;
+        if let Some(old) = replaced {
+            g.bytes = g.bytes.saturating_sub(old);
+        } else {
+            g.entries += 1;
+        }
+        let mut evicted = 0;
+        while g.bytes > budget && g.entries > 1 && evict_lru(&mut g) {
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+/// Remove the minimum-stamp entry from a shard map. The entry just
+/// inserted carries the freshest stamp, so it is selected last; callers
+/// stop at `entries == 1`, so it is never selected at all.
+fn evict_lru(g: &mut ShardMap) -> bool {
+    let mut best = u64::MAX;
+    let mut victim: Option<(u64, MachineKey, String, Tuple)> = None;
+    for (mapper, machines) in &g.map {
+        for (mk, tasks) in machines {
+            for (task, ispaces) in tasks {
+                for (isp, e) in ispaces {
+                    let s = e.stamp.load(Ordering::Relaxed);
+                    if s < best {
+                        best = s;
+                        victim = Some((*mapper, mk.clone(), task.clone(), isp.clone()));
+                    }
+                }
+            }
+        }
+    }
+    let Some((mapper, mk, task, isp)) = victim else {
+        return false;
+    };
+    remove_entry(g, mapper, &mk, &task, &isp).is_some()
+}
+
+fn remove_entry(
+    g: &mut ShardMap,
+    mapper: u64,
+    machine: &MachineKey,
+    task: &str,
+    ispace: &Tuple,
+) -> Option<Arc<CachedPlan>> {
+    let machines = g.map.get_mut(&mapper)?;
+    let tasks = machines.get_mut(machine)?;
+    let ispaces = tasks.get_mut(task)?;
+    let e = ispaces.remove(ispace)?;
+    if ispaces.is_empty() {
+        tasks.remove(task);
+    }
+    if tasks.is_empty() {
+        machines.remove(machine);
+    }
+    if machines.is_empty() {
+        g.map.remove(&mapper);
+    }
+    g.bytes = g.bytes.saturating_sub(e.plan.bytes);
+    g.entries -= 1;
+    Some(e.plan)
+}
+
+fn subtree_size(tasks: &TaskMap) -> (u64, usize) {
+    let mut n = 0u64;
+    let mut bytes = 0usize;
+    for ispaces in tasks.values() {
+        n += ispaces.len() as u64;
+        bytes += ispaces.values().map(|e| e.plan.bytes).sum::<usize>();
+    }
+    (n, bytes)
+}
+
+enum FlightRole {
+    Leader(Arc<Flight>),
+    Waiter(Arc<Flight>),
+}
+
+/// The cache itself. Construct with [`PlanCache::new`] or use the
+/// process-global instance via [`PlanCache::global`].
+pub struct PlanCache {
+    shards: Vec<Shard>,
+    shard_budget: usize,
+    tick: AtomicU64,
+    counters: Counters,
+}
+
+impl PlanCache {
+    pub fn new(shards: usize, max_bytes: usize) -> PlanCache {
+        let n = shards.max(1);
+        PlanCache {
+            shards: (0..n).map(|_| Shard::new()).collect(),
+            shard_budget: (max_bytes / n).max(1),
+            tick: AtomicU64::new(0),
+            counters: Counters::default(),
+        }
+    }
+
+    /// The process-global cache every default-constructed `MappleMapper`
+    /// routes through (16 shards, 256 MiB).
+    pub fn global() -> Arc<PlanCache> {
+        static GLOBAL: OnceLock<Arc<PlanCache>> = OnceLock::new();
+        let cache = GLOBAL.get_or_init(|| {
+            Arc::new(PlanCache::new(DEFAULT_SHARDS, DEFAULT_MAX_BYTES))
+        });
+        Arc::clone(cache)
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_for(&self, mapper: u64, machine: &MachineKey, task: &str, ispace: &Tuple) -> &Shard {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        mapper.hash(&mut h);
+        machine.hash(&mut h);
+        task.hash(&mut h);
+        ispace.hash(&mut h);
+        &self.shards[(h.finish() % self.shards.len() as u64) as usize]
+    }
+
+    /// Resolve a plan: hit, coalesce onto an in-flight compile, or lead
+    /// one. Returns `(plan, was_hit)`. The compute closure runs with no
+    /// cache locks held; its error propagates to every coalesced waiter
+    /// and is not cached.
+    pub fn get_or_compute<F>(
+        &self,
+        mapper: u64,
+        machine: &MachineKey,
+        task: &str,
+        ispace: &Tuple,
+        compute: F,
+    ) -> Result<(Arc<CachedPlan>, bool), String>
+    where
+        F: FnOnce() -> Result<PlacementTable, String>,
+    {
+        let shard = self.shard_for(mapper, machine, task, ispace);
+        if let Some(plan) = shard.probe(mapper, machine, task, ispace, &self.tick) {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((plan, true));
+        }
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        let key = PlanKey {
+            mapper,
+            machine: machine.clone(),
+            task: task.to_string(),
+            ispace: ispace.clone(),
+        };
+        let role = {
+            let mut flights = shard.flights.lock().unwrap();
+            // Double-check under the flight lock: a leader may have
+            // published between our miss and here. Already counted as a
+            // miss, so book it as coalesced — it rode on that leader's
+            // work — keeping `misses == compiles + coalesced` exact.
+            if let Some(plan) = shard.probe(mapper, machine, task, ispace, &self.tick) {
+                self.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+                return Ok((plan, true));
+            }
+            match flights.get(&key) {
+                Some(f) => FlightRole::Waiter(Arc::clone(f)),
+                None => {
+                    let f = Arc::new(Flight::default());
+                    flights.insert(key.clone(), Arc::clone(&f));
+                    FlightRole::Leader(f)
+                }
+            }
+        };
+        match role {
+            FlightRole::Waiter(f) => {
+                self.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+                f.wait().map(|plan| (plan, false))
+            }
+            FlightRole::Leader(f) => {
+                self.counters.compiles.fetch_add(1, Ordering::Relaxed);
+                let result = compute().map(|table| {
+                    let plan = Arc::new(CachedPlan::new(table, entry_overhead(&key)));
+                    let stamp = self.tick.fetch_add(1, Ordering::Relaxed);
+                    let evicted = shard.insert(&key, Arc::clone(&plan), stamp, self.shard_budget);
+                    self.counters.evictions.fetch_add(evicted, Ordering::Relaxed);
+                    plan
+                });
+                // Publish order: the table is already inserted, so late
+                // arrivals hit the map; flight waiters get the result
+                // directly. Remove the flight before completing so no new
+                // waiter can register on a finished flight.
+                shard.flights.lock().unwrap().remove(&key);
+                f.complete(result.clone());
+                result.map(|plan| (plan, false))
+            }
+        }
+    }
+
+    /// Drop every entry owned by one mapper id (its `Drop` calls this).
+    pub fn invalidate_mapper(&self, mapper: u64) {
+        let mut dropped = 0u64;
+        for shard in &self.shards {
+            let mut g = shard.inner.write().unwrap();
+            if let Some(machines) = g.map.remove(&mapper) {
+                for tasks in machines.values() {
+                    let (n, bytes) = subtree_size(tasks);
+                    dropped += n;
+                    g.bytes = g.bytes.saturating_sub(bytes);
+                    g.entries -= n as usize;
+                }
+            }
+        }
+        self.counters.invalidations.fetch_add(dropped, Ordering::Relaxed);
+    }
+
+    /// Drop exactly the entries bound to one machine description (across
+    /// all mappers and shards); everything else survives.
+    pub fn invalidate_machine(&self, machine: &MachineKey) {
+        let mut dropped = 0u64;
+        for shard in &self.shards {
+            let mut g = shard.inner.write().unwrap();
+            let mut freed_bytes = 0usize;
+            let mut freed_entries = 0usize;
+            for machines in g.map.values_mut() {
+                if let Some(tasks) = machines.remove(machine) {
+                    let (n, bytes) = subtree_size(&tasks);
+                    dropped += n;
+                    freed_bytes += bytes;
+                    freed_entries += n as usize;
+                }
+            }
+            g.map.retain(|_, machines| !machines.is_empty());
+            g.bytes = g.bytes.saturating_sub(freed_bytes);
+            g.entries -= freed_entries;
+        }
+        self.counters.invalidations.fetch_add(dropped, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut entries = 0u64;
+        let mut bytes = 0u64;
+        for shard in &self.shards {
+            let g = shard.inner.read().unwrap();
+            entries += g.entries as u64;
+            bytes += g.bytes as u64;
+        }
+        CacheStats {
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            coalesced: self.counters.coalesced.load(Ordering::Relaxed),
+            compiles: self.counters.compiles.load(Ordering::Relaxed),
+            evictions: self.counters.evictions.load(Ordering::Relaxed),
+            invalidations: self.counters.invalidations.load(Ordering::Relaxed),
+            entries,
+            bytes,
+        }
+    }
+}
+
+/// Coarse per-entry footprint beyond the table itself: owned key copies
+/// plus nested-map node overhead.
+fn entry_overhead(key: &PlanKey) -> usize {
+    const FIXED: usize = 160;
+    FIXED + key.task.len() + 8 * key.ispace.dim() + std::mem::size_of::<MachineKey>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::topology::MachineDesc;
+    use crate::machine::ProcKind;
+    use std::sync::atomic::AtomicUsize;
+
+    fn table(extent: &[i64], node: usize) -> PlacementTable {
+        let n: i64 = extent.iter().product();
+        let procs = (0..n)
+            .map(|i| ProcId { node, kind: ProcKind::Gpu, local: i as usize % 4 })
+            .collect();
+        PlacementTable::from_extent(Tuple(extent.to_vec()), procs)
+    }
+
+    #[test]
+    fn hit_after_miss_returns_same_arc() {
+        let cache = PlanCache::new(4, 1 << 20);
+        let mk = MachineDesc::paper_testbed(2).cache_key();
+        let isp = Tuple(vec![4, 4]);
+        let (a, hit_a) =
+            cache.get_or_compute(1, &mk, "t", &isp, || Ok(table(&[4, 4], 0))).unwrap();
+        let (b, hit_b) =
+            cache.get_or_compute(1, &mk, "t", &isp, || panic!("must not recompile")).unwrap();
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.compiles), (1, 1, 1));
+        assert_eq!(s.entries, 1);
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_alias() {
+        let cache = PlanCache::new(4, 1 << 20);
+        let mk2 = MachineDesc::paper_testbed(2).cache_key();
+        let mk4 = MachineDesc::paper_testbed(4).cache_key();
+        let isp = Tuple(vec![2, 2]);
+        cache.get_or_compute(1, &mk2, "t", &isp, || Ok(table(&[2, 2], 0))).unwrap();
+        let (p, hit) = cache.get_or_compute(1, &mk4, "t", &isp, || Ok(table(&[2, 2], 1))).unwrap();
+        assert!(!hit, "different machine key compiles fresh");
+        assert_eq!(p.table().procs()[0].node, 1);
+        // Same machine, different task / ispace / mapper all miss too.
+        assert!(!cache.get_or_compute(1, &mk2, "u", &isp, || Ok(table(&[2, 2], 0))).unwrap().1);
+        let isp3 = Tuple(vec![3, 3]);
+        assert!(!cache.get_or_compute(1, &mk2, "t", &isp3, || Ok(table(&[3, 3], 0))).unwrap().1);
+        assert!(!cache.get_or_compute(2, &mk2, "t", &isp, || Ok(table(&[2, 2], 0))).unwrap().1);
+    }
+
+    #[test]
+    fn errors_propagate_and_are_not_cached() {
+        let cache = PlanCache::new(2, 1 << 20);
+        let mk = MachineDesc::paper_testbed(2).cache_key();
+        let isp = Tuple(vec![1]);
+        let err = cache
+            .get_or_compute(1, &mk, "t", &isp, || Err("boom".to_string()))
+            .unwrap_err();
+        assert_eq!(err, "boom");
+        // The failure was not cached: the next request compiles.
+        let (_, hit) = cache.get_or_compute(1, &mk, "t", &isp, || Ok(table(&[1], 0))).unwrap();
+        assert!(!hit);
+        assert_eq!(cache.stats().compiles, 2);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_first() {
+        // Single shard so the budget applies to everything we insert.
+        let cache = PlanCache::new(1, 1);
+        let mk = MachineDesc::paper_testbed(2).cache_key();
+        let a = Tuple(vec![2, 2]);
+        let b = Tuple(vec![4, 4]);
+        let c = Tuple(vec![8, 8]);
+        cache.get_or_compute(1, &mk, "t", &a, || Ok(table(&[2, 2], 0))).unwrap();
+        cache.get_or_compute(1, &mk, "t", &b, || Ok(table(&[4, 4], 0))).unwrap();
+        // Touch `a` so `b` is the LRU entry.
+        assert!(cache.get_or_compute(1, &mk, "t", &a, || unreachable!()).unwrap().1);
+        cache.get_or_compute(1, &mk, "t", &c, || Ok(table(&[8, 8], 0))).unwrap();
+        let s = cache.stats();
+        assert!(s.evictions > 0, "1-byte budget must evict");
+        // The newest entry always survives its own insert.
+        assert!(cache.get_or_compute(1, &mk, "t", &c, || unreachable!()).unwrap().1);
+    }
+
+    #[test]
+    fn invalidate_machine_is_incremental() {
+        let cache = PlanCache::new(4, 1 << 20);
+        let mk2 = MachineDesc::paper_testbed(2).cache_key();
+        let mk4 = MachineDesc::paper_testbed(4).cache_key();
+        let isp = Tuple(vec![2, 2]);
+        cache.get_or_compute(1, &mk2, "t", &isp, || Ok(table(&[2, 2], 0))).unwrap();
+        let (kept, _) = cache.get_or_compute(1, &mk4, "t", &isp, || Ok(table(&[2, 2], 1))).unwrap();
+        cache.invalidate_machine(&mk2);
+        assert_eq!(cache.stats().invalidations, 1, "only mk2's entry dropped");
+        // mk4's entry survives (same Arc), mk2's is gone (recompiles).
+        let (still, hit) = cache.get_or_compute(1, &mk4, "t", &isp, || unreachable!()).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&kept, &still));
+        let (_, hit2) = cache.get_or_compute(1, &mk2, "t", &isp, || Ok(table(&[2, 2], 0))).unwrap();
+        assert!(!hit2);
+    }
+
+    #[test]
+    fn invalidate_mapper_drops_only_that_mapper() {
+        let cache = PlanCache::new(4, 1 << 20);
+        let mk = MachineDesc::paper_testbed(2).cache_key();
+        let isp = Tuple(vec![2, 2]);
+        cache.get_or_compute(7, &mk, "t", &isp, || Ok(table(&[2, 2], 0))).unwrap();
+        cache.get_or_compute(8, &mk, "t", &isp, || Ok(table(&[2, 2], 0))).unwrap();
+        cache.invalidate_mapper(7);
+        assert!(cache.get_or_compute(8, &mk, "t", &isp, || unreachable!()).unwrap().1);
+        assert!(!cache.get_or_compute(7, &mk, "t", &isp, || Ok(table(&[2, 2], 0))).unwrap().1);
+        assert_eq!(cache.stats().invalidations, 1);
+    }
+
+    #[test]
+    fn single_flight_coalesces_concurrent_compiles() {
+        let cache = PlanCache::new(4, 1 << 20);
+        let mk = MachineDesc::paper_testbed(2).cache_key();
+        let isp = Tuple(vec![4, 4]);
+        let compiles = AtomicUsize::new(0);
+        let barrier = std::sync::Barrier::new(8);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        barrier.wait();
+                        cache
+                            .get_or_compute(1, &mk, "t", &isp, || {
+                                compiles.fetch_add(1, Ordering::SeqCst);
+                                std::thread::sleep(std::time::Duration::from_millis(30));
+                                Ok(table(&[4, 4], 0))
+                            })
+                            .unwrap()
+                            .0
+                    })
+                })
+                .collect();
+            let plans: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for p in &plans[1..] {
+                assert!(Arc::ptr_eq(&plans[0], p), "all callers share one plan");
+            }
+        });
+        assert_eq!(compiles.load(Ordering::SeqCst), 1, "compiled exactly once");
+        let s = cache.stats();
+        assert_eq!(s.compiles, 1);
+        assert_eq!(s.hits + s.coalesced + s.compiles, 8, "every request accounted");
+    }
+
+    #[test]
+    fn digest_is_stable_and_discriminating() {
+        let t1 = table(&[4, 4], 0);
+        let t2 = table(&[4, 4], 0);
+        let t3 = table(&[4, 4], 1);
+        assert_eq!(digest_table(&t1), digest_table(&t2));
+        assert_ne!(digest_table(&t1), digest_table(&t3));
+    }
+}

@@ -1,0 +1,539 @@
+//! Mapping-as-a-service: the long-running `mapple serve` daemon.
+//!
+//! Request flow (see ARCHITECTURE.md for the full diagram):
+//!
+//! ```text
+//! TCP frame → Request::parse → spec cache (app, flavor, machine)
+//!           → PlanCache shard → hit | single-flight compile
+//!           → constant-size response (points + digest)
+//! ```
+//!
+//! Two caches cooperate. The **spec cache** holds one compiled
+//! [`MappleMapper`] per `(app, flavor, nodes, gpus)` — requests naming
+//! the same mapper share an instance, so their plan lookups land on the
+//! same [`cache::PlanCache`] namespace and coalesce in its single-flight
+//! layer. The **plan cache** is the same sharded store every in-process
+//! path (pipeline, sim, exec, tune) routes through; the daemon simply
+//! owns a private instance sized by `--cache-bytes`/`--shards`.
+//!
+//! Concurrency model: one OS thread per connection (bounded by
+//! `--threads`), blocking I/O, `TCP_NODELAY`. Clients may pipeline;
+//! responses are written strictly in request order per connection.
+
+pub mod cache;
+pub mod proto;
+
+use crate::apps::mappers;
+use crate::machine::point::Tuple;
+use crate::machine::topology::MachineDesc;
+use crate::mapper::MappleMapper;
+use crate::mapple::program::MapperSpec;
+use crate::serve::cache::{CachedPlan, PlanCache};
+use crate::serve::proto::{digest_hex, PlanRequest, Request};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+/// Daemon configuration (`mapple serve` flags map onto this 1:1).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address; port 0 picks an ephemeral port (tests, in-process
+    /// load drivers).
+    pub addr: String,
+    /// Maximum concurrent connection threads.
+    pub threads: usize,
+    /// Plan-cache shard count.
+    pub shards: usize,
+    /// Plan-cache byte budget (split evenly across shards).
+    pub cache_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7517".to_string(),
+            threads: 8,
+            shards: cache::DEFAULT_SHARDS,
+            cache_bytes: cache::DEFAULT_MAX_BYTES,
+        }
+    }
+}
+
+/// The canonical machine a `(nodes, gpus)` request pair denotes: the
+/// paper testbed shape with the GPU count overridden. Canonicalizing
+/// here means equal request pairs always produce bit-identical
+/// `MachineDesc`s and therefore equal `MachineKey`s.
+pub fn machine_for(nodes: usize, gpus: usize) -> MachineDesc {
+    let mut d = MachineDesc::paper_testbed(nodes.max(1));
+    d.gpus_per_node = gpus.max(1);
+    d
+}
+
+type FlavorMap = HashMap<String, Arc<MappleMapper>>;
+type AppMap = HashMap<String, FlavorMap>;
+/// `(nodes, gpus)` → app → flavor → shared mapper. Probed with borrowed
+/// keys — the warm path allocates nothing here.
+type ShapeMap = HashMap<(usize, usize), AppMap>;
+
+type SpecKey = (String, String, usize, usize);
+
+/// One in-flight spec compile (single-flight, mirroring the plan
+/// cache's flight objects but over whole mappers).
+#[derive(Default)]
+struct SpecFlight {
+    slot: Mutex<Option<Result<Arc<MappleMapper>, String>>>,
+    cv: Condvar,
+}
+
+impl SpecFlight {
+    fn wait(&self) -> Result<Arc<MappleMapper>, String> {
+        let mut slot = self.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = self.cv.wait(slot).unwrap();
+        }
+        slot.as_ref().unwrap().clone()
+    }
+
+    fn complete(&self, result: Result<Arc<MappleMapper>, String>) {
+        *self.slot.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+}
+
+/// Shared daemon state; also usable in-process (tests, `serve_load`'s
+/// self-hosted mode goes through real sockets instead).
+pub struct ServerState {
+    cache: Arc<PlanCache>,
+    specs: RwLock<ShapeMap>,
+    spec_flights: Mutex<HashMap<SpecKey, Arc<SpecFlight>>>,
+    requests: AtomicU64,
+}
+
+impl ServerState {
+    pub fn new(shards: usize, cache_bytes: usize) -> ServerState {
+        ServerState {
+            cache: Arc::new(PlanCache::new(shards, cache_bytes)),
+            specs: RwLock::new(HashMap::new()),
+            spec_flights: Mutex::new(HashMap::new()),
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    fn probe_spec(
+        &self,
+        app: &str,
+        flavor: &str,
+        nodes: usize,
+        gpus: usize,
+    ) -> Option<Arc<MappleMapper>> {
+        let g = self.specs.read().unwrap();
+        let m = g.get(&(nodes, gpus))?.get(app)?.get(flavor)?;
+        Some(Arc::clone(m))
+    }
+
+    fn compile_spec(
+        &self,
+        app: &str,
+        flavor: &str,
+        nodes: usize,
+        gpus: usize,
+    ) -> Result<Arc<MappleMapper>, String> {
+        let src = match flavor {
+            "mapple" => mappers::mapple_source(app),
+            "tuned" => mappers::tuned_source(app),
+            other => {
+                return Err(format!(
+                    "unknown mapper flavor '{other}' (serve supports: mapple, tuned)"
+                ))
+            }
+        }
+        .ok_or_else(|| format!("unknown app '{app}'"))?;
+        let desc = machine_for(nodes, gpus);
+        let spec = MapperSpec::compile(src, &desc)?;
+        Ok(Arc::new(MappleMapper::with_cache(spec, Arc::clone(&self.cache))))
+    }
+
+    /// The shared mapper for a request's `(app, flavor, nodes, gpus)`:
+    /// warm probe under a read lock, single-flight compile on miss.
+    fn mapper_for(
+        &self,
+        app: &str,
+        flavor: &str,
+        nodes: usize,
+        gpus: usize,
+    ) -> Result<Arc<MappleMapper>, String> {
+        if let Some(m) = self.probe_spec(app, flavor, nodes, gpus) {
+            return Ok(m);
+        }
+        let key: SpecKey = (app.to_string(), flavor.to_string(), nodes, gpus);
+        let role = {
+            let mut flights = self.spec_flights.lock().unwrap();
+            if let Some(m) = self.probe_spec(app, flavor, nodes, gpus) {
+                return Ok(m);
+            }
+            match flights.get(&key) {
+                Some(f) => Err(Arc::clone(f)),
+                None => {
+                    let f = Arc::new(SpecFlight::default());
+                    flights.insert(key.clone(), Arc::clone(&f));
+                    Ok(f)
+                }
+            }
+        };
+        match role {
+            Err(flight) => flight.wait(),
+            Ok(flight) => {
+                let result = self.compile_spec(app, flavor, nodes, gpus);
+                if let Ok(m) = &result {
+                    let mut g = self.specs.write().unwrap();
+                    g.entry((nodes, gpus))
+                        .or_default()
+                        .entry(app.to_string())
+                        .or_default()
+                        .insert(flavor.to_string(), Arc::clone(m));
+                }
+                self.spec_flights.lock().unwrap().remove(&key);
+                flight.complete(result.clone());
+                result
+            }
+        }
+    }
+
+    /// Resolve a plan request end to end. Returns the cached plan and
+    /// whether it was served warm.
+    pub fn handle_plan(&self, req: PlanRequest) -> Result<(Arc<CachedPlan>, bool), String> {
+        let mapper = self.mapper_for(&req.app, &req.flavor, req.nodes, req.gpus)?;
+        let ispace = Tuple(req.ispace);
+        mapper.cached_plan_hit(&req.task, &ispace)
+    }
+
+    fn spec_count(&self) -> usize {
+        self.specs.read().unwrap().values().flat_map(|a| a.values()).map(|f| f.len()).sum()
+    }
+
+    /// Stats document shared with `mapple exec --json` (same
+    /// `CacheStats` shape under `"plan_cache"`).
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("specs", Json::Num(self.spec_count() as f64)),
+            ("plan_cache", self.cache.stats().to_json()),
+        ])
+    }
+
+    /// Answer one decoded request. The bool asks the caller to shut the
+    /// daemon down after replying.
+    pub fn respond(&self, req: Request) -> (Json, bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        match req {
+            Request::Plan(p) => {
+                let want_table = p.table;
+                match self.handle_plan(p) {
+                    Ok((plan, hit)) => {
+                        let mut fields = vec![
+                            ("ok", Json::Bool(true)),
+                            ("cached", Json::Bool(hit)),
+                            ("points", Json::Num(plan.table().len() as f64)),
+                            ("digest", Json::Str(digest_hex(plan.digest()))),
+                        ];
+                        if want_table {
+                            let procs = plan.table().procs();
+                            fields.push((
+                                "table",
+                                Json::arr(procs.iter().map(|p| Json::Str(p.to_string()))),
+                            ));
+                        }
+                        (Json::obj(fields), false)
+                    }
+                    Err(e) => (error_json(&e), false),
+                }
+            }
+            Request::Invalidate { nodes, gpus } => {
+                let key = machine_for(nodes, gpus).cache_key();
+                self.cache.invalidate_machine(&key);
+                (Json::obj(vec![("ok", Json::Bool(true))]), false)
+            }
+            Request::Stats => (self.stats_json(), false),
+            Request::Ping => (Json::obj(vec![("ok", Json::Bool(true))]), false),
+            Request::Shutdown => {
+                (Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]), true)
+            }
+        }
+    }
+}
+
+fn error_json(e: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(e.to_string()))])
+}
+
+/// A running daemon. Dropping does not stop it; use [`Server::shutdown`]
+/// or send the `shutdown` op, then [`Server::join`].
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &Arc<ServerState> {
+        &self.state
+    }
+
+    /// Ask the accept loop to stop (idempotent).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Block until the accept loop exits (after [`Server::shutdown`] or
+    /// a client `shutdown` op).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind and start serving in background threads.
+pub fn serve(opts: &ServeOptions) -> Result<Server, String> {
+    let listener =
+        TcpListener::bind(&opts.addr).map_err(|e| format!("bind {}: {e}", opts.addr))?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    let state = Arc::new(ServerState::new(opts.shards, opts.cache_bytes));
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept = {
+        let state = Arc::clone(&state);
+        let stop = Arc::clone(&stop);
+        let threads = opts.threads.max(1);
+        std::thread::spawn(move || accept_loop(listener, state, stop, threads, addr))
+    };
+    Ok(Server { addr, state, stop, accept: Some(accept) })
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+    threads: usize,
+    addr: SocketAddr,
+) {
+    // Connection-thread cap: a count + condvar pair acting as a
+    // semaphore (std has no Semaphore).
+    let active = Arc::new((Mutex::new(0usize), Condvar::new()));
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        {
+            let (lock, cv) = &*active;
+            let mut n = lock.lock().unwrap();
+            while *n >= threads {
+                n = cv.wait(n).unwrap();
+            }
+            *n += 1;
+        }
+        let state = Arc::clone(&state);
+        let stop = Arc::clone(&stop);
+        let active = Arc::clone(&active);
+        std::thread::spawn(move || {
+            connection(stream, &state, &stop, addr);
+            let (lock, cv) = &*active;
+            *lock.lock().unwrap() -= 1;
+            cv.notify_one();
+        });
+    }
+}
+
+fn connection(stream: TcpStream, state: &ServerState, stop: &AtomicBool, addr: SocketAddr) {
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match proto::read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            Ok(None) | Err(_) => break,
+        };
+        let (resp, bye) = match Request::parse(&frame) {
+            Ok(req) => state.respond(req),
+            Err(e) => (error_json(&e), false),
+        };
+        if proto::write_frame(&mut writer, resp.pretty().as_bytes()).is_err() {
+            break;
+        }
+        if std::io::Write::flush(&mut writer).is_err() {
+            break;
+        }
+        if bye {
+            stop.store(true, Ordering::SeqCst);
+            // Unblock the accept loop so it observes the stop flag.
+            let _ = TcpStream::connect(addr);
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::proto::{read_frame, write_frame};
+    use std::io::Write;
+
+    struct Client {
+        reader: BufReader<TcpStream>,
+        writer: BufWriter<TcpStream>,
+    }
+
+    impl Client {
+        fn connect(addr: SocketAddr) -> Client {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let reader = BufReader::new(stream.try_clone().unwrap());
+            Client { reader, writer: BufWriter::new(stream) }
+        }
+
+        fn call(&mut self, req: &Request) -> Json {
+            write_frame(&mut self.writer, req.to_json().pretty().as_bytes()).unwrap();
+            self.writer.flush().unwrap();
+            let frame = read_frame(&mut self.reader).unwrap().unwrap();
+            Json::parse(std::str::from_utf8(&frame).unwrap()).unwrap()
+        }
+    }
+
+    fn plan_req(task: &str, ispace: &[i64], table: bool) -> Request {
+        Request::Plan(PlanRequest {
+            app: "cannon".to_string(),
+            flavor: "mapple".to_string(),
+            task: task.to_string(),
+            ispace: ispace.to_vec(),
+            nodes: 2,
+            gpus: 4,
+            table,
+        })
+    }
+
+    fn test_server() -> Server {
+        let opts = ServeOptions { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+        serve(&opts).unwrap()
+    }
+
+    fn ok(j: &Json) -> bool {
+        j.get("ok") == Some(&Json::Bool(true))
+    }
+
+    #[test]
+    fn end_to_end_plan_cache_and_shutdown() {
+        let server = test_server();
+        let mut c = Client::connect(server.local_addr());
+
+        assert!(ok(&c.call(&Request::Ping)));
+
+        let cold = c.call(&plan_req("mm_step_0", &[4, 4], false));
+        assert!(ok(&cold), "{cold:?}");
+        assert_eq!(cold.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(cold.get("points").and_then(|p| p.as_f64()), Some(16.0));
+        let digest = cold.get("digest").and_then(|d| d.as_str()).unwrap().to_string();
+
+        let warm = c.call(&plan_req("mm_step_0", &[4, 4], false));
+        assert_eq!(warm.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(warm.get("digest").and_then(|d| d.as_str()), Some(digest.as_str()));
+
+        // A second connection shares the warmed cache.
+        let mut c2 = Client::connect(server.local_addr());
+        let other = c2.call(&plan_req("mm_step_0", &[4, 4], true));
+        assert_eq!(other.get("cached"), Some(&Json::Bool(true)));
+        match other.get("table") {
+            Some(Json::Arr(xs)) => assert_eq!(xs.len(), 16),
+            other => panic!("expected table array, got {other:?}"),
+        }
+
+        let stats = c.call(&Request::Stats);
+        assert!(ok(&stats));
+        let hits = stats.get("plan_cache").and_then(|p| p.get("hits")).and_then(|h| h.as_f64());
+        assert!(hits.unwrap() >= 2.0, "{stats:?}");
+
+        // Machine invalidation drops the plan; the next request recompiles
+        // to the same digest.
+        assert!(ok(&c.call(&Request::Invalidate { nodes: 2, gpus: 4 })));
+        let recompiled = c.call(&plan_req("mm_step_0", &[4, 4], false));
+        assert_eq!(recompiled.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(recompiled.get("digest").and_then(|d| d.as_str()), Some(digest.as_str()));
+
+        let bye = c.call(&Request::Shutdown);
+        assert_eq!(bye.get("bye"), Some(&Json::Bool(true)));
+        server.join();
+    }
+
+    #[test]
+    fn errors_are_reported_not_fatal() {
+        let server = test_server();
+        let mut c = Client::connect(server.local_addr());
+
+        let mut bad = plan_req("mm_step_0", &[4, 4], false);
+        if let Request::Plan(p) = &mut bad {
+            p.app = "no_such_app".to_string();
+        }
+        let resp = c.call(&bad);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get("error").and_then(|e| e.as_str()).unwrap().contains("unknown app"));
+
+        // Unknown flavor, bad task, empty domain: errors, connection stays up.
+        let mut bad2 = plan_req("mm_step_0", &[4, 4], false);
+        if let Request::Plan(p) = &mut bad2 {
+            p.flavor = "expert".to_string();
+        }
+        assert_eq!(c.call(&bad2).get("ok"), Some(&Json::Bool(false)));
+        let resp = c.call(&plan_req("mm_step_0", &[0, 0], false));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+
+        // Malformed JSON frame: error response, then normal service.
+        write_frame(&mut c.writer, b"not json").unwrap();
+        c.writer.flush().unwrap();
+        let frame = read_frame(&mut c.reader).unwrap().unwrap();
+        let resp = Json::parse(std::str::from_utf8(&frame).unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(ok(&c.call(&Request::Ping)));
+
+        server.shutdown();
+        server.join();
+    }
+
+    #[test]
+    fn pipelined_requests_answered_in_order() {
+        let server = test_server();
+        let mut c = Client::connect(server.local_addr());
+        // Issue a window of distinct-shape requests without reading, then
+        // drain: responses must arrive in request order.
+        let shapes: Vec<Vec<i64>> = (1..=8i64).map(|n| vec![n, n]).collect();
+        for s in &shapes {
+            let req = plan_req("mm_step_0", s, false);
+            write_frame(&mut c.writer, req.to_json().pretty().as_bytes()).unwrap();
+        }
+        c.writer.flush().unwrap();
+        for s in &shapes {
+            let frame = read_frame(&mut c.reader).unwrap().unwrap();
+            let resp = Json::parse(std::str::from_utf8(&frame).unwrap()).unwrap();
+            assert!(ok(&resp), "{resp:?}");
+            let want = (s[0] * s[1]) as f64;
+            assert_eq!(resp.get("points").and_then(|p| p.as_f64()), Some(want));
+        }
+        server.shutdown();
+        server.join();
+    }
+}

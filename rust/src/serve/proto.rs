@@ -1,0 +1,213 @@
+//! Wire protocol for `mapple serve`: length-prefixed JSON frames.
+//!
+//! Each frame is a big-endian `u32` byte length followed by a UTF-8 JSON
+//! body. Requests carry an `"op"` discriminator; responses always carry
+//! `"ok"`. Clients may pipeline: the server answers frames strictly in
+//! arrival order per connection, so a client can keep a window of
+//! requests in flight and match responses positionally (this is what
+//! lets a handful of connections sustain >100k plans/sec over loopback
+//! instead of being round-trip bound).
+//!
+//! Plan responses are constant-size by default — point count plus the
+//! cached table's FNV digest (hex string: u64 digests do not survive the
+//! f64 JSON number type) — so the hit path never serializes a table.
+//! Pass `"table": true` to get the full placement as `"n0:GPU1"` strings
+//! (debugging / spot verification; not the load path).
+
+use crate::util::json::Json;
+use std::io::{self, Read, Write};
+
+/// Refuse frames beyond this size (corrupt peer / desync guard).
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> io::Result<()> {
+    w.write_all(&(body.len() as u32).to_be_bytes())?;
+    w.write_all(body)
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        other => other?,
+    }
+    let n = u32::from_be_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {n} bytes exceeds the {MAX_FRAME}-byte limit"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+/// A plan request: which mapper answers, for which launch, on which
+/// machine. `(app, flavor, nodes, gpus)` select the compiled spec;
+/// `(task, ispace)` select the launch shape within it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanRequest {
+    pub app: String,
+    /// Mapper flavor: `mapple` or `tuned` (spec-backed flavors only).
+    pub flavor: String,
+    pub task: String,
+    /// Launch-domain extent (domains are zero-based).
+    pub ispace: Vec<i64>,
+    pub nodes: usize,
+    pub gpus: usize,
+    /// Ship the full placement table (debugging; off on the load path).
+    pub table: bool,
+}
+
+/// A decoded request frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    Plan(PlanRequest),
+    /// Drop every cached plan bound to this machine shape.
+    Invalidate { nodes: usize, gpus: usize },
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .map(|n| n as usize)
+        .ok_or_else(|| format!("missing numeric field '{key}'"))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("missing string field '{key}'"))
+}
+
+impl Request {
+    pub fn parse(bytes: &[u8]) -> Result<Request, String> {
+        let text = std::str::from_utf8(bytes).map_err(|e| format!("frame is not UTF-8: {e}"))?;
+        let j = Json::parse(text)?;
+        let op = get_str(&j, "op")?;
+        match op.as_str() {
+            "plan" => {
+                let ispace = match j.get("ispace") {
+                    Some(Json::Arr(xs)) => xs
+                        .iter()
+                        .map(|x| x.as_f64().map(|n| n as i64))
+                        .collect::<Option<Vec<i64>>>()
+                        .ok_or_else(|| "non-numeric ispace component".to_string())?,
+                    _ => return Err("missing array field 'ispace'".to_string()),
+                };
+                let table = matches!(j.get("table"), Some(Json::Bool(true)));
+                Ok(Request::Plan(PlanRequest {
+                    app: get_str(&j, "app")?,
+                    flavor: get_str(&j, "flavor")?,
+                    task: get_str(&j, "task")?,
+                    ispace,
+                    nodes: get_usize(&j, "nodes")?,
+                    gpus: get_usize(&j, "gpus")?,
+                    table,
+                }))
+            }
+            "invalidate" => Ok(Request::Invalidate {
+                nodes: get_usize(&j, "nodes")?,
+                gpus: get_usize(&j, "gpus")?,
+            }),
+            "stats" => Ok(Request::Stats),
+            "ping" => Ok(Request::Ping),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+
+    /// Encode to a JSON frame body (client side).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Plan(p) => Json::obj(vec![
+                ("op", Json::Str("plan".to_string())),
+                ("app", Json::Str(p.app.clone())),
+                ("flavor", Json::Str(p.flavor.clone())),
+                ("task", Json::Str(p.task.clone())),
+                ("ispace", Json::arr(p.ispace.iter().map(|&c| Json::Num(c as f64)))),
+                ("nodes", Json::Num(p.nodes as f64)),
+                ("gpus", Json::Num(p.gpus as f64)),
+                ("table", Json::Bool(p.table)),
+            ]),
+            Request::Invalidate { nodes, gpus } => Json::obj(vec![
+                ("op", Json::Str("invalidate".to_string())),
+                ("nodes", Json::Num(*nodes as f64)),
+                ("gpus", Json::Num(*gpus as f64)),
+            ]),
+            Request::Stats => Json::obj(vec![("op", Json::Str("stats".to_string()))]),
+            Request::Ping => Json::obj(vec![("op", Json::Str("ping".to_string()))]),
+            Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".to_string()))]),
+        }
+    }
+}
+
+/// Format a digest the way plan responses carry it.
+pub fn digest_hex(digest: u64) -> String {
+    format!("{digest:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        let mut r = io::Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let req = Request::Plan(PlanRequest {
+            app: "cannon".to_string(),
+            flavor: "mapple".to_string(),
+            task: "mm_step_0".to_string(),
+            ispace: vec![4, 4],
+            nodes: 2,
+            gpus: 4,
+            table: false,
+        });
+        let body = req.to_json().pretty();
+        assert_eq!(Request::parse(body.as_bytes()).unwrap(), req);
+        for op in [Request::Stats, Request::Ping, Request::Shutdown] {
+            let body = op.to_json().pretty();
+            assert_eq!(Request::parse(body.as_bytes()).unwrap(), op);
+        }
+        let inv = Request::Invalidate { nodes: 4, gpus: 2 };
+        assert_eq!(Request::parse(inv.to_json().pretty().as_bytes()).unwrap(), inv);
+    }
+
+    #[test]
+    fn bad_requests_error() {
+        assert!(Request::parse(b"{}").is_err());
+        assert!(Request::parse(b"{\"op\": \"nope\"}").is_err());
+        assert!(Request::parse(b"{\"op\": \"plan\", \"app\": \"x\"}").is_err());
+        assert!(Request::parse(&[0xff, 0xfe]).is_err());
+    }
+
+    #[test]
+    fn digest_hex_form() {
+        assert_eq!(digest_hex(0xdead_beef), "00000000deadbeef");
+    }
+}

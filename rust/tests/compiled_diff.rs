@@ -77,6 +77,57 @@ fn compiled_vm_and_interp_agree_for_all_eighteen_mappers() {
     }
 }
 
+/// Single-point requests route through the compiled tier too (the
+/// `mapple serve` / `Mapper::map_task` path): `eval_point` ≡
+/// `eval_point_vm` ≡ interpreter for all 18 shipped mappers, over every
+/// point of every launch domain.
+#[test]
+fn compiled_eval_point_matches_vm_and_interp() {
+    for desc in machine_shapes() {
+        let procs = desc.nodes * desc.gpus_per_node;
+        for app_name in APPS {
+            let sources = [
+                ("base", mappers::mapple_source(app_name).unwrap()),
+                ("tuned", mappers::tuned_source(app_name).unwrap()),
+            ];
+            for (flavor, src) in sources {
+                let spec = MapperSpec::compile(src, &desc)
+                    .unwrap_or_else(|e| panic!("{app_name} {flavor}: {e}"));
+                let app = build_app(app_name, procs);
+                for launch in &app.launches {
+                    let func = spec
+                        .mapping_fn(&launch.name)
+                        .unwrap_or_else(|| panic!("{app_name}: no mapping for {}", launch.name));
+                    assert!(
+                        spec.plan.compiled_for(func),
+                        "{app_name} {flavor}: '{func}' not on the compiled tier"
+                    );
+                    let ctx = format!(
+                        "{app_name} {flavor} {} ({}n×{}g)",
+                        launch.name, desc.nodes, desc.gpus_per_node
+                    );
+                    let ispace = launch.domain.extent();
+                    for p in launch.domain.points() {
+                        let compiled = spec
+                            .plan
+                            .eval_point(func, &p, &ispace)
+                            .unwrap_or_else(|e| panic!("{ctx} compiled: {e}"));
+                        let vm = spec
+                            .plan
+                            .eval_point_vm(func, &p, &ispace)
+                            .unwrap_or_else(|e| panic!("{ctx} vm: {e}"));
+                        assert_eq!(compiled, vm, "{ctx} point {p:?}: compiled != VM");
+                        let oracle = spec
+                            .map_point(&launch.name, &p, &ispace)
+                            .unwrap_or_else(|e| panic!("{ctx} oracle: {e}"));
+                        assert_eq!(compiled, oracle, "{ctx} point {p:?}: compiled != interp");
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// The same language-coverage corpus the VM differential randomizes over
 /// (ternaries, and/or chains, builtins, negative indexing, helper calls,
 /// hoisted locals, splat indexing) — three ways.

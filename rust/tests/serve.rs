@@ -1,0 +1,162 @@
+//! Integration stress for the sharded single-flight plan cache behind
+//! `mapple serve` (and every `MappleMapper`): all nine apps × both
+//! spec-backed flavors hammered from many threads with mixed launch
+//! shapes and a mid-run machine invalidation, verified against plans
+//! computed cold (straight `MapperSpec::plan_domain`, no cache). A
+//! separate run without invalidation proves the single-flight accounting
+//! identity: every distinct key compiled exactly once, no matter how
+//! many threads raced for it.
+
+mod common;
+
+use common::build_app;
+use mapple::apps::mappers;
+use mapple::machine::point::Tuple;
+use mapple::machine::topology::MachineDesc;
+use mapple::mapper::MappleMapper;
+use mapple::mapple::{MapperSpec, PlacementTable};
+use mapple::serve::cache::PlanCache;
+use mapple::util::prng::Rng;
+use std::collections::HashSet;
+use std::sync::Arc;
+
+const APPS: &[&str] = &[
+    "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
+];
+
+/// One cacheable request: which mapper, which launch shape.
+struct Work {
+    mapper: usize,
+    task: String,
+    ispace: Tuple,
+}
+
+/// All 18 mappers (nine apps × {base, tuned}) sharing `cache`, their
+/// zero-based launch shapes, and each shape's cold-computed table.
+fn fixture(
+    cache: &Arc<PlanCache>,
+    desc: &MachineDesc,
+) -> (Vec<MappleMapper>, Vec<Work>, Vec<PlacementTable>) {
+    let procs = desc.nodes * desc.gpus_per_node;
+    let mut mappers_out = Vec::new();
+    let mut work = Vec::new();
+    let mut cold = Vec::new();
+    for app_name in APPS {
+        let sources =
+            [mappers::mapple_source(app_name).unwrap(), mappers::tuned_source(app_name).unwrap()];
+        for src in sources {
+            let spec = MapperSpec::compile(src, desc).unwrap();
+            let app = build_app(app_name, procs);
+            let mut seen = HashSet::new();
+            let mapper_idx = mappers_out.len();
+            for launch in &app.launches {
+                if launch.domain.lo != Tuple::zeros(launch.domain.dim()) {
+                    continue;
+                }
+                let ispace = launch.domain.extent();
+                if !seen.insert((launch.name.clone(), ispace.clone())) {
+                    continue;
+                }
+                cold.push(spec.plan_domain(&launch.name, &launch.domain).unwrap());
+                work.push(Work { mapper: mapper_idx, task: launch.name.clone(), ispace });
+            }
+            mappers_out.push(MappleMapper::with_cache(spec, Arc::clone(cache)));
+        }
+    }
+    (mappers_out, work, cold)
+}
+
+/// N threads × shuffled request orders × several rounds, with a machine
+/// invalidation fired mid-run: every answer — cached, coalesced, or
+/// recompiled after the purge — must equal the cold table.
+#[test]
+fn stress_mixed_shapes_with_midrun_invalidation_matches_cold_plans() {
+    let mut desc = MachineDesc::paper_testbed(2);
+    desc.gpus_per_node = 4;
+    let cache = Arc::new(PlanCache::new(8, 64 << 20));
+    let (mappers, work, cold) = fixture(&cache, &desc);
+    assert!(work.len() >= APPS.len(), "fixture produced too little work");
+
+    const THREADS: usize = 8;
+    const ROUNDS: usize = 4;
+    let machine = desc.cache_key();
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let mappers = &mappers;
+            let work = &work;
+            let cold = &cold;
+            let cache = &cache;
+            let machine = &machine;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xabcd + t as u64);
+                let mut order: Vec<usize> = (0..work.len()).collect();
+                for round in 0..ROUNDS {
+                    rng.shuffle(&mut order);
+                    for &i in &order {
+                        let w = &work[i];
+                        let plan = mappers[w.mapper].cached_plan(&w.task, &w.ispace).unwrap();
+                        assert_eq!(
+                            **plan.table(),
+                            cold[i],
+                            "thread {t} round {round}: {} {:?} diverged from cold plan",
+                            w.task,
+                            w.ispace
+                        );
+                    }
+                    // One thread purges the whole machine between rounds,
+                    // racing everyone else's in-flight lookups.
+                    if t == 0 && round == ROUNDS / 2 {
+                        cache.invalidate_machine(machine);
+                    }
+                }
+            });
+        }
+    });
+
+    let s = cache.stats();
+    let total = (THREADS * ROUNDS * work.len()) as u64;
+    assert_eq!(s.hits + s.misses, total, "every request is a hit or a miss: {s:?}");
+    assert_eq!(s.misses, s.compiles + s.coalesced, "misses split into leaders+waiters: {s:?}");
+    assert!(s.invalidations > 0, "the mid-run purge must drop entries: {s:?}");
+    assert!(
+        s.compiles >= work.len() as u64,
+        "each distinct key compiles at least once (plus post-purge recompiles): {s:?}"
+    );
+}
+
+/// Without invalidation or byte pressure, single-flight means each
+/// distinct key is compiled exactly once regardless of thread count.
+#[test]
+fn single_flight_compiles_each_key_exactly_once_across_threads() {
+    let mut desc = MachineDesc::paper_testbed(2);
+    desc.gpus_per_node = 4;
+    let cache = Arc::new(PlanCache::new(8, 256 << 20));
+    let (mappers, work, cold) = fixture(&cache, &desc);
+
+    const THREADS: usize = 8;
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let mappers = &mappers;
+            let work = &work;
+            let cold = &cold;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0x51f7 + t as u64);
+                let mut order: Vec<usize> = (0..work.len()).collect();
+                rng.shuffle(&mut order);
+                for &i in &order {
+                    let w = &work[i];
+                    let plan = mappers[w.mapper].cached_plan(&w.task, &w.ispace).unwrap();
+                    assert_eq!(**plan.table(), cold[i], "{} {:?}", w.task, w.ispace);
+                }
+            });
+        }
+    });
+
+    let s = cache.stats();
+    let total = (THREADS * work.len()) as u64;
+    assert_eq!(s.compiles, work.len() as u64, "exactly one compile per distinct key: {s:?}");
+    assert_eq!(s.hits + s.coalesced + s.compiles, total, "{s:?}");
+    assert_eq!(s.evictions, 0, "{s:?}");
+    assert_eq!(s.invalidations, 0, "{s:?}");
+    assert_eq!(s.entries, work.len() as u64, "{s:?}");
+}
