@@ -1,0 +1,92 @@
+//! chaos_degraded — degraded-mode wall-clock report for the chaos
+//! engine: for a few representative apps on a 2-node machine, compare
+//!
+//!   fault_free_s   plain exec (the failure-free baseline `run_chaos`
+//!                  verifies against)
+//!   idle_chaos_s   chaos path with an *empty* fault plan — measures
+//!                  what the chaos plumbing costs when nothing fails
+//!                  (the heartbeat/retention machinery only arms itself
+//!                  when kills are scheduled, so this should track the
+//!                  baseline closely)
+//!   degraded_s     a mid-run node kill, detected by heartbeat and
+//!                  recovered by replanning the lost suffix onto the
+//!                  survivor
+//!
+//! Every chaos run is checksum-verified bitwise against the failure-free
+//! oracle inside `run_chaos`, so the timings here are for *correct*
+//! recoveries only. Report-only: the numbers land in
+//! `bench_reports/chaos_degraded.json`; correctness is gated by
+//! `tests/chaos.rs`, and fault-free overhead by `wallclock_gate`.
+//!
+//! Run: `cargo bench --bench chaos_degraded`
+
+use mapple::bench::{build_bench_app, mapper_for, run_chaos, write_report, Flavor};
+use mapple::chaos::{ChaosOptions, FaultPlan};
+use mapple::machine::topology::MachineDesc;
+use mapple::util::json::Json;
+
+const APPS: &[&str] = &["cannon", "stencil", "circuit"];
+const KILL_SPEC: &str = "kill:1@2";
+const TRIALS: usize = 3;
+
+fn main() {
+    let desc = MachineDesc::paper_testbed(2);
+    println!("== chaos engine: degraded-mode wall-clock (2 nodes, spec `{KILL_SPEC}`) ==");
+    let mut rows = Vec::new();
+    for &app_name in APPS {
+        let app = build_bench_app(app_name, &desc);
+        let mapper = mapper_for(&Flavor::Mapple, app_name, &desc);
+        let idle_opts = ChaosOptions::default();
+        let kill_opts = ChaosOptions {
+            faults: FaultPlan::parse(KILL_SPEC).expect("bench kill spec parses"),
+            ..ChaosOptions::default()
+        };
+        let mut fault_free = f64::INFINITY;
+        let mut idle = f64::INFINITY;
+        let mut degraded = f64::INFINITY;
+        let mut kill_report = None;
+        for _ in 0..TRIALS {
+            let calm = run_chaos(&app, mapper.as_ref(), &desc, &idle_opts)
+                .unwrap_or_else(|e| panic!("{app_name} (no faults): {e}"));
+            assert_eq!(calm.chaos.report.rounds, 1, "{app_name}: empty plan must not replan");
+            fault_free = fault_free.min(calm.baseline.wall_seconds);
+            idle = idle.min(calm.chaos.result.wall_seconds);
+
+            let hurt = run_chaos(&app, mapper.as_ref(), &desc, &kill_opts)
+                .unwrap_or_else(|e| panic!("{app_name} ({KILL_SPEC}): {e}"));
+            assert_eq!(hurt.chaos.report.killed.len(), 1, "{app_name}: one node dies");
+            assert_eq!(hurt.chaos.report.survivors, 1, "{app_name}: one node survives");
+            fault_free = fault_free.min(hurt.baseline.wall_seconds);
+            degraded = degraded.min(hurt.chaos.result.wall_seconds);
+            kill_report = Some(hurt.chaos.report);
+        }
+        let r = kill_report.unwrap();
+        println!(
+            "  {app_name:10}  fault-free {fault_free:8.3}s   idle-chaos {idle:8.3}s   \
+             killed {degraded:8.3}s ({:.2}x)   rerun {} replay {} refetch {}",
+            degraded / fault_free,
+            r.rerun_tasks,
+            r.replayed_tasks,
+            r.refetched_tiles,
+        );
+        rows.push(Json::obj(vec![
+            ("app", Json::Str(app_name.to_string())),
+            ("fault_free_s", Json::Num(fault_free)),
+            ("idle_chaos_s", Json::Num(idle)),
+            ("degraded_s", Json::Num(degraded)),
+            ("idle_overhead", Json::Num(idle / fault_free)),
+            ("degraded_slowdown", Json::Num(degraded / fault_free)),
+            ("rerun_tasks", Json::Num(r.rerun_tasks as f64)),
+            ("replayed_tasks", Json::Num(r.replayed_tasks as f64)),
+            ("refetched_tiles", Json::Num(r.refetched_tiles as f64)),
+            ("recovery_inter_kib", Json::Num((r.recovery_inter_bytes >> 10) as f64)),
+            ("report_digest", Json::Str(format!("{:016x}", r.digest()))),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("spec", Json::Str(KILL_SPEC.to_string())),
+        ("trials", Json::Num(TRIALS as f64)),
+        ("apps", Json::arr(rows)),
+    ]);
+    write_report("chaos_degraded", &report);
+}

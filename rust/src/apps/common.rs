@@ -1,6 +1,7 @@
 //! Application abstraction: a benchmark builds a task program (launches +
 //! data environment) that mappers place and the simulator times.
 
+use crate::chaos::{execute_chaos, ChaosOptions, ChaosOutcome};
 use crate::exec::{execute, ExecOptions, ExecResult};
 use crate::machine::point::Tuple;
 use crate::machine::topology::MachineDesc;
@@ -98,6 +99,57 @@ pub fn exec_app(
         .map_err(|e| format!("executor diverged from the pipeline oracle: {e}"))?;
     let sim = simulate(&app.launches, &app.env, &deps, &run.placements, desc, &adapter);
     Ok(ExecOutcome { exec, sim, mapper_name: mapper.mapper_name().to_string() })
+}
+
+/// Outcome of running an app under a fault schedule: the chaos run
+/// (recovered result + fault report) plus the failure-free baseline the
+/// recovered checksum was proven bitwise equal to.
+pub struct ChaosAppOutcome {
+    pub chaos: ChaosOutcome,
+    pub baseline: ExecResult,
+    pub mapper_name: String,
+}
+
+/// Map + execute an app under a fault schedule (pipeline → chaos), with
+/// both runs held to the full differential contract: the failure-free
+/// baseline and the recovered chaos run are each verified against the
+/// sequential pipeline oracle, and the recovered checksum must be
+/// bitwise equal to the failure-free one. A successful return therefore
+/// proves the faults were absorbed without changing a single bit of the
+/// final region state.
+pub fn chaos_app(
+    app: &AppInstance,
+    mapper: &dyn Mapper,
+    desc: &MachineDesc,
+    copts: &ChaosOptions,
+) -> Result<ChaosAppOutcome, String> {
+    let deps = analyze(&app.launches, &app.env);
+    let adapter = MapperAsMapping {
+        mapper,
+        num_nodes: desc.nodes,
+        procs_per_node: desc.gpus_per_node,
+    };
+    let run = pipeline::run(&app.launches, &deps, &adapter, desc.nodes)
+        .map_err(|e| e.to_string())?;
+    pipeline::validate(&run, &deps)?;
+    let baseline = execute(&app.launches, &app.env, &deps, &run, desc, &adapter, &copts.exec)
+        .map_err(|e| e.to_string())?;
+    baseline
+        .verify_against(&run, &deps)
+        .map_err(|e| format!("baseline executor diverged from the pipeline oracle: {e}"))?;
+    let chaos = execute_chaos(&app.launches, &app.env, &deps, &run, desc, &adapter, copts)
+        .map_err(|e| e.to_string())?;
+    chaos
+        .result
+        .verify_against(&run, &deps)
+        .map_err(|e| format!("chaos run diverged from the pipeline oracle: {e}"))?;
+    if chaos.result.checksum != baseline.checksum {
+        return Err(format!(
+            "recovered checksum {:016x} differs from the failure-free oracle {:016x} (spec `{}`)",
+            chaos.result.checksum, baseline.checksum, chaos.report.spec
+        ));
+    }
+    Ok(ChaosAppOutcome { chaos, baseline, mapper_name: mapper.mapper_name().to_string() })
 }
 
 /// Largest p with p*p ≤ n (processor grid side for 2D algorithms).

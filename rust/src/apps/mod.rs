@@ -9,7 +9,10 @@ pub mod matmul;
 pub mod science;
 pub mod stencil;
 
-pub use common::{exec_app, icbrt, isqrt, run_app, AppInstance, ExecOutcome, RunOutcome};
+pub use common::{
+    chaos_app, exec_app, icbrt, isqrt, run_app, AppInstance, ChaosAppOutcome, ExecOutcome,
+    RunOutcome,
+};
 pub use matmul::{cannon, cosma, johnson, pumma, solomonik, summa};
 pub use science::{circuit, pennant, CircuitParams, PennantParams};
 pub use stencil::{stencil, StencilParams};

@@ -1,6 +1,7 @@
 //! Shared support for the `cargo bench` figure/table generators.
 
-use crate::apps::{self, mappers, AppInstance};
+use crate::apps::{self, mappers, AppInstance, ChaosAppOutcome};
+use crate::chaos::ChaosOptions;
 use crate::exec::{ExecOptions, ExecResult};
 use crate::machine::topology::MachineDesc;
 use crate::mapper::api::Mapper;
@@ -148,6 +149,18 @@ pub fn run_exec(
     opts: &ExecOptions,
 ) -> Result<ExecResult, String> {
     Ok(apps::exec_app(app, mapper, desc, opts)?.exec)
+}
+
+/// Map + execute under a fault schedule (pipeline → chaos), with the
+/// recovered checksum proven bitwise equal to a failure-free baseline.
+/// The degraded-mode counterpart of [`run_exec`].
+pub fn run_chaos(
+    app: &AppInstance,
+    mapper: &dyn Mapper,
+    desc: &MachineDesc,
+    copts: &ChaosOptions,
+) -> Result<ChaosAppOutcome, String> {
+    apps::chaos_app(app, mapper, desc, copts)
 }
 
 /// Write a JSON report next to the human-readable output.

@@ -20,6 +20,11 @@
 //! upload them as artifacts for a maintainer to commit. A *missing*
 //! baseline file, by contrast, fails the check — deleting a committed
 //! `BENCH_*.json` must not silently disable the gate.
+//!
+//! `--strict` upgrades bootstrap placeholders from warnings to failures:
+//! run it locally when ratcheting so an unarmed gate cannot hide behind
+//! a `::warning` annotation nobody reads. CI stays report-only on
+//! placeholders by default.
 
 use mapple::util::cli::Command;
 use mapple::util::json::Json;
@@ -189,7 +194,8 @@ fn main() {
         .opt("baseline-dir", "directory holding BENCH_*.json", Some(".."))
         .opt("reports-dir", "directory the benches wrote reports into", Some("bench_reports"))
         .opt("tolerance", "allowed relative regression", Some("0.05"))
-        .flag("update", "rewrite baselines from the current reports");
+        .flag("update", "rewrite baselines from the current reports")
+        .flag("strict", "treat bootstrap-placeholder baselines as failures (local ratcheting)");
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cmd.parse(&argv) {
         Ok(a) => a,
@@ -202,6 +208,7 @@ fn main() {
     let reports_dir = PathBuf::from(args.str("reports-dir").unwrap_or("bench_reports"));
     let tolerance = args.f64("tolerance").unwrap_or(0.05);
     let update = args.has("update");
+    let strict = args.has("strict");
 
     let mut failures: Vec<String> = Vec::new();
     let mut total_compared = 0usize;
@@ -260,6 +267,13 @@ fn main() {
                  ***          copy bench_reports/baselines/{} over the repo-root file, and commit.",
                 track.baseline, track.report, track.baseline
             );
+            if strict {
+                failures.push(format!(
+                    "{} is a bootstrap placeholder and --strict is set — record a real \
+                     baseline (run the benches, then bench_check --update) and commit it",
+                    track.baseline
+                ));
+            }
             bootstraps.push(track.baseline);
             continue;
         }

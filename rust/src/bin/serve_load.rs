@@ -11,6 +11,10 @@
 //! — so the benchmark doubles as an end-to-end cached≡cold-compiled
 //! check. A final `stats` op captures the server-side cache counters.
 //!
+//! `--batch n` groups every n warm-pass samples into one `batch` frame
+//! (single frame out, single in-order reply frame in), measuring the
+//! amortized-framing path; digests are still verified per plan.
+//!
 //! By default the driver self-hosts an in-process server on an ephemeral
 //! loopback port (`--shards`/`--cache-bytes`/`--threads` size it) and
 //! shuts it down when done; pass `--addr` to drive an external daemon
@@ -43,8 +47,8 @@ struct TraceItem {
 }
 
 impl TraceItem {
-    fn request(&self) -> Request {
-        Request::Plan(PlanRequest {
+    fn plan_request(&self) -> PlanRequest {
+        PlanRequest {
             app: self.app.to_string(),
             flavor: self.flavor.to_string(),
             task: self.task.clone(),
@@ -52,7 +56,11 @@ impl TraceItem {
             nodes: self.nodes,
             gpus: self.gpus,
             table: false,
-        })
+        }
+    }
+
+    fn request(&self) -> Request {
+        Request::Plan(self.plan_request())
     }
 }
 
@@ -130,16 +138,18 @@ enum DigestMode<'a> {
     Verify(&'a [String]),
 }
 
-/// Per-pass client-side tallies.
+/// Per-pass client-side tallies. Latencies are per *frame*; `plans`
+/// counts individual plan replies (== frames unless `--batch` > 1).
 struct RunStats {
     latencies_ns: Vec<u64>,
+    plans: usize,
     mismatches: usize,
     errors: usize,
 }
 
 impl RunStats {
     fn new(cap: usize) -> RunStats {
-        RunStats { latencies_ns: Vec::with_capacity(cap), mismatches: 0, errors: 0 }
+        RunStats { latencies_ns: Vec::with_capacity(cap), plans: 0, mismatches: 0, errors: 0 }
     }
 }
 
@@ -150,8 +160,9 @@ struct Conn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     window: usize,
-    /// (item index, send time) of in-flight requests, oldest first.
-    pending: VecDeque<(usize, Instant)>,
+    /// (item indices, send time) of in-flight frames, oldest first; one
+    /// entry per frame, several indices when the frame was a batch.
+    pending: VecDeque<(Vec<usize>, Instant)>,
 }
 
 impl Conn {
@@ -178,16 +189,42 @@ impl Conn {
         let body = req.to_json().pretty();
         write_frame(&mut self.writer, body.as_bytes()).map_err(|e| e.to_string())?;
         self.writer.flush().map_err(|e| e.to_string())?;
-        self.pending.push_back((item_idx, Instant::now()));
+        self.pending.push_back((vec![item_idx], Instant::now()));
         if self.pending.len() >= self.window {
             self.drain_one(mode, out)?;
         }
         Ok(())
     }
 
-    /// Read one response, recording latency and handling its digest.
+    /// Send several plan requests as one `batch` frame (a single plan
+    /// frame when only one index is given, so `--batch 1` stays on the
+    /// classic wire shape).
+    fn push_many(
+        &mut self,
+        idxs: Vec<usize>,
+        items: &[TraceItem],
+        mode: &mut DigestMode<'_>,
+        out: &mut RunStats,
+    ) -> Result<(), String> {
+        if idxs.len() == 1 {
+            let req = items[idxs[0]].request();
+            return self.push(idxs[0], &req, mode, out);
+        }
+        let req = Request::Batch(idxs.iter().map(|&i| items[i].plan_request()).collect());
+        let body = req.to_json().pretty();
+        write_frame(&mut self.writer, body.as_bytes()).map_err(|e| e.to_string())?;
+        self.writer.flush().map_err(|e| e.to_string())?;
+        self.pending.push_back((idxs, Instant::now()));
+        if self.pending.len() >= self.window {
+            self.drain_one(mode, out)?;
+        }
+        Ok(())
+    }
+
+    /// Read one response frame, recording latency and settling every
+    /// plan reply it carries.
     fn drain_one(&mut self, mode: &mut DigestMode<'_>, out: &mut RunStats) -> Result<(), String> {
-        let (item_idx, sent) = self.pending.pop_front().ok_or("drain with nothing pending")?;
+        let (idxs, sent) = self.pending.pop_front().ok_or("drain with nothing pending")?;
         let frame = read_frame(&mut self.reader)
             .map_err(|e| e.to_string())?
             .ok_or("server closed mid-stream")?;
@@ -195,10 +232,35 @@ impl Conn {
         let text = std::str::from_utf8(&frame).map_err(|e| e.to_string())?;
         let resp = Json::parse(text)?;
         if resp.get("ok") != Some(&Json::Bool(true)) {
-            out.errors += 1;
+            out.errors += idxs.len();
             eprintln!("[serve_load] request error: {}", resp.pretty());
             return Ok(());
         }
+        if let Some(Json::Arr(replies)) = resp.get("replies") {
+            if replies.len() != idxs.len() {
+                return Err(format!(
+                    "batch reply carried {} entries for {} requests",
+                    replies.len(),
+                    idxs.len()
+                ));
+            }
+            for (&i, r) in idxs.iter().zip(replies) {
+                Self::settle(i, r, mode, out);
+            }
+        } else {
+            Self::settle(idxs[0], &resp, mode, out);
+        }
+        Ok(())
+    }
+
+    /// Handle one plan reply's digest against the trace record.
+    fn settle(item_idx: usize, resp: &Json, mode: &mut DigestMode<'_>, out: &mut RunStats) {
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            out.errors += 1;
+            eprintln!("[serve_load] request error: {}", resp.pretty());
+            return;
+        }
+        out.plans += 1;
         let digest = resp.get("digest").and_then(|d| d.as_str());
         match mode {
             DigestMode::Capture(slots) => {
@@ -213,7 +275,6 @@ impl Conn {
                 }
             }
         }
-        Ok(())
     }
 
     fn drain_all(&mut self, mode: &mut DigestMode<'_>, out: &mut RunStats) -> Result<(), String> {
@@ -260,6 +321,7 @@ fn run(args: &Args) -> Result<i32, String> {
     let requests = args.usize("requests").map_err(|e| e.to_string())?;
     let conns = args.usize("conns").map_err(|e| e.to_string())?.max(1);
     let window = args.usize("window").map_err(|e| e.to_string())?.max(1);
+    let batch = args.usize("batch").map_err(|e| e.to_string())?.max(1);
     let shards = args.usize("shards").map_err(|e| e.to_string())?;
     let cache_bytes = args.usize("cache-bytes").map_err(|e| e.to_string())?;
     let threads = args.usize("threads").map_err(|e| e.to_string())?;
@@ -326,9 +388,15 @@ fn run(args: &Args) -> Result<i32, String> {
                 let mut conn = Conn::connect(&addr, window)?;
                 let mut mode = DigestMode::Verify(digests);
                 let mut out = RunStats::new(n);
+                let mut buf: Vec<usize> = Vec::with_capacity(batch);
                 for _ in 0..n {
-                    let idx = zipf.sample(&mut rng);
-                    conn.push(idx, &items[idx].request(), &mut mode, &mut out)?;
+                    buf.push(zipf.sample(&mut rng));
+                    if buf.len() == batch {
+                        conn.push_many(std::mem::take(&mut buf), items, &mut mode, &mut out)?;
+                    }
+                }
+                if !buf.is_empty() {
+                    conn.push_many(buf, items, &mut mode, &mut out)?;
                 }
                 conn.drain_all(&mut mode, &mut out)?;
                 Ok(out)
@@ -343,10 +411,12 @@ fn run(args: &Args) -> Result<i32, String> {
     let warm_wall = warm_start.elapsed().as_secs_f64();
 
     let mut warm_ns: Vec<u64> = Vec::with_capacity(requests);
+    let mut plans = 0usize;
     let mut mismatches = 0usize;
     let mut errors = 0usize;
     for r in &results {
         warm_ns.extend_from_slice(&r.latencies_ns);
+        plans += r.plans;
         mismatches += r.mismatches;
         errors += r.errors;
     }
@@ -361,11 +431,12 @@ fn run(args: &Args) -> Result<i32, String> {
         s.join();
     }
 
-    let warm = pass_json(warm_ns.len(), warm_wall, &warm_ns);
+    let warm = pass_json(plans, warm_wall, &warm_ns);
     let report = Json::obj(vec![
         ("distinct_keys", Json::Num(items.len() as f64)),
         ("connections", Json::Num(conns as f64)),
         ("window", Json::Num(window as f64)),
+        ("batch", Json::Num(batch as f64)),
         ("zipf_s", Json::Num(zipf_s)),
         ("seed", Json::Num(seed as f64)),
         ("digest_mismatches", Json::Num(mismatches as f64)),
@@ -380,15 +451,9 @@ fn run(args: &Args) -> Result<i32, String> {
     let p50 = warm.get("p50_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
     let p99 = warm.get("p99_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
     println!(
-        "[serve_load] warm: {:.0} plans/sec over {} requests ({} conns × window {}), \
+        "[serve_load] warm: {:.0} plans/sec over {} plans ({} conns × window {} × batch {}), \
          p50 {:.1}µs p99 {:.1}µs — report: {}",
-        rate,
-        warm_ns.len(),
-        conns,
-        window,
-        p50,
-        p99,
-        json_path
+        rate, plans, conns, window, batch, p50, p99, json_path
     );
     if mismatches > 0 || errors > 0 {
         eprintln!("[serve_load] FAIL: {mismatches} digest mismatches, {errors} errors");
@@ -407,7 +472,8 @@ fn main() {
         .opt("addr", "drive an external daemon at this address (default: self-host)", Some(""))
         .opt("requests", "warm-pass request count", Some("1000000"))
         .opt("conns", "client connections", Some("8"))
-        .opt("window", "pipelined requests in flight per connection", Some("64"))
+        .opt("window", "pipelined frames in flight per connection", Some("64"))
+        .opt("batch", "plan requests per frame (warm pass; 1 = classic plan op)", Some("1"))
         .opt("shards", "plan-cache shards (self-hosted server)", Some("16"))
         .opt("cache-bytes", "plan-cache byte budget (self-hosted server)", Some("268435456"))
         .opt("threads", "server connection threads (self-hosted server)", Some("16"))

@@ -1,0 +1,50 @@
+//! Failure detection: heartbeat monitoring over the executor's bounded
+//! channels.
+//!
+//! Every node in a chaos round with scheduled deaths runs a heartbeat
+//! pump (`exec::node::pump`) that beats to every peer over the same
+//! bounded channels that carry tiles; receivers stamp the shared
+//! [`Pulse`] board. A killed node's pump goes silent when its truncated
+//! lanes finish — that silence is the only failure signal there is,
+//! exactly like a real cluster.
+//!
+//! The monitor runs alongside round 1 and declares a node dead after
+//! `miss_threshold` consecutive heartbeat intervals without a stamp. It
+//! watches the nodes the fault plan scheduled to die and returns once
+//! all of them are declared — the supervisor *joins the monitor before
+//! replanning*, so detection causally gates recovery. The declaration
+//! record is (node, threshold): deterministic by construction, with all
+//! wall-clock quantities excluded so chaos reports compare bitwise
+//! across worker counts.
+
+use crate::exec::node::Pulse;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// Watch the pulse board until every scheduled death is declared.
+/// Returns (node, missed intervals at declaration), node-sorted.
+pub(crate) fn monitor(
+    pulse: &Pulse,
+    miss_threshold: u32,
+    planned_dead: &[usize],
+) -> Vec<(usize, u32)> {
+    let tick = Duration::from_micros(pulse.interval_us);
+    let window_nanos = miss_threshold as u64 * pulse.interval_us * 1000;
+    let mut pending: Vec<usize> = planned_dead.to_vec();
+    let mut declared: Vec<(usize, u32)> = Vec::new();
+    while !pending.is_empty() {
+        std::thread::sleep(tick);
+        let now = pulse.now_nanos();
+        pending.retain(|&n| {
+            let last = pulse.board[n].load(Ordering::Relaxed);
+            if now.saturating_sub(last) >= window_nanos {
+                declared.push((n, miss_threshold));
+                false
+            } else {
+                true
+            }
+        });
+    }
+    declared.sort_unstable();
+    declared
+}

@@ -1,0 +1,263 @@
+//! Fault injection planning: resolve a declarative [`FaultPlan`] against
+//! a concrete [`ExecPlan`] before any thread starts.
+//!
+//! Everything here is pure plan arithmetic, which is what makes chaos
+//! runs deterministic: a kill becomes a cutoff in the plan's global
+//! static order; drops and delays are seeded draws over the planned
+//! sends in (task, send-position) order; and the *doomed set* — tasks
+//! that cannot or must not execute in the injected round — is computed
+//! by one forward pass so the runtime never needs failure-time logic.
+//!
+//! Doom propagates three ways: a task past its node's kill cutoff is
+//! doomed; a task waiting on a doomed task is doomed (this also keeps
+//! round 1 deadlock-free — no live task ever waits on a task that will
+//! never run); and a task whose planned delivery of an input tile
+//! version is severed (producer doomed, or the carrying send dropped)
+//! is doomed. Doomed tasks are filtered out of the lane schedules
+//! entirely — a kill is lane surgery, not a runtime branch.
+
+use super::{ChaosError, FaultPlan};
+use crate::exec::plan::{mix, ExecPlan, Key};
+use crate::machine::topology::ProcId;
+use std::collections::{HashMap, HashSet};
+
+/// Salt separating the drop draw from the schedule seed.
+const DROP_SALT: u64 = 0x4452_4f50_5f53_4544;
+/// Salt separating the delay draw from the drop draw.
+const DELAY_SALT: u64 = 0x4445_4c41_595f_5344;
+
+/// How a tile version was planned to arrive at a node.
+enum Deliv {
+    /// Written locally by the task.
+    Local(usize),
+    /// Pushed by the producing task's (task, send-position) transfer.
+    Remote(usize, usize),
+}
+
+/// The resolved injection: everything round 1 runs with, plus the
+/// bookkeeping recovery and reporting need.
+pub(crate) struct Injection {
+    /// Per-node death flags.
+    pub dead: Vec<bool>,
+    /// Killed nodes as (node, tasks completed before death), node-sorted.
+    pub killed: Vec<(usize, usize)>,
+    /// Tasks that do not execute in round 1 (see module docs).
+    pub doomed: Vec<bool>,
+    /// `!doomed` — exactly the tasks round 1 completes.
+    pub completed: Vec<bool>,
+    /// The plan's lanes with doomed tasks filtered out (empty lanes
+    /// dropped).
+    pub lanes1: Vec<(ProcId, Vec<usize>)>,
+    /// Inbound tile count per node in round 1 (doomed producers' and
+    /// dropped sends excluded).
+    pub expected1: Vec<usize>,
+    pub drops: HashSet<(usize, usize)>,
+    pub delays: HashMap<(usize, usize), u64>,
+    /// Task index → stall microseconds before launch.
+    pub stalls: HashMap<usize, u64>,
+    /// Deterministic human-readable injection timeline.
+    pub timeline: Vec<String>,
+}
+
+/// Resolve `faults` + `seed` against `plan`. Pure; deterministic.
+pub(crate) fn plan_injection(
+    plan: &ExecPlan,
+    faults: &FaultPlan,
+    seed: u64,
+) -> Result<Injection, ChaosError> {
+    let nodes = plan.desc.nodes;
+    let ntasks = plan.tasks.len();
+
+    // Kills → per-node cutoffs in the global static order.
+    let mut dead = vec![false; nodes];
+    let mut cutoff: Vec<Option<usize>> = vec![None; nodes];
+    for k in &faults.kills {
+        if k.node >= nodes {
+            return Err(ChaosError::Spec(format!(
+                "kill: node {} out of range ({} nodes)",
+                k.node, nodes
+            )));
+        }
+        dead[k.node] = true;
+        cutoff[k.node] = Some(cutoff[k.node].map_or(k.after, |c| c.min(k.after)));
+    }
+    for s in &faults.stalls {
+        if s.node >= nodes {
+            return Err(ChaosError::Spec(format!(
+                "stall: node {} out of range ({} nodes)",
+                s.node, nodes
+            )));
+        }
+    }
+    if nodes > 0 && dead.iter().all(|&d| d) {
+        return Err(ChaosError::NoSurvivors);
+    }
+
+    // A killed node completes its first `cutoff` tasks of the global
+    // order; everything after is past-cutoff.
+    let mut past = vec![false; ntasks];
+    let mut seen = vec![0usize; nodes];
+    for &t in &plan.order {
+        let n = plan.tasks[t].proc.node;
+        if let Some(c) = cutoff[n] {
+            if seen[n] >= c {
+                past[t] = true;
+            }
+        }
+        seen[n] += 1;
+    }
+
+    // Seeded drop/delay draws over planned sends in (task, send) order.
+    let mut drops: HashSet<(usize, usize)> = HashSet::new();
+    let mut delays: HashMap<(usize, usize), u64> = HashMap::new();
+    let mut ctr = 0u64;
+    for (t, task) in plan.tasks.iter().enumerate() {
+        for si in 0..task.sends.len() {
+            if faults.drop_permille > 0
+                && mix(seed ^ DROP_SALT, ctr) % 1000 < faults.drop_permille as u64
+            {
+                drops.insert((t, si));
+            }
+            if let Some(d) = &faults.delay {
+                if d.permille > 0 && mix(seed ^ DELAY_SALT, ctr) % 1000 < d.permille as u64 {
+                    delays.insert((t, si), d.micros);
+                }
+            }
+            ctr += 1;
+        }
+    }
+
+    // One forward pass in program order: track how every (tile, version)
+    // was planned to reach every node, and propagate doom.
+    let mut doomed = past;
+    let mut delivery: HashMap<(Key, u64, usize), Deliv> = HashMap::new();
+    for t in 0..ntasks {
+        let task = &plan.tasks[t];
+        let n = task.proc.node;
+        let mut bad = doomed[t];
+        if !bad {
+            bad = task.waits.iter().any(|&w| doomed[w]);
+        }
+        if !bad {
+            'reqs: for r in &task.reqs {
+                for s in &r.sources {
+                    let severed = match delivery.get(&(s.key.clone(), s.version, n)) {
+                        Some(Deliv::Local(w)) => doomed[*w],
+                        Some(Deliv::Remote(w, si)) => doomed[*w] || drops.contains(&(*w, *si)),
+                        None => false,
+                    };
+                    if severed {
+                        bad = true;
+                        break 'reqs;
+                    }
+                }
+            }
+        }
+        doomed[t] = bad;
+        // Register what this task was planned to make available — even
+        // when doomed: consumers check the producer's doom flag.
+        for r in &task.reqs {
+            if r.writes {
+                delivery.insert(((r.region, r.rect.clone()), r.write_version, n), Deliv::Local(t));
+            }
+        }
+        for (si, sp) in task.sends.iter().enumerate() {
+            delivery.insert((sp.key.clone(), sp.version, sp.to_node), Deliv::Remote(t, si));
+        }
+    }
+    let completed: Vec<bool> = doomed.iter().map(|&d| !d).collect();
+
+    // Lane surgery: doomed tasks vanish from the schedules. Because
+    // lanes project one global order and doom is closed under waits,
+    // the filtered schedules run without any runtime failure logic.
+    let lanes1: Vec<(ProcId, Vec<usize>)> = plan
+        .lanes
+        .iter()
+        .map(|(p, list)| {
+            (*p, list.iter().copied().filter(|&t| !doomed[t]).collect::<Vec<usize>>())
+        })
+        .filter(|(_, list)| !list.is_empty())
+        .collect();
+
+    // Round-1 inbound counts: live producers' surviving sends only.
+    let mut expected1 = vec![0usize; nodes];
+    for (t, task) in plan.tasks.iter().enumerate() {
+        if doomed[t] {
+            continue;
+        }
+        for (si, sp) in task.sends.iter().enumerate() {
+            if !drops.contains(&(t, si)) {
+                expected1[sp.to_node] += 1;
+            }
+        }
+    }
+
+    // Resolve lane stalls against the *post-surgery* lanes.
+    let mut stalls: HashMap<usize, u64> = HashMap::new();
+    let mut stall_lines: Vec<String> = Vec::new();
+    for s in &faults.stalls {
+        let lane = lanes1.iter().filter(|(p, _)| p.node == s.node).nth(s.lane);
+        match lane.and_then(|(_, list)| list.get(s.pos)) {
+            Some(&t) => {
+                *stalls.entry(t).or_insert(0) += s.micros;
+                stall_lines.push(format!(
+                    "stall node={} lane={} pos={} task={} micros={}",
+                    s.node, s.lane, s.pos, t, s.micros
+                ));
+            }
+            None => stall_lines.push(format!(
+                "stall node={} lane={} pos={} skipped (no such lane position)",
+                s.node, s.lane, s.pos
+            )),
+        }
+    }
+
+    let killed: Vec<(usize, usize)> = (0..nodes)
+        .filter(|&n| dead[n])
+        .map(|n| {
+            let done = (0..ntasks)
+                .filter(|&t| plan.tasks[t].proc.node == n && !doomed[t])
+                .count();
+            (n, done)
+        })
+        .collect();
+
+    // Deterministic injection timeline: kills, drops, delay summary,
+    // stalls.
+    let mut timeline: Vec<String> = Vec::new();
+    for (n, done) in &killed {
+        let c = cutoff[*n].unwrap_or(0);
+        timeline.push(format!("kill node={n} after={c} completes={done}"));
+    }
+    let mut drop_list: Vec<(usize, usize)> = drops.iter().copied().collect();
+    drop_list.sort_unstable();
+    for (t, si) in &drop_list {
+        let sp = &plan.tasks[*t].sends[*si];
+        timeline.push(format!(
+            "drop task={t} send={si} to={} bytes={}",
+            sp.to_node, sp.bytes
+        ));
+    }
+    if let Some(d) = &faults.delay {
+        timeline.push(format!(
+            "delay micros={} permille={} hits={}",
+            d.micros,
+            d.permille,
+            delays.len()
+        ));
+    }
+    timeline.extend(stall_lines);
+
+    Ok(Injection {
+        dead,
+        killed,
+        doomed,
+        completed,
+        lanes1,
+        expected1,
+        drops,
+        delays,
+        stalls,
+        timeline,
+    })
+}

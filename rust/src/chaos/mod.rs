@@ -1,0 +1,578 @@
+//! Chaos engine: fault injection, failure detection, and
+//! replan-the-suffix recovery for the concurrent executor.
+//!
+//! ```text
+//!   FaultPlan + seed ──► inject (doomed-set, truncated lanes, drops)
+//!          │                      │
+//!          ▼                      ▼
+//!   round 1: run with faults  +  heartbeat pumps + monitor (detect)
+//!          │                      │
+//!          ▼                      ▼ (joined before replanning)
+//!   wipe dead stores ──► recover (lineage closure, re-placement,
+//!          │              rerouted sends, survivor refetches)
+//!          ▼
+//!   round 2: rerun the lost suffix on survivors (exact versions)
+//!          │
+//!          ▼
+//!   ExecResult — checksum bitwise equal to the failure-free oracle
+//! ```
+//!
+//! Faults are *declarative*: a [`FaultPlan`] plus a seed fully determines
+//! which node dies after how many of its tasks, which planned cross-node
+//! sends are dropped or delayed, and which lanes stall. Injection is
+//! resolved against the plan's global static order before any thread
+//! starts, so the failure timeline, the recovery schedule, and the final
+//! checksum are identical across worker counts and kernel tiers.
+//!
+//! Detection is physical, not declarative: per-node heartbeat pumps beat
+//! over the same bounded channels that carry tiles, a dying node's pump
+//! goes silent when its (truncated) lanes finish, and the monitor
+//! declares death after `miss_threshold` missed intervals. The monitor
+//! is joined before recovery planning begins — detection causally gates
+//! recovery, exactly as it would in a real cluster.
+//!
+//! Recovery replans the unfinished suffix: every task whose execution or
+//! output was lost re-runs on a survivor (planned placement preserved
+//! for surviving nodes, dead nodes remapped round-robin), gather lists
+//! are recomputed against the exact tile versions survivors still hold
+//! (refetched where needed), and lost lineage re-executes bottom-up
+//! (pure kernels + deterministic cold bases make recomputation exact).
+//! The recovered run must satisfy [`ExecResult::verify_against`] with a
+//! checksum bitwise equal to the failure-free run's.
+
+pub(crate) mod detect;
+pub(crate) mod inject;
+pub(crate) mod recover;
+
+use crate::exec::node::{self, Cluster, Pulse, RoundSpec};
+use crate::exec::plan::{self, Key};
+use crate::exec::{assemble_log, ExecOptions, ExecResult};
+use crate::machine::topology::MachineDesc;
+use crate::serve::cache::PlanCache;
+use crate::sim::engine::MappingPolicies;
+use crate::tasking::deps::{DataEnv, Dependences};
+use crate::tasking::pipeline::{PipelineRun, PlanError};
+use crate::tasking::task::IndexLaunch;
+use crate::util::json::Json;
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::time::Instant;
+
+/// Kill one node after it completed `after` tasks of its share of the
+/// plan's global static order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Kill {
+    pub node: usize,
+    pub after: usize,
+}
+
+/// Delay a seeded `permille` fraction of planned cross-node sends by
+/// `micros` microseconds (a delay storm — ordering pressure, no loss).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Delay {
+    pub micros: u64,
+    pub permille: u32,
+}
+
+/// Sleep `micros` before the `pos`-th task of the `lane`-th worker lane
+/// of `node` (straggler injection; no semantic effect).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Stall {
+    pub node: usize,
+    pub lane: usize,
+    pub pos: usize,
+    pub micros: u64,
+}
+
+/// A declarative, seedable fault schedule. Parsed from the CLI spec
+/// grammar (`;`-separated):
+///
+/// ```text
+/// kill:<node>@<after>           node dies after completing N tasks
+/// drop:<permille>               drop N‰ of planned cross-node sends
+/// delay:<micros>:<permille>     delay N‰ of sends by M microseconds
+/// stall:<node>.<lane>@<pos>:<micros>   stall one lane before a task
+/// ```
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub kills: Vec<Kill>,
+    /// Permille of planned cross-node sends to drop (seeded draw).
+    pub drop_permille: u32,
+    pub delay: Option<Delay>,
+    pub stalls: Vec<Stall>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+            && self.drop_permille == 0
+            && self.delay.is_none()
+            && self.stalls.is_empty()
+    }
+
+    /// Parse the `--chaos` spec grammar.
+    pub fn parse(spec: &str) -> Result<FaultPlan, ChaosError> {
+        let bad = |part: &str, why: &str| {
+            ChaosError::Spec(format!("bad fault spec `{part}`: {why}"))
+        };
+        let int = |part: &str, s: &str| -> Result<u64, ChaosError> {
+            s.trim().parse::<u64>().map_err(|_| bad(part, "expected an unsigned integer"))
+        };
+        let mut fp = FaultPlan::default();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (op, rest) = part
+                .split_once(':')
+                .ok_or_else(|| bad(part, "expected op:args"))?;
+            match op.trim() {
+                "kill" => {
+                    let (node, after) = rest
+                        .split_once('@')
+                        .ok_or_else(|| bad(part, "expected kill:<node>@<after>"))?;
+                    fp.kills.push(Kill {
+                        node: int(part, node)? as usize,
+                        after: int(part, after)? as usize,
+                    });
+                }
+                "drop" => {
+                    let p = int(part, rest)?;
+                    if p > 1000 {
+                        return Err(bad(part, "permille must be 0..=1000"));
+                    }
+                    fp.drop_permille = p as u32;
+                }
+                "delay" => {
+                    let (us, p) = rest
+                        .split_once(':')
+                        .ok_or_else(|| bad(part, "expected delay:<micros>:<permille>"))?;
+                    let p = int(part, p)?;
+                    if p > 1000 {
+                        return Err(bad(part, "permille must be 0..=1000"));
+                    }
+                    fp.delay = Some(Delay { micros: int(part, us)?, permille: p as u32 });
+                }
+                "stall" => {
+                    let (place, us) = rest
+                        .split_once(':')
+                        .ok_or_else(|| bad(part, "expected stall:<node>.<lane>@<pos>:<micros>"))?;
+                    let (node, at) = place
+                        .split_once('.')
+                        .ok_or_else(|| bad(part, "expected <node>.<lane>@<pos>"))?;
+                    let (lane, pos) = at
+                        .split_once('@')
+                        .ok_or_else(|| bad(part, "expected <lane>@<pos>"))?;
+                    fp.stalls.push(Stall {
+                        node: int(part, node)? as usize,
+                        lane: int(part, lane)? as usize,
+                        pos: int(part, pos)? as usize,
+                        micros: int(part, us)?,
+                    });
+                }
+                other => return Err(bad(part, &format!("unknown op `{other}`"))),
+            }
+        }
+        Ok(fp)
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        for k in &self.kills {
+            parts.push(format!("kill:{}@{}", k.node, k.after));
+        }
+        if self.drop_permille > 0 {
+            parts.push(format!("drop:{}", self.drop_permille));
+        }
+        if let Some(d) = &self.delay {
+            parts.push(format!("delay:{}:{}", d.micros, d.permille));
+        }
+        for s in &self.stalls {
+            parts.push(format!("stall:{}.{}@{}:{}", s.node, s.lane, s.pos, s.micros));
+        }
+        write!(f, "{}", parts.join(";"))
+    }
+}
+
+/// Knobs of a chaos run: the plain exec knobs, the fault schedule, and
+/// the failure-detection protocol parameters.
+#[derive(Clone, Debug)]
+pub struct ChaosOptions {
+    pub exec: ExecOptions,
+    pub faults: FaultPlan,
+    /// Seeds the drop/delay draws (independent of the schedule seed).
+    pub fault_seed: u64,
+    /// Heartbeat pump interval in microseconds.
+    pub heartbeat_us: u64,
+    /// Consecutive missed intervals before a node is declared dead.
+    pub miss_threshold: u32,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> ChaosOptions {
+        ChaosOptions {
+            exec: ExecOptions::default(),
+            faults: FaultPlan::default(),
+            fault_seed: 0,
+            heartbeat_us: 200,
+            miss_threshold: 25,
+        }
+    }
+}
+
+/// Chaos-run failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChaosError {
+    /// Malformed fault spec or a fault aimed outside the machine.
+    Spec(String),
+    Plan(PlanError),
+    /// The fault plan kills every node — nothing left to recover onto.
+    NoSurvivors,
+}
+
+impl From<PlanError> for ChaosError {
+    fn from(e: PlanError) -> ChaosError {
+        ChaosError::Plan(e)
+    }
+}
+
+impl fmt::Display for ChaosError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ChaosError::Spec(s) => write!(f, "chaos spec: {s}"),
+            ChaosError::Plan(e) => write!(f, "chaos plan: {e}"),
+            ChaosError::NoSurvivors => write!(f, "chaos: fault plan kills every node"),
+        }
+    }
+}
+
+impl std::error::Error for ChaosError {}
+
+/// Deterministic record of what was injected, detected, and replanned.
+/// Contains no wall-clock quantities — for a given plan, `FaultPlan`,
+/// and seed the report is identical across worker counts.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// Canonical fault spec string.
+    pub spec: String,
+    pub fault_seed: u64,
+    pub nodes: usize,
+    /// Nodes still alive at the end of the run.
+    pub survivors: usize,
+    /// Killed nodes as (node, tasks it completed before dying).
+    pub killed: Vec<(usize, usize)>,
+    /// Heartbeat declarations as (node, missed intervals at declaration).
+    pub detections: Vec<(usize, u32)>,
+    /// Tasks whose execution or inputs were lost to the faults.
+    pub doomed_tasks: usize,
+    pub dropped_msgs: usize,
+    pub delayed_msgs: usize,
+    pub stalled_lanes: usize,
+    /// Tasks the recovery round re-executed (doomed + lost lineage).
+    pub rerun_tasks: usize,
+    /// Rerun tasks that had already completed (lineage replays: no
+    /// events, recomputation only).
+    pub replayed_tasks: usize,
+    /// Surviving tile versions re-delivered to recovery consumers.
+    pub refetched_tiles: usize,
+    /// Rerouted producer sends in the recovery round.
+    pub recovery_sends: usize,
+    /// Extra cross-node bytes the recovery moved (refetches + reroutes).
+    pub recovery_inter_bytes: u64,
+    /// 1 = faults absorbed without replanning, 2 = recovery round ran.
+    pub rounds: usize,
+    pub heartbeat_us: u64,
+    pub miss_threshold: u32,
+    /// Human-readable fault/recovery timeline, deterministic order.
+    pub timeline: Vec<String>,
+}
+
+fn fnv(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+fn fnv_str(mut h: u64, s: &str) -> u64 {
+    for b in s.bytes() {
+        h = fnv(h, b as u64);
+    }
+    fnv(h, 0xff)
+}
+
+impl ChaosReport {
+    /// Order-sensitive digest of every deterministic field — what the
+    /// determinism tests compare across worker counts.
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = fnv_str(h, &self.spec);
+        for x in [
+            self.fault_seed,
+            self.nodes as u64,
+            self.survivors as u64,
+            self.doomed_tasks as u64,
+            self.dropped_msgs as u64,
+            self.delayed_msgs as u64,
+            self.stalled_lanes as u64,
+            self.rerun_tasks as u64,
+            self.replayed_tasks as u64,
+            self.refetched_tiles as u64,
+            self.recovery_sends as u64,
+            self.recovery_inter_bytes,
+            self.rounds as u64,
+        ] {
+            h = fnv(h, x);
+        }
+        for (n, c) in &self.killed {
+            h = fnv(fnv(h, *n as u64), *c as u64);
+        }
+        for (n, m) in &self.detections {
+            h = fnv(fnv(h, *n as u64), *m as u64);
+        }
+        for line in &self.timeline {
+            h = fnv_str(h, line);
+        }
+        h
+    }
+
+    /// JSON fault-timeline report (the CI chaos artifact).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", Json::Str(self.spec.clone())),
+            ("fault_seed", Json::Num(self.fault_seed as f64)),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("survivors", Json::Num(self.survivors as f64)),
+            (
+                "killed",
+                Json::arr(self.killed.iter().map(|(n, c)| {
+                    Json::obj(vec![
+                        ("node", Json::Num(*n as f64)),
+                        ("completed_before_death", Json::Num(*c as f64)),
+                    ])
+                })),
+            ),
+            (
+                "detections",
+                Json::arr(self.detections.iter().map(|(n, m)| {
+                    Json::obj(vec![
+                        ("node", Json::Num(*n as f64)),
+                        ("missed_beats", Json::Num(*m as f64)),
+                    ])
+                })),
+            ),
+            ("doomed_tasks", Json::Num(self.doomed_tasks as f64)),
+            ("dropped_msgs", Json::Num(self.dropped_msgs as f64)),
+            ("delayed_msgs", Json::Num(self.delayed_msgs as f64)),
+            ("stalled_lanes", Json::Num(self.stalled_lanes as f64)),
+            ("rerun_tasks", Json::Num(self.rerun_tasks as f64)),
+            ("replayed_tasks", Json::Num(self.replayed_tasks as f64)),
+            ("refetched_tiles", Json::Num(self.refetched_tiles as f64)),
+            ("recovery_sends", Json::Num(self.recovery_sends as f64)),
+            ("recovery_inter_bytes", Json::Num(self.recovery_inter_bytes as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("heartbeat_us", Json::Num(self.heartbeat_us as f64)),
+            ("miss_threshold", Json::Num(self.miss_threshold as f64)),
+            ("digest", Json::Str(format!("{:016x}", self.digest()))),
+            (
+                "timeline",
+                Json::arr(self.timeline.iter().map(|l| Json::Str(l.clone()))),
+            ),
+        ])
+    }
+}
+
+/// A chaos run's results: the (recovered) execution outcome plus the
+/// deterministic fault/recovery report.
+#[derive(Debug)]
+pub struct ChaosOutcome {
+    pub result: ExecResult,
+    pub report: ChaosReport,
+}
+
+/// Execute a mapped program under a fault schedule. Mirrors
+/// [`crate::exec::execute`]'s inputs; the extra knobs live in
+/// [`ChaosOptions`]. The returned [`ExecResult`] satisfies the same
+/// oracle contract as a fault-free run — identical placements, log
+/// multiset, and (recovered) checksum.
+pub fn execute_chaos(
+    launches: &[IndexLaunch],
+    env: &DataEnv,
+    deps: &Dependences,
+    run: &PipelineRun,
+    desc: &MachineDesc,
+    policies: &dyn MappingPolicies,
+    opts: &ChaosOptions,
+) -> Result<ChaosOutcome, ChaosError> {
+    let plan = plan::build(launches, env, deps, run, desc, policies, opts.exec.seed)?;
+    let inj = inject::plan_injection(&plan, &opts.faults, opts.fault_seed)?;
+    let nodes = desc.nodes;
+    let has_kills = inj.dead.iter().any(|&d| d);
+    let start = Instant::now();
+    let cluster = Cluster::new(nodes);
+
+    // Round 1: run with faults injected. Survivors retain superseded
+    // tile versions only when deaths are scheduled (lineage replays may
+    // need the exact inputs a completed task originally saw).
+    let spec1 = RoundSpec {
+        lanes: inj.lanes1.clone(),
+        eff_node: None,
+        drops: inj.drops.clone(),
+        delays: inj.delays.clone(),
+        stalls: inj.stalls.clone(),
+        sends: None,
+        expected: inj.expected1.clone(),
+        refetch: Vec::new(),
+        done_seed: None,
+        replay: None,
+        exact: false,
+        retain: has_kills.then(|| inj.dead.iter().map(|&d| !d).collect()),
+    };
+    let pulse = has_kills.then(|| {
+        let mut lanes_per_node = vec![0usize; nodes];
+        for (proc, _) in &spec1.lanes {
+            lanes_per_node[proc.node] += 1;
+        }
+        Pulse::new(nodes, opts.heartbeat_us.max(1), inj.dead.clone(), lanes_per_node)
+    });
+    let planned_dead: Vec<usize> = (0..nodes).filter(|&n| inj.dead[n]).collect();
+    let mut detections: Vec<(usize, u32)> = Vec::new();
+    let round1 = std::thread::scope(|s| {
+        let miss = opts.miss_threshold;
+        let pd = &planned_dead;
+        let monitor = pulse.as_ref().map(|p| s.spawn(move || detect::monitor(p, miss, pd)));
+        let out = node::run_round(
+            &cluster,
+            &plan,
+            &spec1,
+            opts.exec.lanes,
+            opts.exec.kernels,
+            0,
+            pulse.as_ref(),
+        );
+        // Detection causally gates recovery: the monitor must have
+        // declared every scheduled death before replanning starts.
+        if let Some(m) = monitor {
+            detections = m.join().expect("chaos monitor panicked");
+        }
+        out
+    });
+    let mut events = round1.events;
+    let next_seq = round1.next_seq;
+
+    // Recovery: wipe dead stores, take inventory of what survived, and
+    // replan the lost suffix onto the survivors.
+    let mut recovery: Option<recover::Recovery> = None;
+    if has_kills || !inj.drops.is_empty() {
+        for n in 0..nodes {
+            if inj.dead[n] {
+                cluster.stores[n].wipe();
+                cluster.pools[n].clear();
+            }
+        }
+        let inventory: Vec<HashSet<(Key, u64)>> = (0..nodes)
+            .map(|n| if inj.dead[n] { HashSet::new() } else { cluster.stores[n].inventory() })
+            .collect();
+        let rec = recover::plan_recovery(&plan, &inj, &inventory);
+        if rec.rerun_count > 0 {
+            let spec2 = RoundSpec {
+                lanes: rec.lanes2.clone(),
+                eff_node: Some(rec.eff_node.clone()),
+                drops: HashSet::new(),
+                delays: HashMap::new(),
+                stalls: HashMap::new(),
+                sends: Some(rec.sends2.clone()),
+                expected: rec.expected2.clone(),
+                refetch: rec.refetch.clone(),
+                done_seed: Some(inj.completed.clone()),
+                replay: Some(rec.replay.clone()),
+                exact: true,
+                retain: Some(inj.dead.iter().map(|&d| !d).collect()),
+            };
+            let out2 = node::run_round(
+                &cluster,
+                &plan,
+                &spec2,
+                opts.exec.lanes,
+                opts.exec.kernels,
+                next_seq,
+                None,
+            );
+            events.extend(out2.events);
+        }
+        recovery = Some(rec);
+    }
+
+    // A degraded machine is a new shape: plans compiled for the full
+    // machine no longer describe it, so purge them from the shared
+    // plan cache (subsequent mapping requests recompile under the
+    // surviving-node MachineKey).
+    let survivors = nodes - planned_dead.len();
+    if has_kills {
+        PlanCache::global().invalidate_machine(&desc.cache_key());
+        let mut degraded = desc.clone();
+        degraded.nodes = survivors;
+        // Touch the degraded key so the shape is canonicalized the same
+        // way a fresh `plan_domain` under it would be.
+        let _ = degraded.cache_key();
+    }
+
+    let recovered = recovery.as_ref().is_some_and(|r| r.rerun_count > 0);
+    let alive: Vec<bool> = inj.dead.iter().map(|&d| !d).collect();
+    let (checksum, peak_resident) = node::digest(&cluster, &alive);
+    let wall_seconds = start.elapsed().as_secs_f64();
+    // The log stays the logical schedule (events carry planned procs;
+    // replays are silent), so per-proc order is the plan's own lanes
+    // whenever a recovery round ran.
+    let per_proc = if recovered {
+        plan.lanes
+            .iter()
+            .map(|(p, list)| (*p, list.iter().map(|&t| plan.tasks[t].pt.clone()).collect()))
+            .collect()
+    } else {
+        round1.per_proc
+    };
+    let log = assemble_log(&plan, events);
+
+    let mut timeline = inj.timeline.clone();
+    for (n, m) in &detections {
+        timeline.push(format!("detect node={n} missed={m}"));
+    }
+    if let Some(rec) = &recovery {
+        timeline.extend(rec.timeline.iter().cloned());
+    }
+    let report = ChaosReport {
+        spec: opts.faults.to_string(),
+        fault_seed: opts.fault_seed,
+        nodes,
+        survivors,
+        killed: inj.killed.clone(),
+        detections,
+        doomed_tasks: inj.doomed.iter().filter(|&&d| d).count(),
+        dropped_msgs: inj.drops.len(),
+        delayed_msgs: inj.delays.len(),
+        stalled_lanes: inj.stalls.len(),
+        rerun_tasks: recovery.as_ref().map_or(0, |r| r.rerun_count),
+        replayed_tasks: recovery.as_ref().map_or(0, |r| r.replay_count),
+        refetched_tiles: recovery.as_ref().map_or(0, |r| r.refetch.len()),
+        recovery_sends: recovery.as_ref().map_or(0, |r| r.send_count),
+        recovery_inter_bytes: recovery.as_ref().map_or(0, |r| r.recovery_inter_bytes),
+        rounds: if recovered { 2 } else { 1 },
+        heartbeat_us: opts.heartbeat_us,
+        miss_threshold: opts.miss_threshold,
+        timeline,
+    };
+    let result = ExecResult {
+        wall_seconds,
+        total_flops: plan.total_flops,
+        intra_bytes: plan.intra_bytes,
+        inter_bytes: plan.inter_bytes,
+        peak_resident,
+        checksum,
+        tasks: plan.tasks.len(),
+        placements: plan.placements,
+        log,
+        per_proc,
+    };
+    Ok(ChaosOutcome { result, report })
+}

@@ -1,0 +1,270 @@
+//! Recovery planning: replan the lost suffix of the schedule onto the
+//! survivors.
+//!
+//! Inputs: the original [`ExecPlan`], the resolved [`Injection`], and a
+//! per-node *inventory* of exactly which (tile, version) pairs each
+//! survivor can still serve (current tiles plus retained superseded
+//! versions). Output: a complete recovery round — which tasks re-run
+//! and where, which sends are rerouted, which surviving tiles are
+//! refetched, and how many messages each node expects.
+//!
+//! The rerun set is the *lineage closure* of what was lost:
+//!
+//! 1. every doomed task re-runs;
+//! 2. every tile version a rerun task consumes, and the final (latest)
+//!    version of every tile — the state the checksum is taken over —
+//!    must either survive on some node or have its writer re-run too;
+//! 3. rule 2 applies recursively to the re-run writers' own inputs,
+//!    bottoming out at deterministic cold bases.
+//!
+//! Rerun tasks that had already completed in round 1 are *replays*:
+//! they recompute lost lineage (pure kernels make recomputation exact)
+//! but emit no events and are pre-marked done, so the logical transition
+//! log stays exactly the oracle's.
+//!
+//! Re-placement maps each dead node round-robin onto the survivors,
+//! preserving processor kind and local index (machine shapes are
+//! homogeneous); surviving tasks keep their planned processor. The
+//! recovery schedule is the plan's global order filtered to the rerun
+//! set and grouped under *effective* processors — still a projection of
+//! one topological order, hence still deadlock-free.
+
+use super::inject::Injection;
+use crate::exec::node::Refetch;
+use crate::exec::plan::{ExecPlan, Key, SendPlan};
+use crate::machine::topology::ProcId;
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// The planned recovery round.
+pub(crate) struct Recovery {
+    /// Tasks the recovery round executes (doomed + lost lineage).
+    pub rerun: Vec<bool>,
+    /// Rerun tasks that already completed in round 1 (silent replays).
+    pub replay: Vec<bool>,
+    pub rerun_count: usize,
+    pub replay_count: usize,
+    /// Task → node it executes on in the recovery round.
+    pub eff_node: Vec<usize>,
+    /// Recovery lane schedules, grouped under effective processors.
+    pub lanes2: Vec<(ProcId, Vec<usize>)>,
+    /// Per-task rerouted sends (replaces the plan's sends in round 2).
+    pub sends2: Vec<Vec<SendPlan>>,
+    /// Inbound tile count per node in round 2 (reroutes + refetches).
+    pub expected2: Vec<usize>,
+    /// Surviving tile versions re-delivered to where recovery needs
+    /// them.
+    pub refetch: Vec<Refetch>,
+    pub send_count: usize,
+    /// Cross-node bytes the recovery moves (reroutes + refetches).
+    pub recovery_inter_bytes: u64,
+    pub timeline: Vec<String>,
+}
+
+/// Plan the recovery round. Pure; deterministic given the inventory
+/// (which is itself determined by the injection).
+pub(crate) fn plan_recovery(
+    plan: &ExecPlan,
+    inj: &Injection,
+    inventory: &[HashSet<(Key, u64)>],
+) -> Recovery {
+    let nodes = plan.desc.nodes;
+    let ntasks = plan.tasks.len();
+
+    // One plan walk: who writes every (tile, version), how big it is,
+    // and the final version of every tile.
+    let mut writer_of: HashMap<(Key, u64), usize> = HashMap::new();
+    let mut bytes_of: HashMap<(Key, u64), u64> = HashMap::new();
+    let mut latest: HashMap<Key, u64> = HashMap::new();
+    for (t, task) in plan.tasks.iter().enumerate() {
+        for r in &task.reqs {
+            if r.writes {
+                let key: Key = (r.region, r.rect.clone());
+                writer_of.insert((key.clone(), r.write_version), t);
+                bytes_of.insert((key.clone(), r.write_version), r.bytes);
+                let e = latest.entry(key).or_insert(0);
+                *e = (*e).max(r.write_version);
+            }
+        }
+    }
+    let available = |key: &Key, v: u64| inventory.iter().any(|inv| inv.contains(&(key.clone(), v)));
+
+    // Lineage closure (module docs, rules 1–3).
+    let mut rerun = inj.doomed.clone();
+    let mut seen: HashSet<(Key, u64)> = HashSet::new();
+    let mut worklist: Vec<(Key, u64)> = Vec::new();
+    let mut need = |key: &Key, v: u64, seen: &mut HashSet<(Key, u64)>, wl: &mut Vec<(Key, u64)>| {
+        if seen.insert((key.clone(), v)) {
+            wl.push((key.clone(), v));
+        }
+    };
+    for (t, task) in plan.tasks.iter().enumerate() {
+        if !rerun[t] {
+            continue;
+        }
+        for r in &task.reqs {
+            for s in &r.sources {
+                need(&s.key, s.version, &mut seen, &mut worklist);
+            }
+        }
+    }
+    let mut final_keys: Vec<(&Key, u64)> = latest.iter().map(|(k, &v)| (k, v)).collect();
+    final_keys.sort_by(|a, b| {
+        (a.0 .0, &a.0 .1.lo, &a.0 .1.hi, a.1).cmp(&(b.0 .0, &b.0 .1.lo, &b.0 .1.hi, b.1))
+    });
+    for (key, v) in final_keys {
+        need(key, v, &mut seen, &mut worklist);
+    }
+    while let Some((key, v)) = worklist.pop() {
+        if available(&key, v) {
+            continue;
+        }
+        let Some(&w) = writer_of.get(&(key.clone(), v)) else {
+            continue;
+        };
+        if rerun[w] {
+            continue;
+        }
+        rerun[w] = true;
+        for r in &plan.tasks[w].reqs {
+            for s in &r.sources {
+                need(&s.key, s.version, &mut seen, &mut worklist);
+            }
+        }
+    }
+    let replay: Vec<bool> = (0..ntasks).map(|t| rerun[t] && inj.completed[t]).collect();
+    let rerun_count = rerun.iter().filter(|&&b| b).count();
+    let replay_count = replay.iter().filter(|&&b| b).count();
+
+    // Re-placement: dead nodes map round-robin onto survivors; kind and
+    // local index are preserved (homogeneous shapes).
+    let survivors: Vec<usize> = (0..nodes).filter(|&n| !inj.dead[n]).collect();
+    let eff_node: Vec<usize> = (0..ntasks)
+        .map(|t| {
+            let n = plan.tasks[t].proc.node;
+            if inj.dead[n] {
+                survivors[n % survivors.len()]
+            } else {
+                n
+            }
+        })
+        .collect();
+
+    // Recovery lanes: the global order filtered to the rerun set,
+    // grouped under effective processors (lanes from several dead nodes
+    // may merge — the merged list is still a projection of the global
+    // order).
+    let mut lanes_map: BTreeMap<ProcId, Vec<usize>> = BTreeMap::new();
+    for &t in &plan.order {
+        if !rerun[t] {
+            continue;
+        }
+        let p = plan.tasks[t].proc;
+        let ep = ProcId { node: eff_node[t], kind: p.kind, local: p.local };
+        lanes_map.entry(ep).or_default().push(t);
+    }
+    let lanes2: Vec<(ProcId, Vec<usize>)> = lanes_map.into_iter().collect();
+
+    // Routing: walk rerun tasks in dependence order tracking where every
+    // (tile, version) will be; sources not local to a task's effective
+    // node arrive either from their re-run writer (rerouted send) or
+    // from a survivor that still holds them (refetch).
+    let mut avail: HashSet<(Key, u64, usize)> = HashSet::new();
+    for (n, inv) in inventory.iter().enumerate() {
+        for (key, v) in inv {
+            avail.insert((key.clone(), *v, n));
+        }
+    }
+    let mut sends2: Vec<Vec<SendPlan>> = vec![Vec::new(); ntasks];
+    let mut expected2 = vec![0usize; nodes];
+    let mut refetch: Vec<Refetch> = Vec::new();
+    let mut send_count = 0usize;
+    let mut inter_bytes = 0u64;
+    for &t in &plan.order {
+        if !rerun[t] {
+            continue;
+        }
+        let n = eff_node[t];
+        for r in &plan.tasks[t].reqs {
+            for s in &r.sources {
+                if avail.contains(&(s.key.clone(), s.version, n)) {
+                    continue;
+                }
+                let kv = (s.key.clone(), s.version);
+                let bytes = *bytes_of.get(&kv).unwrap_or(&0);
+                match writer_of.get(&kv) {
+                    Some(&w) if rerun[w] => {
+                        // The writer re-runs; it was processed earlier
+                        // in this walk (topological order), so if its
+                        // effective node differs, reroute a send.
+                        let wn = eff_node[w];
+                        debug_assert_ne!(
+                            wn, n,
+                            "a local rerun write is already in avail by now"
+                        );
+                        sends2[w].push(SendPlan {
+                            key: s.key.clone(),
+                            version: s.version,
+                            bytes,
+                            to_node: n,
+                        });
+                        send_count += 1;
+                        expected2[n] += 1;
+                        inter_bytes += bytes;
+                    }
+                    _ => {
+                        // A survivor still holds it: refetch from the
+                        // lowest-numbered holder.
+                        let from = (0..nodes)
+                            .find(|&m| avail.contains(&(s.key.clone(), s.version, m)))
+                            .expect("closure guarantees survival or a re-run writer");
+                        refetch.push(Refetch {
+                            key: s.key.clone(),
+                            version: s.version,
+                            bytes,
+                            from,
+                            to: n,
+                        });
+                        expected2[n] += 1;
+                        inter_bytes += bytes;
+                    }
+                }
+                avail.insert((s.key.clone(), s.version, n));
+            }
+        }
+        for r in &plan.tasks[t].reqs {
+            if r.writes {
+                avail.insert(((r.region, r.rect.clone()), r.write_version, n));
+            }
+        }
+    }
+
+    let mut timeline: Vec<String> = Vec::new();
+    for n in 0..nodes {
+        if inj.dead[n] {
+            timeline.push(format!("remap node={} -> node={}", n, survivors[n % survivors.len()]));
+        }
+    }
+    timeline.push(format!(
+        "replan reruns={} replays={} refetches={} sends={} bytes={}",
+        rerun_count,
+        replay_count,
+        refetch.len(),
+        send_count,
+        inter_bytes
+    ));
+
+    Recovery {
+        rerun,
+        replay,
+        rerun_count,
+        replay_count,
+        eff_node,
+        lanes2,
+        sends2,
+        expected2,
+        refetch,
+        send_count,
+        recovery_inter_bytes: inter_bytes,
+        timeline,
+    }
+}

@@ -29,7 +29,7 @@
 //! result checksum is invariant under worker count and tie-break seed.
 
 pub mod kernels;
-mod node;
+pub(crate) mod node;
 pub mod plan;
 pub mod pool;
 
@@ -222,6 +222,22 @@ impl ExecResult {
     }
 }
 
+/// Assemble the full transition log from a plan and its measured
+/// Launched/Executed events: intake transitions in program order (preds
+/// always precede their dependents), then the measured timeline in
+/// event-ticket order. Shared by the plain path and the chaos engine.
+pub(crate) fn assemble_log(plan: &ExecPlan, events: Vec<(u64, LogEntry)>) -> Vec<LogEntry> {
+    let mut log = Vec::with_capacity(4 * plan.tasks.len());
+    for t in &plan.tasks {
+        log.push(LogEntry::Enqueued(t.pt.clone()));
+    }
+    for t in &plan.tasks {
+        log.push(LogEntry::Mapped(t.pt.clone(), t.proc));
+    }
+    log.extend(events.into_iter().map(|(_seq, e)| e));
+    log
+}
+
 /// Execute a mapped program for real. Mirrors [`crate::sim::simulate`]'s
 /// inputs — same launches/environment/dependences, same
 /// [`MappingPolicies`] — except that placements arrive as the pipeline's
@@ -238,16 +254,7 @@ pub fn execute(
 ) -> Result<ExecResult, ExecError> {
     let plan = plan::build(launches, env, deps, run, desc, policies, opts.seed)?;
     let raw = node::run_plan(&plan, opts.lanes, opts.kernels);
-    // Intake transitions in program order (preds always precede their
-    // dependents), then the measured Launched/Executed timeline.
-    let mut log = Vec::with_capacity(4 * plan.tasks.len());
-    for t in &plan.tasks {
-        log.push(LogEntry::Enqueued(t.pt.clone()));
-    }
-    for t in &plan.tasks {
-        log.push(LogEntry::Mapped(t.pt.clone(), t.proc));
-    }
-    log.extend(raw.events.into_iter().map(|(_seq, e)| e));
+    let log = assemble_log(&plan, raw.events);
     Ok(ExecResult {
         wall_seconds: raw.wall_seconds,
         total_flops: plan.total_flops,

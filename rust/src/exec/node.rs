@@ -14,9 +14,20 @@
 //! and sits at the head of its lane; gathers only wait for tile versions
 //! whose producers are wait-predecessors; and compute-slot limits are
 //! only held while a kernel runs, never while blocking.
+//!
+//! The runtime executes *rounds*: a [`RoundSpec`] describes which lane
+//! schedules to run, which planned sends to drop or delay, how many
+//! inbound messages each node expects, and (for recovery rounds) send
+//! overrides, refetches of surviving tiles, and pre-seeded completion
+//! flags. A plain fault-free run is one trivial round over the plan's
+//! own lanes — the chaos engine (`crate::chaos`) composes an injected
+//! round plus a recovery round over the same [`Cluster`] of stores.
+//! Heartbeats piggyback on the same bounded channels as [`Msg::Beat`]
+//! frames; they exist only when a fault plan schedules node deaths, so
+//! the fault-free path stays byte-identical to the pre-chaos runtime.
 
 use super::kernels::{self, ArgView, KernelMode, TileBuf};
-use super::plan::{ExecPlan, Key, ReqPlan};
+use super::plan::{ExecPlan, Key, ReqPlan, SendPlan};
 use super::pool::BufferPool;
 use crate::machine::point::{Rect, Tuple};
 use crate::machine::topology::ProcId;
@@ -24,10 +35,10 @@ use crate::tasking::pipeline::LogEntry;
 use crate::tasking::region::RegionId;
 use crate::tasking::task::PointTask;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// What the concurrent run itself produces; `super::execute` wraps this
 /// into an [`super::ExecResult`].
@@ -49,11 +60,18 @@ pub(crate) struct RawOutcome {
 }
 
 /// One tile payload crossing nodes.
-struct DataMsg {
-    key: Key,
-    version: u64,
-    bytes: u64,
-    payload: Arc<Vec<f32>>,
+pub(crate) struct DataMsg {
+    pub key: Key,
+    pub version: u64,
+    pub bytes: u64,
+    pub payload: Arc<Vec<f32>>,
+}
+
+/// Everything that travels over a node's bounded inbound channel: tile
+/// payloads, plus heartbeat frames when a chaos round arms the pulse.
+pub(crate) enum Msg {
+    Data(DataMsg),
+    Beat { from: usize },
 }
 
 #[derive(Default)]
@@ -66,11 +84,15 @@ struct StoreInner {
     /// first use instead of regenerated on every gather. Not part of the
     /// tile state — excluded from checksums and resident accounting.
     cold: HashMap<Key, Arc<Vec<f32>>>,
+    /// Superseded tile versions kept for recovery replays (only when a
+    /// round runs with retention on, i.e. node deaths are scheduled).
+    /// Like `cold`, excluded from checksums and resident accounting.
+    retained: HashMap<(Key, u64), Arc<Vec<f32>>>,
     resident: u64,
     peak: u64,
 }
 
-struct NodeStore {
+pub(crate) struct NodeStore {
     inner: Mutex<StoreInner>,
     cv: Condvar,
 }
@@ -80,7 +102,18 @@ impl NodeStore {
         NodeStore { inner: Mutex::new(StoreInner::default()), cv: Condvar::new() }
     }
 
-    fn insert(&self, key: Key, version: u64, bytes: u64, payload: Arc<Vec<f32>>) {
+    /// Publish a tile version. With `retain`, a displaced older version
+    /// (or an arriving version older than the current one) moves into
+    /// the retention map instead of vanishing, so recovery replays can
+    /// still gather the exact inputs a completed task originally saw.
+    pub(crate) fn insert(
+        &self,
+        key: Key,
+        version: u64,
+        bytes: u64,
+        payload: Arc<Vec<f32>>,
+        retain: bool,
+    ) {
         let mut g = self.inner.lock().unwrap();
         let newer = match g.tiles.get(&key) {
             Some((v, _)) => version > *v,
@@ -88,11 +121,21 @@ impl NodeStore {
         };
         if newer {
             let was_ghost = g.ghosts.remove(&key);
-            let existed = g.tiles.insert(key, (version, payload)).is_some();
-            if !existed || was_ghost {
+            let old = g.tiles.insert(key.clone(), (version, payload));
+            if old.is_none() || was_ghost {
                 g.resident += bytes;
             }
+            if retain {
+                if let Some((ov, od)) = old {
+                    g.retained.insert((key, ov), od);
+                }
+            }
             g.peak = g.peak.max(g.resident);
+        } else if retain {
+            let cur = g.tiles.get(&key).map(|(v, _)| *v).unwrap_or(u64::MAX);
+            if version < cur {
+                g.retained.entry((key, version)).or_insert(payload);
+            }
         }
         drop(g);
         self.cv.notify_all();
@@ -119,6 +162,25 @@ impl NodeStore {
         }
     }
 
+    /// Block until the store holds `key` at *exactly* `version` (current
+    /// or retained). Recovery rounds gather with exact versions because
+    /// newer versions may legitimately coexist while the lost suffix is
+    /// recomputed.
+    fn wait_exact(&self, key: &Key, version: u64) -> Arc<Vec<f32>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some((v, data)) = g.tiles.get(key) {
+                if *v == version {
+                    return data.clone();
+                }
+            }
+            if let Some(data) = g.retained.get(&(key.clone(), version)) {
+                return data.clone();
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
     /// The deterministic cold base for `(region, rect)`, memoized per
     /// node (the generation is pure, so every node computes identical
     /// contents).
@@ -139,6 +201,44 @@ impl NodeStore {
         let (v, data) = g.tiles.get(key).expect("send of a tile this node wrote");
         debug_assert!(*v >= version, "sending a tile version that was never written");
         data.clone()
+    }
+
+    /// Read a tile at exactly `version`, falling back to the retention
+    /// map if a newer version has since displaced it.
+    pub(crate) fn peek_exact(&self, key: &Key, version: u64) -> Arc<Vec<f32>> {
+        let g = self.inner.lock().unwrap();
+        if let Some((v, data)) = g.tiles.get(key) {
+            if *v == version {
+                return data.clone();
+            }
+        }
+        g.retained
+            .get(&(key.clone(), version))
+            .cloned()
+            .expect("exact tile version present for send/refetch")
+    }
+
+    /// Every (key, version) this store can serve exactly: current tiles
+    /// plus retained versions. Recovery routes refetches against this.
+    pub(crate) fn inventory(&self) -> HashSet<(Key, u64)> {
+        let g = self.inner.lock().unwrap();
+        let mut inv: HashSet<(Key, u64)> =
+            g.tiles.iter().map(|(k, (v, _))| (k.clone(), *v)).collect();
+        for kv in g.retained.keys() {
+            inv.insert(kv.clone());
+        }
+        inv
+    }
+
+    /// Node death: everything the node held is gone. `peak` survives —
+    /// the node really did hold those bytes before it died.
+    pub(crate) fn wipe(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.tiles.clear();
+        g.ghosts.clear();
+        g.cold.clear();
+        g.retained.clear();
+        g.resident = 0;
     }
 }
 
@@ -170,20 +270,168 @@ impl Sem {
     }
 }
 
+/// The per-node stores and buffer pools of one machine. Owned outside
+/// [`run_round`] so tile state persists across an injected round and the
+/// recovery round that follows it.
+pub(crate) struct Cluster {
+    pub stores: Vec<NodeStore>,
+    pub pools: Vec<BufferPool>,
+}
+
+impl Cluster {
+    pub(crate) fn new(nodes: usize) -> Cluster {
+        Cluster {
+            stores: (0..nodes).map(|_| NodeStore::new()).collect(),
+            pools: (0..nodes).map(|_| BufferPool::new()).collect(),
+        }
+    }
+}
+
+/// A planned refetch: re-deliver a tile version a survivor already holds
+/// to a node that needs it for the recovery round.
+#[derive(Clone, Debug)]
+pub(crate) struct Refetch {
+    pub key: Key,
+    pub version: u64,
+    pub bytes: u64,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Everything one round of execution needs beyond the plan itself. The
+/// fault-free path runs [`RoundSpec::plain`]; the chaos engine builds an
+/// injected round (truncated lanes, drops, delays, stalls) and a
+/// recovery round (rerun lanes, send overrides, refetches, seeded done
+/// flags) over the same plan.
+pub(crate) struct RoundSpec {
+    /// Lane schedules to execute (task indices into `plan.tasks`).
+    pub lanes: Vec<(ProcId, Vec<usize>)>,
+    /// Per-task executing node override (recovery re-placement). `None`
+    /// means every task runs on its planned node.
+    pub eff_node: Option<Vec<usize>>,
+    /// Planned sends to drop, as (task index, send position).
+    pub drops: HashSet<(usize, usize)>,
+    /// Planned sends to delay by the given microseconds.
+    pub delays: HashMap<(usize, usize), u64>,
+    /// Sleep the given microseconds before launching a task (lane stall).
+    pub stalls: HashMap<usize, u64>,
+    /// Per-task send override (recovery routing); `None` = plan sends.
+    pub sends: Option<Vec<Vec<SendPlan>>>,
+    /// Inbound `Msg::Data` count per node this round.
+    pub expected: Vec<usize>,
+    /// Survivor-to-survivor re-deliveries executed at round start.
+    pub refetch: Vec<Refetch>,
+    /// Pre-seeded completion flags (recovery: completed tasks are done).
+    pub done_seed: Option<Vec<bool>>,
+    /// Tasks re-executed for lineage only: no events, no done marking.
+    pub replay: Option<Vec<bool>>,
+    /// Gather/peek by exact version instead of at-least (recovery).
+    pub exact: bool,
+    /// Per-node retention of superseded tile versions.
+    pub retain: Option<Vec<bool>>,
+}
+
+impl RoundSpec {
+    /// The trivial round: the plan's own lanes, sends, and message
+    /// counts; no faults, no retention.
+    pub(crate) fn plain(plan: &ExecPlan) -> RoundSpec {
+        RoundSpec {
+            lanes: plan.lanes.clone(),
+            eff_node: None,
+            drops: HashSet::new(),
+            delays: HashMap::new(),
+            stalls: HashMap::new(),
+            sends: None,
+            expected: plan.expected_msgs.clone(),
+            refetch: Vec::new(),
+            done_seed: None,
+            replay: None,
+            exact: false,
+            retain: None,
+        }
+    }
+
+    fn retain_at(&self, node: usize) -> bool {
+        self.retain.as_ref().is_some_and(|r| r[node])
+    }
+}
+
+/// Heartbeat state for a round with scheduled node deaths: per-node pump
+/// threads beat over the data channels, receivers stamp the board, and
+/// the chaos monitor (`crate::chaos::detect`) reads staleness off it.
+pub(crate) struct Pulse {
+    start: Instant,
+    /// Last-heard-from timestamp per node, nanoseconds since `start`.
+    pub board: Vec<AtomicU64>,
+    pub interval_us: u64,
+    /// Lanes still running per node; a dying node's pump goes silent
+    /// once its (truncated) lanes have all finished — that silence *is*
+    /// the failure signal.
+    lanes_left: Vec<AtomicUsize>,
+    dying: Vec<bool>,
+    /// Set by `run_round` once all lanes joined; pumps and receivers
+    /// drain out, and the monitor stops watching survivors.
+    pub round_over: AtomicBool,
+}
+
+impl Pulse {
+    pub(crate) fn new(
+        nodes: usize,
+        interval_us: u64,
+        dying: Vec<bool>,
+        lanes_per_node: Vec<usize>,
+    ) -> Pulse {
+        Pulse {
+            start: Instant::now(),
+            board: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            interval_us: interval_us.max(1),
+            lanes_left: lanes_per_node.into_iter().map(AtomicUsize::new).collect(),
+            dying,
+            round_over: AtomicBool::new(false),
+        }
+    }
+
+    pub(crate) fn now_nanos(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    fn stamp(&self, from: usize) {
+        self.board[from].store(self.now_nanos(), Ordering::Relaxed);
+    }
+
+    fn pump_done(&self, me: usize) -> bool {
+        self.round_over.load(Ordering::Acquire)
+            || (self.dying[me] && self.lanes_left[me].load(Ordering::Acquire) == 0)
+    }
+}
+
+/// One node's heartbeat pump: beat every interval until the round ends —
+/// or, on a dying node, until its truncated lanes finish (death).
+fn pump(pulse: &Pulse, me: usize, txs: &[SyncSender<Msg>]) {
+    while !pulse.pump_done(me) {
+        for (j, tx) in txs.iter().enumerate() {
+            if j != me {
+                // Never block on a full channel: a late beat is a lost
+                // beat, exactly like a real network.
+                let _ = tx.try_send(Msg::Beat { from: me });
+            }
+        }
+        std::thread::sleep(Duration::from_micros(pulse.interval_us));
+    }
+}
+
 struct Shared<'a> {
     plan: &'a ExecPlan,
+    spec: &'a RoundSpec,
+    cluster: &'a Cluster,
     done: Vec<AtomicBool>,
     done_lock: Mutex<usize>,
     done_cv: Condvar,
-    stores: Vec<NodeStore>,
-    /// Per-node tile buffer pools: gather and output allocations recycle
-    /// through these instead of fresh `Vec`s per task.
-    pools: Vec<BufferPool>,
     /// Kernel implementation tier (results are bitwise invariant in it).
     mode: KernelMode,
-    start: Instant,
     /// Global event-order tickets (see [`RawOutcome::events`]).
     event_seq: AtomicU64,
+    pulse: Option<&'a Pulse>,
 }
 
 impl Shared<'_> {
@@ -203,6 +451,14 @@ impl Shared<'_> {
         *g += 1;
         drop(g);
         self.done_cv.notify_all();
+    }
+
+    /// The node a task executes on this round (recovery re-placement).
+    fn eff_node(&self, t: usize) -> usize {
+        match &self.spec.eff_node {
+            Some(m) => m[t],
+            None => self.plan.tasks[t].proc.node,
+        }
     }
 }
 
@@ -242,11 +498,20 @@ fn overlay(dst: &mut [f32], dst_rect: &Rect, src: &[f32], src_rect: &Rect) {
 /// arguments: a plan-proven exact-rect single source hands out the
 /// store's `Arc` directly, and a source-less cold read hands out the
 /// memoized cold base. Everything else gathers into a pooled owned
-/// buffer. All paths produce bitwise-identical contents.
-fn gather(store: &NodeStore, req: &ReqPlan, pool: &BufferPool) -> TileBuf {
+/// buffer. All paths produce bitwise-identical contents. `exact` makes
+/// source waits match versions exactly (recovery rounds, where newer
+/// versions legitimately coexist with the ones being recomputed).
+fn gather(store: &NodeStore, req: &ReqPlan, pool: &BufferPool, exact: bool) -> TileBuf {
+    let fetch = |key: &Key, version: u64| {
+        if exact {
+            store.wait_exact(key, version)
+        } else {
+            store.wait_at_least(key, version)
+        }
+    };
     if req.zero_copy {
         let s = &req.sources[0];
-        return TileBuf::Shared(store.wait_at_least(&s.key, s.version));
+        return TileBuf::Shared(fetch(&s.key, s.version));
     }
     if req.reads && !req.writes && req.sources.is_empty() {
         return TileBuf::Shared(store.cold_base(req.region, &req.rect));
@@ -257,37 +522,52 @@ fn gather(store: &NodeStore, req: &ReqPlan, pool: &BufferPool) -> TileBuf {
         pool.take_zeroed(req.elems)
     };
     for s in &req.sources {
-        let tile = store.wait_at_least(&s.key, s.version);
+        let tile = fetch(&s.key, s.version);
         overlay(&mut buf, &req.rect, &tile, &s.key.1);
     }
     TileBuf::Owned(buf)
 }
 
-/// One worker lane: execute the static schedule for `proc`.
+/// One worker lane: execute a static schedule on `proc`.
+///
+/// Events always record the task's *planned* processor, even when a
+/// recovery round re-places it onto a survivor — the log stays the
+/// logical schedule the oracle verified, while physical placement lives
+/// in the chaos report. Replay tasks (re-executed for lineage only)
+/// emit no events and are already marked done.
 fn lane_run(
     shared: &Shared<'_>,
+    proc: ProcId,
     tasks_idx: &[usize],
-    txs: &[SyncSender<DataMsg>],
+    txs: &[SyncSender<Msg>],
     limiter: Option<&Sem>,
 ) -> (Vec<(u64, LogEntry)>, Vec<PointTask>) {
     let mut events = Vec::with_capacity(2 * tasks_idx.len());
     let mut executed = Vec::with_capacity(tasks_idx.len());
     for &t in tasks_idx {
         let task = &shared.plan.tasks[t];
+        if let Some(&us) = shared.spec.stalls.get(&t) {
+            std::thread::sleep(Duration::from_micros(us));
+        }
         for &p in &task.waits {
             shared.wait_done(p);
         }
-        let store = &shared.stores[task.proc.node];
-        let pool = &shared.pools[task.proc.node];
+        let node = shared.eff_node(t);
+        let store = &shared.cluster.stores[node];
+        let pool = &shared.cluster.pools[node];
+        let retain = shared.spec.retain_at(node);
+        let replay = shared.spec.replay.as_ref().is_some_and(|r| r[t]);
         let mut inputs: Vec<TileBuf> =
-            task.reqs.iter().map(|r| gather(store, r, pool)).collect();
+            task.reqs.iter().map(|r| gather(store, r, pool, shared.spec.exact)).collect();
         if let Some(sem) = limiter {
             sem.acquire();
         }
-        events.push((
-            shared.event_seq.fetch_add(1, Ordering::SeqCst),
-            LogEntry::Launched(task.pt.clone(), task.proc),
-        ));
+        if !replay {
+            events.push((
+                shared.event_seq.fetch_add(1, Ordering::SeqCst),
+                LogEntry::Launched(task.pt.clone(), task.proc),
+            ));
+        }
         let args: Vec<ArgView> = task
             .reqs
             .iter()
@@ -302,7 +582,7 @@ fn lane_run(
         if let Some(sem) = limiter {
             sem.release();
         }
-        // Publish written tiles into this node's store.
+        // Publish written tiles into the executing node's store.
         for (ri, out) in outs.into_iter().enumerate() {
             let r = &task.reqs[ri];
             if !r.writes {
@@ -312,7 +592,7 @@ fn lane_run(
                 Some(v) => v,
                 None => inputs[ri].take_owned(),
             });
-            store.insert((r.region, r.rect.clone()), r.write_version, r.bytes, payload);
+            store.insert((r.region, r.rect.clone()), r.write_version, r.bytes, payload, retain);
         }
         // Recycle the owned gather buffers the kernel didn't consume
         // (shared views cost nothing; moved-from buffers are empty).
@@ -321,40 +601,97 @@ fn lane_run(
                 pool.put(v);
             }
         }
-        events.push((
-            shared.event_seq.fetch_add(1, Ordering::SeqCst),
-            LogEntry::Executed(task.pt.clone(), task.proc),
-        ));
-        executed.push(task.pt.clone());
+        if !replay {
+            events.push((
+                shared.event_seq.fetch_add(1, Ordering::SeqCst),
+                LogEntry::Executed(task.pt.clone(), task.proc),
+            ));
+            executed.push(task.pt.clone());
+        }
         // GC directives: drop collected instances from the accounting.
         for r in &task.reqs {
             if r.gc {
                 store.gc(&(r.region, r.rect.clone()), r.bytes);
             }
         }
-        shared.mark_done(t);
+        if !replay {
+            shared.mark_done(t);
+        }
         // Push planned cross-node transfers (may block on the bounded
         // channel — the destination's receiver is always draining).
-        for s in &task.sends {
-            let payload = shared.stores[task.proc.node].peek(&s.key, s.version);
+        // Recovery rounds override the plan's sends with rerouted ones.
+        let sends: &[SendPlan] = match &shared.spec.sends {
+            Some(over) => &over[t],
+            None => &task.sends,
+        };
+        for (si, s) in sends.iter().enumerate() {
+            if shared.spec.drops.contains(&(t, si)) {
+                continue;
+            }
+            if let Some(&us) = shared.spec.delays.get(&(t, si)) {
+                std::thread::sleep(Duration::from_micros(us));
+            }
+            let payload = if shared.spec.exact {
+                store.peek_exact(&s.key, s.version)
+            } else {
+                store.peek(&s.key, s.version)
+            };
             txs[s.to_node]
-                .send(DataMsg {
+                .send(Msg::Data(DataMsg {
                     key: s.key.clone(),
                     version: s.version,
                     bytes: s.bytes,
                     payload,
-                })
+                }))
                 .expect("receiver lives until every planned transfer arrived");
         }
+    }
+    if let Some(p) = shared.pulse {
+        p.lanes_left[proc.node].fetch_sub(1, Ordering::AcqRel);
     }
     (events, executed)
 }
 
 /// Node data-mover: drain exactly the planned number of inbound tiles.
-fn node_rx(store: &NodeStore, rx: Receiver<DataMsg>, expected: usize) {
-    for _ in 0..expected {
-        let msg = rx.recv().expect("every planned transfer is eventually sent");
-        store.insert(msg.key, msg.version, msg.bytes, msg.payload);
+fn node_rx(store: &NodeStore, rx: Receiver<Msg>, expected: usize, retain: bool) {
+    let mut got = 0usize;
+    while got < expected {
+        match rx.recv().expect("every planned transfer is eventually sent") {
+            Msg::Data(m) => {
+                store.insert(m.key, m.version, m.bytes, m.payload, retain);
+                got += 1;
+            }
+            Msg::Beat { .. } => {}
+        }
+    }
+}
+
+/// Data-mover for a heartbeat round: also stamps the pulse board, and —
+/// because beats keep arriving at no planned cadence — exits on quiet
+/// once the round is over and every planned tile arrived.
+fn node_rx_pulse(
+    store: &NodeStore,
+    rx: Receiver<Msg>,
+    expected: usize,
+    retain: bool,
+    pulse: &Pulse,
+) {
+    let mut got = 0usize;
+    let tick = Duration::from_micros(pulse.interval_us.max(100));
+    loop {
+        match rx.recv_timeout(tick) {
+            Ok(Msg::Data(m)) => {
+                store.insert(m.key, m.version, m.bytes, m.payload, retain);
+                got += 1;
+            }
+            Ok(Msg::Beat { from }) => pulse.stamp(from),
+            Err(RecvTimeoutError::Timeout) => {
+                if got >= expected && pulse.round_over.load(Ordering::Acquire) {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
     }
 }
 
@@ -363,48 +700,106 @@ fn fnv(h: u64, x: u64) -> u64 {
     (h ^ x).wrapping_mul(0x0000_0100_0000_01b3)
 }
 
-/// Run a plan on real threads. `lanes_limit` caps concurrently running
-/// kernels (0 = one in-flight kernel per processor lane, no extra cap);
-/// `mode` picks the kernel implementation tier (results are bitwise
-/// invariant in both knobs).
-pub(crate) fn run_plan(plan: &ExecPlan, lanes_limit: usize, mode: KernelMode) -> RawOutcome {
+/// What [`run_round`] hands back: the round's events and per-lane
+/// execution orders, plus the next free event ticket so a follow-up
+/// round continues the same total order.
+pub(crate) struct RoundOutcome {
+    pub events: Vec<(u64, LogEntry)>,
+    pub per_proc: Vec<(ProcId, Vec<PointTask>)>,
+    pub next_seq: u64,
+}
+
+/// Execute one round of a plan over `cluster`'s stores. `lanes_limit`
+/// caps concurrently running kernels (0 = one in-flight kernel per lane,
+/// no extra cap); `mode` picks the kernel tier; `event_start` seeds the
+/// event-ticket counter (recovery rounds continue the injected round's
+/// order); `pulse`, when armed, runs heartbeat pumps alongside the lanes
+/// and switches receivers to beat-aware draining.
+pub(crate) fn run_round(
+    cluster: &Cluster,
+    plan: &ExecPlan,
+    spec: &RoundSpec,
+    lanes_limit: usize,
+    mode: KernelMode,
+    event_start: u64,
+    pulse: Option<&Pulse>,
+) -> RoundOutcome {
     let nodes = plan.desc.nodes;
     let depth = plan.desc.nic_inflight_msgs();
-    let mut txs: Vec<SyncSender<DataMsg>> = Vec::with_capacity(nodes);
-    let mut rxs: Vec<Receiver<DataMsg>> = Vec::with_capacity(nodes);
+    let mut txs: Vec<SyncSender<Msg>> = Vec::with_capacity(nodes);
+    let mut rxs: Vec<Receiver<Msg>> = Vec::with_capacity(nodes);
     for _ in 0..nodes {
         let (tx, rx) = sync_channel(depth);
         txs.push(tx);
         rxs.push(rx);
     }
+    let done: Vec<AtomicBool> = match &spec.done_seed {
+        Some(seed) => seed.iter().map(|&b| AtomicBool::new(b)).collect(),
+        None => (0..plan.tasks.len()).map(|_| AtomicBool::new(false)).collect(),
+    };
     let shared = Shared {
         plan,
-        done: (0..plan.tasks.len()).map(|_| AtomicBool::new(false)).collect(),
+        spec,
+        cluster,
+        done,
         done_lock: Mutex::new(0),
         done_cv: Condvar::new(),
-        stores: (0..nodes).map(|_| NodeStore::new()).collect(),
-        pools: (0..nodes).map(|_| BufferPool::new()).collect(),
         mode,
-        start: Instant::now(),
-        event_seq: AtomicU64::new(0),
+        event_seq: AtomicU64::new(event_start),
+        pulse,
     };
     let limiter = if lanes_limit > 0 { Some(Sem::new(lanes_limit)) } else { None };
 
     let mut all_events: Vec<(u64, LogEntry)> = Vec::new();
-    let mut per_proc: Vec<(ProcId, Vec<PointTask>)> = Vec::with_capacity(plan.lanes.len());
+    let mut per_proc: Vec<(ProcId, Vec<PointTask>)> = Vec::with_capacity(spec.lanes.len());
     std::thread::scope(|s| {
         let shared_ref = &shared;
         let txs_ref = &txs;
         let limiter_ref = limiter.as_ref();
-        let mut rx_handles = Vec::with_capacity(nodes);
         for (n, rx) in rxs.into_iter().enumerate() {
-            let expected = plan.expected_msgs[n];
-            rx_handles.push(s.spawn(move || node_rx(&shared_ref.stores[n], rx, expected)));
+            let expected = spec.expected[n];
+            let retain = spec.retain_at(n);
+            match pulse {
+                Some(p) => {
+                    s.spawn(move || {
+                        node_rx_pulse(&shared_ref.cluster.stores[n], rx, expected, retain, p)
+                    });
+                }
+                None => {
+                    s.spawn(move || node_rx(&shared_ref.cluster.stores[n], rx, expected, retain));
+                }
+            }
         }
-        let mut lane_handles = Vec::with_capacity(plan.lanes.len());
-        for (proc, list) in &plan.lanes {
+        if let Some(p) = pulse {
+            for me in 0..nodes {
+                s.spawn(move || pump(p, me, txs_ref));
+            }
+        }
+        // Refetch senders: one thread per source node re-delivers the
+        // surviving tile versions the recovery round needs elsewhere.
+        let mut by_from: HashMap<usize, Vec<&Refetch>> = HashMap::new();
+        for r in &spec.refetch {
+            by_from.entry(r.from).or_default().push(r);
+        }
+        for (_, group) in by_from {
+            s.spawn(move || {
+                for r in group {
+                    let payload = shared_ref.cluster.stores[r.from].peek_exact(&r.key, r.version);
+                    txs_ref[r.to]
+                        .send(Msg::Data(DataMsg {
+                            key: r.key.clone(),
+                            version: r.version,
+                            bytes: r.bytes,
+                            payload,
+                        }))
+                        .expect("receiver lives until every planned transfer arrived");
+                }
+            });
+        }
+        let mut lane_handles = Vec::with_capacity(spec.lanes.len());
+        for (proc, list) in &spec.lanes {
             lane_handles.push(s.spawn(move || {
-                let (events, executed) = lane_run(shared_ref, list, txs_ref, limiter_ref);
+                let (events, executed) = lane_run(shared_ref, *proc, list, txs_ref, limiter_ref);
                 (*proc, events, executed)
             }));
         }
@@ -413,22 +808,32 @@ pub(crate) fn run_plan(plan: &ExecPlan, lanes_limit: usize, mode: KernelMode) ->
             all_events.extend(events);
             per_proc.push((proc, executed));
         }
-        for h in rx_handles {
-            h.join().expect("node receiver panicked");
+        // Lanes are done: let pumps wind down and pulse receivers drain
+        // out (plain receivers already exited by message count).
+        if let Some(p) = pulse {
+            p.round_over.store(true, Ordering::Release);
         }
     });
-    let wall_seconds = shared.start.elapsed().as_secs_f64();
 
     // Merge lane events into the run's total order (tickets are unique).
     all_events.sort_by_key(|e| e.0);
     per_proc.sort_by_key(|(p, _)| *p);
+    let next_seq = shared.event_seq.load(Ordering::SeqCst);
+    RoundOutcome { events: all_events, per_proc, next_seq }
+}
 
-    // Content digest: latest version of every tile, region-major.
+/// Content digest over the cluster's final tile state: latest version of
+/// every tile across `alive` nodes, region-major, plus the peak resident
+/// bytes across all nodes (dead ones included — they held those bytes).
+pub(crate) fn digest(cluster: &Cluster, alive: &[bool]) -> (u64, u64) {
     let mut latest: HashMap<Key, (u64, Arc<Vec<f32>>)> = HashMap::new();
     let mut peak_resident = 0u64;
-    for store in &shared.stores {
+    for (n, store) in cluster.stores.iter().enumerate() {
         let g = store.inner.lock().unwrap();
         peak_resident = peak_resident.max(g.peak);
+        if !alive[n] {
+            continue;
+        }
         for (key, (v, data)) in g.tiles.iter() {
             let replace = match latest.get(key) {
                 Some((lv, _)) => v > lv,
@@ -454,6 +859,26 @@ pub(crate) fn run_plan(plan: &ExecPlan, lanes_limit: usize, mode: KernelMode) ->
             checksum = fnv(checksum, x.to_bits() as u64);
         }
     }
+    (checksum, peak_resident)
+}
 
-    RawOutcome { wall_seconds, events: all_events, checksum, peak_resident, per_proc }
+/// Run a plan on real threads, fault-free. `lanes_limit` caps
+/// concurrently running kernels (0 = one in-flight kernel per processor
+/// lane, no extra cap); `mode` picks the kernel implementation tier
+/// (results are bitwise invariant in both knobs).
+pub(crate) fn run_plan(plan: &ExecPlan, lanes_limit: usize, mode: KernelMode) -> RawOutcome {
+    let start = Instant::now();
+    let cluster = Cluster::new(plan.desc.nodes);
+    let spec = RoundSpec::plain(plan);
+    let round = run_round(&cluster, plan, &spec, lanes_limit, mode, 0, None);
+    let wall_seconds = start.elapsed().as_secs_f64();
+    let alive = vec![true; plan.desc.nodes];
+    let (checksum, peak_resident) = digest(&cluster, &alive);
+    RawOutcome {
+        wall_seconds,
+        events: round.events,
+        checksum,
+        peak_resident,
+        per_proc: round.per_proc,
+    }
 }

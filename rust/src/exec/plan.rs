@@ -111,6 +111,11 @@ pub struct ExecPlan {
     /// projection of one global topological order, so lanes can block on
     /// their next task's waits without risk of deadlock.
     pub lanes: Vec<(ProcId, Vec<usize>)>,
+    /// The global topological order the lanes project (depth-major,
+    /// seeded tie-break). The chaos engine cuts failure points and
+    /// builds recovery schedules against this order so fault timelines
+    /// are deterministic for a given plan + seed.
+    pub order: Vec<usize>,
     /// Inbound transfer count per node — the channel termination count.
     pub expected_msgs: Vec<usize>,
     pub placements: HashMap<PointTask, ProcId>,
@@ -128,8 +133,9 @@ struct KeyState {
     writer_task: usize,
 }
 
-/// splitmix64 — the seeded tie-break for schedule order.
-fn mix(seed: u64, x: u64) -> u64 {
+/// splitmix64 — the seeded tie-break for schedule order (also the fault
+/// selector the chaos engine draws drop/delay decisions from).
+pub(crate) fn mix(seed: u64, x: u64) -> u64 {
     let mut z = seed ^ x.wrapping_mul(0x9e3779b97f4a7c15);
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
@@ -379,6 +385,7 @@ pub fn build(
         desc: desc.clone(),
         tasks,
         lanes,
+        order,
         expected_msgs,
         placements,
         intra_bytes,

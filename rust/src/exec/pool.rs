@@ -60,6 +60,13 @@ impl BufferPool {
         }
     }
 
+    /// Drop every pooled buffer — a dead node's pool holds nothing worth
+    /// recycling, and freeing it models the node's memory going away.
+    pub fn clear(&self) {
+        let mut g = self.buckets.lock().unwrap();
+        g.clear();
+    }
+
     /// Return a buffer for reuse. Empty buffers (e.g. a moved-from
     /// [`super::kernels::TileBuf`]) are dropped, and full buckets shed
     /// the extra buffer instead of growing without bound.

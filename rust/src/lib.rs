@@ -1,5 +1,6 @@
 pub mod apps;
 pub mod bench;
+pub mod chaos;
 pub mod decompose;
 pub mod exec;
 pub mod mapple;

@@ -28,6 +28,7 @@
 
 use mapple::apps;
 use mapple::bench::Flavor;
+use mapple::chaos::{ChaosOptions, FaultPlan};
 use mapple::decompose::{decompose, greedy_grid, Objective};
 use mapple::exec::{ExecOptions, KernelMode};
 use mapple::machine::topology::MachineDesc;
@@ -197,6 +198,12 @@ fn cmd_exec(argv: &[String]) -> i32 {
     .opt("lanes", "max concurrent kernels (0 = one lane per proc)", Some("0"))
     .opt("seed", "schedule tie-break seed", Some("0"))
     .opt("kernels", "kernel tier: fast (blocked, pooled) | naive", Some("fast"))
+    .opt(
+        "chaos",
+        "fault spec: kill:<node>@<after>;drop:<permille>;delay:<us>:<permille>;stall:<node>.<lane>@<pos>:<us>",
+        None,
+    )
+    .opt("chaos-seed", "fault-injection seed", Some("0"))
     .opt("json", "write the ExecResult JSON report here", None);
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -240,6 +247,69 @@ fn cmd_exec(argv: &[String]) -> i32 {
         seed: args.usize("seed").unwrap_or(0) as u64,
         kernels,
     };
+    if let Some(spec) = args.str("chaos") {
+        let faults = match FaultPlan::parse(spec) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("bad --chaos spec: {e}");
+                return 2;
+            }
+        };
+        let copts = ChaosOptions {
+            exec: opts,
+            faults,
+            fault_seed: args.usize("chaos-seed").unwrap_or(0) as u64,
+            ..ChaosOptions::default()
+        };
+        let out = match apps::chaos_app(&app, mapper.as_ref(), &desc, &copts) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("chaos exec failed: {e}");
+                return 1;
+            }
+        };
+        let r = &out.chaos.report;
+        println!(
+            "{app_name} on {nodes} nodes under {} with faults `{}` (recovered, oracle-verified):\n  \
+             wall-clock {}  ({} tasks, {} round{})\n  \
+             killed {:?}  detected {:?}  survivors {:?}\n  \
+             doomed {} tasks, dropped {} msgs, delayed {} msgs, stalled {} lanes\n  \
+             rerun {} ({} silent replays), refetched {} tiles, {} recovery sends ({} KiB)\n  \
+             checksum {:016x} == failure-free baseline (bitwise)",
+            out.mapper_name,
+            r.spec,
+            fmt_time(out.chaos.result.wall_seconds),
+            out.chaos.result.tasks,
+            r.rounds,
+            if r.rounds == 1 { "" } else { "s" },
+            r.killed,
+            r.detections,
+            r.survivors,
+            r.doomed_tasks,
+            r.dropped_msgs,
+            r.delayed_msgs,
+            r.stalled_lanes,
+            r.rerun_tasks,
+            r.replayed_tasks,
+            r.refetched_tiles,
+            r.recovery_sends,
+            r.recovery_inter_bytes >> 10,
+            out.chaos.result.checksum,
+        );
+        if let Some(path) = args.str("json") {
+            let mut json = out.chaos.result.to_json(&app_name, &out.mapper_name, &desc);
+            if let Json::Obj(map) = &mut json {
+                map.insert("chaos".to_string(), r.to_json());
+                map.insert("plan_cache".to_string(), PlanCache::global().stats().to_json());
+            }
+            if let Err(e) = std::fs::write(path, json.pretty()) {
+                eprintln!("{path}: {e}");
+                return 1;
+            }
+            println!("[chaos exec report written to {path}]");
+        }
+        return 0;
+    }
     let out = match apps::exec_app(&app, mapper.as_ref(), &desc, &opts) {
         Ok(o) => o,
         Err(e) => {

@@ -92,6 +92,13 @@ impl MappleMapper {
             .get(point)
             .ok_or_else(|| format!("point {point:?} outside launch domain {ispace:?}"))
     }
+
+    /// Purge this mapper's cached plans immediately (the same purge Drop
+    /// performs, for callers that keep the instance alive — e.g. the
+    /// serve daemon's per-app/per-flavor invalidation ops).
+    pub fn invalidate_plans(&self) {
+        self.cache.invalidate_mapper(self.mapper_id);
+    }
 }
 
 impl Drop for MappleMapper {

@@ -29,7 +29,7 @@ use crate::machine::topology::MachineDesc;
 use crate::mapper::MappleMapper;
 use crate::mapple::program::MapperSpec;
 use crate::serve::cache::{CachedPlan, PlanCache};
-use crate::serve::proto::{digest_hex, PlanRequest, Request};
+use crate::serve::proto::{digest_hex, Invalidation, PlanRequest, Request};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
@@ -219,6 +219,43 @@ impl ServerState {
         self.specs.read().unwrap().values().flat_map(|a| a.values()).map(|f| f.len()).sum()
     }
 
+    /// Drop every compiled spec for `app` (all flavors, all machine
+    /// shapes) and purge their cached plans. Returns how many specs went.
+    pub fn invalidate_app(&self, app: &str) -> usize {
+        self.purge_specs(app, None)
+    }
+
+    /// Drop the compiled `(app, flavor)` specs across machine shapes and
+    /// purge their cached plans. Returns how many specs went.
+    pub fn invalidate_flavor(&self, app: &str, flavor: &str) -> usize {
+        self.purge_specs(app, Some(flavor))
+    }
+
+    fn purge_specs(&self, app: &str, flavor: Option<&str>) -> usize {
+        // Collect the evicted mappers under the write lock, purge their
+        // plan-cache namespaces after releasing it: a concurrent request
+        // holding an evicted Arc can still answer from it, but the next
+        // spec probe misses and recompiles fresh.
+        let mut evicted: Vec<Arc<MappleMapper>> = Vec::new();
+        {
+            let mut g = self.specs.write().unwrap();
+            for apps in g.values_mut() {
+                let Some(flavors) = apps.get_mut(app) else { continue };
+                match flavor {
+                    Some(f) => evicted.extend(flavors.remove(f)),
+                    None => evicted.extend(flavors.drain().map(|(_, m)| m)),
+                }
+                if flavors.is_empty() {
+                    apps.remove(app);
+                }
+            }
+        }
+        for m in &evicted {
+            m.invalidate_plans();
+        }
+        evicted.len()
+    }
+
     /// Stats document shared with `mapple exec --json` (same
     /// `CacheStats` shape under `"plan_cache"`).
     pub fn stats_json(&self) -> Json {
@@ -230,37 +267,67 @@ impl ServerState {
         ])
     }
 
+    /// One plan request's reply document (shared by `plan` and each
+    /// `batch` element; a failing element reports inline, it does not
+    /// poison its neighbours).
+    fn plan_json(&self, p: PlanRequest) -> Json {
+        let want_table = p.table;
+        match self.handle_plan(p) {
+            Ok((plan, hit)) => {
+                let mut fields = vec![
+                    ("ok", Json::Bool(true)),
+                    ("cached", Json::Bool(hit)),
+                    ("points", Json::Num(plan.table().len() as f64)),
+                    ("digest", Json::Str(digest_hex(plan.digest()))),
+                ];
+                if want_table {
+                    let procs = plan.table().procs();
+                    fields
+                        .push(("table", Json::arr(procs.iter().map(|p| Json::Str(p.to_string())))));
+                }
+                Json::obj(fields)
+            }
+            Err(e) => error_json(&e),
+        }
+    }
+
     /// Answer one decoded request. The bool asks the caller to shut the
     /// daemon down after replying.
     pub fn respond(&self, req: Request) -> (Json, bool) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         match req {
-            Request::Plan(p) => {
-                let want_table = p.table;
-                match self.handle_plan(p) {
-                    Ok((plan, hit)) => {
-                        let mut fields = vec![
-                            ("ok", Json::Bool(true)),
-                            ("cached", Json::Bool(hit)),
-                            ("points", Json::Num(plan.table().len() as f64)),
-                            ("digest", Json::Str(digest_hex(plan.digest()))),
-                        ];
-                        if want_table {
-                            let procs = plan.table().procs();
-                            fields.push((
-                                "table",
-                                Json::arr(procs.iter().map(|p| Json::Str(p.to_string()))),
-                            ));
-                        }
-                        (Json::obj(fields), false)
-                    }
-                    Err(e) => (error_json(&e), false),
-                }
+            Request::Plan(p) => (self.plan_json(p), false),
+            Request::Batch(ps) => {
+                let replies: Vec<Json> = ps.into_iter().map(|p| self.plan_json(p)).collect();
+                (
+                    Json::obj(vec![("ok", Json::Bool(true)), ("replies", Json::Arr(replies))]),
+                    false,
+                )
             }
-            Request::Invalidate { nodes, gpus } => {
+            Request::Invalidate(Invalidation::Machine { nodes, gpus }) => {
                 let key = machine_for(nodes, gpus).cache_key();
                 self.cache.invalidate_machine(&key);
                 (Json::obj(vec![("ok", Json::Bool(true))]), false)
+            }
+            Request::Invalidate(Invalidation::App { app }) => {
+                let removed = self.invalidate_app(&app);
+                (
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("removed", Json::Num(removed as f64)),
+                    ]),
+                    false,
+                )
+            }
+            Request::Invalidate(Invalidation::Flavor { app, flavor }) => {
+                let removed = self.invalidate_flavor(&app, &flavor);
+                (
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("removed", Json::Num(removed as f64)),
+                    ]),
+                    false,
+                )
             }
             Request::Stats => (self.stats_json(), false),
             Request::Ping => (Json::obj(vec![("ok", Json::Bool(true))]), false),
@@ -470,13 +537,72 @@ mod tests {
 
         // Machine invalidation drops the plan; the next request recompiles
         // to the same digest.
-        assert!(ok(&c.call(&Request::Invalidate { nodes: 2, gpus: 4 })));
+        assert!(ok(&c.call(&Request::Invalidate(Invalidation::Machine { nodes: 2, gpus: 4 }))));
         let recompiled = c.call(&plan_req("mm_step_0", &[4, 4], false));
         assert_eq!(recompiled.get("cached"), Some(&Json::Bool(false)));
         assert_eq!(recompiled.get("digest").and_then(|d| d.as_str()), Some(digest.as_str()));
 
+        // App invalidation evicts the compiled spec itself; the plan is
+        // cold again afterwards and the spec count drops.
+        let inv = c.call(&Request::Invalidate(Invalidation::App { app: "cannon".to_string() }));
+        assert!(ok(&inv));
+        assert_eq!(inv.get("removed").and_then(|n| n.as_f64()), Some(1.0));
+        let recold = c.call(&plan_req("mm_step_0", &[4, 4], false));
+        assert_eq!(recold.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(recold.get("digest").and_then(|d| d.as_str()), Some(digest.as_str()));
+
+        // Flavor invalidation: purging a flavor that is not compiled
+        // removes nothing; purging the live one removes exactly it.
+        let miss = c.call(&Request::Invalidate(Invalidation::Flavor {
+            app: "cannon".to_string(),
+            flavor: "tuned".to_string(),
+        }));
+        assert_eq!(miss.get("removed").and_then(|n| n.as_f64()), Some(0.0));
+        let hit = c.call(&Request::Invalidate(Invalidation::Flavor {
+            app: "cannon".to_string(),
+            flavor: "mapple".to_string(),
+        }));
+        assert_eq!(hit.get("removed").and_then(|n| n.as_f64()), Some(1.0));
+
         let bye = c.call(&Request::Shutdown);
         assert_eq!(bye.get("bye"), Some(&Json::Bool(true)));
+        server.join();
+    }
+
+    #[test]
+    fn batch_answers_in_order_with_inline_errors() {
+        let server = test_server();
+        let mut c = Client::connect(server.local_addr());
+        let mk = |task: &str, ispace: &[i64]| PlanRequest {
+            app: "cannon".to_string(),
+            flavor: "mapple".to_string(),
+            task: task.to_string(),
+            ispace: ispace.to_vec(),
+            nodes: 2,
+            gpus: 4,
+            table: false,
+        };
+        let bad = PlanRequest { app: "no_such_app".to_string(), ..mk("mm_step_0", &[2, 2]) };
+        let resp = c.call(&Request::Batch(vec![
+            mk("mm_step_0", &[4, 4]),
+            bad,
+            mk("mm_step_0", &[4, 4]),
+        ]));
+        assert!(ok(&resp), "{resp:?}");
+        let Some(Json::Arr(replies)) = resp.get("replies") else {
+            panic!("expected replies array, got {resp:?}");
+        };
+        assert_eq!(replies.len(), 3);
+        assert_eq!(replies[0].get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(replies[0].get("points").and_then(|p| p.as_f64()), Some(16.0));
+        assert_eq!(replies[1].get("ok"), Some(&Json::Bool(false)));
+        // The third entry hits the plan the first one warmed, in-frame.
+        assert_eq!(replies[2].get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(
+            replies[2].get("digest").and_then(|d| d.as_str()),
+            replies[0].get("digest").and_then(|d| d.as_str()),
+        );
+        server.shutdown();
         server.join();
     }
 

@@ -62,12 +62,30 @@ pub struct PlanRequest {
     pub table: bool,
 }
 
+/// What an `invalidate` frame targets. The wire form discriminates on
+/// field presence: `"app"` alone purges an application across flavors,
+/// `"app"` + `"flavor"` purges one compiled spec, and `"nodes"` +
+/// `"gpus"` (no `"app"`) purges a machine shape — so old clients that
+/// only ever sent shapes keep working unchanged.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Invalidation {
+    /// Drop every cached plan bound to this machine shape.
+    Machine { nodes: usize, gpus: usize },
+    /// Drop every compiled spec (and its plans) for an app, all flavors.
+    App { app: String },
+    /// Drop one (app, flavor) spec and its plans.
+    Flavor { app: String, flavor: String },
+}
+
 /// A decoded request frame.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Request {
     Plan(PlanRequest),
-    /// Drop every cached plan bound to this machine shape.
-    Invalidate { nodes: usize, gpus: usize },
+    /// Many plan requests in one frame; the reply is a single frame with
+    /// one entry per request, in order. Amortizes framing and syscalls
+    /// for clients that know a burst of lookups up front.
+    Batch(Vec<PlanRequest>),
+    Invalidate(Invalidation),
     Stats,
     Ping,
     Shutdown,
@@ -87,36 +105,75 @@ fn get_str(j: &Json, key: &str) -> Result<String, String> {
         .ok_or_else(|| format!("missing string field '{key}'"))
 }
 
+/// Decode the plan-request fields of one JSON object (shared between
+/// the `plan` op and each element of a `batch`).
+fn parse_plan_fields(j: &Json) -> Result<PlanRequest, String> {
+    let ispace = match j.get("ispace") {
+        Some(Json::Arr(xs)) => xs
+            .iter()
+            .map(|x| x.as_f64().map(|n| n as i64))
+            .collect::<Option<Vec<i64>>>()
+            .ok_or_else(|| "non-numeric ispace component".to_string())?,
+        _ => return Err("missing array field 'ispace'".to_string()),
+    };
+    let table = matches!(j.get("table"), Some(Json::Bool(true)));
+    Ok(PlanRequest {
+        app: get_str(j, "app")?,
+        flavor: get_str(j, "flavor")?,
+        task: get_str(j, "task")?,
+        ispace,
+        nodes: get_usize(j, "nodes")?,
+        gpus: get_usize(j, "gpus")?,
+        table,
+    })
+}
+
+fn plan_fields(p: &PlanRequest) -> Vec<(&'static str, Json)> {
+    vec![
+        ("app", Json::Str(p.app.clone())),
+        ("flavor", Json::Str(p.flavor.clone())),
+        ("task", Json::Str(p.task.clone())),
+        ("ispace", Json::arr(p.ispace.iter().map(|&c| Json::Num(c as f64)))),
+        ("nodes", Json::Num(p.nodes as f64)),
+        ("gpus", Json::Num(p.gpus as f64)),
+        ("table", Json::Bool(p.table)),
+    ]
+}
+
 impl Request {
     pub fn parse(bytes: &[u8]) -> Result<Request, String> {
         let text = std::str::from_utf8(bytes).map_err(|e| format!("frame is not UTF-8: {e}"))?;
         let j = Json::parse(text)?;
         let op = get_str(&j, "op")?;
         match op.as_str() {
-            "plan" => {
-                let ispace = match j.get("ispace") {
-                    Some(Json::Arr(xs)) => xs
-                        .iter()
-                        .map(|x| x.as_f64().map(|n| n as i64))
-                        .collect::<Option<Vec<i64>>>()
-                        .ok_or_else(|| "non-numeric ispace component".to_string())?,
-                    _ => return Err("missing array field 'ispace'".to_string()),
+            "plan" => Ok(Request::Plan(parse_plan_fields(&j)?)),
+            "batch" => {
+                let Some(Json::Arr(xs)) = j.get("plans") else {
+                    return Err("missing array field 'plans'".to_string());
                 };
-                let table = matches!(j.get("table"), Some(Json::Bool(true)));
-                Ok(Request::Plan(PlanRequest {
-                    app: get_str(&j, "app")?,
-                    flavor: get_str(&j, "flavor")?,
-                    task: get_str(&j, "task")?,
-                    ispace,
-                    nodes: get_usize(&j, "nodes")?,
-                    gpus: get_usize(&j, "gpus")?,
-                    table,
-                }))
+                let plans = xs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, x)| {
+                        parse_plan_fields(x).map_err(|e| format!("batch entry {i}: {e}"))
+                    })
+                    .collect::<Result<Vec<PlanRequest>, String>>()?;
+                Ok(Request::Batch(plans))
             }
-            "invalidate" => Ok(Request::Invalidate {
-                nodes: get_usize(&j, "nodes")?,
-                gpus: get_usize(&j, "gpus")?,
-            }),
+            "invalidate" => {
+                let inv = match (j.get("app"), j.get("flavor")) {
+                    (Some(_), Some(_)) => Invalidation::Flavor {
+                        app: get_str(&j, "app")?,
+                        flavor: get_str(&j, "flavor")?,
+                    },
+                    (Some(_), None) => Invalidation::App { app: get_str(&j, "app")? },
+                    (None, _) => Invalidation::Machine {
+                        nodes: get_usize(&j, "nodes")?,
+                        gpus: get_usize(&j, "gpus")?,
+                    },
+                };
+                Ok(Request::Invalidate(inv))
+            }
             "stats" => Ok(Request::Stats),
             "ping" => Ok(Request::Ping),
             "shutdown" => Ok(Request::Shutdown),
@@ -127,21 +184,31 @@ impl Request {
     /// Encode to a JSON frame body (client side).
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Plan(p) => Json::obj(vec![
-                ("op", Json::Str("plan".to_string())),
-                ("app", Json::Str(p.app.clone())),
-                ("flavor", Json::Str(p.flavor.clone())),
-                ("task", Json::Str(p.task.clone())),
-                ("ispace", Json::arr(p.ispace.iter().map(|&c| Json::Num(c as f64)))),
-                ("nodes", Json::Num(p.nodes as f64)),
-                ("gpus", Json::Num(p.gpus as f64)),
-                ("table", Json::Bool(p.table)),
+            Request::Plan(p) => {
+                let mut fields = vec![("op", Json::Str("plan".to_string()))];
+                fields.extend(plan_fields(p));
+                Json::obj(fields)
+            }
+            Request::Batch(ps) => Json::obj(vec![
+                ("op", Json::Str("batch".to_string())),
+                ("plans", Json::arr(ps.iter().map(|p| Json::obj(plan_fields(p))))),
             ]),
-            Request::Invalidate { nodes, gpus } => Json::obj(vec![
-                ("op", Json::Str("invalidate".to_string())),
-                ("nodes", Json::Num(*nodes as f64)),
-                ("gpus", Json::Num(*gpus as f64)),
-            ]),
+            Request::Invalidate(inv) => match inv {
+                Invalidation::Machine { nodes, gpus } => Json::obj(vec![
+                    ("op", Json::Str("invalidate".to_string())),
+                    ("nodes", Json::Num(*nodes as f64)),
+                    ("gpus", Json::Num(*gpus as f64)),
+                ]),
+                Invalidation::App { app } => Json::obj(vec![
+                    ("op", Json::Str("invalidate".to_string())),
+                    ("app", Json::Str(app.clone())),
+                ]),
+                Invalidation::Flavor { app, flavor } => Json::obj(vec![
+                    ("op", Json::Str("invalidate".to_string())),
+                    ("app", Json::Str(app.clone())),
+                    ("flavor", Json::Str(flavor.clone())),
+                ]),
+            },
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".to_string()))]),
             Request::Ping => Json::obj(vec![("op", Json::Str("ping".to_string()))]),
             Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".to_string()))]),
@@ -194,8 +261,35 @@ mod tests {
             let body = op.to_json().pretty();
             assert_eq!(Request::parse(body.as_bytes()).unwrap(), op);
         }
-        let inv = Request::Invalidate { nodes: 4, gpus: 2 };
-        assert_eq!(Request::parse(inv.to_json().pretty().as_bytes()).unwrap(), inv);
+        for inv in [
+            Request::Invalidate(Invalidation::Machine { nodes: 4, gpus: 2 }),
+            Request::Invalidate(Invalidation::App { app: "cannon".to_string() }),
+            Request::Invalidate(Invalidation::Flavor {
+                app: "cannon".to_string(),
+                flavor: "tuned".to_string(),
+            }),
+        ] {
+            assert_eq!(Request::parse(inv.to_json().pretty().as_bytes()).unwrap(), inv);
+        }
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let mk = |task: &str| PlanRequest {
+            app: "summa".to_string(),
+            flavor: "mapple".to_string(),
+            task: task.to_string(),
+            ispace: vec![2, 2],
+            nodes: 2,
+            gpus: 4,
+            table: false,
+        };
+        let req = Request::Batch(vec![mk("mm_step_0"), mk("mm_step_1")]);
+        let body = req.to_json().pretty();
+        assert_eq!(Request::parse(body.as_bytes()).unwrap(), req);
+        // An empty batch is legal on the wire (the reply is just empty).
+        let empty = Request::Batch(Vec::new());
+        assert_eq!(Request::parse(empty.to_json().pretty().as_bytes()).unwrap(), empty);
     }
 
     #[test]
@@ -203,6 +297,8 @@ mod tests {
         assert!(Request::parse(b"{}").is_err());
         assert!(Request::parse(b"{\"op\": \"nope\"}").is_err());
         assert!(Request::parse(b"{\"op\": \"plan\", \"app\": \"x\"}").is_err());
+        assert!(Request::parse(b"{\"op\": \"batch\"}").is_err());
+        assert!(Request::parse(b"{\"op\": \"batch\", \"plans\": [{\"app\": \"x\"}]}").is_err());
         assert!(Request::parse(&[0xff, 0xfe]).is_err());
     }
 

@@ -1,0 +1,258 @@
+//! Chaos differential suite: fault injection, heartbeat detection, and
+//! replan-the-suffix recovery against the failure-free oracle.
+//!
+//! The contract under test (ISSUE 8 / ARCHITECTURE.md "Chaos and
+//! recovery"): for every app, machine shape, and kernel tier, a run with
+//! faults injected — a mid-run node kill, a message-drop burst, a delay
+//! storm — must end with a checksum **bitwise equal** to the failure-free
+//! run's, while still satisfying `ExecResult::verify_against` (identical
+//! placements and transition multiset). On top of that: the failure
+//! timeline, recovery schedule, and chaos-report digest are deterministic
+//! in (FaultPlan, seed) across worker counts, and an empty fault plan is
+//! indistinguishable from a plain run on every deterministic field.
+//!
+//! `mapple::apps::chaos_app` already enforces baseline-vs-recovered
+//! checksum equality and both oracle verifications internally — an `Ok`
+//! from it IS the recovery proof; the assertions here pin down the
+//! report's shape on top.
+
+mod common;
+
+use common::build_app;
+use mapple::apps::{chaos_app, exec_app, ChaosAppOutcome};
+use mapple::bench::{mapper_for, Flavor};
+use mapple::chaos::{ChaosOptions, FaultPlan};
+use mapple::exec::{ExecOptions, KernelMode};
+use mapple::machine::topology::MachineDesc;
+
+const APPS: &[&str] = &[
+    "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
+];
+
+fn shape(nodes: usize, gpus: usize) -> MachineDesc {
+    let mut d = MachineDesc::paper_testbed(nodes);
+    d.gpus_per_node = gpus;
+    d
+}
+
+/// Two multi-node shapes (chaos needs somewhere to recover onto).
+fn chaos_shapes() -> Vec<MachineDesc> {
+    vec![shape(2, 2), shape(2, 4)]
+}
+
+/// Fast-protocol chaos options so kill detection windows stay in the
+/// low milliseconds (window = heartbeat_us × miss_threshold = 2ms).
+fn copts(faults: FaultPlan, kernels: KernelMode, lanes: usize) -> ChaosOptions {
+    ChaosOptions {
+        exec: ExecOptions { lanes, kernels, ..ExecOptions::default() },
+        faults,
+        fault_seed: 7,
+        heartbeat_us: 200,
+        miss_threshold: 10,
+    }
+}
+
+fn run_chaos(app_name: &str, desc: &MachineDesc, opts: &ChaosOptions) -> ChaosAppOutcome {
+    let procs = desc.nodes * desc.gpus_per_node;
+    let app = build_app(app_name, procs);
+    let mapper = mapper_for(&Flavor::Mapple, app_name, desc);
+    chaos_app(&app, mapper.as_ref(), desc, opts).unwrap_or_else(|e| {
+        panic!(
+            "{app_name} ({}n×{}g, {:?}, `{}`): {e}",
+            desc.nodes, desc.gpus_per_node, opts.exec.kernels, opts.faults
+        )
+    })
+}
+
+#[test]
+fn all_nine_apps_recover_bitwise_from_kill_drop_and_delay() {
+    // spec × shape × kernel tier × app. chaos_app's Ok proves the
+    // recovered checksum equals the failure-free oracle bitwise and that
+    // both runs pass verify_against.
+    let specs = ["kill:1@2", "drop:400", "delay:200:500"];
+    let mut dropped_total = 0usize;
+    let mut delayed_total = 0usize;
+    for desc in chaos_shapes() {
+        for kernels in [KernelMode::Fast, KernelMode::Naive] {
+            for spec in specs {
+                let faults = FaultPlan::parse(spec).unwrap();
+                for app_name in APPS {
+                    let out = run_chaos(app_name, &desc, &copts(faults.clone(), kernels, 0));
+                    let r = &out.chaos.report;
+                    let ctx = format!(
+                        "{app_name} ({}n×{}g, {kernels:?}, `{spec}`)",
+                        desc.nodes, desc.gpus_per_node
+                    );
+                    assert_eq!(r.spec, spec, "{ctx}: canonical spec");
+                    match spec {
+                        "kill:1@2" => {
+                            assert_eq!(r.killed.len(), 1, "{ctx}");
+                            assert_eq!(r.killed[0].0, 1, "{ctx}: node 1 dies");
+                            assert!(r.killed[0].1 <= 2, "{ctx}: at most 2 completions");
+                            // Heartbeat detection declared the death, and
+                            // did so before recovery planning began.
+                            assert_eq!(r.detections, vec![(1, 10)], "{ctx}");
+                            assert_eq!(r.survivors, desc.nodes - 1, "{ctx}");
+                            assert!(r.doomed_tasks > 0, "{ctx}: suffix was lost");
+                            assert_eq!(r.rounds, 2, "{ctx}: recovery round ran");
+                            assert!(r.rerun_tasks >= r.doomed_tasks, "{ctx}: lineage closure");
+                        }
+                        "drop:400" => {
+                            assert!(r.detections.is_empty(), "{ctx}: nothing dies");
+                            assert_eq!(r.survivors, desc.nodes, "{ctx}");
+                            dropped_total += r.dropped_msgs;
+                            if r.dropped_msgs > 0 {
+                                assert!(r.doomed_tasks > 0, "{ctx}: lost deliveries doom readers");
+                                assert_eq!(r.rounds, 2, "{ctx}");
+                            } else {
+                                assert_eq!(r.rounds, 1, "{ctx}");
+                            }
+                        }
+                        "delay:200:500" => {
+                            // A delay storm reorders, never loses: no
+                            // dooming, no recovery round.
+                            delayed_total += r.delayed_msgs;
+                            assert_eq!(r.doomed_tasks, 0, "{ctx}");
+                            assert_eq!(r.rounds, 1, "{ctx}");
+                            assert_eq!(r.rerun_tasks, 0, "{ctx}");
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+    }
+    // The seeded draws must actually fire somewhere across the sweep.
+    assert!(dropped_total > 0, "drop:400 never dropped a message");
+    assert!(delayed_total > 0, "delay:200:500 never delayed a message");
+}
+
+#[test]
+fn fault_timeline_and_recovery_are_deterministic_across_worker_counts() {
+    // Same FaultPlan + seed ⇒ identical failure timeline, recovery
+    // schedule, and checksum whether the executor runs 1, 2, or 16
+    // lanes per processor.
+    let desc = shape(2, 2);
+    let faults = FaultPlan::parse("kill:1@2;drop:100;delay:100:200").unwrap();
+    for app_name in ["cannon", "stencil", "pennant"] {
+        let baseline = run_chaos(app_name, &desc, &copts(faults.clone(), KernelMode::Fast, 1));
+        let b = &baseline.chaos;
+        // Repeatability at fixed lanes first.
+        let again = run_chaos(app_name, &desc, &copts(faults.clone(), KernelMode::Fast, 1));
+        assert_eq!(again.chaos.report.digest(), b.report.digest(), "{app_name} rerun");
+        assert_eq!(again.chaos.result.checksum, b.result.checksum, "{app_name} rerun");
+        for lanes in [2usize, 16] {
+            let out = run_chaos(app_name, &desc, &copts(faults.clone(), KernelMode::Fast, lanes));
+            let c = &out.chaos;
+            assert_eq!(c.result.checksum, b.result.checksum, "{app_name} lanes={lanes}");
+            assert_eq!(c.result.placements, b.result.placements, "{app_name} lanes={lanes}");
+            assert_eq!(
+                c.result.canonical_log(),
+                b.result.canonical_log(),
+                "{app_name} lanes={lanes}"
+            );
+            assert_eq!(c.result.per_proc, b.result.per_proc, "{app_name} lanes={lanes}");
+            // The whole deterministic report — killed/detections/doomed/
+            // rerun/refetch/sends/timeline — folds into one digest.
+            assert_eq!(c.report.digest(), b.report.digest(), "{app_name} lanes={lanes}");
+            assert_eq!(c.report.timeline, b.report.timeline, "{app_name} lanes={lanes}");
+        }
+    }
+}
+
+#[test]
+fn empty_fault_plan_matches_a_plain_run_on_every_deterministic_field() {
+    let desc = shape(2, 2);
+    for app_name in ["summa", "circuit"] {
+        let procs = desc.nodes * desc.gpus_per_node;
+        let app = build_app(app_name, procs);
+        let mapper = mapper_for(&Flavor::Mapple, app_name, &desc);
+        let plain = exec_app(&app, mapper.as_ref(), &desc, &ExecOptions::default())
+            .unwrap_or_else(|e| panic!("{app_name} plain: {e}"));
+        let calm = chaos_app(&app, mapper.as_ref(), &desc, &ChaosOptions::default())
+            .unwrap_or_else(|e| panic!("{app_name} chaos: {e}"));
+        let (p, c) = (&plain.exec, &calm.chaos.result);
+        assert_eq!(c.checksum, p.checksum, "{app_name}");
+        assert_eq!(c.total_flops, p.total_flops, "{app_name}");
+        assert_eq!(c.intra_bytes, p.intra_bytes, "{app_name}");
+        assert_eq!(c.inter_bytes, p.inter_bytes, "{app_name}");
+        assert_eq!(c.tasks, p.tasks, "{app_name}");
+        assert_eq!(c.placements, p.placements, "{app_name}");
+        assert_eq!(c.canonical_log(), p.canonical_log(), "{app_name}");
+        assert_eq!(c.per_proc, p.per_proc, "{app_name}");
+        // (wall_seconds and peak_resident are schedule/timing dependent
+        // and deliberately not compared.)
+        let r = &calm.chaos.report;
+        assert!(r.spec.is_empty(), "{app_name}: canonical empty spec");
+        assert_eq!(r.rounds, 1, "{app_name}");
+        assert_eq!(r.doomed_tasks + r.rerun_tasks + r.refetched_tiles, 0, "{app_name}");
+        assert!(r.detections.is_empty() && r.killed.is_empty(), "{app_name}");
+    }
+}
+
+#[test]
+fn delays_and_stalls_never_trigger_recovery() {
+    // Timing-only faults perturb the physical schedule but lose nothing,
+    // so the run must absorb them in round 1 — and still checksum-match
+    // the oracle (enforced inside chaos_app).
+    let desc = shape(2, 2);
+    let faults = FaultPlan::parse("delay:200:500;stall:0.0@1:300").unwrap();
+    for app_name in ["cannon", "pennant"] {
+        let out = run_chaos(app_name, &desc, &copts(faults.clone(), KernelMode::Fast, 0));
+        let r = &out.chaos.report;
+        assert_eq!(r.rounds, 1, "{app_name}");
+        assert_eq!(r.rerun_tasks, 0, "{app_name}");
+        assert_eq!(r.doomed_tasks, 0, "{app_name}");
+        assert!(r.stalled_lanes <= 1, "{app_name}");
+    }
+}
+
+#[test]
+fn fault_spec_grammar_parses_and_roundtrips() {
+    let fp = FaultPlan::parse("kill:1@2; drop:400 ;delay:200:500;stall:0.1@3:50").unwrap();
+    assert_eq!(fp.kills.len(), 1);
+    assert_eq!((fp.kills[0].node, fp.kills[0].after), (1, 2));
+    assert_eq!(fp.drop_permille, 400);
+    let d = fp.delay.as_ref().unwrap();
+    assert_eq!((d.micros, d.permille), (200, 500));
+    assert_eq!(fp.stalls.len(), 1);
+    // Display produces the canonical form; parse(display) is identity.
+    let canon = fp.to_string();
+    assert_eq!(canon, "kill:1@2;drop:400;delay:200:500;stall:0.1@3:50");
+    assert_eq!(FaultPlan::parse(&canon).unwrap(), fp);
+    // Empty and whitespace-only specs are the empty plan.
+    assert!(FaultPlan::parse("").unwrap().is_empty());
+    assert!(FaultPlan::parse(" ; ").unwrap().is_empty());
+
+    for bad in [
+        "explode:3",
+        "kill:1",
+        "kill:x@2",
+        "drop:1001",
+        "delay:200",
+        "delay:200:2000",
+        "stall:0@1:50",
+        "nonsense",
+    ] {
+        assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+    }
+}
+
+#[test]
+fn impossible_fault_plans_are_rejected_not_executed() {
+    let desc = shape(2, 2);
+    let app = build_app("cannon", 4);
+    let mapper = mapper_for(&Flavor::Mapple, "cannon", &desc);
+
+    // Killing every node leaves nothing to recover onto.
+    let all_dead = FaultPlan::parse("kill:0@0;kill:1@0").unwrap();
+    let e = chaos_app(&app, mapper.as_ref(), &desc, &copts(all_dead, KernelMode::Fast, 0))
+        .unwrap_err();
+    assert!(e.contains("kills every node"), "{e}");
+
+    // A kill aimed outside the machine is a spec error.
+    let out_of_range = FaultPlan::parse("kill:7@1").unwrap();
+    let e = chaos_app(&app, mapper.as_ref(), &desc, &copts(out_of_range, KernelMode::Fast, 0))
+        .unwrap_err();
+    assert!(e.contains("chaos spec"), "{e}");
+}
