@@ -23,6 +23,7 @@
 use mapple::bench::{build_bench_app, mapper_for, run_chaos, write_report, Flavor};
 use mapple::chaos::{ChaosOptions, FaultPlan};
 use mapple::machine::topology::MachineDesc;
+use mapple::serve::proto::digest_hex;
 use mapple::util::json::Json;
 
 const APPS: &[&str] = &["cannon", "stencil", "circuit"];
@@ -80,7 +81,7 @@ fn main() {
             ("replayed_tasks", Json::Num(r.replayed_tasks as f64)),
             ("refetched_tiles", Json::Num(r.refetched_tiles as f64)),
             ("recovery_inter_kib", Json::Num((r.recovery_inter_bytes >> 10) as f64)),
-            ("report_digest", Json::Str(format!("{:016x}", r.digest()))),
+            ("report_digest", Json::Str(digest_hex(r.digest()))),
         ]));
     }
     let report = Json::obj(vec![

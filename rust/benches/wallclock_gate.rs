@@ -18,6 +18,7 @@
 use mapple::bench::{mapper_for, run_exec, write_report, Flavor};
 use mapple::exec::{ExecOptions, KernelMode};
 use mapple::machine::topology::MachineDesc;
+use mapple::serve::proto::digest_hex;
 use mapple::util::json::Json;
 use mapple::{apps, exec::ExecResult};
 
@@ -73,7 +74,7 @@ fn main() {
             ("naive_seconds", Json::Num(naive.wall_seconds)),
             ("fast_seconds", Json::Num(fast.wall_seconds)),
             ("speedup", Json::Num(speedup)),
-            ("checksum", Json::Str(format!("{:016x}", fast.checksum))),
+            ("checksum", Json::Str(digest_hex(fast.checksum))),
         ]));
     }
     let geomean = (log_sum / MATMUL_APPS.len() as f64).exp();

@@ -6,7 +6,8 @@ use crate::exec::{execute, ExecOptions, ExecResult};
 use crate::machine::point::Tuple;
 use crate::machine::topology::MachineDesc;
 use crate::mapper::api::{Mapper, MapperAsMapping};
-use crate::sim::engine::{simulate, SimResult};
+use crate::obs::breakdown::Breakdown;
+use crate::sim::engine::{simulate, simulate_breakdown, SimResult};
 use crate::tasking::deps::{analyze, DataEnv};
 use crate::tasking::pipeline;
 use crate::tasking::task::IndexLaunch;
@@ -58,6 +59,29 @@ pub fn run_app(
     pipeline::validate(&run, &deps)?;
     let sim = simulate(&app.launches, &app.env, &deps, &run.placements, desc, &adapter);
     Ok(RunOutcome { sim, mapper_name: mapper.mapper_name().to_string() })
+}
+
+/// [`run_app`], additionally returning the modelled per-task-family cost
+/// [`Breakdown`] (`mapple run --breakdown`). Same pipeline → validate →
+/// simulate path; the breakdown's schema and row keys match the measured
+/// one `mapple exec --breakdown` emits, so the two diff row-for-row.
+pub fn run_app_breakdown(
+    app: &AppInstance,
+    mapper: &dyn Mapper,
+    desc: &MachineDesc,
+) -> Result<(RunOutcome, Breakdown), String> {
+    let deps = analyze(&app.launches, &app.env);
+    let adapter = MapperAsMapping {
+        mapper,
+        num_nodes: desc.nodes,
+        procs_per_node: desc.gpus_per_node,
+    };
+    let run = pipeline::run(&app.launches, &deps, &adapter, desc.nodes)
+        .map_err(|e| e.to_string())?;
+    pipeline::validate(&run, &deps)?;
+    let (sim, bd) =
+        simulate_breakdown(&app.launches, &app.env, &deps, &run.placements, desc, &adapter);
+    Ok((RunOutcome { sim, mapper_name: mapper.mapper_name().to_string() }, bd))
 }
 
 /// Outcome of *measuring* an app under a mapper on real threads. The

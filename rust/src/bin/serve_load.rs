@@ -18,14 +18,22 @@
 //! By default the driver self-hosts an in-process server on an ephemeral
 //! loopback port (`--shards`/`--cache-bytes`/`--threads` size it) and
 //! shuts it down when done; pass `--addr` to drive an external daemon
-//! instead (it is left running).
+//! instead (left running unless `--shutdown` is also given, in which
+//! case the driver issues the `shutdown` op and asserts the documented
+//! teardown: an acked `bye` followed by an orderly connection close).
+//!
+//! When self-hosting, the report also carries a `tracing_overhead`
+//! block: the same warmed Zipf burst is replayed with the obs collector
+//! off and then on, so the delta isolates what span recording costs the
+//! serve hit path (warm plans/sec tracing off vs on).
 //!
 //! Report-only by default; `--min-plans-per-sec` turns the warm
 //! throughput into a hard gate (exit 1 below the floor).
 
 use mapple::bench::{build_bench_app, APP_ORDER};
 use mapple::machine::point::Tuple;
-use mapple::serve::proto::{read_frame, write_frame, PlanRequest, Request};
+use mapple::obs;
+use mapple::serve::proto::{digest_hex, read_frame, write_frame, PlanRequest, Request};
 use mapple::serve::{machine_for, serve, ServeOptions, Server};
 use mapple::util::cli::{Args, Command};
 use mapple::util::json::Json;
@@ -317,6 +325,53 @@ fn pass_json(requests: usize, wall: f64, sorted_ns: &[u64]) -> Json {
     ])
 }
 
+/// Order-sensitive FNV-1a fold of the cold-pass digest strings, rendered
+/// with the protocol's own hex helper ([`digest_hex`]) rather than a
+/// local re-derivation — one fingerprint summarizing every plan the
+/// trace compiled, stable across runs of the same seed.
+fn digest_fingerprint(digests: &[String]) -> String {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for d in digests {
+        for b in d.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        h = (h ^ 0x2c).wrapping_mul(0x100_0000_01b3);
+    }
+    digest_hex(h)
+}
+
+/// One measured single-connection Zipf burst against the warmed cache —
+/// the throughput probe the tracing-overhead comparison reruns with the
+/// obs collector off and then on (same seed, so the same key sequence).
+fn warm_burst(
+    addr: &str,
+    items: &[TraceItem],
+    digests: &[String],
+    zipf: &Zipf,
+    window: usize,
+    seed: u64,
+    n: usize,
+) -> Result<f64, String> {
+    let mut rng = Rng::new(seed ^ 0x0b5e);
+    let mut conn = Conn::connect(addr, window)?;
+    let mut mode = DigestMode::Verify(digests);
+    let mut out = RunStats::new(n);
+    let start = Instant::now();
+    for _ in 0..n {
+        let i = zipf.sample(&mut rng);
+        conn.push(i, &items[i].request(), &mut mode, &mut out)?;
+    }
+    conn.drain_all(&mut mode, &mut out)?;
+    let wall = start.elapsed().as_secs_f64();
+    if out.errors > 0 || out.mismatches > 0 {
+        return Err(format!(
+            "tracing-overhead burst: {} errors, {} digest mismatches",
+            out.errors, out.mismatches
+        ));
+    }
+    Ok(if wall > 0.0 { out.plans as f64 / wall } else { 0.0 })
+}
+
 fn run(args: &Args) -> Result<i32, String> {
     let requests = args.usize("requests").map_err(|e| e.to_string())?;
     let conns = args.usize("conns").map_err(|e| e.to_string())?.max(1);
@@ -422,6 +477,27 @@ fn run(args: &Args) -> Result<i32, String> {
     }
     warm_ns.sort_unstable();
 
+    // ---- tracing overhead (self-hosted only) ----------------------------
+    // Everything runs in this process when self-hosting, so toggling the
+    // obs collector here toggles it for the server's hit path too; the
+    // off/on delta over an identical burst is the span-recording cost.
+    let trace_overhead = if server.is_some() {
+        let n = (requests / 10).clamp(1, 50_000);
+        let off = warm_burst(&addr, &items, &digests, &zipf, window, seed, n)?;
+        obs::start();
+        let on = warm_burst(&addr, &items, &digests, &zipf, window, seed, n)?;
+        obs::stop();
+        let pct = if on > 0.0 { (off / on - 1.0) * 100.0 } else { 0.0 };
+        Some(Json::obj(vec![
+            ("burst_requests", Json::Num(n as f64)),
+            ("plans_per_sec_tracing_off", Json::Num(off)),
+            ("plans_per_sec_tracing_on", Json::Num(on)),
+            ("overhead_pct", Json::Num(pct)),
+        ]))
+    } else {
+        None
+    };
+
     // ---- server-side counters + shutdown --------------------------------
     let mut ctrl = Conn::connect(&addr, 1)?;
     let server_stats = ctrl.call(&Request::Stats)?;
@@ -429,10 +505,23 @@ fn run(args: &Args) -> Result<i32, String> {
         // The handler sets the stop flag on "shutdown"; join the acceptor.
         let _ = ctrl.call(&Request::Shutdown);
         s.join();
+    } else if args.has("shutdown") {
+        // Driving an external daemon with --shutdown: issue the op and
+        // assert the documented teardown — an acked `bye` followed by an
+        // orderly close of this connection (read_frame sees EOF).
+        let bye = ctrl.call(&Request::Shutdown)?;
+        if bye.get("bye") != Some(&Json::Bool(true)) {
+            return Err(format!("shutdown not acknowledged: {}", bye.pretty()));
+        }
+        match read_frame(&mut ctrl.reader) {
+            Ok(None) => eprintln!("[serve_load] daemon acked shutdown and closed cleanly"),
+            Ok(Some(_)) => return Err("daemon sent data after the shutdown ack".to_string()),
+            Err(e) => return Err(format!("connection not closed cleanly after shutdown: {e}")),
+        }
     }
 
     let warm = pass_json(plans, warm_wall, &warm_ns);
-    let report = Json::obj(vec![
+    let mut rows = vec![
         ("distinct_keys", Json::Num(items.len() as f64)),
         ("connections", Json::Num(conns as f64)),
         ("window", Json::Num(window as f64)),
@@ -441,10 +530,15 @@ fn run(args: &Args) -> Result<i32, String> {
         ("seed", Json::Num(seed as f64)),
         ("digest_mismatches", Json::Num(mismatches as f64)),
         ("request_errors", Json::Num(errors as f64)),
+        ("digest_fingerprint", Json::Str(digest_fingerprint(&digests))),
         ("cold", pass_json(items.len(), cold_wall, &cold.latencies_ns)),
         ("warm", warm.clone()),
         ("server", server_stats),
-    ]);
+    ];
+    if let Some(t) = trace_overhead {
+        rows.push(("tracing_overhead", t));
+    }
+    let report = Json::obj(rows);
     std::fs::write(&json_path, report.pretty()).map_err(|e| format!("write {json_path}: {e}"))?;
 
     let rate = warm.get("plans_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0);
@@ -455,6 +549,11 @@ fn run(args: &Args) -> Result<i32, String> {
          p50 {:.1}µs p99 {:.1}µs — report: {}",
         rate, plans, conns, window, batch, p50, p99, json_path
     );
+    if let Some(t) = report.get("tracing_overhead") {
+        let off = t.get("plans_per_sec_tracing_off").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let on = t.get("plans_per_sec_tracing_on").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!("[serve_load] tracing overhead: {off:.0} plans/sec off vs {on:.0} on");
+    }
     if mismatches > 0 || errors > 0 {
         eprintln!("[serve_load] FAIL: {mismatches} digest mismatches, {errors} errors");
         return Ok(1);
@@ -480,7 +579,8 @@ fn main() {
         .opt("zipf", "Zipf skew exponent s", Some("1.1"))
         .opt("seed", "trace seed", Some("42"))
         .opt("json", "report path", Some("serve_load.json"))
-        .opt("min-plans-per-sec", "fail below this warm throughput (0 = report only)", Some("0"));
+        .opt("min-plans-per-sec", "fail below this warm throughput (0 = report only)", Some("0"))
+        .flag("shutdown", "send the shutdown op to an external daemon and assert clean teardown");
     let code = match cmd.parse(&argv) {
         Ok(args) => match run(&args) {
             Ok(code) => code,

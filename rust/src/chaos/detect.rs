@@ -18,6 +18,7 @@
 //! across worker counts.
 
 use crate::exec::node::Pulse;
+use crate::obs::{self, Cat};
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
@@ -38,6 +39,8 @@ pub(crate) fn monitor(
         pending.retain(|&n| {
             let last = pulse.board[n].load(Ordering::Relaxed);
             if now.saturating_sub(last) >= window_nanos {
+                let args = [("node", n as i64), ("missed", miss_threshold as i64)];
+                obs::instant(Cat::Heartbeat, "death_detected", None, n as u32, 902, args);
                 declared.push((n, miss_threshold));
                 false
             } else {

@@ -48,7 +48,9 @@ use crate::exec::node::{self, Cluster, Pulse, RoundSpec};
 use crate::exec::plan::{self, Key};
 use crate::exec::{assemble_log, ExecOptions, ExecResult};
 use crate::machine::topology::MachineDesc;
+use crate::obs::{self, Cat};
 use crate::serve::cache::PlanCache;
+use crate::serve::proto::digest_hex;
 use crate::sim::engine::MappingPolicies;
 use crate::tasking::deps::{DataEnv, Dependences};
 use crate::tasking::pipeline::{PipelineRun, PlanError};
@@ -373,7 +375,7 @@ impl ChaosReport {
             ("rounds", Json::Num(self.rounds as f64)),
             ("heartbeat_us", Json::Num(self.heartbeat_us as f64)),
             ("miss_threshold", Json::Num(self.miss_threshold as f64)),
-            ("digest", Json::Str(format!("{:016x}", self.digest()))),
+            ("digest", Json::Str(digest_hex(self.digest()))),
             (
                 "timeline",
                 Json::arr(self.timeline.iter().map(|l| Json::Str(l.clone()))),
@@ -404,7 +406,12 @@ pub fn execute_chaos(
     policies: &dyn MappingPolicies,
     opts: &ChaosOptions,
 ) -> Result<ChaosOutcome, ChaosError> {
+    let t_plan = obs::now();
     let plan = plan::build(launches, env, deps, run, desc, policies, opts.exec.seed)?;
+    if let Some(t0) = t_plan {
+        let tasks = plan.tasks.len() as i64;
+        obs::span(Cat::Compile, "plan_build", Some("chaos"), 0, 0, t0, [("tasks", tasks), ("", 0)]);
+    }
     let inj = inject::plan_injection(&plan, &opts.faults, opts.fault_seed)?;
     let nodes = desc.nodes;
     let has_kills = inj.dead.iter().any(|&d| d);
@@ -437,6 +444,7 @@ pub fn execute_chaos(
     });
     let planned_dead: Vec<usize> = (0..nodes).filter(|&n| inj.dead[n]).collect();
     let mut detections: Vec<(usize, u32)> = Vec::new();
+    let t_round1 = obs::now();
     let round1 = std::thread::scope(|s| {
         let miss = opts.miss_threshold;
         let pd = &planned_dead;
@@ -457,6 +465,12 @@ pub fn execute_chaos(
         }
         out
     });
+    if let Some(t0) = t_round1 {
+        let kills = planned_dead.len() as i64;
+        let drops = inj.drops.len() as i64;
+        let args = [("kills", kills), ("drops", drops)];
+        obs::span(Cat::Recovery, "round", Some("inject"), 0, 0, t0, args);
+    }
     let mut events = round1.events;
     let next_seq = round1.next_seq;
 
@@ -473,7 +487,12 @@ pub fn execute_chaos(
         let inventory: Vec<HashSet<(Key, u64)>> = (0..nodes)
             .map(|n| if inj.dead[n] { HashSet::new() } else { cluster.stores[n].inventory() })
             .collect();
+        let t_replan = obs::now();
         let rec = recover::plan_recovery(&plan, &inj, &inventory);
+        if let Some(t0) = t_replan {
+            let args = [("rerun", rec.rerun_count as i64), ("refetch", rec.refetch.len() as i64)];
+            obs::span(Cat::Recovery, "replan", None, 0, 0, t0, args);
+        }
         if rec.rerun_count > 0 {
             let spec2 = RoundSpec {
                 lanes: rec.lanes2.clone(),
@@ -489,6 +508,7 @@ pub fn execute_chaos(
                 exact: true,
                 retain: Some(inj.dead.iter().map(|&d| !d).collect()),
             };
+            let t_round2 = obs::now();
             let out2 = node::run_round(
                 &cluster,
                 &plan,
@@ -498,6 +518,10 @@ pub fn execute_chaos(
                 next_seq,
                 None,
             );
+            if let Some(t0) = t_round2 {
+                let args = [("rerun", rec.rerun_count as i64), ("sends", rec.send_count as i64)];
+                obs::span(Cat::Recovery, "round", Some("recover"), 0, 0, t0, args);
+            }
             events.extend(out2.events);
         }
         recovery = Some(rec);
@@ -510,6 +534,8 @@ pub fn execute_chaos(
     let survivors = nodes - planned_dead.len();
     if has_kills {
         PlanCache::global().invalidate_machine(&desc.cache_key());
+        let args = [("survivors", survivors as i64), ("nodes", nodes as i64)];
+        obs::instant(Cat::Cache, "invalidate_machine", None, 0, 0, args);
         let mut degraded = desc.clone();
         degraded.nodes = survivors;
         // Touch the degraded key so the shape is canonicalized the same
@@ -573,6 +599,7 @@ pub fn execute_chaos(
         placements: plan.placements,
         log,
         per_proc,
+        families: plan.families,
     };
     Ok(ChaosOutcome { result, report })
 }

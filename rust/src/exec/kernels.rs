@@ -46,6 +46,18 @@ pub enum Kernel {
     Sweep,
 }
 
+impl Kernel {
+    /// Static label for tracing — the `obs` kernel-span name (no
+    /// allocation on the instrumented path).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::MatmulTile => "matmul_tile",
+            Kernel::Stencil5 => "stencil5",
+            Kernel::Sweep => "sweep",
+        }
+    }
+}
+
 /// Which kernel implementations a run uses. Both modes compute the same
 /// per-element f32 operation sequence, so region contents and checksums
 /// are bitwise identical; only wall-clock changes.

@@ -34,16 +34,19 @@ pub mod plan;
 pub mod pool;
 
 pub use kernels::KernelMode;
-pub use plan::{ExecPlan, ExecTask, ReqPlan, SendPlan, SourceSlice};
+pub use plan::{ExecPlan, ExecTask, FamilyTraffic, ReqPlan, SendPlan, SourceSlice};
 
 use crate::machine::point::Tuple;
 use crate::machine::topology::{MachineDesc, ProcId};
+use crate::obs::breakdown::Breakdown;
+use crate::obs::{self, Cat, Trace};
+use crate::serve::proto::digest_hex;
 use crate::sim::engine::MappingPolicies;
 use crate::tasking::deps::{DataEnv, Dependences};
 use crate::tasking::pipeline::{self, LogEntry, PipelineRun, PlanError};
 use crate::tasking::task::{IndexLaunch, LaunchId, PointTask};
 use crate::util::json::Json;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::fmt;
 
 /// Knobs of a concurrent run. The default — unlimited lanes, seed 0 —
@@ -113,6 +116,10 @@ pub struct ExecResult {
     pub log: Vec<LogEntry>,
     /// Execution order per processor (deterministic under a fixed seed).
     pub per_proc: Vec<(ProcId, Vec<PointTask>)>,
+    /// Plan-time per-family task counts and per-region gather traffic —
+    /// the deterministic byte columns of the exec cost breakdown (see
+    /// [`breakdown`]).
+    pub families: BTreeMap<String, FamilyTraffic>,
 }
 
 /// Total order on log entries for multiset comparison and tie-breaking.
@@ -217,9 +224,40 @@ impl ExecResult {
             ("intra_bytes", Json::Num(self.intra_bytes as f64)),
             ("inter_bytes", Json::Num(self.inter_bytes as f64)),
             ("peak_resident_bytes", Json::Num(self.peak_resident as f64)),
-            ("checksum", Json::Str(format!("{:016x}", self.checksum))),
+            ("checksum", Json::Str(digest_hex(self.checksum))),
         ])
     }
+}
+
+/// Build the measured per-task-family cost breakdown for a run: the
+/// byte columns come from the plan (schedule-independent, attributed to
+/// the consuming family per region — the simulator's rule), the time
+/// columns from the trace's kernel/wait spans (collect the run with
+/// [`obs::start`] active). Row keys are launch names on both sides, so
+/// this diffs row-for-row against [`crate::sim::simulate_breakdown`].
+pub fn breakdown(result: &ExecResult, trace: &Trace) -> Breakdown {
+    let mut b = Breakdown::new("exec");
+    for (fam, t) in &result.families {
+        let row = b.row(fam);
+        row.tasks = t.tasks;
+        for (region, e) in &t.edges {
+            row.edges.insert(region.clone(), *e);
+            row.intra_bytes += e.intra;
+            row.inter_bytes += e.inter;
+        }
+    }
+    for e in &trace.events {
+        let Some(fam) = e.detail.as_deref() else {
+            continue;
+        };
+        match e.cat {
+            Cat::Kernel => b.row(fam).compute_ns += e.dur_ns as f64,
+            Cat::Wait => b.row(fam).wait_ns += e.dur_ns as f64,
+            _ => {}
+        }
+    }
+    b.dropped_events = trace.dropped;
+    b
 }
 
 /// Assemble the full transition log from a plan and its measured
@@ -252,7 +290,12 @@ pub fn execute(
     policies: &dyn MappingPolicies,
     opts: &ExecOptions,
 ) -> Result<ExecResult, ExecError> {
+    let t_plan = obs::now();
     let plan = plan::build(launches, env, deps, run, desc, policies, opts.seed)?;
+    if let Some(t0) = t_plan {
+        let tasks = plan.tasks.len() as i64;
+        obs::span(Cat::Compile, "plan_build", None, 0, 0, t0, [("tasks", tasks), ("", 0)]);
+    }
     let raw = node::run_plan(&plan, opts.lanes, opts.kernels);
     let log = assemble_log(&plan, raw.events);
     Ok(ExecResult {
@@ -266,6 +309,7 @@ pub fn execute(
         placements: plan.placements,
         log,
         per_proc: raw.per_proc,
+        families: plan.families,
     })
 }
 

@@ -30,7 +30,8 @@ use super::kernels::{self, ArgView, KernelMode, TileBuf};
 use super::plan::{ExecPlan, Key, ReqPlan, SendPlan};
 use super::pool::BufferPool;
 use crate::machine::point::{Rect, Tuple};
-use crate::machine::topology::ProcId;
+use crate::machine::topology::{ProcId, ProcKind};
+use crate::obs::{self, Cat};
 use crate::tasking::pipeline::LogEntry;
 use crate::tasking::region::RegionId;
 use crate::tasking::task::PointTask;
@@ -405,9 +406,28 @@ impl Pulse {
     }
 }
 
+/// Chrome-trace thread id for a worker lane. Service threads use the
+/// 900 range (the heartbeat pump traces as tid 901) so they never
+/// collide with a real lane.
+fn lane_tid(proc: &ProcId) -> u32 {
+    let base = match proc.kind {
+        ProcKind::Gpu => 0,
+        ProcKind::Cpu => 100,
+        ProcKind::Omp => 200,
+    };
+    base + proc.local as u32
+}
+
 /// One node's heartbeat pump: beat every interval until the round ends —
 /// or, on a dying node, until its truncated lanes finish (death).
+///
+/// Individual beats are deliberately *not* recorded (at a 200µs cadence
+/// they would flood the rings); the pump traces as one span per node
+/// whose end marks the node going silent — a dying node's pump span
+/// visibly ends early in the Chrome trace.
 fn pump(pulse: &Pulse, me: usize, txs: &[SyncSender<Msg>]) {
+    let t0 = obs::now();
+    let mut beats = 0i64;
     while !pulse.pump_done(me) {
         for (j, tx) in txs.iter().enumerate() {
             if j != me {
@@ -416,7 +436,11 @@ fn pump(pulse: &Pulse, me: usize, txs: &[SyncSender<Msg>]) {
                 let _ = tx.try_send(Msg::Beat { from: me });
             }
         }
+        beats += 1;
         std::thread::sleep(Duration::from_micros(pulse.interval_us));
+    }
+    if let Some(t0) = t0 {
+        obs::span(Cat::Heartbeat, "pump", None, me as u32, 901, t0, [("beats", beats), ("", 0)]);
     }
 }
 
@@ -544,21 +568,48 @@ fn lane_run(
 ) -> (Vec<(u64, LogEntry)>, Vec<PointTask>) {
     let mut events = Vec::with_capacity(2 * tasks_idx.len());
     let mut executed = Vec::with_capacity(tasks_idx.len());
+    let tid = lane_tid(&proc);
     for &t in tasks_idx {
         let task = &shared.plan.tasks[t];
         if let Some(&us) = shared.spec.stalls.get(&t) {
             std::thread::sleep(Duration::from_micros(us));
         }
+        let t_wait = obs::now();
         for &p in &task.waits {
             shared.wait_done(p);
         }
         let node = shared.eff_node(t);
+        if let Some(t0) = t_wait {
+            let preds = task.waits.len() as i64;
+            obs::span(
+                Cat::Wait,
+                "wait",
+                Some(&task.name),
+                node as u32,
+                tid,
+                t0,
+                [("task", t as i64), ("preds", preds)],
+            );
+        }
         let store = &shared.cluster.stores[node];
         let pool = &shared.cluster.pools[node];
         let retain = shared.spec.retain_at(node);
         let replay = shared.spec.replay.as_ref().is_some_and(|r| r[t]);
+        let t_gather = obs::now();
         let mut inputs: Vec<TileBuf> =
             task.reqs.iter().map(|r| gather(store, r, pool, shared.spec.exact)).collect();
+        if let Some(t0) = t_gather {
+            let bytes: u64 = task.reqs.iter().filter(|r| r.reads).map(|r| r.bytes).sum();
+            obs::span(
+                Cat::Gather,
+                "gather",
+                Some(&task.name),
+                node as u32,
+                tid,
+                t0,
+                [("task", t as i64), ("bytes", bytes as i64)],
+            );
+        }
         if let Some(sem) = limiter {
             sem.acquire();
         }
@@ -578,7 +629,19 @@ fn lane_run(
                 reduces: r.reduces,
             })
             .collect();
+        let t_kernel = obs::now();
         let outs = kernels::run(task.kernel, shared.mode, &args, &mut inputs, pool);
+        if let Some(t0) = t_kernel {
+            obs::span(
+                Cat::Kernel,
+                task.kernel.name(),
+                Some(&task.name),
+                node as u32,
+                tid,
+                t0,
+                [("task", t as i64), ("flops", task.flops as i64)],
+            );
+        }
         if let Some(sem) = limiter {
             sem.release();
         }
@@ -631,6 +694,7 @@ fn lane_run(
             if let Some(&us) = shared.spec.delays.get(&(t, si)) {
                 std::thread::sleep(Duration::from_micros(us));
             }
+            let t_send = obs::now();
             let payload = if shared.spec.exact {
                 store.peek_exact(&s.key, s.version)
             } else {
@@ -644,6 +708,17 @@ fn lane_run(
                     payload,
                 }))
                 .expect("receiver lives until every planned transfer arrived");
+            if let Some(t0) = t_send {
+                obs::span(
+                    Cat::Transfer,
+                    "send",
+                    Some(&task.name),
+                    node as u32,
+                    tid,
+                    t0,
+                    [("bytes", s.bytes as i64), ("to", s.to_node as i64)],
+                );
+            }
         }
     }
     if let Some(p) = shared.pulse {

@@ -29,6 +29,7 @@
 use super::kernels::{self, Kernel};
 use crate::machine::point::Rect;
 use crate::machine::topology::{MachineDesc, MemKind, ProcId};
+use crate::obs::breakdown::EdgeBytes;
 use crate::sim::engine::MappingPolicies;
 use crate::tasking::deps::{DataEnv, Dependences};
 use crate::tasking::pipeline::{PipelineRun, PlanError};
@@ -101,6 +102,18 @@ pub struct ExecTask {
     pub sends: Vec<SendPlan>,
 }
 
+/// Plan-time, schedule-independent traffic for one task family — the
+/// byte columns of the exec-side cost breakdown. Bytes are attributed
+/// to the *consuming* family per region (the family whose read pulled
+/// the tile), matching the simulator's attribution rule so the two
+/// breakdowns diff row-for-row.
+#[derive(Clone, Debug, Default)]
+pub struct FamilyTraffic {
+    pub tasks: u64,
+    /// Region name → bytes gathered into this family's tasks.
+    pub edges: BTreeMap<String, EdgeBytes>,
+}
+
 /// The full static plan for one concurrent run.
 #[derive(Debug)]
 pub struct ExecPlan {
@@ -123,6 +136,9 @@ pub struct ExecPlan {
     pub intra_bytes: u64,
     pub inter_bytes: u64,
     pub total_flops: f64,
+    /// Per-family task counts and per-region gather traffic, fixed at
+    /// plan time (the deterministic half of the exec cost breakdown).
+    pub families: BTreeMap<String, FamilyTraffic>,
 }
 
 /// Latest write to a tile during the plan's program-order walk. (The
@@ -159,6 +175,7 @@ pub fn build(
     let mut index: HashMap<PointTask, usize> = HashMap::new();
     let mut placements: HashMap<PointTask, ProcId> = HashMap::new();
     let mut total_flops = 0.0f64;
+    let mut families: BTreeMap<String, FamilyTraffic> = BTreeMap::new();
     for launch in launches {
         let plan = run.plans.get(&launch.id).ok_or_else(|| PlanError::Mapping {
             task: launch.name.clone(),
@@ -232,6 +249,7 @@ pub fn build(
             placements.insert(pt.clone(), proc);
             index.insert(pt.clone(), idx);
             total_flops += launch.flops_per_point;
+            families.entry(launch.name.clone()).or_default().tasks += 1;
             tasks.push(ExecTask {
                 pt,
                 name: launch.name.clone(),
@@ -262,6 +280,7 @@ pub fn build(
     for t in 0..tasks.len() {
         let proc_t = tasks[t].proc;
         let node_t = proc_t.node;
+        let fam_t = tasks[t].name.clone();
         let nreqs = tasks[t].reqs.len();
         // Reads: gather against the pre-task state.
         for ri in 0..nreqs {
@@ -291,10 +310,17 @@ pub fn build(
                 extra_waits[t].push(ks.writer_task);
                 let tile_bytes = r.volume() as u64 * env.region(region).elem_bytes;
                 if !avail_proc.contains(&(key.clone(), ks.version, proc_t)) {
+                    let edge = families
+                        .get_mut(&fam_t)
+                        .expect("family registered in the skeleton pass")
+                        .edges
+                        .entry(env.region(region).name.clone())
+                        .or_default();
                     if avail_node.contains(&(key.clone(), ks.version, node_t)) {
                         // On-node copy in another processor's memory:
                         // NVLink-class pull.
                         intra_bytes += tile_bytes;
+                        edge.intra += tile_bytes;
                     } else {
                         // Remote: the writer pushes its tile over the
                         // destination node's bounded channel.
@@ -306,6 +332,7 @@ pub fn build(
                         });
                         expected_msgs[node_t] += 1;
                         inter_bytes += tile_bytes;
+                        edge.inter += tile_bytes;
                         avail_node.insert((key.clone(), ks.version, node_t));
                     }
                     avail_proc.insert((key, ks.version, proc_t));
@@ -391,6 +418,7 @@ pub fn build(
         intra_bytes,
         inter_bytes,
         total_flops,
+        families,
     })
 }
 

@@ -5,6 +5,7 @@ pub mod decompose;
 pub mod exec;
 pub mod mapple;
 pub mod mapper;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

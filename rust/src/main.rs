@@ -30,11 +30,12 @@ use mapple::apps;
 use mapple::bench::Flavor;
 use mapple::chaos::{ChaosOptions, FaultPlan};
 use mapple::decompose::{decompose, greedy_grid, Objective};
-use mapple::exec::{ExecOptions, KernelMode};
+use mapple::exec::{self, ExecOptions, KernelMode};
 use mapple::machine::topology::MachineDesc;
 use mapple::mapper::api::Mapper;
 use mapple::mapper::MappleMapper;
 use mapple::mapple::MapperSpec;
+use mapple::obs::{self, chrome};
 use mapple::serve::cache::PlanCache;
 use mapple::serve::{serve, ServeOptions};
 use mapple::tune::{tune, tune_with_ctx, EvalCtx, StrategyKind, TuneConfig, TuneSpec};
@@ -135,7 +136,8 @@ fn cmd_run(argv: &[String]) -> i32 {
         .opt("app", "application name (see `mapple apps`)", Some("cannon"))
         .opt("nodes", "cluster nodes (4 GPUs each)", Some("2"))
         .opt("mapper", "mapple | tuned | expert | heuristic | auto", Some("mapple"))
-        .opt("scale", "problem-size multiplier", Some("1"));
+        .opt("scale", "problem-size multiplier", Some("1"))
+        .opt("breakdown", "write the modelled per-task-family cost breakdown JSON here", None);
     let args = match cmd.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -165,25 +167,42 @@ fn cmd_run(argv: &[String]) -> i32 {
             return 1;
         }
     };
-    match apps::run_app(&app, mapper.as_ref(), &desc) {
-        Ok(out) => {
-            println!(
-                "{app_name} on {nodes} nodes under {}:\n  makespan {}\n  throughput/node {:.2} GFLOP/s\n  comm intra {} MiB / inter {} MiB\n  peak FBMEM {} MiB{}",
-                out.mapper_name,
-                fmt_time(out.sim.makespan),
-                out.sim.throughput_per_node(nodes) / 1e9,
-                out.sim.intra_bytes >> 20,
-                out.sim.inter_bytes >> 20,
-                out.sim.peak_fbmem >> 20,
-                out.sim.oom.as_ref().map(|o| format!("\n  *** {o}")).unwrap_or_default(),
-            );
-            0
+    let bd_path = args.str("breakdown").map(|s| s.to_string());
+    let (out, bd) = if bd_path.is_some() {
+        match apps::run_app_breakdown(&app, mapper.as_ref(), &desc) {
+            Ok((o, b)) => (o, Some(b)),
+            Err(e) => {
+                eprintln!("run failed: {e}");
+                return 1;
+            }
         }
-        Err(e) => {
-            eprintln!("run failed: {e}");
-            1
+    } else {
+        match apps::run_app(&app, mapper.as_ref(), &desc) {
+            Ok(o) => (o, None),
+            Err(e) => {
+                eprintln!("run failed: {e}");
+                return 1;
+            }
         }
+    };
+    println!(
+        "{app_name} on {nodes} nodes under {}:\n  makespan {}\n  throughput/node {:.2} GFLOP/s\n  comm intra {} MiB / inter {} MiB\n  peak FBMEM {} MiB{}",
+        out.mapper_name,
+        fmt_time(out.sim.makespan),
+        out.sim.throughput_per_node(nodes) / 1e9,
+        out.sim.intra_bytes >> 20,
+        out.sim.inter_bytes >> 20,
+        out.sim.peak_fbmem >> 20,
+        out.sim.oom.as_ref().map(|o| format!("\n  *** {o}")).unwrap_or_default(),
+    );
+    if let (Some(path), Some(bd)) = (bd_path.as_deref(), bd) {
+        if let Err(e) = std::fs::write(path, bd.to_json().pretty()) {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+        println!("[sim breakdown written to {path}]");
     }
+    0
 }
 
 fn cmd_exec(argv: &[String]) -> i32 {
@@ -204,7 +223,9 @@ fn cmd_exec(argv: &[String]) -> i32 {
         None,
     )
     .opt("chaos-seed", "fault-injection seed", Some("0"))
-    .opt("json", "write the ExecResult JSON report here", None);
+    .opt("json", "write the ExecResult JSON report here", None)
+    .opt("trace", "write a Chrome-trace JSON of the run here (load in Perfetto)", None)
+    .opt("breakdown", "write the measured per-task-family cost breakdown JSON here", None);
     let args = match cmd.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -247,6 +268,15 @@ fn cmd_exec(argv: &[String]) -> i32 {
         seed: args.usize("seed").unwrap_or(0) as u64,
         kernels,
     };
+    let trace_path = args.str("trace").map(|s| s.to_string());
+    let bd_path = args.str("breakdown").map(|s| s.to_string());
+    // Tracing is a global toggle, not an ExecOptions knob: the executor's
+    // hot paths carry no extra parameters, and a run with tracing off
+    // pays one relaxed atomic load per would-be event.
+    let tracing = trace_path.is_some() || bd_path.is_some();
+    if tracing {
+        obs::start();
+    }
     if let Some(spec) = args.str("chaos") {
         let faults = match FaultPlan::parse(spec) {
             Ok(f) => f,
@@ -308,6 +338,13 @@ fn cmd_exec(argv: &[String]) -> i32 {
             }
             println!("[chaos exec report written to {path}]");
         }
+        if tracing {
+            let r = write_obs_views(trace_path.as_deref(), bd_path.as_deref(), &out.chaos.result);
+            if let Err(e) = r {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
         return 0;
     }
     let out = match apps::exec_app(&app, mapper.as_ref(), &desc, &opts) {
@@ -355,7 +392,36 @@ fn cmd_exec(argv: &[String]) -> i32 {
         }
         println!("[exec report written to {path}]");
     }
+    if tracing {
+        if let Err(e) = write_obs_views(trace_path.as_deref(), bd_path.as_deref(), &out.exec) {
+            eprintln!("{e}");
+            return 1;
+        }
+    }
     0
+}
+
+/// Drain the trace a `--trace`/`--breakdown` run collected and write the
+/// requested views: the Chrome-trace timeline (Perfetto-loadable) and the
+/// measured per-task-family cost breakdown.
+fn write_obs_views(
+    trace_path: Option<&str>,
+    bd_path: Option<&str>,
+    result: &exec::ExecResult,
+) -> Result<(), String> {
+    obs::stop();
+    let tr = obs::drain();
+    if let Some(path) = trace_path {
+        std::fs::write(path, chrome::to_chrome(&tr).pretty())
+            .map_err(|e| format!("{path}: {e}"))?;
+        println!("[chrome trace written to {path} — load at https://ui.perfetto.dev]");
+    }
+    if let Some(path) = bd_path {
+        let bd = exec::breakdown(result, &tr);
+        std::fs::write(path, bd.to_json().pretty()).map_err(|e| format!("{path}: {e}"))?;
+        println!("[exec breakdown written to {path}]");
+    }
+    Ok(())
 }
 
 fn cmd_tune(argv: &[String]) -> i32 {
@@ -518,7 +584,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("addr", "listen address", Some("127.0.0.1:7517"))
         .opt("threads", "max concurrent connections", Some("8"))
         .opt("shards", "plan-cache shards", Some("16"))
-        .opt("cache-bytes", "plan-cache byte budget", Some("268435456"));
+        .opt("cache-bytes", "plan-cache byte budget", Some("268435456"))
+        .opt("trace", "write a Chrome-trace JSON of the daemon's lifetime here", None);
     let args = match cmd.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -532,6 +599,10 @@ fn cmd_serve(argv: &[String]) -> i32 {
         shards: args.usize("shards").unwrap_or(16).max(1),
         cache_bytes: args.usize("cache-bytes").unwrap_or(256 << 20),
     };
+    let trace_path = args.str("trace").map(|s| s.to_string());
+    if trace_path.is_some() {
+        obs::start();
+    }
     let server = match serve(&opts) {
         Ok(s) => s,
         Err(e) => {
@@ -555,5 +626,14 @@ fn cmd_serve(argv: &[String]) -> i32 {
          {} evictions, {} entries resident",
         s.hits, s.misses, s.coalesced, s.compiles, s.evictions, s.entries,
     );
+    if let Some(path) = trace_path.as_deref() {
+        obs::stop();
+        let tr = obs::drain();
+        if let Err(e) = std::fs::write(path, chrome::to_chrome(&tr).pretty()) {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+        println!("[chrome trace written to {path} — load at https://ui.perfetto.dev]");
+    }
     0
 }

@@ -1,0 +1,171 @@
+//! Per-task-family cost breakdowns — the same schema from the simulator
+//! and the executor, so modelled and measured costs diff row-for-row.
+//!
+//! A breakdown is a map from **task family** (the launch name — both
+//! producers derive rows from the same launch list, so the row keys are
+//! identical by construction) to one [`FamilyRow`]:
+//!
+//! ```json
+//! {
+//!   "source": "sim" | "exec",
+//!   "dropped_events": 0,
+//!   "families": {
+//!     "<launch name>": {
+//!       "tasks": 16,
+//!       "compute_ns": 1234.5,
+//!       "wait_ns": 67.8,
+//!       "intra_bytes": 4096,
+//!       "inter_bytes": 8192,
+//!       "edges": { "<region name>": { "intra": 4096, "inter": 8192 } }
+//!     }
+//!   }
+//! }
+//! ```
+//!
+//! Semantics per source:
+//! - **sim** — `compute_ns` is the modelled kernel time on the paper
+//!   testbed; `wait_ns` is time a ready task spent queued behind its
+//!   processor; bytes are the modelled gather traffic, attributed to
+//!   the *consuming* family per region.
+//! - **exec** — `compute_ns`/`wait_ns` are measured on this host from
+//!   the trace's kernel/wait spans; bytes are the plan-time totals
+//!   (schedule-independent, attributed to the consuming family per
+//!   region — the identical attribution rule, so the byte columns are
+//!   directly comparable while the time columns are model vs
+//!   measurement).
+//!
+//! `BTreeMap` keys make the JSON stable: same run, same bytes out.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Bytes pulled over one region edge into a family's tasks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EdgeBytes {
+    /// On-node (NVLink-class) pulls.
+    pub intra: u64,
+    /// Cross-node transfers.
+    pub inter: u64,
+}
+
+/// One task family's costs.
+#[derive(Clone, Debug, Default)]
+pub struct FamilyRow {
+    pub tasks: u64,
+    pub compute_ns: f64,
+    pub wait_ns: f64,
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+    /// Region name → bytes moved to feed this family's reads.
+    pub edges: BTreeMap<String, EdgeBytes>,
+}
+
+impl FamilyRow {
+    /// Record `bytes` pulled over `region` into this family's tasks,
+    /// keeping the per-edge map and the row totals consistent.
+    pub fn add_edge(&mut self, region: &str, bytes: u64, intra: bool) {
+        let e = self.edges.entry(region.to_string()).or_default();
+        if intra {
+            e.intra += bytes;
+            self.intra_bytes += bytes;
+        } else {
+            e.inter += bytes;
+            self.inter_bytes += bytes;
+        }
+    }
+}
+
+/// The full per-family breakdown from one run (sim or exec).
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    /// `"sim"` or `"exec"`.
+    pub source: &'static str,
+    pub rows: BTreeMap<String, FamilyRow>,
+    /// Trace events lost to ring overflow while collecting (exec only;
+    /// always 0 for sim). Non-zero means measured times undercount.
+    pub dropped_events: u64,
+}
+
+impl Breakdown {
+    pub fn new(source: &'static str) -> Breakdown {
+        Breakdown { source, rows: BTreeMap::new(), dropped_events: 0 }
+    }
+
+    /// The row for a family, created empty on first touch.
+    pub fn row(&mut self, family: &str) -> &mut FamilyRow {
+        self.rows.entry(family.to_string()).or_default()
+    }
+
+    /// Row keys in stable (sorted) order — what the schema test diffs.
+    pub fn row_keys(&self) -> Vec<&str> {
+        self.rows.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let families = Json::Obj(
+            self.rows
+                .iter()
+                .map(|(fam, row)| {
+                    let edges = Json::Obj(
+                        row.edges
+                            .iter()
+                            .map(|(region, e)| {
+                                let obj = Json::obj(vec![
+                                    ("intra", Json::Num(e.intra as f64)),
+                                    ("inter", Json::Num(e.inter as f64)),
+                                ]);
+                                (region.clone(), obj)
+                            })
+                            .collect(),
+                    );
+                    let obj = Json::obj(vec![
+                        ("tasks", Json::Num(row.tasks as f64)),
+                        ("compute_ns", Json::Num(row.compute_ns)),
+                        ("wait_ns", Json::Num(row.wait_ns)),
+                        ("intra_bytes", Json::Num(row.intra_bytes as f64)),
+                        ("inter_bytes", Json::Num(row.inter_bytes as f64)),
+                        ("edges", edges),
+                    ]);
+                    (fam.clone(), obj)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("source", Json::Str(self.source.to_string())),
+            ("dropped_events", Json::Num(self.dropped_events as f64)),
+            ("families", families),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_rows_are_stable_and_schema_identical_across_sources() {
+        let mut sim = Breakdown::new("sim");
+        let mut exec = Breakdown::new("exec");
+        for b in [&mut sim, &mut exec] {
+            let r = b.row("matmul");
+            r.tasks = 4;
+            r.compute_ns = 10.0;
+            r.edges.insert("A".to_string(), EdgeBytes { intra: 16, inter: 32 });
+            r.intra_bytes = 16;
+            r.inter_bytes = 32;
+            b.row("init");
+        }
+        assert_eq!(sim.row_keys(), exec.row_keys());
+        let (sj, ej) = (sim.to_json(), exec.to_json());
+        // Identical schema: same top-level keys, same per-row keys.
+        let keys = |j: &Json| match j {
+            Json::Obj(m) => m.keys().cloned().collect::<Vec<_>>(),
+            other => panic!("expected object, got {other:?}"),
+        };
+        assert_eq!(keys(&sj), keys(&ej));
+        let row = |j: &Json, fam: &str| keys(j.get("families").unwrap().get(fam).unwrap());
+        assert_eq!(row(&sj, "matmul"), row(&ej, "matmul"));
+        assert_eq!(row(&sj, "init"), row(&ej, "init"));
+        assert_eq!(sj.get("source").and_then(|s| s.as_str()), Some("sim"));
+    }
+}

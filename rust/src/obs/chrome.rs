@@ -1,0 +1,110 @@
+//! Chrome Trace Event Format export — the JSON object `chrome://tracing`
+//! and Perfetto load directly.
+//!
+//! Field mapping (one entry per [`Event`](super::Event)):
+//!
+//! | trace field | source |
+//! |---|---|
+//! | `name` | `Event::name`, plus `" · detail"` when a detail is set |
+//! | `cat`  | `Cat::name()` (taxonomy category) |
+//! | `ph`   | `"X"` (complete span) when `dur_ns > 0`, else `"i"` (instant, thread scope) |
+//! | `pid`  | `Event::node` — Perfetto groups rows by node |
+//! | `tid`  | `Event::lane` — worker lane / service thread within the node |
+//! | `ts`, `dur` | microseconds (fractional) from `ts_ns`/`dur_ns` |
+//! | `args` | the up-to-two numeric args, plus `detail` when set |
+//!
+//! The top level carries `traceEvents` plus metadata: the drop count
+//! (ring overflow) so a truncated trace is self-describing.
+
+use super::{Event, Trace};
+use crate::util::json::Json;
+
+fn event_json(e: &Event) -> Json {
+    let name = match &e.detail {
+        Some(d) => format!("{} · {}", e.name, d),
+        None => e.name.to_string(),
+    };
+    let mut args: Vec<(String, Json)> = Vec::new();
+    for (k, v) in &e.args {
+        if !k.is_empty() {
+            args.push((k.to_string(), Json::Num(*v as f64)));
+        }
+    }
+    if let Some(d) = &e.detail {
+        args.push(("detail".to_string(), Json::Str(d.to_string())));
+    }
+    let mut fields = vec![
+        ("name", Json::Str(name)),
+        ("cat", Json::Str(e.cat.name().to_string())),
+        ("pid", Json::Num(e.node as f64)),
+        ("tid", Json::Num(e.lane as f64)),
+        ("ts", Json::Num(e.ts_ns as f64 / 1000.0)),
+        ("args", Json::Obj(args.into_iter().collect())),
+    ];
+    if e.dur_ns > 0 {
+        fields.push(("ph", Json::Str("X".to_string())));
+        fields.push(("dur", Json::Num(e.dur_ns as f64 / 1000.0)));
+    } else {
+        fields.push(("ph", Json::Str("i".to_string())));
+        fields.push(("s", Json::Str("t".to_string())));
+    }
+    Json::obj(fields)
+}
+
+/// Render a drained trace as a Chrome-trace JSON object.
+pub fn to_chrome(trace: &Trace) -> Json {
+    Json::obj(vec![
+        ("traceEvents", Json::arr(trace.events.iter().map(event_json).collect::<Vec<_>>())),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("otherData", Json::obj(vec![("dropped_events", Json::Num(trace.dropped as f64))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Cat, Event};
+
+    #[test]
+    fn spans_and_instants_carry_the_required_fields() {
+        let tr = Trace {
+            events: vec![
+                Event {
+                    cat: Cat::Kernel,
+                    name: "gemm",
+                    detail: Some("matmul".into()),
+                    ts_ns: 1500,
+                    dur_ns: 2500,
+                    node: 0,
+                    lane: 1,
+                    args: [("flops", 64), ("", 0)],
+                },
+                Event {
+                    cat: Cat::Heartbeat,
+                    name: "beat",
+                    detail: None,
+                    ts_ns: 3000,
+                    dur_ns: 0,
+                    node: 1,
+                    lane: 0,
+                    args: crate::obs::NO_ARGS,
+                },
+            ],
+            dropped: 0,
+        };
+        let j = to_chrome(&tr);
+        let evs = match j.get("traceEvents") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        assert_eq!(evs.len(), 2);
+        let span = &evs[0];
+        assert_eq!(span.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(span.get("ts").and_then(|t| t.as_f64()), Some(1.5));
+        assert_eq!(span.get("dur").and_then(|d| d.as_f64()), Some(2.5));
+        assert_eq!(span.get("pid").and_then(|p| p.as_f64()), Some(0.0));
+        let inst = &evs[1];
+        assert_eq!(inst.get("ph").and_then(|p| p.as_str()), Some("i"));
+        assert_eq!(inst.get("s").and_then(|s| s.as_str()), Some("t"));
+    }
+}

@@ -49,6 +49,7 @@ use crate::machine::point::Tuple;
 use crate::machine::topology::MachineKey;
 use crate::machine::ProcId;
 use crate::mapple::vm::PlacementTable;
+use crate::obs::{self, Cat};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -418,9 +419,13 @@ impl PlanCache {
         let shard = self.shard_for(mapper, machine, task, ispace);
         if let Some(plan) = shard.probe(mapper, machine, task, ispace, &self.tick) {
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            // One relaxed load when tracing is off: the warmed hit path
+            // stays allocation-free (proven by tests/obs_alloc.rs).
+            obs::instant(Cat::Cache, "hit", None, 0, 0, obs::NO_ARGS);
             return Ok((plan, true));
         }
         self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        obs::instant(Cat::Cache, "miss", Some(task), 0, 0, obs::NO_ARGS);
         let key = PlanKey {
             mapper,
             machine: machine.clone(),
@@ -435,6 +440,7 @@ impl PlanCache {
             // work — keeping `misses == compiles + coalesced` exact.
             if let Some(plan) = shard.probe(mapper, machine, task, ispace, &self.tick) {
                 self.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+                obs::instant(Cat::Cache, "coalesced", Some(task), 0, 0, obs::NO_ARGS);
                 return Ok((plan, true));
             }
             match flights.get(&key) {
@@ -449,10 +455,12 @@ impl PlanCache {
         match role {
             FlightRole::Waiter(f) => {
                 self.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+                obs::instant(Cat::Cache, "coalesced", Some(task), 0, 0, obs::NO_ARGS);
                 f.wait().map(|plan| (plan, false))
             }
             FlightRole::Leader(f) => {
                 self.counters.compiles.fetch_add(1, Ordering::Relaxed);
+                let t_compile = obs::now();
                 let result = compute().map(|table| {
                     let plan = Arc::new(CachedPlan::new(table, entry_overhead(&key)));
                     let stamp = self.tick.fetch_add(1, Ordering::Relaxed);
@@ -460,6 +468,10 @@ impl PlanCache {
                     self.counters.evictions.fetch_add(evicted, Ordering::Relaxed);
                     plan
                 });
+                if let Some(t0) = t_compile {
+                    let args = [("ok", result.is_ok() as i64), ("", 0)];
+                    obs::span(Cat::Compile, "cache_compile", Some(task), 0, 0, t0, args);
+                }
                 // Publish order: the table is already inserted, so late
                 // arrivals hit the map; flight waiters get the result
                 // directly. Remove the flight before completing so no new

@@ -28,6 +28,7 @@ use crate::machine::point::Tuple;
 use crate::machine::topology::MachineDesc;
 use crate::mapper::MappleMapper;
 use crate::mapple::program::MapperSpec;
+use crate::obs::{self, Cat};
 use crate::serve::cache::{CachedPlan, PlanCache};
 use crate::serve::proto::{digest_hex, Invalidation, PlanRequest, Request};
 use crate::util::json::Json;
@@ -257,13 +258,15 @@ impl ServerState {
     }
 
     /// Stats document shared with `mapple exec --json` (same
-    /// `CacheStats` shape under `"plan_cache"`).
+    /// `CacheStats` shape under `"plan_cache"`), plus the tracing rollup
+    /// counters under `"obs"` (all zero while tracing is disabled).
     pub fn stats_json(&self) -> Json {
         Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("specs", Json::Num(self.spec_count() as f64)),
             ("plan_cache", self.cache.stats().to_json()),
+            ("obs", obs::rollup_json()),
         ])
     }
 
@@ -295,7 +298,19 @@ impl ServerState {
     /// daemon down after replying.
     pub fn respond(&self, req: Request) -> (Json, bool) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        match req {
+        // Branch-only op naming: the warmed plan path stays
+        // allocation-free, and with tracing off the whole per-request
+        // cost of this wrapper is one relaxed load in `obs::now`.
+        let op: &'static str = match &req {
+            Request::Plan(_) => "plan",
+            Request::Batch(_) => "batch",
+            Request::Invalidate(_) => "invalidate",
+            Request::Stats => "stats",
+            Request::Ping => "ping",
+            Request::Shutdown => "shutdown",
+        };
+        let t_op = obs::now();
+        let out = match req {
             Request::Plan(p) => (self.plan_json(p), false),
             Request::Batch(ps) => {
                 let replies: Vec<Json> = ps.into_iter().map(|p| self.plan_json(p)).collect();
@@ -334,7 +349,11 @@ impl ServerState {
             Request::Shutdown => {
                 (Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]), true)
             }
+        };
+        if let Some(t0) = t_op {
+            obs::span(Cat::Serve, op, None, 0, 0, t0, obs::NO_ARGS);
         }
+        out
     }
 }
 

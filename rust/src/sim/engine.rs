@@ -11,6 +11,7 @@ use super::channel::Network;
 use super::memory::{MemId, MemoryPool, OomError};
 use crate::machine::point::Rect;
 use crate::machine::topology::{MachineDesc, MemKind, ProcId, ProcKind};
+use crate::obs::breakdown::Breakdown;
 use crate::tasking::deps::{DataEnv, Dependences};
 use crate::tasking::region::RegionId;
 use crate::tasking::task::{IndexLaunch, PointTask};
@@ -96,6 +97,38 @@ pub fn simulate(
     desc: &MachineDesc,
     policies: &dyn MappingPolicies,
 ) -> SimResult {
+    simulate_impl(launches, env, deps, placements, desc, policies, None)
+}
+
+/// [`simulate`], additionally collecting a per-task-family cost
+/// [`Breakdown`]. Same schema and row keys as the exec-side breakdown
+/// (`exec::breakdown`), so modelled and measured runs diff row-for-row:
+/// `compute_ns` is modelled kernel time (seconds × 1e9), `wait_ns` is
+/// time a dependence-ready task spent queued behind its processor, and
+/// bytes are gather traffic attributed to the *consuming* family per
+/// region — the identical attribution rule the exec plan uses.
+pub fn simulate_breakdown(
+    launches: &[IndexLaunch],
+    env: &DataEnv,
+    deps: &Dependences,
+    placements: &HashMap<PointTask, ProcId>,
+    desc: &MachineDesc,
+    policies: &dyn MappingPolicies,
+) -> (SimResult, Breakdown) {
+    let mut bd = Breakdown::new("sim");
+    let r = simulate_impl(launches, env, deps, placements, desc, policies, Some(&mut bd));
+    (r, bd)
+}
+
+fn simulate_impl(
+    launches: &[IndexLaunch],
+    env: &DataEnv,
+    deps: &Dependences,
+    placements: &HashMap<PointTask, ProcId>,
+    desc: &MachineDesc,
+    policies: &dyn MappingPolicies,
+    mut bd: Option<&mut Breakdown>,
+) -> SimResult {
     let mut net = Network::new(desc);
     let mut pool = MemoryPool::new(desc);
     let mut proc_free: HashMap<ProcId, f64> = HashMap::new();
@@ -177,6 +210,13 @@ pub fn simulate(
                         }
                         arrive = net.move_bytes(src.proc, proc, bytes, t0);
                         transferred = true;
+                        if let Some(bd) = bd.as_deref_mut() {
+                            bd.row(&launch.name).add_edge(
+                                &region.name,
+                                bytes,
+                                src.proc.node == proc.node,
+                            );
+                        }
                     } else {
                         // overlapping rect copies (e.g. whole-region read
                         // over tiled writes): pull each overlap.
@@ -195,6 +235,13 @@ pub fn simulate(
                             arrive = arrive
                                 .max(net.move_bytes(src.proc, proc, ov_bytes, ready.max(src.ready)));
                             transferred = true;
+                            if let Some(bd) = bd.as_deref_mut() {
+                                bd.row(&launch.name).add_edge(
+                                    &region.name,
+                                    ov_bytes,
+                                    src.proc.node == proc.node,
+                                );
+                            }
                         }
                         if !transferred && req.privilege == crate::tasking::region::Privilege::ReadOnly
                         {
@@ -202,6 +249,13 @@ pub fn simulate(
                             // node-0 host memory.
                             let host = ProcId { node: 0, kind: ProcKind::Cpu, local: 0 };
                             arrive = net.move_bytes(host, proc, bytes, ready);
+                            if let Some(bd) = bd.as_deref_mut() {
+                                bd.row(&launch.name).add_edge(
+                                    &region.name,
+                                    bytes,
+                                    proc.node == 0,
+                                );
+                            }
                         }
                     }
                     // allocate the destination instance; under pressure,
@@ -270,6 +324,12 @@ pub fn simulate(
             finish.insert(pt.clone(), end);
             makespan = makespan.max(end);
             recent.entry(launch.name.clone()).or_default().push(end);
+            if let Some(bd) = bd.as_deref_mut() {
+                let row = bd.row(&launch.name);
+                row.tasks += 1;
+                row.compute_ns += compute * 1e9;
+                row.wait_ns += (start - ready) * 1e9;
+            }
 
             // 4. write-back: writers invalidate other copies & stamp new
             // version; GC frees instances the mapper marked collectable.

@@ -15,5 +15,5 @@ pub mod engine;
 pub mod memory;
 
 pub use channel::{Channel, Network};
-pub use engine::{simulate, DefaultPolicies, MappingPolicies, SimResult};
+pub use engine::{simulate, simulate_breakdown, DefaultPolicies, MappingPolicies, SimResult};
 pub use memory::{MemId, MemoryPool, OomError};

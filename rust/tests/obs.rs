@@ -1,0 +1,204 @@
+//! Observability suite: tracing must observe without perturbing.
+//!
+//! The contract under test (ISSUE 9 / ARCHITECTURE.md "Observability"):
+//! running the executor with the obs collector enabled must leave every
+//! deterministic result — checksum, placements, byte counters — bitwise
+//! identical to a run with it disabled, across all nine apps and both
+//! kernel tiers. On top of that: the drained log obeys the merge
+//! determinism rule, the Chrome-trace export is well-formed (every event
+//! carries the Perfetto-required fields and the export round-trips
+//! through the parser), sim and exec breakdowns share one schema with
+//! identical row keys, and a chaos recovery emits the documented span
+//! sequence (inject round → replan → recovery round, plus the heartbeat
+//! death-detection instant on the monitor lane).
+
+mod common;
+
+use common::build_app;
+use mapple::apps::{chaos_app, exec_app, run_app_breakdown};
+use mapple::bench::{mapper_for, Flavor};
+use mapple::chaos::{ChaosOptions, FaultPlan};
+use mapple::exec::{self, ExecOptions, KernelMode};
+use mapple::machine::topology::MachineDesc;
+use mapple::obs::{self, chrome, Cat};
+use mapple::util::json::Json;
+use std::sync::Mutex;
+
+const APPS: &[&str] = &[
+    "cannon", "summa", "pumma", "johnson", "solomonik", "cosma", "stencil", "circuit", "pennant",
+];
+
+/// The obs collector is process-global; tests that toggle it serialize.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn shape(nodes: usize, gpus: usize) -> MachineDesc {
+    let mut d = MachineDesc::paper_testbed(nodes);
+    d.gpus_per_node = gpus;
+    d
+}
+
+#[test]
+fn tracing_never_changes_results_for_all_nine_apps_and_both_kernel_tiers() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let desc = shape(2, 2);
+    for app_name in APPS {
+        for kernels in [KernelMode::Fast, KernelMode::Naive] {
+            let app = build_app(app_name, 4);
+            let mapper = mapper_for(&Flavor::Mapple, app_name, &desc);
+            let opts = ExecOptions { kernels, ..ExecOptions::default() };
+            obs::stop();
+            let off = exec_app(&app, mapper.as_ref(), &desc, &opts)
+                .unwrap_or_else(|e| panic!("{app_name} {kernels:?} (tracing off): {e}"));
+            obs::start();
+            let on = exec_app(&app, mapper.as_ref(), &desc, &opts)
+                .unwrap_or_else(|e| panic!("{app_name} {kernels:?} (tracing on): {e}"));
+            obs::stop();
+            let tr = obs::drain();
+            assert_eq!(on.exec.checksum, off.exec.checksum, "{app_name} {kernels:?}: checksum");
+            assert_eq!(on.exec.placements, off.exec.placements, "{app_name} {kernels:?}");
+            assert_eq!(on.exec.intra_bytes, off.exec.intra_bytes, "{app_name} {kernels:?}");
+            assert_eq!(on.exec.inter_bytes, off.exec.inter_bytes, "{app_name} {kernels:?}");
+            assert!(
+                tr.events.iter().any(|e| e.cat == Cat::Kernel),
+                "{app_name} {kernels:?}: the traced run recorded kernel spans"
+            );
+        }
+    }
+}
+
+#[test]
+fn summa_trace_is_chrome_exportable_and_merge_ordered() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let desc = shape(2, 2);
+    let app = build_app("summa", 4);
+    let mapper = mapper_for(&Flavor::Mapple, "summa", &desc);
+    obs::start();
+    exec_app(&app, mapper.as_ref(), &desc, &ExecOptions::default()).unwrap();
+    obs::stop();
+    let tr = obs::drain();
+    assert!(!tr.events.is_empty());
+    // Merge determinism rule: the drained log ascends in ts_ns.
+    assert!(tr.events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+    assert!(tr.events.iter().any(|e| e.cat == Cat::Compile && e.name == "plan_build"));
+    assert!(tr.events.iter().any(|e| e.cat == Cat::Kernel && e.detail.is_some()));
+    assert!(tr.events.iter().any(|e| e.cat == Cat::Transfer), "2-node summa moves tiles");
+
+    // The export is exactly what `mapple exec --trace` writes: it must
+    // round-trip through the parser and carry the Perfetto fields.
+    let back = Json::parse(&chrome::to_chrome(&tr).pretty()).unwrap();
+    let Some(Json::Arr(evs)) = back.get("traceEvents") else {
+        panic!("traceEvents missing: {back:?}");
+    };
+    assert_eq!(evs.len(), tr.events.len());
+    for ev in evs {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap();
+        assert!(ph == "X" || ph == "i", "unknown phase {ph}");
+        if ph == "X" {
+            assert!(ev.get("dur").and_then(|d| d.as_f64()).unwrap() > 0.0);
+        }
+        for field in ["name", "cat", "pid", "tid", "ts"] {
+            assert!(ev.get(field).is_some(), "event missing {field}: {ev:?}");
+        }
+    }
+    let other = back.get("otherData").expect("otherData metadata");
+    assert_eq!(other.get("dropped_events").and_then(|d| d.as_f64()), Some(tr.dropped as f64));
+}
+
+#[test]
+fn sim_and_exec_breakdowns_share_schema_and_row_keys() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let desc = shape(2, 2);
+    let keys = |j: &Json| match j {
+        Json::Obj(m) => m.keys().cloned().collect::<Vec<_>>(),
+        other => panic!("expected object, got {other:?}"),
+    };
+    for app_name in ["summa", "stencil", "pennant"] {
+        let app = build_app(app_name, 4);
+        let mapper = mapper_for(&Flavor::Mapple, app_name, &desc);
+        let (_, sim_bd) = run_app_breakdown(&app, mapper.as_ref(), &desc).unwrap();
+        obs::start();
+        let out = exec_app(&app, mapper.as_ref(), &desc, &ExecOptions::default()).unwrap();
+        obs::stop();
+        let exec_bd = exec::breakdown(&out.exec, &obs::drain());
+        // Row keys identical by construction (both derive from launch
+        // names) — the property that makes the two views diff row-for-row.
+        assert_eq!(sim_bd.row_keys(), exec_bd.row_keys(), "{app_name}: row keys");
+        let (sj, ej) = (sim_bd.to_json(), exec_bd.to_json());
+        assert_eq!(keys(&sj), keys(&ej), "{app_name}: top-level schema");
+        for fam in sim_bd.row_keys() {
+            let srow = sj.get("families").unwrap().get(fam).unwrap();
+            let erow = ej.get("families").unwrap().get(fam).unwrap();
+            assert_eq!(keys(srow), keys(erow), "{app_name}/{fam}: row schema");
+            // Both sources count the same task population per family.
+            assert_eq!(srow.get("tasks"), erow.get("tasks"), "{app_name}/{fam}: tasks");
+        }
+        // The exec byte columns reconcile with the run's own counters.
+        let intra: u64 = exec_bd.rows.values().map(|r| r.intra_bytes).sum();
+        let inter: u64 = exec_bd.rows.values().map(|r| r.inter_bytes).sum();
+        assert_eq!(intra, out.exec.intra_bytes, "{app_name}: intra bytes reconcile");
+        assert_eq!(inter, out.exec.inter_bytes, "{app_name}: inter bytes reconcile");
+        // And the measured times actually landed in the rows.
+        assert!(exec_bd.rows.values().any(|r| r.compute_ns > 0.0), "{app_name}: compute");
+    }
+}
+
+#[test]
+fn chaos_recovery_emits_well_formed_recovery_spans() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let desc = shape(2, 2);
+    let opts = ChaosOptions {
+        exec: ExecOptions::default(),
+        faults: FaultPlan::parse("kill:1@2").unwrap(),
+        fault_seed: 7,
+        heartbeat_us: 200,
+        miss_threshold: 10,
+    };
+    let app = build_app("cannon", 4);
+    let mapper = mapper_for(&Flavor::Mapple, "cannon", &desc);
+    obs::start();
+    let out = chaos_app(&app, mapper.as_ref(), &desc, &opts).unwrap();
+    obs::stop();
+    let tr = obs::drain();
+    assert_eq!(out.chaos.report.rounds, 2, "kill must force a recovery round");
+
+    let recov: Vec<_> = tr.events.iter().filter(|e| e.cat == Cat::Recovery).collect();
+    let named = |n: &str, d: Option<&str>| {
+        recov.iter().find(|e| e.name == n && e.detail.as_deref() == d)
+    };
+    let inject = named("round", Some("inject")).expect("inject-round span");
+    let replan = named("replan", None).expect("replan span");
+    let recover = named("round", Some("recover")).expect("recovery-round span");
+    for e in [inject, replan, recover] {
+        assert!(e.dur_ns >= 1, "recovery spans carry real durations");
+        assert_eq!((e.node, e.lane), (0, 0), "recovery is orchestrated from lane (0, 0)");
+    }
+    // The documented sequence: inject round, then replan, then recovery.
+    assert!(inject.ts_ns <= replan.ts_ns && replan.ts_ns <= recover.ts_ns);
+    // Span args agree with the deterministic chaos report.
+    assert_eq!(inject.args[0], ("kills", 1));
+    let r = &out.chaos.report;
+    assert_eq!(replan.args[0], ("rerun", r.rerun_tasks as i64));
+    assert_eq!(recover.args[0], ("rerun", r.rerun_tasks as i64));
+
+    // Heartbeat detection fired on the monitor service lane (902) for
+    // the killed node, and the degraded machine purged the plan cache.
+    let death = tr
+        .events
+        .iter()
+        .find(|e| e.cat == Cat::Heartbeat && e.name == "death_detected")
+        .expect("death_detected instant");
+    assert_eq!((death.node, death.lane), (1, 902));
+    assert_eq!(death.args[0], ("node", 1));
+    assert_eq!(death.dur_ns, 0, "detection is an instant, not a span");
+    assert!(tr.events.iter().any(|e| e.cat == Cat::Cache && e.name == "invalidate_machine"));
+
+    // The rollup counters (what the serve `stats` op surfaces) saw the
+    // same activity the drained log carries.
+    let rollup = obs::rollup_json();
+    let count = |cat: &str| {
+        rollup.get("recorded").and_then(|r| r.get(cat)).and_then(|n| n.as_f64()).unwrap()
+    };
+    assert!(count("recovery") >= 3.0);
+    assert!(count("heartbeat") >= 1.0);
+    assert!(count("kernel") > 0.0);
+}

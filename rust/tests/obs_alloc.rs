@@ -1,0 +1,85 @@
+//! Zero-allocation proof for the warmed serve hit path with tracing off.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator. After
+//! one cold compile warms the plan cache, repeated
+//! `MappleMapper::cached_plan_hit` probes — the exact resolution path
+//! the serve daemon's `plan` op takes — must perform **zero**
+//! allocations while the obs collector is disabled: the probe walks
+//! borrowed keys under a shard read lock, and every instrumentation
+//! site costs one relaxed atomic load.
+//!
+//! This file holds a single test on purpose: the allocation counter is
+//! process-global, so a concurrently running test in the same binary
+//! would count its own allocations into our window.
+
+use mapple::machine::point::Tuple;
+use mapple::mapper::MappleMapper;
+use mapple::mapple::MapperSpec;
+use mapple::obs;
+use mapple::serve::cache::PlanCache;
+use mapple::serve::machine_for;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Counts alloc/realloc calls while armed; frees are deliberately not
+/// counted (dropping the returned `Arc` only decrements a refcount —
+/// the cache keeps the plan alive).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warmed_hit_path_allocates_nothing_with_tracing_disabled() {
+    obs::stop();
+    let desc = machine_for(2, 4);
+    let src = mapple::apps::mappers::mapple_source("cannon").unwrap();
+    let spec = MapperSpec::compile(src, &desc).unwrap();
+    let mapper = MappleMapper::with_cache(spec, Arc::new(PlanCache::new(4, 1 << 20)));
+    let task = "mm_step_0".to_string();
+    let ispace = Tuple(vec![4, 4]);
+
+    // Warm the cache (the one compile), then one untracked warm probe to
+    // settle any lazy one-time initialization on the hit path.
+    let (cold, hit) = mapper.cached_plan_hit(&task, &ispace).unwrap();
+    assert!(!hit, "first probe compiles");
+    let (warm, hit) = mapper.cached_plan_hit(&task, &ispace).unwrap();
+    assert!(hit, "second probe is warm");
+    assert_eq!(warm.digest(), cold.digest());
+    drop((cold, warm));
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..1000 {
+        let (plan, hit) = mapper.cached_plan_hit(&task, &ispace).unwrap();
+        assert!(hit);
+        drop(plan);
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(allocs, 0, "warmed hit path must be allocation-free, saw {allocs} allocations");
+}
