@@ -2,12 +2,15 @@
 //! data environment) that mappers place and the simulator times.
 
 use crate::chaos::{execute_chaos, ChaosOptions, ChaosOutcome};
-use crate::exec::{execute, ExecOptions, ExecResult};
+use crate::exec::{execute, execute_with_plan, ExecOptions, ExecResult};
 use crate::machine::point::Tuple;
 use crate::machine::topology::MachineDesc;
 use crate::mapper::api::{Mapper, MapperAsMapping};
+use crate::obs::advisor::{self, Advice};
 use crate::obs::breakdown::Breakdown;
-use crate::sim::engine::{simulate, simulate_breakdown, SimResult};
+use crate::obs::critpath::{self, CritPath};
+use crate::obs::{self};
+use crate::sim::engine::{simulate, simulate_breakdown, simulate_full, SimResult, SimTimeline};
 use crate::tasking::deps::{analyze, DataEnv};
 use crate::tasking::pipeline;
 use crate::tasking::task::IndexLaunch;
@@ -123,6 +126,79 @@ pub fn exec_app(
         .map_err(|e| format!("executor diverged from the pipeline oracle: {e}"))?;
     let sim = simulate(&app.launches, &app.env, &deps, &run.placements, desc, &adapter);
     Ok(ExecOutcome { exec, sim, mapper_name: mapper.mapper_name().to_string() })
+}
+
+/// Everything `mapple analyze` derives from one (app, mapper, shape):
+/// the modelled run (sim result + timeline + breakdown + critical
+/// path), the measured run (exec result + its critical path), and the
+/// ranked advice report.
+pub struct AnalyzeOutcome {
+    pub sim: SimResult,
+    pub timeline: SimTimeline,
+    pub sim_breakdown: Breakdown,
+    pub sim_critpath: CritPath,
+    pub exec: ExecResult,
+    pub exec_critpath: CritPath,
+    pub advice: Advice,
+    pub mapper_name: String,
+}
+
+/// Map, simulate, and measure an app, then run the critical-path
+/// analyzer over both timelines and the advisor over the modelled one.
+///
+/// The exec run is traced internally: this function calls `obs::start`
+/// / `obs::stop` around the measured run and drains the collector, so
+/// callers must not be mid-trace (tests serialize on their obs lock).
+/// The measured run keeps the full differential contract of
+/// [`exec_app`] — verified against the pipeline oracle before any
+/// analysis happens.
+pub fn analyze_app(
+    app: &AppInstance,
+    mapper: &dyn Mapper,
+    desc: &MachineDesc,
+    opts: &ExecOptions,
+) -> Result<AnalyzeOutcome, String> {
+    let deps = analyze(&app.launches, &app.env);
+    let adapter = MapperAsMapping {
+        mapper,
+        num_nodes: desc.nodes,
+        procs_per_node: desc.gpus_per_node,
+    };
+    let run = pipeline::run(&app.launches, &deps, &adapter, desc.nodes)
+        .map_err(|e| e.to_string())?;
+    pipeline::validate(&run, &deps)?;
+    let (sim, sim_breakdown, timeline) =
+        simulate_full(&app.launches, &app.env, &deps, &run.placements, desc, &adapter);
+
+    obs::start();
+    let measured =
+        execute_with_plan(&app.launches, &app.env, &deps, &run, desc, &adapter, opts);
+    obs::stop();
+    let trace = obs::drain();
+    let (exec, plan) = measured.map_err(|e| e.to_string())?;
+    exec.verify_against(&run, &deps)
+        .map_err(|e| format!("executor diverged from the pipeline oracle: {e}"))?;
+
+    let sim_critpath = critpath::from_sim(&timeline);
+    let exec_critpath = critpath::from_exec(&plan, &exec, &trace);
+    let advice = advisor::advise(
+        &app.name,
+        mapper.mapper_name(),
+        desc,
+        &sim_critpath,
+        &sim_breakdown,
+        &timeline,
+    );
+    Ok(AnalyzeOutcome {
+        sim,
+        timeline,
+        sim_breakdown,
+        sim_critpath,
+        exec,
+        exec_critpath,
+        advice,
+        mapper_name: mapper.mapper_name().to_string(),
+    })
 }
 
 /// Outcome of running an app under a fault schedule: the chaos run

@@ -10,8 +10,8 @@ pub mod science;
 pub mod stencil;
 
 pub use common::{
-    chaos_app, exec_app, icbrt, isqrt, run_app, run_app_breakdown, AppInstance, ChaosAppOutcome,
-    ExecOutcome, RunOutcome,
+    analyze_app, chaos_app, exec_app, icbrt, isqrt, run_app, run_app_breakdown, AnalyzeOutcome,
+    AppInstance, ChaosAppOutcome, ExecOutcome, RunOutcome,
 };
 pub use matmul::{cannon, cosma, johnson, pumma, solomonik, summa};
 pub use science::{circuit, pennant, CircuitParams, PennantParams};

@@ -33,6 +33,7 @@
 use mapple::bench::{build_bench_app, APP_ORDER};
 use mapple::machine::point::Tuple;
 use mapple::obs;
+use mapple::obs::metrics::{bucket_of, Histogram};
 use mapple::serve::proto::{digest_hex, read_frame, write_frame, PlanRequest, Request};
 use mapple::serve::{machine_for, serve, ServeOptions, Server};
 use mapple::util::cli::{Args, Command};
@@ -148,8 +149,12 @@ enum DigestMode<'a> {
 
 /// Per-pass client-side tallies. Latencies are per *frame*; `plans`
 /// counts individual plan replies (== frames unless `--batch` > 1).
+/// Each latency lands both in the shared log-bucketed [`Histogram`]
+/// (what the report quotes) and in a raw vector (what the one-bucket
+/// agreement check sorts).
 struct RunStats {
     latencies_ns: Vec<u64>,
+    hist: Histogram,
     plans: usize,
     mismatches: usize,
     errors: usize,
@@ -157,7 +162,13 @@ struct RunStats {
 
 impl RunStats {
     fn new(cap: usize) -> RunStats {
-        RunStats { latencies_ns: Vec::with_capacity(cap), plans: 0, mismatches: 0, errors: 0 }
+        RunStats {
+            latencies_ns: Vec::with_capacity(cap),
+            hist: Histogram::new(),
+            plans: 0,
+            mismatches: 0,
+            errors: 0,
+        }
     }
 }
 
@@ -236,7 +247,9 @@ impl Conn {
         let frame = read_frame(&mut self.reader)
             .map_err(|e| e.to_string())?
             .ok_or("server closed mid-stream")?;
-        out.latencies_ns.push(sent.elapsed().as_nanos() as u64);
+        let lat_ns = sent.elapsed().as_nanos() as u64;
+        out.latencies_ns.push(lat_ns);
+        out.hist.record_ns(lat_ns);
         let text = std::str::from_utf8(&frame).map_err(|e| e.to_string())?;
         let resp = Json::parse(text)?;
         if resp.get("ok") != Some(&Json::Bool(true)) {
@@ -305,24 +318,44 @@ impl Conn {
     }
 }
 
-fn percentile_us(sorted_ns: &[u64], q: f64) -> f64 {
-    if sorted_ns.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted_ns.len() - 1) as f64 * q).round() as usize;
-    sorted_ns[idx] as f64 / 1000.0
-}
-
-fn pass_json(requests: usize, wall: f64, sorted_ns: &[u64]) -> Json {
+/// Pass summary. Percentiles come from the shared log-bucketed
+/// [`Histogram`] — the same machinery the daemon's `metrics` op uses —
+/// not from sorting raw samples.
+fn pass_json(requests: usize, wall: f64, hist: &Histogram) -> Json {
     let per_sec = if wall > 0.0 { requests as f64 / wall } else { 0.0 };
     Json::obj(vec![
         ("requests", Json::Num(requests as f64)),
         ("wall_seconds", Json::Num(wall)),
         ("plans_per_sec", Json::Num(per_sec)),
-        ("p50_us", Json::Num(percentile_us(sorted_ns, 0.50))),
-        ("p99_us", Json::Num(percentile_us(sorted_ns, 0.99))),
-        ("p999_us", Json::Num(percentile_us(sorted_ns, 0.999))),
+        ("p50_us", Json::Num(hist.quantile_us(0.50))),
+        ("p99_us", Json::Num(hist.quantile_us(0.99))),
+        ("p999_us", Json::Num(hist.quantile_us(0.999))),
     ])
+}
+
+/// Smoke check: the histogram's quantile bucket must agree with the
+/// sort-based nearest-rank quantile within one bucket (the resolution
+/// contract `obs::metrics` documents). Run on real measured latencies
+/// every invocation, so a regression in the bucketing math fails the
+/// load driver, not just a unit test.
+fn check_bucket_agreement(label: &str, sorted_ns: &[u64], hist: &Histogram) -> Result<(), String> {
+    if sorted_ns.is_empty() {
+        return Ok(());
+    }
+    for q in [0.50, 0.99, 0.999] {
+        let exact = sorted_ns[((sorted_ns.len() - 1) as f64 * q).round() as usize];
+        let hb = hist.quantile_bucket(q).ok_or_else(|| {
+            format!("{label}: histogram empty despite {} samples", sorted_ns.len())
+        })?;
+        let diff = (bucket_of(exact) as i64 - hb as i64).abs();
+        if diff > 1 {
+            return Err(format!(
+                "{label}: histogram p{q} bucket {hb} disagrees with sort-based bucket {} (> 1 apart)",
+                bucket_of(exact)
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Order-sensitive FNV-1a fold of the cold-pass digest strings, rendered
@@ -424,6 +457,7 @@ fn run(args: &Args) -> Result<i32, String> {
         return Err(format!("{} cold requests failed", cold.errors));
     }
     cold.latencies_ns.sort_unstable();
+    check_bucket_agreement("cold pass", &cold.latencies_ns, &cold.hist)?;
 
     // ---- warm pass: Zipf trace over all connections ---------------------
     let zipf = Zipf::new(items.len(), zipf_s);
@@ -465,17 +499,23 @@ fn run(args: &Args) -> Result<i32, String> {
     })?;
     let warm_wall = warm_start.elapsed().as_secs_f64();
 
+    // Per-connection histograms merge into the pass histogram — the
+    // associative per-bucket addition `obs::metrics` guarantees, used
+    // here in anger rather than just in tests.
+    let warm_hist = Histogram::new();
     let mut warm_ns: Vec<u64> = Vec::with_capacity(requests);
     let mut plans = 0usize;
     let mut mismatches = 0usize;
     let mut errors = 0usize;
     for r in &results {
+        warm_hist.merge_from(&r.hist);
         warm_ns.extend_from_slice(&r.latencies_ns);
         plans += r.plans;
         mismatches += r.mismatches;
         errors += r.errors;
     }
     warm_ns.sort_unstable();
+    check_bucket_agreement("warm pass", &warm_ns, &warm_hist)?;
 
     // ---- tracing overhead (self-hosted only) ----------------------------
     // Everything runs in this process when self-hosting, so toggling the
@@ -501,6 +541,14 @@ fn run(args: &Args) -> Result<i32, String> {
     // ---- server-side counters + shutdown --------------------------------
     let mut ctrl = Conn::connect(&addr, 1)?;
     let server_stats = ctrl.call(&Request::Stats)?;
+    // Scrape the daemon's own latency histograms and cache counters; the
+    // Prometheus-style exposition inside lands on disk via --metrics-out.
+    let server_metrics = ctrl.call(&Request::Metrics)?;
+    if let Some(path) = args.str("metrics-out").filter(|p| !p.is_empty()) {
+        let expo = server_metrics.get("exposition").and_then(|e| e.as_str()).unwrap_or("");
+        std::fs::write(path, expo).map_err(|e| format!("write {path}: {e}"))?;
+        eprintln!("[serve_load] wrote metrics exposition to {path}");
+    }
     if let Some(s) = server {
         // The handler sets the stop flag on "shutdown"; join the acceptor.
         let _ = ctrl.call(&Request::Shutdown);
@@ -520,7 +568,7 @@ fn run(args: &Args) -> Result<i32, String> {
         }
     }
 
-    let warm = pass_json(plans, warm_wall, &warm_ns);
+    let warm = pass_json(plans, warm_wall, &warm_hist);
     let mut rows = vec![
         ("distinct_keys", Json::Num(items.len() as f64)),
         ("connections", Json::Num(conns as f64)),
@@ -531,9 +579,10 @@ fn run(args: &Args) -> Result<i32, String> {
         ("digest_mismatches", Json::Num(mismatches as f64)),
         ("request_errors", Json::Num(errors as f64)),
         ("digest_fingerprint", Json::Str(digest_fingerprint(&digests))),
-        ("cold", pass_json(items.len(), cold_wall, &cold.latencies_ns)),
+        ("cold", pass_json(items.len(), cold_wall, &cold.hist)),
         ("warm", warm.clone()),
         ("server", server_stats),
+        ("metrics", server_metrics),
     ];
     if let Some(t) = trace_overhead {
         rows.push(("tracing_overhead", t));
@@ -580,6 +629,7 @@ fn main() {
         .opt("seed", "trace seed", Some("42"))
         .opt("json", "report path", Some("serve_load.json"))
         .opt("min-plans-per-sec", "fail below this warm throughput (0 = report only)", Some("0"))
+        .opt("metrics-out", "write the daemon's Prometheus exposition to this path", Some(""))
         .flag("shutdown", "send the shutdown op to an external daemon and assert clean teardown");
     let code = match cmd.parse(&argv) {
         Ok(args) => match run(&args) {

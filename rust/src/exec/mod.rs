@@ -290,6 +290,23 @@ pub fn execute(
     policies: &dyn MappingPolicies,
     opts: &ExecOptions,
 ) -> Result<ExecResult, ExecError> {
+    execute_with_plan(launches, env, deps, run, desc, policies, opts).map(|(r, _)| r)
+}
+
+/// [`execute`], additionally returning the [`ExecPlan`] the run used —
+/// the dependence structure (`waits`, lane schedules) the critical-path
+/// analyzer ([`crate::obs::critpath::from_exec`]) reconstructs the task
+/// DAG from. The plan is what actually ran, not a re-derivation.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_with_plan(
+    launches: &[IndexLaunch],
+    env: &DataEnv,
+    deps: &Dependences,
+    run: &PipelineRun,
+    desc: &MachineDesc,
+    policies: &dyn MappingPolicies,
+    opts: &ExecOptions,
+) -> Result<(ExecResult, ExecPlan), ExecError> {
     let t_plan = obs::now();
     let plan = plan::build(launches, env, deps, run, desc, policies, opts.seed)?;
     if let Some(t0) = t_plan {
@@ -298,7 +315,7 @@ pub fn execute(
     }
     let raw = node::run_plan(&plan, opts.lanes, opts.kernels);
     let log = assemble_log(&plan, raw.events);
-    Ok(ExecResult {
+    let result = ExecResult {
         wall_seconds: raw.wall_seconds,
         total_flops: plan.total_flops,
         intra_bytes: plan.intra_bytes,
@@ -306,11 +323,12 @@ pub fn execute(
         peak_resident: raw.peak_resident,
         checksum: raw.checksum,
         tasks: plan.tasks.len(),
-        placements: plan.placements,
+        placements: plan.placements.clone(),
         log,
         per_proc: raw.per_proc,
-        families: plan.families,
-    })
+        families: plan.families.clone(),
+    };
+    Ok((result, plan))
 }
 
 #[cfg(test)]

@@ -9,8 +9,13 @@
 //!                (one per node + per-proc lanes), reporting measured
 //!                wall-clock; always differentially verified against the
 //!                sequential pipeline oracle
+//!   analyze    — run an app both modelled and measured, compute the
+//!                critical path through each timeline with per-family
+//!                blame, and emit ranked mapping advice
 //!   tune       — search the mapper space with the simulator as cost model
-//!                and emit the winning mapper as .mpl source
+//!                and emit the winning mapper as .mpl source; --validate
+//!                re-scores the top-N genomes with real runs and reports
+//!                the sim-vs-measured rank correlation
 //!   compile    — parse + compile a .mpl file and dump its directive tables
 //!   decompose  — solve a processor-grid factorization for an iteration space
 //!   serve      — long-running mapping service: answer plan requests over
@@ -20,6 +25,8 @@
 //! Examples:
 //!   mapple run --app cannon --nodes 2 --mapper mapple
 //!   mapple exec --app summa --nodes 2 --mapper tuned --json exec.json
+//!   mapple analyze --app cannon --nodes 2 --json analyze.json
+//!   mapple tune --app cannon --budget 32 --validate 5
 //!   mapple serve --addr 127.0.0.1:7517 --threads 8 --cache-bytes 268435456
 //!   mapple tune --app circuit --nodes 2 --budget 128 --strategy beam
 //!   mapple tune --app cannon --resume tuned.mpl --out tuned2.mpl
@@ -38,7 +45,7 @@ use mapple::mapple::MapperSpec;
 use mapple::obs::{self, chrome};
 use mapple::serve::cache::PlanCache;
 use mapple::serve::{serve, ServeOptions};
-use mapple::tune::{tune, tune_with_ctx, EvalCtx, StrategyKind, TuneConfig, TuneSpec};
+use mapple::tune::{tune, tune_with_ctx, validate_exec, EvalCtx, StrategyKind, TuneConfig, TuneSpec};
 use mapple::util::bench::fmt_time;
 use mapple::util::cli::Command;
 use mapple::util::json::Json;
@@ -52,6 +59,7 @@ fn main() {
     let code = match argv.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&argv[1..]),
         Some("exec") => cmd_exec(&argv[1..]),
+        Some("analyze") => cmd_analyze(&argv[1..]),
         Some("tune") => cmd_tune(&argv[1..]),
         Some("compile") => cmd_compile(&argv[1..]),
         Some("decompose") => cmd_decompose(&argv[1..]),
@@ -62,7 +70,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: mapple <run|exec|tune|compile|decompose|serve|apps> [--help]\n\
+                "usage: mapple <run|exec|analyze|tune|compile|decompose|serve|apps> [--help]\n\
                  Mapple — declarative mapping for distributed heterogeneous programs."
             );
             2
@@ -225,6 +233,7 @@ fn cmd_exec(argv: &[String]) -> i32 {
     .opt("chaos-seed", "fault-injection seed", Some("0"))
     .opt("json", "write the ExecResult JSON report here", None)
     .opt("trace", "write a Chrome-trace JSON of the run here (load in Perfetto)", None)
+    .opt("trace-capacity", "per-thread trace ring capacity in events", Some("262144"))
     .opt("breakdown", "write the measured per-task-family cost breakdown JSON here", None);
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -275,6 +284,7 @@ fn cmd_exec(argv: &[String]) -> i32 {
     // pays one relaxed atomic load per would-be event.
     let tracing = trace_path.is_some() || bd_path.is_some();
     if tracing {
+        obs::set_ring_capacity(args.usize("trace-capacity").unwrap_or(obs::DEFAULT_RING_CAP));
         obs::start();
     }
     if let Some(spec) = args.str("chaos") {
@@ -401,6 +411,19 @@ fn cmd_exec(argv: &[String]) -> i32 {
     0
 }
 
+/// Ring overflow means the views below are built from a truncated trace;
+/// say so loudly (GitHub Actions renders `::warning::` as an annotation)
+/// and name the fix.
+fn warn_dropped(dropped: u64) {
+    if dropped > 0 {
+        eprintln!(
+            "::warning::trace dropped {dropped} events to ring overflow — \
+             derived views are incomplete; raise --trace-capacity (current: {})",
+            obs::ring_capacity()
+        );
+    }
+}
+
 /// Drain the trace a `--trace`/`--breakdown` run collected and write the
 /// requested views: the Chrome-trace timeline (Perfetto-loadable) and the
 /// measured per-task-family cost breakdown.
@@ -411,6 +434,7 @@ fn write_obs_views(
 ) -> Result<(), String> {
     obs::stop();
     let tr = obs::drain();
+    warn_dropped(tr.dropped);
     if let Some(path) = trace_path {
         std::fs::write(path, chrome::to_chrome(&tr).pretty())
             .map_err(|e| format!("{path}: {e}"))?;
@@ -424,6 +448,140 @@ fn write_obs_views(
     Ok(())
 }
 
+/// `mapple analyze`: run one (app, mapper, shape) both modelled and
+/// measured, compute the critical path through each timeline with
+/// per-family blame, and print the advisor's ranked findings. The JSON
+/// report carries both critical paths row-for-row plus the full advice
+/// document (`mapple.advice/v1`).
+fn cmd_analyze(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "mapple analyze",
+        "critical-path analysis + mapping advice for one app and mapper",
+    )
+    .opt("app", "application name (see `mapple apps`)", Some("cannon"))
+    .opt("nodes", "cluster nodes (4 GPUs each)", Some("2"))
+    .opt("mapper", "mapple | tuned | expert | heuristic | auto", Some("mapple"))
+    .opt("scale", "problem-size multiplier", Some("1"))
+    .opt("lanes", "max concurrent kernels (0 = one lane per proc)", Some("0"))
+    .opt("seed", "schedule tie-break seed", Some("0"))
+    .opt("kernels", "kernel tier: fast (blocked, pooled) | naive", Some("fast"))
+    .opt("trace-capacity", "per-thread trace ring capacity in events", Some("262144"))
+    .opt("json", "write the combined analysis JSON here", None);
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nodes = args.usize("nodes").unwrap_or(2);
+    let scale = args.usize("scale").unwrap_or(1) as i64;
+    let app_name = args.str("app").unwrap_or("cannon").to_string();
+    let desc = MachineDesc::paper_testbed(nodes);
+    let Some(app) = build_app(&app_name, &desc, scale) else {
+        eprintln!("unknown app '{app_name}' — see `mapple apps`");
+        return 2;
+    };
+    let flavor = match Flavor::parse(args.str("mapper").unwrap_or("mapple")) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mapper = match build_mapper(&flavor, &app_name, &desc, scale) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let kernels = match args.str("kernels").unwrap_or("fast") {
+        "fast" => KernelMode::Fast,
+        "naive" => KernelMode::Naive,
+        other => {
+            eprintln!("bad --kernels '{other}' (expected fast | naive)");
+            return 2;
+        }
+    };
+    let opts = ExecOptions {
+        lanes: args.usize("lanes").unwrap_or(0),
+        seed: args.usize("seed").unwrap_or(0) as u64,
+        kernels,
+    };
+    obs::set_ring_capacity(args.usize("trace-capacity").unwrap_or(obs::DEFAULT_RING_CAP));
+    let out = match apps::analyze_app(&app, mapper.as_ref(), &desc, &opts) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("analyze failed: {e}");
+            return 1;
+        }
+    };
+    warn_dropped(out.exec_critpath.dropped_events);
+
+    println!(
+        "{app_name} on {nodes} nodes under {} (modelled + measured, oracle-verified):\n  \
+         simulated makespan {}  — critical path {} over {} tasks\n  \
+         measured wall-clock {}  — critical path {} over {} tasks",
+        out.mapper_name,
+        fmt_time(out.sim.makespan),
+        fmt_time(out.sim_critpath.length_seconds),
+        out.sim_critpath.steps.len(),
+        fmt_time(out.exec.wall_seconds),
+        fmt_time(out.exec_critpath.length_seconds),
+        out.exec_critpath.steps.len(),
+    );
+    for (label, cp) in [("modelled", &out.sim_critpath), ("measured", &out.exec_critpath)] {
+        println!("  {label} blame (per launch family, ns on the critical path):");
+        for (family, row) in &cp.blame {
+            if row.total_ns() == 0.0 {
+                continue;
+            }
+            println!(
+                "    {family}: compute {} wait {} intra {} inter {} recovery {} ({} tasks)",
+                row.compute_ns,
+                row.wait_ns,
+                row.intra_transfer_ns,
+                row.inter_transfer_ns,
+                row.recovery_ns,
+                row.tasks,
+            );
+        }
+    }
+    if out.advice.findings.is_empty() {
+        println!("  advice: nothing stands out — the mapping is balanced at this shape");
+    } else {
+        println!("  advice ({} findings, most severe first):", out.advice.findings.len());
+        for (i, f) in out.advice.findings.iter().enumerate() {
+            println!("    {}. [{}] {}", i + 1, f.kind, f.title);
+            for s in &f.suggestions {
+                println!("       -> {}: {}", s.knob, s.action);
+            }
+        }
+    }
+
+    if let Some(path) = args.str("json") {
+        let report = Json::obj(vec![
+            ("app", Json::Str(app_name.clone())),
+            ("mapper", Json::Str(out.mapper_name.clone())),
+            ("nodes", Json::Num(nodes as f64)),
+            ("gpus_per_node", Json::Num(desc.gpus_per_node as f64)),
+            ("simulated_makespan_seconds", Json::Num(out.sim.makespan)),
+            ("measured_wall_seconds", Json::Num(out.exec.wall_seconds)),
+            ("sim_critpath", out.sim_critpath.to_json()),
+            ("exec_critpath", out.exec_critpath.to_json()),
+            ("sim_breakdown", out.sim_breakdown.to_json()),
+            ("advice", out.advice.to_json()),
+        ]);
+        if let Err(e) = std::fs::write(path, report.pretty()) {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+        println!("[analysis written to {path}]");
+    }
+    0
+}
+
 fn cmd_tune(argv: &[String]) -> i32 {
     let cmd = Command::new("mapple tune", "autotune a mapper against the simulator")
         .opt("app", "application name (see `mapple apps`)", Some("cannon"))
@@ -434,7 +592,9 @@ fn cmd_tune(argv: &[String]) -> i32 {
         .opt("threads", "worker threads (0 = auto)", Some("0"))
         .opt("strategy", "random | greedy | beam | beamN", Some("beam"))
         .opt("resume", "warm-start from a previously emitted .mpl", None)
-        .opt("out", "write the winning mapper's .mpl here", None);
+        .opt("out", "write the winning mapper's .mpl here", None)
+        .opt("validate", "re-score the top-N genomes with real exec runs (0 = off)", Some("0"))
+        .opt("validate-json", "write the rank-correlation report JSON here", None);
     let args = match cmd.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -505,6 +665,43 @@ fn cmd_tune(argv: &[String]) -> i32 {
         },
         None => {
             println!("\n# ---- winning mapper ----\n{}", result.mpl);
+        }
+    }
+    let top_n = args.usize("validate").unwrap_or(0);
+    if top_n > 0 {
+        let report = match validate_exec(&cfg, &result, top_n, &ExecOptions::default()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("tune --validate failed: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "validation over top {} genomes: Spearman rho {:.3}, Kendall tau {:.3}, \
+             {} inverted pair{}",
+            report.candidates.len(),
+            report.spearman,
+            report.kendall,
+            report.inversions.len(),
+            if report.inversions.len() == 1 { "" } else { "s" },
+        );
+        for c in &report.candidates {
+            println!(
+                "  sim rank {}: simulated {} -> measured {}",
+                c.rank_sim,
+                fmt_time(c.sim_score),
+                fmt_time(c.measured),
+            );
+        }
+        for &(i, j) in &report.inversions {
+            println!("  inversion: sim prefers rank {i} over {j}, the measurement disagrees");
+        }
+        if let Some(path) = args.str("validate-json") {
+            if let Err(e) = std::fs::write(path, report.to_json().pretty()) {
+                eprintln!("{path}: {e}");
+                return 1;
+            }
+            println!("[validation report written to {path}]");
         }
     }
     0
@@ -585,7 +782,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("threads", "max concurrent connections", Some("8"))
         .opt("shards", "plan-cache shards", Some("16"))
         .opt("cache-bytes", "plan-cache byte budget", Some("268435456"))
-        .opt("trace", "write a Chrome-trace JSON of the daemon's lifetime here", None);
+        .opt("trace", "write a Chrome-trace JSON of the daemon's lifetime here", None)
+        .opt("trace-capacity", "per-thread trace ring capacity in events", Some("262144"));
     let args = match cmd.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -601,6 +799,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
     };
     let trace_path = args.str("trace").map(|s| s.to_string());
     if trace_path.is_some() {
+        obs::set_ring_capacity(args.usize("trace-capacity").unwrap_or(obs::DEFAULT_RING_CAP));
         obs::start();
     }
     let server = match serve(&opts) {
@@ -612,7 +811,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
     };
     println!(
         "mapple serve listening on {} ({} threads, {} shards, {} MiB plan cache); \
-         ops: plan | invalidate | stats | ping | shutdown",
+         ops: plan | batch | invalidate | stats | metrics | ping | shutdown",
         server.local_addr(),
         opts.threads,
         opts.shards,
@@ -629,6 +828,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
     if let Some(path) = trace_path.as_deref() {
         obs::stop();
         let tr = obs::drain();
+        warn_dropped(tr.dropped);
         if let Err(e) = std::fs::write(path, chrome::to_chrome(&tr).pretty()) {
             eprintln!("{path}: {e}");
             return 1;

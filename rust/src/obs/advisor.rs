@@ -1,0 +1,328 @@
+//! The mapping advisor: turn critical-path + breakdown structure into a
+//! ranked, machine-readable advice report (`mapple analyze`).
+//!
+//! Advice is derived **exclusively from the simulator's modelled run**
+//! (critical path, breakdown byte volumes, timeline queue times) — all
+//! pure functions of the mapping and machine shape — so the report is
+//! bitwise deterministic: same app, mapper, and shape in, same advice
+//! out, regardless of exec worker counts, tracing capacity, or host
+//! noise. The measured exec critical path rides alongside in the
+//! `mapple analyze` output for humans (and outer optimizers) to judge
+//! how far the model is from the measurement; `mapple tune --validate`
+//! quantifies that trust with a rank-correlation report.
+//!
+//! **Advice schema** (`mapple.advice/v1`): every finding carries the
+//! same keys — `rank`, `kind`, `title`, `severity_ns`, `share`,
+//! `family`, `region`, `lane`, `bytes` (null where not applicable) and a
+//! `suggestions` list of `{knob, action}` pairs naming which
+//! transform/decompose knob in the typed-op space plausibly addresses
+//! the finding. Kinds:
+//! - `critical_path_family` — a family's total time on the critical
+//!   path, with its dominant blame category steering the suggestion;
+//! - `inter_edge` — a top-k inter-node transfer edge (family ← region)
+//!   by byte volume, `severity_ns` estimated as bytes / IB bandwidth;
+//! - `wait_hotspot` — a processor lane whose modelled queue time (tasks
+//!   ready but waiting for the lane) is a large makespan fraction.
+//!
+//! Findings are ranked by `severity_ns` descending with a stable
+//! `(kind, title)` tie-break.
+
+use crate::machine::topology::MachineDesc;
+use crate::obs::breakdown::Breakdown;
+use crate::obs::critpath::CritPath;
+use crate::sim::SimTimeline;
+use crate::util::json::Json;
+
+/// Schema identifier stamped into every advice report.
+pub const ADVICE_SCHEMA: &str = "mapple.advice/v1";
+
+/// One `{knob, action}` suggestion in the typed-op space.
+#[derive(Clone, Debug)]
+pub struct Suggestion {
+    /// Which knob family: `transform`, `decompose`, `memory`,
+    /// `backpressure`, or `gc`.
+    pub knob: &'static str,
+    pub action: String,
+}
+
+/// One ranked finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub kind: &'static str,
+    pub title: String,
+    /// Modelled nanoseconds at stake (for `inter_edge`: bytes / IB bw).
+    pub severity_ns: f64,
+    /// `severity_ns` as a fraction of the modelled makespan.
+    pub share: f64,
+    pub family: Option<String>,
+    pub region: Option<String>,
+    pub lane: Option<String>,
+    pub bytes: Option<u64>,
+    pub suggestions: Vec<Suggestion>,
+}
+
+/// The full advice report for one (app, mapper, shape).
+#[derive(Clone, Debug)]
+pub struct Advice {
+    pub app: String,
+    pub mapper: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Modelled makespan the shares are fractions of.
+    pub makespan_seconds: f64,
+    /// Ranked findings, most severe first.
+    pub findings: Vec<Finding>,
+}
+
+impl Advice {
+    pub fn to_json(&self) -> Json {
+        let findings = Json::Arr(
+            self.findings
+                .iter()
+                .enumerate()
+                .map(|(i, f)| {
+                    let opt_str =
+                        |v: &Option<String>| v.clone().map(Json::Str).unwrap_or(Json::Null);
+                    let suggestions = Json::Arr(
+                        f.suggestions
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("knob", Json::Str(s.knob.to_string())),
+                                    ("action", Json::Str(s.action.clone())),
+                                ])
+                            })
+                            .collect(),
+                    );
+                    Json::obj(vec![
+                        ("rank", Json::Num((i + 1) as f64)),
+                        ("kind", Json::Str(f.kind.to_string())),
+                        ("title", Json::Str(f.title.clone())),
+                        ("severity_ns", Json::Num(f.severity_ns)),
+                        ("share", Json::Num(f.share)),
+                        ("family", opt_str(&f.family)),
+                        ("region", opt_str(&f.region)),
+                        ("lane", opt_str(&f.lane)),
+                        (
+                            "bytes",
+                            f.bytes.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+                        ),
+                        ("suggestions", suggestions),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Str(ADVICE_SCHEMA.to_string())),
+            ("app", Json::Str(self.app.clone())),
+            ("mapper", Json::Str(self.mapper.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("gpus_per_node", Json::Num(self.gpus_per_node as f64)),
+            ("makespan_seconds", Json::Num(self.makespan_seconds)),
+            ("findings", findings),
+        ])
+    }
+}
+
+fn family_findings(cp: &CritPath, makespan_ns: f64, out: &mut Vec<Finding>) {
+    let mut fams: Vec<(&String, f64)> =
+        cp.blame.iter().map(|(f, r)| (f, r.total_ns())).filter(|(_, t)| *t > 0.0).collect();
+    fams.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(b.0)));
+    for (fam, total) in fams.into_iter().take(3) {
+        let row = &cp.blame[fam];
+        let cats = [
+            ("compute", row.compute_ns),
+            ("wait", row.wait_ns),
+            ("intra-transfer", row.intra_transfer_ns),
+            ("inter-transfer", row.inter_transfer_ns),
+        ];
+        let (dom, _) =
+            cats.iter().copied().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        let suggestions = match dom {
+            "inter-transfer" => vec![
+                Suggestion {
+                    knob: "decompose",
+                    action: format!(
+                        "re-run decompose for `{fam}` with the communication-volume objective \
+                         so producer and consumer tiles share a node"
+                    ),
+                },
+                Suggestion {
+                    knob: "transform",
+                    action: format!(
+                        "add chain ops (swap/rotate) to `{fam}`'s machine view to co-locate it \
+                         with the partition that feeds it"
+                    ),
+                },
+            ],
+            "intra-transfer" => vec![
+                Suggestion {
+                    knob: "memory",
+                    action: format!(
+                        "map `{fam}`'s read arguments to ZCMEM so repeated on-node pulls become \
+                         zero-copy"
+                    ),
+                },
+                Suggestion {
+                    knob: "gc",
+                    action: format!(
+                        "drop any `gc` directive on `{fam}`'s inputs so re-read tiles stay \
+                         resident"
+                    ),
+                },
+            ],
+            "wait" => vec![
+                Suggestion {
+                    knob: "backpressure",
+                    action: format!(
+                        "raise or remove `backpressure` on `{fam}` so independent points overlap"
+                    ),
+                },
+                Suggestion {
+                    knob: "transform",
+                    action: format!(
+                        "split `{fam}` across more lanes (transform split/swap) to drain its \
+                         queue"
+                    ),
+                },
+            ],
+            _ => vec![Suggestion {
+                knob: "decompose",
+                action: format!(
+                    "`{fam}` is compute-bound on the path — widen its processor grid \
+                     (decompose over more GPUs) or accept: transfers are not the bottleneck"
+                ),
+            }],
+        };
+        out.push(Finding {
+            kind: "critical_path_family",
+            title: format!("`{fam}` holds {:.1}% of the critical path ({dom}-dominated)",
+                100.0 * total / makespan_ns.max(1.0)),
+            severity_ns: total,
+            share: total / makespan_ns.max(1.0),
+            family: Some(fam.clone()),
+            region: None,
+            lane: None,
+            bytes: None,
+            suggestions,
+        });
+    }
+}
+
+fn edge_findings(bd: &Breakdown, desc: &MachineDesc, makespan_ns: f64, out: &mut Vec<Finding>) {
+    let mut edges: Vec<(&String, &String, u64)> = Vec::new();
+    for (fam, row) in &bd.rows {
+        for (region, e) in &row.edges {
+            if e.inter > 0 {
+                edges.push((fam, region, e.inter));
+            }
+        }
+    }
+    edges.sort_by(|a, b| b.2.cmp(&a.2).then_with(|| (a.0, a.1).cmp(&(b.0, b.1))));
+    for (fam, region, bytes) in edges.into_iter().take(5) {
+        let est_ns = bytes as f64 / desc.ib_bw * 1e9;
+        out.push(Finding {
+            kind: "inter_edge",
+            title: format!("`{fam}` pulls {bytes} bytes of `{region}` across nodes"),
+            severity_ns: est_ns,
+            share: est_ns / makespan_ns.max(1.0),
+            family: Some(fam.clone()),
+            region: Some(region.clone()),
+            lane: None,
+            bytes: Some(bytes),
+            suggestions: vec![
+                Suggestion {
+                    knob: "decompose",
+                    action: format!(
+                        "decompose `{fam}` so its tiles of `{region}` land on the writer's node \
+                         (communication-volume objective)"
+                    ),
+                },
+                Suggestion {
+                    knob: "transform",
+                    action: format!(
+                        "align `{fam}`'s index space with `{region}`'s partition via chain \
+                         swap/rotate before the processor view"
+                    ),
+                },
+            ],
+        });
+    }
+}
+
+fn hotspot_findings(tl: &SimTimeline, makespan_ns: f64, out: &mut Vec<Finding>) {
+    // Modelled queue time per processor: task was data-ready but the
+    // lane was busy. BTreeMap keys make iteration (and ranking ties)
+    // deterministic.
+    let mut queue: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+    for t in &tl.tasks {
+        let q = t.start - t.data_ready.max(t.dep_ready);
+        if q > 0.0 {
+            *queue.entry(t.proc.to_string()).or_default() += q * 1e9;
+        }
+    }
+    let mut lanes: Vec<(String, f64)> = queue.into_iter().collect();
+    lanes.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+    for (lane, ns) in lanes.into_iter().take(3) {
+        if ns / makespan_ns.max(1.0) < 0.01 {
+            continue; // below 1% of the makespan it is not a hotspot
+        }
+        out.push(Finding {
+            kind: "wait_hotspot",
+            title: format!("lane {lane} queues ready tasks for {:.0} µs", ns / 1e3),
+            severity_ns: ns,
+            share: ns / makespan_ns.max(1.0),
+            family: None,
+            region: None,
+            lane: Some(lane.clone()),
+            bytes: None,
+            suggestions: vec![
+                Suggestion {
+                    knob: "transform",
+                    action: format!(
+                        "rebalance the machine view (swap/rotate/split) so fewer point tasks \
+                         serialize on {lane}"
+                    ),
+                },
+                Suggestion {
+                    knob: "backpressure",
+                    action: "if the queue is intentional (memory pressure), keep it; otherwise \
+                             drop the backpressure window"
+                        .to_string(),
+                },
+            ],
+        });
+    }
+}
+
+/// Build the ranked advice report from the modelled artifacts. Pure and
+/// deterministic — see the module docs for why exec measurements are
+/// deliberately not consulted.
+pub fn advise(
+    app: &str,
+    mapper: &str,
+    desc: &MachineDesc,
+    sim_cp: &CritPath,
+    sim_bd: &Breakdown,
+    tl: &SimTimeline,
+) -> Advice {
+    let makespan_ns = sim_cp.length_seconds * 1e9;
+    let mut findings = Vec::new();
+    family_findings(sim_cp, makespan_ns, &mut findings);
+    edge_findings(sim_bd, desc, makespan_ns, &mut findings);
+    hotspot_findings(tl, makespan_ns, &mut findings);
+    findings.sort_by(|a, b| {
+        b.severity_ns
+            .partial_cmp(&a.severity_ns)
+            .unwrap()
+            .then_with(|| (a.kind, &a.title).cmp(&(b.kind, &b.title)))
+    });
+    Advice {
+        app: app.to_string(),
+        mapper: mapper.to_string(),
+        nodes: desc.nodes,
+        gpus_per_node: desc.gpus_per_node,
+        makespan_seconds: sim_cp.length_seconds,
+        findings,
+    }
+}

@@ -1,0 +1,409 @@
+//! Critical-path analysis over the task DAG — the same computation run
+//! against the simulator's modelled timeline and the executor's measured
+//! trace, so the two views diff row-for-row like the cost breakdowns.
+//!
+//! **DAG reconstruction rule.** A point task's predecessors are (a) its
+//! dependence/backpressure predecessors — `SimTaskSpan::dep_pred` on the
+//! sim side, `ExecTask::waits` (which the plan already extends with
+//! reduction serialization and backpressure edges) on the exec side —
+//! and (b) the task that ran immediately before it on the same
+//! processor lane (lanes execute their static schedule sequentially, so
+//! lane order is a real serialization constraint even though no
+//! dependence exists). The walk starts at the task with the maximum
+//! finish time and repeatedly follows the *binding* predecessor — the
+//! one whose finish set the current task's start — until it falls off
+//! the front of the schedule. The resulting chain is the critical path:
+//! shortening anything off it cannot shorten the run.
+//!
+//! **Blame taxonomy.** Walking the chain attributes every interval on it
+//! to one of five categories, keyed by the *consuming* task's family
+//! (the breakdown attribution rule):
+//! - `compute_ns` — the chain task's kernel span;
+//! - `wait_ns` — gap to a same-node dependence predecessor (scheduling /
+//!   semaphore / queue time);
+//! - `intra_transfer_ns` — tile gathers and on-node pulls;
+//! - `inter_transfer_ns` — gap to a cross-node predecessor (the tile
+//!   push over the bounded channels / modelled IB transfer);
+//! - `recovery_ns` — chaos replan/recovery spans (exec only), reported
+//!   under the reserved `(recovery)` row.
+//!
+//! **Accounting rule.** Blame sums telescope to the chain's length:
+//! `Σ blame ≈ length_seconds × 1e9 ≤ wall_seconds × 1e9`, and
+//! `unattributed_ns := wall×1e9 − Σ blame` is the remainder — exactly 0
+//! up to float rounding on the sim side (the chain spans the whole
+//! modelled run), and the off-path orchestration cost (thread spawn,
+//! planning, join) on the exec side. So blame + unattributed always
+//! reconciles to wall clock *by construction*, and the meaningful
+//! invariants are `length ≤ wall` and `unattributed ≥ 0` (exec).
+//!
+//! On the sim side `length_seconds` is the max task finish computed with
+//! the identical fold the simulator uses for its makespan — the two are
+//! bitwise equal, which `rust/tests/analyze.rs` asserts.
+
+use crate::exec::{ExecPlan, ExecResult};
+use crate::machine::topology::{ProcId, ProcKind};
+use crate::obs::{Cat, Trace};
+use crate::sim::SimTimeline;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Reserved blame row for chaos recovery time (no launch family owns it).
+pub const RECOVERY_ROW: &str = "(recovery)";
+
+/// One task on the critical path.
+#[derive(Clone, Debug)]
+pub struct PathStep {
+    /// Task index — program order (sim) or plan order (exec).
+    pub task: usize,
+    pub family: String,
+    pub node: u32,
+    pub lane: u32,
+    /// Kernel start/end, ns since the run origin.
+    pub start_ns: f64,
+    pub end_ns: f64,
+}
+
+/// Where the chain's time went for one task family.
+#[derive(Clone, Debug, Default)]
+pub struct BlameRow {
+    /// Tasks of this family on the critical path.
+    pub tasks: u64,
+    pub compute_ns: f64,
+    pub wait_ns: f64,
+    pub intra_transfer_ns: f64,
+    pub inter_transfer_ns: f64,
+    pub recovery_ns: f64,
+}
+
+impl BlameRow {
+    pub fn total_ns(&self) -> f64 {
+        self.compute_ns
+            + self.wait_ns
+            + self.intra_transfer_ns
+            + self.inter_transfer_ns
+            + self.recovery_ns
+    }
+}
+
+/// Critical path of one run — modelled (`source == "sim"`) or measured
+/// (`source == "exec"`), same schema either way.
+#[derive(Clone, Debug)]
+pub struct CritPath {
+    pub source: &'static str,
+    /// Chain span in seconds. Sim: bitwise the simulated makespan.
+    /// Exec: last chain finish minus chain origin — never exceeds
+    /// `wall_seconds`.
+    pub length_seconds: f64,
+    /// Sim: the makespan again. Exec: measured wall clock.
+    pub wall_seconds: f64,
+    /// The chain, earliest task first.
+    pub steps: Vec<PathStep>,
+    /// Per-family blame rows; keys are launch names on both sides (plus
+    /// [`RECOVERY_ROW`] when recovery spans were recorded), so sim and
+    /// exec diff row-for-row.
+    pub blame: BTreeMap<String, BlameRow>,
+    /// `wall×1e9 − Σ blame` — see the module-level accounting rule.
+    pub unattributed_ns: f64,
+    /// Trace events lost to ring overflow (exec only; 0 for sim).
+    pub dropped_events: u64,
+}
+
+impl CritPath {
+    /// Σ over all blame rows and categories.
+    pub fn blame_total_ns(&self) -> f64 {
+        self.blame.values().map(|r| r.total_ns()).sum()
+    }
+
+    pub fn row_keys(&self) -> Vec<&str> {
+        self.blame.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let steps = Json::Arr(
+            self.steps
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("task", Json::Num(s.task as f64)),
+                        ("family", Json::Str(s.family.clone())),
+                        ("node", Json::Num(s.node as f64)),
+                        ("lane", Json::Num(s.lane as f64)),
+                        ("start_ns", Json::Num(s.start_ns)),
+                        ("end_ns", Json::Num(s.end_ns)),
+                    ])
+                })
+                .collect(),
+        );
+        let blame = Json::Obj(
+            self.blame
+                .iter()
+                .map(|(fam, r)| {
+                    let row = Json::obj(vec![
+                        ("tasks_on_path", Json::Num(r.tasks as f64)),
+                        ("compute_ns", Json::Num(r.compute_ns)),
+                        ("wait_ns", Json::Num(r.wait_ns)),
+                        ("intra_transfer_ns", Json::Num(r.intra_transfer_ns)),
+                        ("inter_transfer_ns", Json::Num(r.inter_transfer_ns)),
+                        ("recovery_ns", Json::Num(r.recovery_ns)),
+                    ]);
+                    (fam.clone(), row)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("source", Json::Str(self.source.to_string())),
+            ("length_seconds", Json::Num(self.length_seconds)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("unattributed_ns", Json::Num(self.unattributed_ns)),
+            ("dropped_events", Json::Num(self.dropped_events as f64)),
+            ("steps", steps),
+            ("blame", blame),
+        ])
+    }
+}
+
+/// The exec lane id convention (`exec::node::lane_tid`) reproduced for
+/// reporting, so sim and exec path steps name lanes identically.
+fn lane_of(proc: &ProcId) -> u32 {
+    let base = match proc.kind {
+        ProcKind::Gpu => 0,
+        ProcKind::Cpu => 100,
+        ProcKind::Omp => 200,
+    };
+    base + proc.local as u32
+}
+
+/// Critical path through the simulator's modelled timeline.
+pub fn from_sim(tl: &SimTimeline) -> CritPath {
+    // Seed one blame row per family so row keys match the exec side even
+    // for families that never land on the path.
+    let mut blame: BTreeMap<String, BlameRow> = BTreeMap::new();
+    for t in &tl.tasks {
+        blame.entry(t.family.clone()).or_default();
+    }
+
+    // The makespan fold, replicated exactly: f64::max over `end` in
+    // program order. Strictly-greater keeps the earliest argmax, which
+    // is also what `max` returns for equal floats.
+    let mut head: Option<usize> = None;
+    let mut makespan = 0.0f64;
+    for (i, t) in tl.tasks.iter().enumerate() {
+        if t.end > makespan {
+            makespan = t.end;
+            head = Some(i);
+        }
+    }
+
+    let mut steps = Vec::new();
+    let mut cur = head;
+    while let Some(i) = cur {
+        let s = &tl.tasks[i];
+        steps.push(PathStep {
+            task: i,
+            family: s.family.clone(),
+            node: s.proc.node as u32,
+            lane: lane_of(&s.proc),
+            start_ns: s.start * 1e9,
+            end_ns: s.end * 1e9,
+        });
+        let row = blame.get_mut(&s.family).expect("row seeded above");
+        row.tasks += 1;
+        row.compute_ns += (s.end - s.start) * 1e9;
+        let ready = s.data_ready.max(s.dep_ready);
+        cur = if s.start > ready {
+            // Queued behind the processor: the previous lane task ran
+            // until exactly `start`, so the chain continues there with
+            // no gap to attribute.
+            s.prev_on_proc
+        } else {
+            // Data/dependence bound: the gap back to the binding
+            // dependence predecessor (or to t=0 at the chain origin) is
+            // transfer time when a tile arrival set readiness, wait
+            // otherwise.
+            let pred_end = s.dep_pred.map(|p| tl.tasks[p].end).unwrap_or(0.0);
+            let gap = ((s.start - pred_end) * 1e9).max(0.0);
+            if s.data_ready > s.dep_ready {
+                match s.data_inter {
+                    Some(true) => row.inter_transfer_ns += gap,
+                    Some(false) => row.intra_transfer_ns += gap,
+                    None => row.wait_ns += gap,
+                }
+            } else {
+                row.wait_ns += gap;
+            }
+            s.dep_pred
+        };
+    }
+    steps.reverse();
+
+    let total: f64 = blame.values().map(|r| r.total_ns()).sum();
+    CritPath {
+        source: "sim",
+        length_seconds: makespan,
+        wall_seconds: makespan,
+        steps,
+        blame,
+        unattributed_ns: makespan * 1e9 - total,
+        dropped_events: 0,
+    }
+}
+
+/// Critical path through a measured run: the plan's dependence structure
+/// plus the trace's per-task Wait/Gather/Kernel spans (record the run
+/// with `obs::start` active). Tasks whose spans were dropped by ring
+/// overflow fall out of the analysis; `dropped_events` reports how many
+/// events are missing.
+pub fn from_exec(plan: &ExecPlan, result: &ExecResult, trace: &Trace) -> CritPath {
+    let n = plan.tasks.len();
+    // Per-task measured spans, linked by the ("task", idx) span arg.
+    let mut kernel: Vec<Option<(u64, u64)>> = vec![None; n];
+    let mut waits: Vec<Option<(u64, u64)>> = vec![None; n];
+    let mut gathers: Vec<Option<(u64, u64)>> = vec![None; n];
+    let mut recovery_ns = 0.0f64;
+    for e in &trace.events {
+        if e.cat == Cat::Recovery {
+            recovery_ns += e.dur_ns as f64;
+            continue;
+        }
+        if e.args[0].0 != "task" {
+            continue;
+        }
+        let t = e.args[0].1 as usize;
+        if t >= n {
+            continue;
+        }
+        match e.cat {
+            Cat::Kernel => kernel[t] = Some((e.ts_ns, e.dur_ns)),
+            Cat::Wait => waits[t] = Some((e.ts_ns, e.dur_ns)),
+            Cat::Gather => gathers[t] = Some((e.ts_ns, e.dur_ns)),
+            _ => {}
+        }
+    }
+
+    // Lane predecessor per task, from the plan's static lane schedules.
+    let mut lane_prev: Vec<Option<usize>> = vec![None; n];
+    for (_, order) in &plan.lanes {
+        for w in order.windows(2) {
+            lane_prev[w[1]] = Some(w[0]);
+        }
+    }
+
+    let mut blame: BTreeMap<String, BlameRow> = BTreeMap::new();
+    for fam in plan.families.keys() {
+        blame.entry(fam.clone()).or_default();
+    }
+    if recovery_ns > 0.0 {
+        blame.entry(RECOVERY_ROW.to_string()).or_default().recovery_ns = recovery_ns;
+    }
+
+    let finish = |t: usize| kernel[t].map(|(ts, d)| ts + d);
+    let mut head: Option<usize> = None;
+    let mut head_end = 0u64;
+    for t in 0..n {
+        if let Some(f) = finish(t) {
+            if f > head_end {
+                head_end = f;
+                head = Some(t);
+            }
+        }
+    }
+
+    let wall_ns = result.wall_seconds * 1e9;
+    let Some(head) = head else {
+        // No kernel spans reached the trace (tracing off or everything
+        // dropped): an empty path, all wall clock unattributed.
+        return CritPath {
+            source: "exec",
+            length_seconds: 0.0,
+            wall_seconds: result.wall_seconds,
+            steps: Vec::new(),
+            blame,
+            unattributed_ns: wall_ns - recovery_ns,
+            dropped_events: trace.dropped,
+        };
+    };
+
+    let mut steps = Vec::new();
+    let mut origin_ts = 0u64;
+    let mut cur = Some(head);
+    while let Some(t) = cur {
+        let task = &plan.tasks[t];
+        let (kts, kdur) = kernel[t].expect("chain tasks have kernel spans");
+        steps.push(PathStep {
+            task: t,
+            family: task.name.clone(),
+            node: task.proc.node as u32,
+            lane: lane_of(&task.proc),
+            start_ns: kts as f64,
+            end_ns: (kts + kdur) as f64,
+        });
+        let row = blame.entry(task.name.clone()).or_default();
+        row.tasks += 1;
+        row.compute_ns += kdur as f64;
+
+        // Binding predecessor: max finish over dependence waits and the
+        // lane predecessor (ties go to the dependence edge — it is the
+        // structural constraint; the lane edge is an artifact of the
+        // static schedule).
+        let mut pred: Option<(usize, u64, bool)> = None; // (idx, finish, is_lane_edge)
+        for &p in &task.waits {
+            if let Some(f) = finish(p) {
+                if pred.map(|(_, pf, _)| f > pf).unwrap_or(true) {
+                    pred = Some((p, f, false));
+                }
+            }
+        }
+        if let Some(lp) = lane_prev[t] {
+            if let Some(f) = finish(lp) {
+                if pred.map(|(_, pf, _)| f > pf).unwrap_or(true) {
+                    pred = Some((lp, f, true));
+                }
+            }
+        }
+
+        let gdur = gathers[t].map(|(_, d)| d).unwrap_or(0);
+        match pred {
+            Some((p, pf, is_lane)) => {
+                // [pf .. kts] is the pre-kernel gap on the chain; carve
+                // the measured gather out of it as intra-node transfer,
+                // then attribute the rest by the predecessor's locality.
+                let gap = kts.saturating_sub(pf);
+                let gather_part = gap.min(gdur);
+                row.intra_transfer_ns += gather_part as f64;
+                let rest = (gap - gather_part) as f64;
+                if !is_lane && plan.tasks[p].proc.node != task.proc.node {
+                    row.inter_transfer_ns += rest;
+                } else {
+                    row.wait_ns += rest;
+                }
+                cur = Some(p);
+            }
+            None => {
+                // Chain origin: attribute the task's own recorded wait
+                // and gather; the origin timestamp is its earliest span.
+                let wdur = waits[t].map(|(_, d)| d).unwrap_or(0);
+                row.wait_ns += wdur as f64;
+                row.intra_transfer_ns += gdur as f64;
+                origin_ts = [waits[t], gathers[t], Some((kts, kdur))]
+                    .iter()
+                    .flatten()
+                    .map(|(ts, _)| *ts)
+                    .min()
+                    .unwrap_or(kts);
+                cur = None;
+            }
+        }
+    }
+    steps.reverse();
+
+    let total: f64 = blame.values().map(|r| r.total_ns()).sum();
+    CritPath {
+        source: "exec",
+        length_seconds: head_end.saturating_sub(origin_ts) as f64 / 1e9,
+        wall_seconds: result.wall_seconds,
+        steps,
+        blame,
+        unattributed_ns: wall_ns - total,
+        dropped_events: trace.dropped,
+    }
+}

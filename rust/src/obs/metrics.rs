@@ -1,0 +1,326 @@
+//! Log-bucketed latency histograms and live counters for the serve
+//! daemon — continuous observability instead of end-of-run stats.
+//!
+//! A [`Histogram`] is a fixed array of power-of-two latency buckets
+//! behind relaxed atomics: recording a sample is one `fetch_add`, no
+//! allocation, no lock — cheap enough to leave on for every request the
+//! daemon serves. Bucket `k` holds durations in `[2^(k-1), 2^k)`
+//! nanoseconds (bucket 0 holds 0 ns), so quantile queries return a
+//! bucket *bound* with a guaranteed factor-2 resolution: the true
+//! nearest-rank quantile always lies inside the reported bucket. That is
+//! the contract `serve_load` asserts ("histogram and sort-based
+//! quantiles agree within one bucket") and what lets two histograms
+//! merge associatively — per-bucket counter addition loses nothing the
+//! buckets had not already quantized away.
+//!
+//! [`ServeMetrics`] packages one histogram per serve op plus
+//! cache-outcome counters (hit / miss / error, one relaxed atomic each —
+//! the warmed hit path stays allocation-free, proven by
+//! `rust/tests/obs_alloc.rs`) and renders both a JSON object for the
+//! serve `metrics` op and a Prometheus-style text exposition.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets: bucket 47 tops out at 2^47 ns ≈ 39 h,
+/// far beyond any request latency; larger samples clamp into it.
+pub const BUCKETS: usize = 48;
+
+/// A log-bucketed histogram of nanosecond durations. All methods take
+/// `&self`; concurrent recording is lock-free and allocation-free.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Bucket index for a duration: 0 for 0 ns, else `⌈log2(ns+1)⌉` clamped
+/// to the last bucket — so bucket `k ≥ 1` covers `[2^(k-1), 2^k)`.
+pub fn bucket_of(ns: u64) -> usize {
+    (64 - ns.leading_zeros() as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive value range `[lo, hi]` a bucket covers (the last bucket's
+/// upper bound is saturated).
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    match idx {
+        0 => (0, 0),
+        k if k < BUCKETS - 1 => (1u64 << (k - 1), (1u64 << k) - 1),
+        k => (1u64 << (k - 1), u64::MAX),
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Record one duration. One relaxed `fetch_add`, no allocation.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Add every bucket of `other` into `self`. Per-bucket counter
+    /// addition is associative and commutative, so merging partial
+    /// histograms in any grouping yields the same result — the property
+    /// `rust/tests/analyze.rs` checks.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (dst, src) in self.counts.iter().zip(&other.counts) {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    /// Raw bucket counts (a consistent-enough snapshot for reporting).
+    pub fn snapshot(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
+    }
+
+    /// Index of the bucket containing the nearest-rank `q`-quantile
+    /// (`0.0 ..= 1.0`), or `None` if no samples were recorded.
+    pub fn quantile_bucket(&self, q: f64) -> Option<usize> {
+        let snap = self.snapshot();
+        let total: u64 = snap.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        // Nearest-rank over the sorted multiset the buckets quantize:
+        // the same `((n-1) * q).round()` rule the old sort-based path
+        // used, so the two can only disagree by bucket resolution.
+        let rank = ((total - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in snap.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Some(i);
+            }
+        }
+        Some(BUCKETS - 1)
+    }
+
+    /// Upper bound (ns) of the bucket holding the `q`-quantile — the
+    /// value the daemon reports. 0 when empty.
+    pub fn quantile_upper_ns(&self, q: f64) -> u64 {
+        self.quantile_bucket(q).map(|b| bucket_bounds(b).1).unwrap_or(0)
+    }
+
+    /// The reported quantile in microseconds (upper bucket bound).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        self.quantile_upper_ns(q) as f64 / 1_000.0
+    }
+
+    /// JSON summary: sample count plus the standard latency quantiles.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("p50_us", Json::Num(self.quantile_us(0.50))),
+            ("p99_us", Json::Num(self.quantile_us(0.99))),
+            ("p999_us", Json::Num(self.quantile_us(0.999))),
+        ])
+    }
+}
+
+/// The serve ops that get a latency histogram each. Closed set — the
+/// registry is a fixed array, so lookup is a handful of pointer
+/// comparisons and never allocates.
+pub const SERVE_OPS: [&str; 7] =
+    ["plan", "batch", "invalidate", "stats", "metrics", "ping", "shutdown"];
+
+/// Live metrics behind the serve daemon: per-op latency histograms plus
+/// cache-outcome counters. Every update is relaxed-atomic; the warmed
+/// plan hit costs exactly one counter increment beyond the probe itself.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    ops: [Histogram; SERVE_OPS.len()],
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics::default()
+    }
+
+    /// The histogram for a named op (unknown names fold into the last
+    /// slot rather than panicking a live daemon).
+    pub fn op(&self, name: &str) -> &Histogram {
+        let idx = SERVE_OPS.iter().position(|o| *o == name).unwrap_or(SERVE_OPS.len() - 1);
+        &self.ops[idx]
+    }
+
+    /// Record one handled request: latency into the op's histogram.
+    #[inline]
+    pub fn record_op_ns(&self, name: &str, ns: u64) {
+        self.op(name).record_ns(ns);
+    }
+
+    /// What the serve `metrics` op returns: per-op quantiles, outcome
+    /// counters, and the Prometheus-style exposition text.
+    pub fn to_json(&self) -> Json {
+        let ops = Json::Obj(
+            SERVE_OPS
+                .iter()
+                .zip(&self.ops)
+                .filter(|(_, h)| h.count() > 0)
+                .map(|(name, h)| (name.to_string(), h.to_json()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("ops", ops),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hit", Json::Num(self.cache_hits.load(Ordering::Relaxed) as f64)),
+                    ("miss", Json::Num(self.cache_misses.load(Ordering::Relaxed) as f64)),
+                    ("error", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+                ]),
+            ),
+            ("exposition", Json::Str(self.prometheus())),
+        ])
+    }
+
+    /// Prometheus text exposition: request counts and latency quantiles
+    /// per op, cumulative bucket counts for the `plan` op, and the
+    /// cache-outcome counters.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        out.push_str("# TYPE mapple_serve_requests_total counter\n");
+        for (name, h) in SERVE_OPS.iter().zip(&self.ops) {
+            let n = h.count();
+            if n > 0 {
+                let _ = writeln!(out, "mapple_serve_requests_total{{op=\"{name}\"}} {n}");
+            }
+        }
+        out.push_str("# TYPE mapple_serve_latency_seconds summary\n");
+        for (name, h) in SERVE_OPS.iter().zip(&self.ops) {
+            if h.count() == 0 {
+                continue;
+            }
+            for (label, q) in [("0.5", 0.50), ("0.99", 0.99), ("0.999", 0.999)] {
+                let secs = h.quantile_upper_ns(q) as f64 / 1e9;
+                let _ = writeln!(
+                    out,
+                    "mapple_serve_latency_seconds{{op=\"{name}\",quantile=\"{label}\"}} {secs:e}"
+                );
+            }
+        }
+        out.push_str("# TYPE mapple_serve_latency_bucket histogram\n");
+        let mut cum = 0u64;
+        for (i, c) in self.op("plan").snapshot().iter().enumerate() {
+            cum += c;
+            if *c > 0 {
+                let le = bucket_bounds(i).1 as f64 / 1e9;
+                let _ = writeln!(
+                    out,
+                    "mapple_serve_latency_bucket{{op=\"plan\",le=\"{le:e}\"}} {cum}"
+                );
+            }
+        }
+        out.push_str("# TYPE mapple_serve_cache_outcomes_total counter\n");
+        for (label, n) in [
+            ("hit", self.cache_hits.load(Ordering::Relaxed)),
+            ("miss", self.cache_misses.load(Ordering::Relaxed)),
+            ("error", self.errors.load(Ordering::Relaxed)),
+        ] {
+            let _ = writeln!(out, "mapple_serve_cache_outcomes_total{{outcome=\"{label}\"}} {n}");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_the_line_without_gaps() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        for k in 0..BUCKETS - 1 {
+            let (lo, hi) = bucket_bounds(k);
+            assert_eq!(bucket_of(lo), k, "lower bound of bucket {k}");
+            assert_eq!(bucket_of(hi), k, "upper bound of bucket {k}");
+            assert_eq!(bucket_bounds(k + 1).0, hi.wrapping_add(1).max(1));
+        }
+    }
+
+    #[test]
+    fn quantiles_track_nearest_rank_within_one_bucket() {
+        let h = Histogram::new();
+        let mut samples: Vec<u64> = (0..1000).map(|i| (i * i) % 50_000 + 1).collect();
+        for &s in &samples {
+            h.record_ns(s);
+        }
+        samples.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let exact = samples[((samples.len() - 1) as f64 * q).round() as usize];
+            let b = h.quantile_bucket(q).unwrap();
+            let diff = (bucket_of(exact) as i64 - b as i64).abs();
+            assert!(diff <= 1, "q={q}: exact {exact} in bucket {}, hist {b}", bucket_of(exact));
+            let (_, hi) = bucket_bounds(b);
+            assert!(hi >= exact / 2, "upper bound {hi} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record_ns(v);
+            }
+            h
+        };
+        let (a, b, c) = (mk(&[1, 5, 9000]), mk(&[2, 2, 70]), mk(&[u64::MAX, 0]));
+        let left = Histogram::new();
+        left.merge_from(&a);
+        left.merge_from(&b); // (a + b)
+        let right = mk(&[]);
+        right.merge_from(&b);
+        right.merge_from(&c); // (b + c)
+        let lhs = Histogram::new();
+        lhs.merge_from(&left);
+        lhs.merge_from(&c); // (a + b) + c
+        let rhs = Histogram::new();
+        rhs.merge_from(&a);
+        rhs.merge_from(&right); // a + (b + c)
+        assert_eq!(lhs.snapshot(), rhs.snapshot());
+        assert_eq!(lhs.count(), 7);
+    }
+
+    #[test]
+    fn serve_metrics_exposition_lists_recorded_ops() {
+        let m = ServeMetrics::new();
+        m.record_op_ns("plan", 1500);
+        m.record_op_ns("plan", 3000);
+        m.record_op_ns("ping", 100);
+        m.cache_hits.fetch_add(2, Ordering::Relaxed);
+        let text = m.prometheus();
+        assert!(text.contains("mapple_serve_requests_total{op=\"plan\"} 2"), "{text}");
+        assert!(text.contains("mapple_serve_requests_total{op=\"ping\"} 1"), "{text}");
+        assert!(text.contains("cache_outcomes_total{outcome=\"hit\"} 2"), "{text}");
+        assert!(!text.contains("op=\"batch\""), "empty ops stay out: {text}");
+        let j = m.to_json();
+        assert!(j.get("ops").and_then(|o| o.get("plan")).is_some());
+        assert_eq!(
+            j.get("cache").and_then(|c| c.get("hit")).and_then(|h| h.as_f64()),
+            Some(2.0)
+        );
+    }
+}

@@ -43,12 +43,15 @@
 //!   `exec` so modelled and measured costs diff row-for-row,
 //! - [`rollup_json`] — live counters, surfaced by the serve `stats` op.
 
+pub mod advisor;
 pub mod breakdown;
 pub mod chrome;
+pub mod critpath;
+pub mod metrics;
 
 use crate::util::json::Json;
 use std::cell::OnceCell;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
@@ -144,7 +147,23 @@ pub struct Trace {
 
 /// Keep the earliest events on overflow: they carry the compile/plan
 /// context the tail can be reconstructed without.
-const RING_CAP: usize = 1 << 18;
+pub const DEFAULT_RING_CAP: usize = 1 << 18;
+
+/// Per-thread ring capacity, settable before [`start`] via
+/// `--trace-capacity`. A relaxed load per push: it is a bound, not an
+/// index, so a mid-run change only affects subsequent pushes.
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAP);
+
+/// Size the per-thread event rings (events each, min 1024). Call before
+/// [`start`]; rings already past a smaller bound keep what they have.
+pub fn set_ring_capacity(events: usize) {
+    RING_CAP.store(events.max(1024), Ordering::Relaxed);
+}
+
+/// The current per-thread ring capacity.
+pub fn ring_capacity() -> usize {
+    RING_CAP.load(Ordering::Relaxed)
+}
 
 struct Ring {
     tid: u32,
@@ -154,7 +173,7 @@ struct Ring {
 
 impl Ring {
     fn push(&mut self, ev: Event) {
-        if self.events.len() < RING_CAP {
+        if self.events.len() < RING_CAP.load(Ordering::Relaxed) {
             self.events.push(ev);
         } else {
             self.dropped += 1;

@@ -28,6 +28,7 @@ use crate::machine::point::Tuple;
 use crate::machine::topology::MachineDesc;
 use crate::mapper::MappleMapper;
 use crate::mapple::program::MapperSpec;
+use crate::obs::metrics::ServeMetrics;
 use crate::obs::{self, Cat};
 use crate::serve::cache::{CachedPlan, PlanCache};
 use crate::serve::proto::{digest_hex, Invalidation, PlanRequest, Request};
@@ -112,6 +113,10 @@ pub struct ServerState {
     specs: RwLock<ShapeMap>,
     spec_flights: Mutex<HashMap<SpecKey, Arc<SpecFlight>>>,
     requests: AtomicU64,
+    /// Always-on latency histograms and cache-outcome counters (the
+    /// `metrics` op). Recording is one relaxed atomic add per event —
+    /// no locks, no allocation — so it rides the hot path for free.
+    metrics: ServeMetrics,
 }
 
 impl ServerState {
@@ -121,11 +126,16 @@ impl ServerState {
             specs: RwLock::new(HashMap::new()),
             spec_flights: Mutex::new(HashMap::new()),
             requests: AtomicU64::new(0),
+            metrics: ServeMetrics::new(),
         }
     }
 
     pub fn cache(&self) -> &Arc<PlanCache> {
         &self.cache
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
     }
 
     fn probe_spec(
@@ -277,6 +287,9 @@ impl ServerState {
         let want_table = p.table;
         match self.handle_plan(p) {
             Ok((plan, hit)) => {
+                let outcome =
+                    if hit { &self.metrics.cache_hits } else { &self.metrics.cache_misses };
+                outcome.fetch_add(1, Ordering::Relaxed);
                 let mut fields = vec![
                     ("ok", Json::Bool(true)),
                     ("cached", Json::Bool(hit)),
@@ -290,7 +303,10 @@ impl ServerState {
                 }
                 Json::obj(fields)
             }
-            Err(e) => error_json(&e),
+            Err(e) => {
+                self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                error_json(&e)
+            }
         }
     }
 
@@ -306,10 +322,12 @@ impl ServerState {
             Request::Batch(_) => "batch",
             Request::Invalidate(_) => "invalidate",
             Request::Stats => "stats",
+            Request::Metrics => "metrics",
             Request::Ping => "ping",
             Request::Shutdown => "shutdown",
         };
         let t_op = obs::now();
+        let t_wall = std::time::Instant::now();
         let out = match req {
             Request::Plan(p) => (self.plan_json(p), false),
             Request::Batch(ps) => {
@@ -345,15 +363,31 @@ impl ServerState {
                 )
             }
             Request::Stats => (self.stats_json(), false),
+            Request::Metrics => (self.metrics_json(), false),
             Request::Ping => (Json::obj(vec![("ok", Json::Bool(true))]), false),
             Request::Shutdown => {
                 (Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]), true)
             }
         };
+        self.metrics.record_op_ns(op, t_wall.elapsed().as_nanos() as u64);
         if let Some(t0) = t_op {
             obs::span(Cat::Serve, op, None, 0, 0, t0, obs::NO_ARGS);
         }
         out
+    }
+
+    /// The `metrics` op's reply: per-op latency histograms (p50/p99/p999
+    /// in microseconds), cache-outcome counters, and a Prometheus-style
+    /// text exposition under `"exposition"`. A metrics request does not
+    /// observe its own latency (it is recorded after the reply is built).
+    fn metrics_json(&self) -> Json {
+        match self.metrics.to_json() {
+            Json::Obj(mut m) => {
+                m.insert("ok".to_string(), Json::Bool(true));
+                Json::Obj(m)
+            }
+            other => other,
+        }
     }
 }
 
@@ -621,6 +655,40 @@ mod tests {
             replies[2].get("digest").and_then(|d| d.as_str()),
             replies[0].get("digest").and_then(|d| d.as_str()),
         );
+        server.shutdown();
+        server.join();
+    }
+
+    #[test]
+    fn metrics_op_reports_latency_and_cache_outcomes() {
+        let server = test_server();
+        let mut c = Client::connect(server.local_addr());
+
+        // One miss, two hits, one error.
+        assert!(ok(&c.call(&plan_req("mm_step_0", &[4, 4], false))));
+        assert!(ok(&c.call(&plan_req("mm_step_0", &[4, 4], false))));
+        assert!(ok(&c.call(&plan_req("mm_step_0", &[4, 4], false))));
+        let mut bad = plan_req("mm_step_0", &[4, 4], false);
+        if let Request::Plan(p) = &mut bad {
+            p.app = "no_such_app".to_string();
+        }
+        assert!(!ok(&c.call(&bad)));
+
+        let m = c.call(&Request::Metrics);
+        assert!(ok(&m), "{m:?}");
+        let cache = m.get("cache").unwrap();
+        assert_eq!(cache.get("miss").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(cache.get("hit").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(cache.get("error").and_then(|v| v.as_f64()), Some(1.0));
+        // All four plan requests (including the failed one) were timed.
+        let plan = m.get("ops").and_then(|o| o.get("plan")).unwrap();
+        assert_eq!(plan.get("count").and_then(|v| v.as_f64()), Some(4.0));
+        assert!(plan.get("p50_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // The exposition text carries the same counters.
+        let expo = m.get("exposition").and_then(|e| e.as_str()).unwrap();
+        assert!(expo.contains("mapple_serve_requests_total{op=\"plan\"} 4"), "{expo}");
+        assert!(expo.contains("mapple_serve_cache_outcomes_total{outcome=\"hit\"} 2"), "{expo}");
+
         server.shutdown();
         server.join();
     }

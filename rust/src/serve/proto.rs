@@ -87,6 +87,9 @@ pub enum Request {
     Batch(Vec<PlanRequest>),
     Invalidate(Invalidation),
     Stats,
+    /// Latency histograms (per-op p50/p99/p999) and cache-outcome
+    /// counters, plus a Prometheus-style text exposition.
+    Metrics,
     Ping,
     Shutdown,
 }
@@ -175,6 +178,7 @@ impl Request {
                 Ok(Request::Invalidate(inv))
             }
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "ping" => Ok(Request::Ping),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!("unknown op '{other}'")),
@@ -210,6 +214,7 @@ impl Request {
                 ]),
             },
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".to_string()))]),
+            Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".to_string()))]),
             Request::Ping => Json::obj(vec![("op", Json::Str("ping".to_string()))]),
             Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".to_string()))]),
         }
@@ -257,7 +262,7 @@ mod tests {
         });
         let body = req.to_json().pretty();
         assert_eq!(Request::parse(body.as_bytes()).unwrap(), req);
-        for op in [Request::Stats, Request::Ping, Request::Shutdown] {
+        for op in [Request::Stats, Request::Metrics, Request::Ping, Request::Shutdown] {
             let body = op.to_json().pretty();
             assert_eq!(Request::parse(body.as_bytes()).unwrap(), op);
         }

@@ -72,6 +72,38 @@ impl SimResult {
     }
 }
 
+/// Modelled schedule of one point task — everything the critical-path
+/// analyzer ([`crate::obs::critpath`]) needs to walk the run backwards.
+/// Indices refer to positions in [`SimTimeline::tasks`] (program order,
+/// which is topological for ≼).
+#[derive(Clone, Debug)]
+pub struct SimTaskSpan {
+    /// Launch name — the task family (breakdown row key).
+    pub family: String,
+    pub proc: ProcId,
+    /// Readiness from dependence predecessors and backpressure alone.
+    pub dep_ready: f64,
+    /// The predecessor whose finish set `dep_ready` (None when 0.0).
+    pub dep_pred: Option<usize>,
+    /// Readiness after gathers: `max(dep_ready, last tile arrival)`.
+    pub data_ready: f64,
+    /// When `data_ready > dep_ready`, whether the binding arrival was a
+    /// cross-node transfer (`Some(true)`), an intra-node pull
+    /// (`Some(false)`), or an already-produced local copy (`None`).
+    pub data_inter: Option<bool>,
+    /// `max(data_ready, processor free)` — modelled kernel start.
+    pub start: f64,
+    pub end: f64,
+    /// The task that ran immediately before this one on `proc`.
+    pub prev_on_proc: Option<usize>,
+}
+
+/// Per-task modelled timeline of a simulated run, in program order.
+#[derive(Debug, Default)]
+pub struct SimTimeline {
+    pub tasks: Vec<SimTaskSpan>,
+}
+
 /// One materialized copy of a region rect.
 #[derive(Clone, Debug)]
 struct Instance {
@@ -97,7 +129,7 @@ pub fn simulate(
     desc: &MachineDesc,
     policies: &dyn MappingPolicies,
 ) -> SimResult {
-    simulate_impl(launches, env, deps, placements, desc, policies, None)
+    simulate_impl(launches, env, deps, placements, desc, policies, None, None)
 }
 
 /// [`simulate`], additionally collecting a per-task-family cost
@@ -116,10 +148,57 @@ pub fn simulate_breakdown(
     policies: &dyn MappingPolicies,
 ) -> (SimResult, Breakdown) {
     let mut bd = Breakdown::new("sim");
-    let r = simulate_impl(launches, env, deps, placements, desc, policies, Some(&mut bd));
+    let r = simulate_impl(launches, env, deps, placements, desc, policies, Some(&mut bd), None);
     (r, bd)
 }
 
+/// [`simulate`], additionally recording the full per-task modelled
+/// [`SimTimeline`] — start/end/readiness per point task plus the binding
+/// predecessor structure (dependence, transfer, or processor
+/// serialization). This is the input to [`crate::obs::critpath`]'s
+/// sim-side analysis; the returned `SimResult` is bitwise identical to a
+/// plain [`simulate`] run, and the timeline's max `end` *is* the
+/// makespan (same fold, same floats).
+pub fn simulate_timeline(
+    launches: &[IndexLaunch],
+    env: &DataEnv,
+    deps: &Dependences,
+    placements: &HashMap<PointTask, ProcId>,
+    desc: &MachineDesc,
+    policies: &dyn MappingPolicies,
+) -> (SimResult, SimTimeline) {
+    let mut tl = SimTimeline::default();
+    let r = simulate_impl(launches, env, deps, placements, desc, policies, None, Some(&mut tl));
+    (r, tl)
+}
+
+/// [`simulate_timeline`] and [`simulate_breakdown`] in one pass — what
+/// `mapple analyze` uses so the modelled breakdown and timeline come
+/// from the same (deterministic) run.
+pub fn simulate_full(
+    launches: &[IndexLaunch],
+    env: &DataEnv,
+    deps: &Dependences,
+    placements: &HashMap<PointTask, ProcId>,
+    desc: &MachineDesc,
+    policies: &dyn MappingPolicies,
+) -> (SimResult, Breakdown, SimTimeline) {
+    let mut bd = Breakdown::new("sim");
+    let mut tl = SimTimeline::default();
+    let r = simulate_impl(
+        launches,
+        env,
+        deps,
+        placements,
+        desc,
+        policies,
+        Some(&mut bd),
+        Some(&mut tl),
+    );
+    (r, bd, tl)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn simulate_impl(
     launches: &[IndexLaunch],
     env: &DataEnv,
@@ -128,6 +207,7 @@ fn simulate_impl(
     desc: &MachineDesc,
     policies: &dyn MappingPolicies,
     mut bd: Option<&mut Breakdown>,
+    mut tl: Option<&mut SimTimeline>,
 ) -> SimResult {
     let mut net = Network::new(desc);
     let mut pool = MemoryPool::new(desc);
@@ -137,9 +217,15 @@ fn simulate_impl(
     let mut state: HashMap<(RegionId, Rect), CopyState> = HashMap::new();
     let mut total_flops = 0.0;
     let mut makespan: f64 = 0.0;
-    // Ring of recent finish times per task name, for backpressure.
-    let mut recent: HashMap<String, Vec<f64>> = HashMap::new();
+    // Ring of recent (finish, task index) per task name, for
+    // backpressure (the index feeds the timeline's pred attribution).
+    let mut recent: HashMap<String, Vec<(f64, usize)>> = HashMap::new();
     let mut oom: Option<OomError> = None;
+    // Timeline bookkeeping (only maintained when a timeline is wanted —
+    // the plain tuner-hot-loop path pays nothing).
+    let mut gidx = 0usize;
+    let mut task_idx: HashMap<PointTask, usize> = HashMap::new();
+    let mut last_on_proc: HashMap<ProcId, usize> = HashMap::new();
 
     'outer: for launch in launches {
         // Batch-wise policy lookup: one query per (launch, arg) instead of
@@ -158,8 +244,15 @@ fn simulate_impl(
 
             // 1. dependence readiness
             let mut ready = 0.0f64;
+            let mut dep_pred: Option<usize> = None;
             for p in deps.preds_of(&pt) {
-                ready = ready.max(*finish.get(p).unwrap_or(&0.0));
+                let f = *finish.get(p).unwrap_or(&0.0);
+                if f > ready {
+                    ready = f;
+                    if tl.is_some() {
+                        dep_pred = task_idx.get(p).copied();
+                    }
+                }
             }
 
             // backpressure: the (i - limit)-th previous launch of this task
@@ -168,11 +261,20 @@ fn simulate_impl(
                 if limit > 0 {
                     if let Some(window) = recent.get(&launch.name) {
                         if window.len() >= limit {
-                            ready = ready.max(window[window.len() - limit]);
+                            let (f, idx) = window[window.len() - limit];
+                            if f > ready {
+                                ready = f;
+                                dep_pred = Some(idx);
+                            }
                         }
                     }
                 }
             }
+            let dep_ready = ready;
+            // When `data_ready > dep_ready`, the kind of the arrival
+            // that last raised readiness: Some(inter?) for a modelled
+            // transfer, None for an already-produced local copy.
+            let mut data_inter: Option<bool> = None;
 
             // 2. gather inputs: for each requirement, make a local copy.
             for (ri, req) in launch.reqs.iter().enumerate() {
@@ -192,6 +294,7 @@ fn simulate_impl(
                     // find source: nearest valid overlapping copy
                     let mut arrive = ready;
                     let mut transferred = false;
+                    let mut arrive_kind: Option<bool> = None;
                     // exact-rect copy first
                     let src = state.get(&key).and_then(|cs| {
                         cs.copies
@@ -210,6 +313,7 @@ fn simulate_impl(
                         }
                         arrive = net.move_bytes(src.proc, proc, bytes, t0);
                         transferred = true;
+                        arrive_kind = Some(src.proc.node != proc.node);
                         if let Some(bd) = bd.as_deref_mut() {
                             bd.row(&launch.name).add_edge(
                                 &region.name,
@@ -232,8 +336,11 @@ fn simulate_impl(
                             })
                             .collect();
                         for (src, ov_bytes) in overlaps {
-                            arrive = arrive
-                                .max(net.move_bytes(src.proc, proc, ov_bytes, ready.max(src.ready)));
+                            let a = net.move_bytes(src.proc, proc, ov_bytes, ready.max(src.ready));
+                            if a > arrive {
+                                arrive = a;
+                                arrive_kind = Some(src.proc.node != proc.node);
+                            }
                             transferred = true;
                             if let Some(bd) = bd.as_deref_mut() {
                                 bd.row(&launch.name).add_edge(
@@ -249,6 +356,7 @@ fn simulate_impl(
                             // node-0 host memory.
                             let host = ProcId { node: 0, kind: ProcKind::Cpu, local: 0 };
                             arrive = net.move_bytes(host, proc, bytes, ready);
+                            arrive_kind = Some(proc.node != 0);
                             if let Some(bd) = bd.as_deref_mut() {
                                 bd.row(&launch.name).add_edge(
                                     &region.name,
@@ -292,12 +400,18 @@ fn simulate_impl(
                     }
                     let cs = state.entry(key.clone()).or_default();
                     cs.copies.push(Instance { mem: dst_mem, proc, ready: arrive, bytes });
-                    ready = ready.max(arrive);
+                    if arrive > ready {
+                        ready = arrive;
+                        data_inter = arrive_kind;
+                    }
                 } else {
                     // local copy valid: ready when it was produced
                     let cs = &state[&key];
                     let c = cs.copies.iter().find(|c| c.mem == dst_mem).unwrap();
-                    ready = ready.max(c.ready);
+                    if c.ready > ready {
+                        ready = c.ready;
+                        data_inter = None;
+                    }
                 }
             }
 
@@ -323,13 +437,28 @@ fn simulate_impl(
             total_flops += launch.flops_per_point;
             finish.insert(pt.clone(), end);
             makespan = makespan.max(end);
-            recent.entry(launch.name.clone()).or_default().push(end);
+            recent.entry(launch.name.clone()).or_default().push((end, gidx));
             if let Some(bd) = bd.as_deref_mut() {
                 let row = bd.row(&launch.name);
                 row.tasks += 1;
                 row.compute_ns += compute * 1e9;
                 row.wait_ns += (start - ready) * 1e9;
             }
+            if let Some(tl) = tl.as_deref_mut() {
+                tl.tasks.push(SimTaskSpan {
+                    family: launch.name.clone(),
+                    proc,
+                    dep_ready,
+                    dep_pred,
+                    data_ready: ready,
+                    data_inter,
+                    start,
+                    end,
+                    prev_on_proc: last_on_proc.insert(proc, gidx),
+                });
+                task_idx.insert(pt.clone(), gidx);
+            }
+            gidx += 1;
 
             // 4. write-back: writers invalidate other copies & stamp new
             // version; GC frees instances the mapper marked collectable.

@@ -15,5 +15,8 @@ pub mod engine;
 pub mod memory;
 
 pub use channel::{Channel, Network};
-pub use engine::{simulate, simulate_breakdown, DefaultPolicies, MappingPolicies, SimResult};
+pub use engine::{
+    simulate, simulate_breakdown, simulate_full, simulate_timeline, DefaultPolicies,
+    MappingPolicies, SimResult, SimTaskSpan, SimTimeline,
+};
 pub use memory::{MemId, MemoryPool, OomError};

@@ -26,11 +26,13 @@ pub mod score;
 pub mod space;
 pub mod spec;
 pub mod strategy;
+pub mod validate;
 
 pub use score::{evaluate_parallel, score, EvalCtx};
 pub use space::SearchSpace;
 pub use spec::{ChainOp, MapFn, TuneSpec};
 pub use strategy::{BeamSearch, RandomSearch, Strategy, StrategyKind};
+pub use validate::{validate_exec, validate_ranking, ValidatedCandidate, ValidationReport};
 
 use crate::decompose::Objective;
 use crate::machine::topology::MachineDesc;
@@ -103,6 +105,11 @@ pub struct TuneResult {
     /// [`crate::mapple::MapperSpec::compile_with`] when recompiling the
     /// emitted source (the objective has no surface syntax).
     pub objective: Objective,
+    /// Every *distinct, finite-scoring* genome the run evaluated (seed
+    /// and resume included), sorted by simulated score ascending with
+    /// insertion order breaking ties. `mapple tune --validate` re-scores
+    /// the head of this list with real measured runs.
+    pub ranked: Vec<(TuneSpec, f64)>,
 }
 
 impl TuneResult {
@@ -154,6 +161,11 @@ pub fn tune_with_ctx(cfg: &TuneConfig, ctx: &EvalCtx) -> Result<TuneResult, Stri
     let mut seen: HashMap<String, f64> = HashMap::new();
     seen.insert(format!("{seed_spec:?}"), seed_score);
 
+    // Distinct genomes in evaluation order; sorted into `ranked` at the
+    // end. Infinite (invalid) scores are excluded — they cannot be
+    // re-measured by `--validate`.
+    let mut distinct: Vec<(TuneSpec, f64)> = vec![(seed_spec.clone(), seed_score)];
+
     let mut best = (seed_spec, seed_score);
     let mut evaluated = 0usize;
 
@@ -170,7 +182,9 @@ pub fn tune_with_ctx(cfg: &TuneConfig, ctx: &EvalCtx) -> Result<TuneResult, Stri
         if !v.is_finite() {
             return Err("tune: resume genome fails to simulate on the scored shapes".into());
         }
-        seen.insert(format!("{resume:?}"), v);
+        if seen.insert(format!("{resume:?}"), v).is_none() {
+            distinct.push((resume.clone(), v));
+        }
         strat.observe(&[(resume.clone(), v)]);
         if v < best.1 {
             best = (resume.clone(), v);
@@ -213,6 +227,11 @@ pub fn tune_with_ctx(cfg: &TuneConfig, ctx: &EvalCtx) -> Result<TuneResult, Stri
         for (key, idx) in fresh_of {
             seen.insert(key, fresh_scores[idx]);
         }
+        for (c, v) in fresh.iter().zip(&fresh_scores) {
+            if v.is_finite() {
+                distinct.push((c.clone(), *v));
+            }
+        }
         evaluated += cands.len();
         let scored: Vec<(TuneSpec, f64)> = cands.into_iter().zip(scores).collect();
         for (c, v) in &scored {
@@ -224,6 +243,8 @@ pub fn tune_with_ctx(cfg: &TuneConfig, ctx: &EvalCtx) -> Result<TuneResult, Stri
     }
 
     let mpl = best.0.to_mpl()?;
+    let mut ranked = distinct;
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
     Ok(TuneResult {
         objective: best.0.objective.clone(),
         best_score: best.1,
@@ -231,6 +252,7 @@ pub fn tune_with_ctx(cfg: &TuneConfig, ctx: &EvalCtx) -> Result<TuneResult, Stri
         evaluated,
         mpl,
         best: best.0,
+        ranked,
     })
 }
 

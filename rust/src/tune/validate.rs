@@ -1,0 +1,199 @@
+//! `mapple tune --validate`: does the simulator's ranking survive
+//! contact with reality?
+//!
+//! The tuner orders genomes by *simulated* geomean makespan. Validation
+//! re-scores the top-N of that ranking with real measured runs
+//! ([`crate::apps::exec_app`] wall clock, geomean across the same
+//! shapes) and reports how well the modelled order predicts the
+//! measured one:
+//!
+//! - **Spearman ρ** — Pearson correlation of the two rank vectors
+//!   (tie-averaged); sensitive to how far entries moved.
+//! - **Kendall τ** (tau-b) — fraction of concordant minus discordant
+//!   pairs; sensitive to how many pairs flipped.
+//! - **Inversions** — the discordant pairs themselves, as `(i, j)` sim
+//!   ranks, so a report names exactly which modelled comparisons the
+//!   measurement contradicts.
+//!
+//! [`validate_ranking`] takes the measurement as a closure so tests can
+//! inject a deterministic pseudo-measurement (bitwise-repeatable
+//! correlations under a fixed seed); [`validate_exec`] is the CLI
+//! binding that measures for real.
+
+use super::score::EvalCtx;
+use super::spec::TuneSpec;
+use super::{TuneConfig, TuneResult};
+use crate::apps::exec_app;
+use crate::exec::ExecOptions;
+use crate::mapper::MappleMapper;
+use crate::util::json::Json;
+use crate::util::stats::{kendall, spearman};
+
+/// One re-measured genome in a [`ValidationReport`].
+#[derive(Clone, Debug)]
+pub struct ValidatedCandidate {
+    /// Position in the simulator's ranking (0 = predicted best).
+    pub rank_sim: usize,
+    /// Simulated score (geomean makespan, seconds).
+    pub sim_score: f64,
+    /// Measured score (geomean wall clock, seconds).
+    pub measured: f64,
+    /// The genome as `.mpl` source (what you would actually run).
+    pub mpl: String,
+}
+
+/// Rank-correlation report between simulated and measured orderings.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub app: String,
+    /// In simulated-rank order (rank_sim == index).
+    pub candidates: Vec<ValidatedCandidate>,
+    /// Spearman rank correlation of sim vs measured scores.
+    pub spearman: f64,
+    /// Kendall tau-b of sim vs measured scores.
+    pub kendall: f64,
+    /// Discordant `(i, j)` sim-rank pairs: sim says i beats j, the
+    /// measurement says otherwise.
+    pub inversions: Vec<(usize, usize)>,
+}
+
+impl ValidationReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app.clone())),
+            (
+                "candidates",
+                Json::arr(self.candidates.iter().map(|c| {
+                    Json::obj(vec![
+                        ("rank_sim", Json::Num(c.rank_sim as f64)),
+                        ("sim_score", Json::Num(c.sim_score)),
+                        ("measured", Json::Num(c.measured)),
+                        ("mpl", Json::Str(c.mpl.clone())),
+                    ])
+                })),
+            ),
+            ("spearman", Json::Num(self.spearman)),
+            ("kendall", Json::Num(self.kendall)),
+            (
+                "inversions",
+                Json::arr(self.inversions.iter().map(|&(i, j)| {
+                    Json::arr(vec![Json::Num(i as f64), Json::Num(j as f64)])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Re-score the head of a simulated ranking with `measure` and compute
+/// the rank correlations. `ranked` must be sorted by simulated score
+/// ascending ([`TuneResult::ranked`] is); at least two candidates are
+/// required for a correlation to exist.
+pub fn validate_ranking(
+    app: &str,
+    ranked: &[(TuneSpec, f64)],
+    top_n: usize,
+    mut measure: impl FnMut(&TuneSpec) -> Result<f64, String>,
+) -> Result<ValidationReport, String> {
+    let n = top_n.min(ranked.len());
+    if n < 2 {
+        return Err(format!(
+            "tune --validate: need at least 2 distinct finite-scoring genomes, have {}",
+            ranked.len().min(top_n)
+        ));
+    }
+    let head = &ranked[..n];
+    let mut candidates = Vec::with_capacity(n);
+    for (rank_sim, (spec, sim_score)) in head.iter().enumerate() {
+        let measured = measure(spec)
+            .map_err(|e| format!("tune --validate: measuring sim-rank {rank_sim}: {e}"))?;
+        if !measured.is_finite() || measured <= 0.0 {
+            return Err(format!(
+                "tune --validate: measurement for sim-rank {rank_sim} is not a positive finite time ({measured})"
+            ));
+        }
+        candidates.push(ValidatedCandidate {
+            rank_sim,
+            sim_score: *sim_score,
+            measured,
+            mpl: spec.to_mpl()?,
+        });
+    }
+    let sim: Vec<f64> = candidates.iter().map(|c| c.sim_score).collect();
+    let meas: Vec<f64> = candidates.iter().map(|c| c.measured).collect();
+    let rho = spearman(&sim, &meas);
+    let (tau, inversions) = kendall(&sim, &meas);
+    Ok(ValidationReport {
+        app: app.to_string(),
+        candidates,
+        spearman: rho,
+        kendall: tau,
+        inversions,
+    })
+}
+
+/// CLI binding: measure each genome by building its mapper and running
+/// the real executor over the tuning run's shapes (geomean wall clock,
+/// with every run held to [`exec_app`]'s differential-verification
+/// contract).
+pub fn validate_exec(
+    cfg: &TuneConfig,
+    result: &TuneResult,
+    top_n: usize,
+    opts: &ExecOptions,
+) -> Result<ValidationReport, String> {
+    let ctx = EvalCtx::for_bench(&cfg.app, cfg.shapes.clone());
+    validate_ranking(&cfg.app, &result.ranked, top_n, |spec| {
+        let mut log_sum = 0.0f64;
+        for (desc, app) in ctx.shapes.iter().zip(&ctx.apps) {
+            let mapper_spec = spec.build(desc)?;
+            let mapper = MappleMapper::new(mapper_spec);
+            let out = exec_app(app, &mapper, desc, opts)?;
+            log_sum += out.exec.wall_seconds.ln();
+        }
+        Ok((log_sum / ctx.shapes.len() as f64).exp())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_ranked(n: usize) -> Vec<(TuneSpec, f64)> {
+        (0..n).map(|i| (TuneSpec::seed("cannon"), 1.0 + i as f64)).collect()
+    }
+
+    #[test]
+    fn perfect_agreement() {
+        let ranked = fake_ranked(4);
+        let mut calls = 0usize;
+        let rep = validate_ranking("cannon", &ranked, 4, |_| {
+            calls += 1;
+            Ok(calls as f64) // measured order == sim order
+        })
+        .unwrap();
+        assert_eq!(rep.spearman, 1.0);
+        assert_eq!(rep.kendall, 1.0);
+        assert!(rep.inversions.is_empty());
+        assert_eq!(rep.candidates.len(), 4);
+    }
+
+    #[test]
+    fn full_reversal() {
+        let ranked = fake_ranked(4);
+        let mut next = 4.0f64;
+        let rep = validate_ranking("cannon", &ranked, 4, |_| {
+            next -= 1.0;
+            Ok(next + 1.0) // 4, 3, 2, 1: measured order reversed
+        })
+        .unwrap();
+        assert_eq!(rep.spearman, -1.0);
+        assert_eq!(rep.kendall, -1.0);
+        assert_eq!(rep.inversions.len(), 6);
+    }
+
+    #[test]
+    fn too_few_candidates_is_an_error() {
+        let ranked = fake_ranked(1);
+        assert!(validate_ranking("cannon", &ranked, 4, |_| Ok(1.0)).is_err());
+    }
+}

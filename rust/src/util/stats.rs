@@ -78,6 +78,84 @@ pub fn histogram(xs: &[f64], lo: f64, hi: f64, nbins: usize) -> (Vec<f64>, Vec<u
     (edges, counts)
 }
 
+/// Fractional ranks (1-based, ties averaged) — the standard ranking for
+/// Spearman correlation.
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap().then(a.cmp(&b)));
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Pearson correlation of two equal-length samples; 0 when either side
+/// is constant (no linear association measurable).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let (mx, my) = (mean(xs), mean(ys));
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Spearman rank correlation: Pearson on tie-averaged ranks (reduces to
+/// the 1 − 6Σd²/(n(n²−1)) formula when there are no ties).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Kendall rank correlation (tau-b: tie-corrected) plus the list of
+/// discordant pairs `(i, j)` — index pairs the two samples order
+/// oppositely. Returns `(tau, inversions)`.
+pub fn kendall(xs: &[f64], ys: &[f64]) -> (f64, Vec<(usize, usize)>) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    let (mut conc, mut disc, mut tie_x, mut tie_y) = (0i64, 0i64, 0i64, 0i64);
+    let mut inversions = Vec::new();
+    for i in 0..n {
+        for j in i + 1..n {
+            let dx = xs[i].partial_cmp(&xs[j]).unwrap();
+            let dy = ys[i].partial_cmp(&ys[j]).unwrap();
+            use std::cmp::Ordering::Equal;
+            match (dx, dy) {
+                (Equal, Equal) => {}
+                (Equal, _) => tie_x += 1,
+                (_, Equal) => tie_y += 1,
+                (a, b) if a == b => conc += 1,
+                _ => {
+                    disc += 1;
+                    inversions.push((i, j));
+                }
+            }
+        }
+    }
+    let n0 = (n * (n - 1) / 2) as f64;
+    let denom = ((n0 - tie_x as f64) * (n0 - tie_y as f64)).sqrt();
+    let tau = if denom == 0.0 { 0.0 } else { (conc - disc) as f64 / denom };
+    (tau, inversions)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +186,22 @@ mod tests {
     fn stddev_known() {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rank_correlations() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(spearman(&xs, &xs), 1.0);
+        let rev = [4.0, 3.0, 2.0, 1.0];
+        assert_eq!(spearman(&xs, &rev), -1.0);
+        let (tau, inv) = kendall(&xs, &rev);
+        assert_eq!(tau, -1.0);
+        assert_eq!(inv.len(), 6);
+        let (tau_id, inv_id) = kendall(&xs, &xs);
+        assert_eq!(tau_id, 1.0);
+        assert!(inv_id.is_empty());
+        // ties are averaged: [1, 2, 2, 3] → ranks [1, 2.5, 2.5, 4]
+        assert_eq!(ranks(&[1.0, 2.0, 2.0, 3.0]), vec![1.0, 2.5, 2.5, 4.0]);
     }
 
     #[test]
